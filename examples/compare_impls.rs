@@ -1,0 +1,42 @@
+//! All five implementations on one dataset — a one-dataset slice of the
+//! paper's Figure 4.
+//!
+//! ```sh
+//! cargo run --release --offline --example compare_impls [dataset] [scale] [iters]
+//! ```
+
+use acc_tsne::data::datasets::PaperDataset;
+use acc_tsne::parallel::ThreadPool;
+use acc_tsne::tsne::{run_tsne, Implementation, TsneConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let name = args.get(1).map(String::as_str).unwrap_or("fashion-mnist");
+    let scale: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0.02);
+    let iters: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let kind = PaperDataset::from_name(name).expect("unknown dataset (see `acc-tsne info`)");
+
+    let pool = ThreadPool::with_all_cores();
+    let ds = kind.generate::<f64>(scale, 42, &pool);
+    println!("{name}: n={} d={} ({} iters, {} threads)\n", ds.n, ds.d, iters, pool.n_threads());
+
+    let cfg = TsneConfig {
+        n_iter: iters,
+        ..TsneConfig::default()
+    };
+    println!("{:<12} {:>10} {:>10} {:>8}", "impl", "time (s)", "KL", "speedup");
+    let mut base = None;
+    for imp in Implementation::ALL {
+        let r = run_tsne(&ds.points, ds.n, ds.d, &cfg, imp);
+        let t = r.step_times.total();
+        if base.is_none() {
+            base = Some(t);
+        }
+        println!(
+            "{:<12} {t:>10.2} {:>10.4} {:>7.1}x",
+            imp.name(),
+            r.kl_divergence,
+            base.unwrap() / t
+        );
+    }
+}

@@ -1,0 +1,47 @@
+//! MNIST-analog per-step comparison: daal4py-like vs Acc-t-SNE — a miniature
+//! of the paper's Tables 5/6 on the 70000×784-shaped dataset.
+//!
+//! ```sh
+//! cargo run --release --offline --example mnist_like [scale] [iters]
+//! ```
+
+use acc_tsne::common::timer::Step;
+use acc_tsne::data::datasets::PaperDataset;
+use acc_tsne::parallel::ThreadPool;
+use acc_tsne::tsne::{run_tsne, Implementation, TsneConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let scale: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0.02);
+    let iters: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(200);
+
+    let pool = ThreadPool::with_all_cores();
+    let ds = PaperDataset::Mnist.generate::<f64>(scale, 42, &pool);
+    println!("mnist-analog: n={} d={} ({} iters)", ds.n, ds.d, iters);
+
+    let cfg = TsneConfig {
+        n_iter: iters,
+        ..TsneConfig::default()
+    };
+    let daal = run_tsne(&ds.points, ds.n, ds.d, &cfg, Implementation::Daal4pyLike);
+    let acc = run_tsne(&ds.points, ds.n, ds.d, &cfg, Implementation::AccTsne);
+
+    println!("\n{:<12} {:>12} {:>12} {:>9}", "step", "daal4py (s)", "acc (s)", "speedup");
+    for step in [
+        Step::Knn,
+        Step::Bsp,
+        Step::TreeBuild,
+        Step::Summarize,
+        Step::Attractive,
+        Step::Repulsive,
+    ] {
+        let (a, b) = (daal.step_times.get(step), acc.step_times.get(step));
+        println!("{:<12} {a:>12.3} {b:>12.3} {:>8.1}x", step.name(), a / b.max(1e-12));
+    }
+    let (ta, tb) = (daal.step_times.total(), acc.step_times.total());
+    println!("{:<12} {ta:>12.3} {tb:>12.3} {:>8.1}x", "TOTAL", ta / tb);
+    println!(
+        "\nKL: daal4py-like {:.4} vs acc-t-sne {:.4} (same accuracy expected)",
+        daal.kl_divergence, acc.kl_divergence
+    );
+}

@@ -1,0 +1,24 @@
+use acc_tsne::knn::{BruteForceKnn, KnnEngine};
+use acc_tsne::common::rng::Rng;
+use acc_tsne::parallel::ThreadPool;
+use std::time::Instant;
+fn main() {
+    let mut rng = Rng::new(1);
+    for (n, d) in [(20000usize, 20usize), (7000, 784)] {
+        let data: Vec<f64> = (0..n*d).map(|_| rng.next_gaussian()).collect();
+        let pool = ThreadPool::with_all_cores();
+        let t = Instant::now();
+        let r = BruteForceKnn::default().search(&pool, &data, n, d, 90);
+        println!("knn n={n} d={d}: {:.3}s (checksum {})", t.elapsed().as_secs_f64(), r.indices[0]);
+    }
+    // tree build at small and large n
+    for n in [2000usize, 200000] {
+        let pos: Vec<f64> = (0..2*n).map(|_| rng.next_gaussian()).collect();
+        let pool = ThreadPool::with_all_cores();
+        let t = Instant::now();
+        let mut cnt = 0;
+        let iters = if n < 10000 { 200 } else { 20 };
+        for _ in 0..iters { cnt += acc_tsne::quadtree::builder_morton::build_morton(&pool, &pos).nodes.len(); }
+        println!("tree n={n}: {:.3}ms/build ({cnt})", t.elapsed().as_secs_f64()*1000.0/iters as f64);
+    }
+}

@@ -1,0 +1,19 @@
+//! Crossover probe: sequential vs parallel morton build across n.
+use acc_tsne::common::rng::Rng;
+use acc_tsne::parallel::ThreadPool;
+use std::time::Instant;
+fn main() {
+    let mut rng = Rng::new(1);
+    let pool = ThreadPool::with_all_cores();
+    let pool1 = ThreadPool::new(1);
+    for n in [10_000usize, 25_000, 50_000, 100_000, 200_000, 400_000] {
+        let pos: Vec<f64> = (0..2*n).map(|_| rng.next_gaussian()).collect();
+        let iters = (2_000_000 / n).max(3);
+        for (name, p) in [("seq", &pool1), ("par", &pool)] {
+            let t = Instant::now();
+            let mut c = 0;
+            for _ in 0..iters { c += acc_tsne::quadtree::builder_morton::build_morton(p, &pos).nodes.len(); }
+            println!("n={n} {name}: {:.2}ms ({c})", t.elapsed().as_secs_f64()*1000.0/iters as f64);
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! Quickstart: embed a small Gaussian-mixture dataset with Acc-t-SNE and
+//! write the scatter plot.
+//!
+//! ```sh
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use acc_tsne::data::synthetic::gaussian_mixture;
+use acc_tsne::tsne::{run_tsne, Implementation, TsneConfig};
+use acc_tsne::viz;
+
+fn main() {
+    // 2000 points in 16-D, 10 well-separated clusters.
+    let ds = gaussian_mixture::<f64>(2_000, 16, 10, 6.0, 42);
+    println!("dataset: n={} d={} classes=10", ds.n, ds.d);
+
+    let cfg = TsneConfig {
+        perplexity: 30.0,
+        n_iter: 500,
+        ..TsneConfig::default()
+    };
+    let result = run_tsne(&ds.points, ds.n, ds.d, &cfg, Implementation::AccTsne);
+
+    println!("KL divergence: {:.4}", result.kl_divergence);
+    println!("total time   : {:.2}s", result.step_times.total());
+    for (step, pct) in result.step_times.percentages() {
+        println!(
+            "  {:<11} {:>8.3}s  {:>5.1}%",
+            step.name(),
+            result.step_times.get(step),
+            pct
+        );
+    }
+
+    std::fs::create_dir_all("results").ok();
+    viz::write_svg("results/quickstart.svg", &result.embedding, &ds.labels, 768)
+        .expect("write plot");
+    println!("plot: results/quickstart.svg");
+}

@@ -1,0 +1,96 @@
+//! End-to-end single-cell RNA-seq pipeline — the workload the paper's
+//! motivating application (mouse brain 1.3M cells) runs: synthetic scRNA
+//! counts → PCA to 20 principal components (as the paper's preprocessing) →
+//! full BH t-SNE with per-phase logging of the KL loss curve.
+//!
+//! This is the repo's end-to-end validation driver: it exercises every
+//! library layer (data gen, PCA substrate, KNN, BSP, symmetrization, morton
+//! quadtree, summarization, SIMD attractive, BH repulsive, optimizer) through
+//! the *public step-level API* rather than the one-shot `run_tsne`, and logs
+//! the KL curve. Results are recorded in EXPERIMENTS.md.
+//!
+//! ```sh
+//! cargo run --release --offline --example scrna_pipeline [n_cells] [iters]
+//! ```
+
+use acc_tsne::common::timer::Timer;
+use acc_tsne::data::pca::pca;
+use acc_tsne::data::synthetic::scrna_like;
+use acc_tsne::gradient::attractive::{attractive_forces, Variant};
+use acc_tsne::gradient::combine_gradient;
+use acc_tsne::gradient::exact::kl_with_z;
+use acc_tsne::gradient::repulsive::repulsive_forces;
+use acc_tsne::gradient::update::{random_init, Optimizer, UpdateParams};
+use acc_tsne::knn::{BruteForceKnn, KnnEngine};
+use acc_tsne::metrics::neighbor_preservation;
+use acc_tsne::parallel::ThreadPool;
+use acc_tsne::perplexity::{binary_search_perplexity, ParMode};
+use acc_tsne::quadtree::builder_morton::build_morton;
+use acc_tsne::quadtree::summarize::summarize_parallel;
+use acc_tsne::sparse::symmetrize;
+use acc_tsne::viz;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let n_cells: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(20_000);
+    let n_iter: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(500);
+    let pool = ThreadPool::with_all_cores();
+    let total = Timer::start();
+
+    // --- Phase 1: synthetic scRNA counts (30 cell types, zipf sizes, dropout).
+    println!("[1/5] generating scRNA-like counts: {n_cells} cells × 200 genes");
+    let raw = scrna_like::<f64>(n_cells, 200, 30, 0.6, 7);
+
+    // --- Phase 2: PCA → 20 PCs (the paper's preprocessing).
+    println!("[2/5] PCA → 20 components");
+    let t = Timer::start();
+    let (pcs, eig) = pca(&pool, &raw.points, raw.n, 200, 20, 30, 11);
+    println!(
+        "      {:.2}s; top-5 explained variance: {:?}",
+        t.elapsed(),
+        &eig[..5].iter().map(|v| (v * 100.0).round() / 100.0).collect::<Vec<_>>()
+    );
+
+    // --- Phase 3: KNN + perplexity calibration + symmetrization.
+    let perplexity = 30.0;
+    let k = (3.0 * perplexity) as usize;
+    println!("[3/5] KNN (k={k}) + BSP + symmetrize");
+    let t = Timer::start();
+    let knn = BruteForceKnn::default().search(&pool, &pcs, raw.n, 20, k);
+    let cond = binary_search_perplexity(&pool, &knn, perplexity, ParMode::Parallel);
+    let p = symmetrize(&pool, &knn, &cond.p);
+    println!("      {:.2}s; P nnz = {}", t.elapsed(), p.nnz());
+
+    // --- Phase 4: gradient descent with the Acc-t-SNE step set, logging KL.
+    println!("[4/5] gradient descent ({n_iter} iters), KL curve:");
+    let mut y = random_init::<f64>(raw.n, 42);
+    let mut opt = Optimizer::new(raw.n, UpdateParams::default());
+    let mut attr = vec![0.0f64; 2 * raw.n];
+    let mut grad = vec![0.0f64; 2 * raw.n];
+    let theta = 0.5;
+    let t = Timer::start();
+    for iter in 0..n_iter {
+        let mut tree = build_morton(&pool, &y);
+        summarize_parallel(&pool, &mut tree);
+        let rep = repulsive_forces(&pool, &tree, theta);
+        attractive_forces(&pool, &p, &y, Variant::Simd, &mut attr);
+        combine_gradient(&pool, &attr, &rep.raw, rep.z, opt.exaggeration(iter), &mut grad);
+        opt.step(&pool, iter, &grad, &mut y);
+        if iter % (n_iter / 10).max(1) == 0 || iter + 1 == n_iter {
+            let kl = kl_with_z(&p, &y, rep.z);
+            println!("      iter {iter:>5}  KL = {kl:.4}");
+        }
+    }
+    println!("      gradient phase: {:.2}s", t.elapsed());
+
+    // --- Phase 5: quality + outputs.
+    println!("[5/5] quality metrics + plots");
+    let np = neighbor_preservation(&pool, &pcs, raw.n, 20, &y, 15);
+    println!("      15-NN preservation: {:.3}", np);
+    std::fs::create_dir_all("results").ok();
+    viz::write_svg("results/scrna_embedding.svg", &y, &raw.labels, 900).expect("plot");
+    acc_tsne::data::io::write_embedding_csv("results/scrna_embedding.csv", &y, &raw.labels)
+        .expect("csv");
+    println!("      results/scrna_embedding.{{svg,csv}}");
+    println!("done in {:.1}s total", total.elapsed());
+}

@@ -1,0 +1,83 @@
+//! Three-layer composition demo: the L1 Pallas kernels (AOT-lowered through
+//! the L2 JAX graphs into `artifacts/*.hlo.txt`) executing on the L3 hot path
+//! via PJRT, side by side with the native Rust engines.
+//!
+//! Requires `make artifacts`.
+//!
+//! ```sh
+//! cargo run --release --offline --example xla_offload
+//! ```
+
+use acc_tsne::common::timer::Timer;
+use acc_tsne::data::synthetic::gaussian_mixture;
+use acc_tsne::knn::{BruteForceKnn, KnnEngine};
+use acc_tsne::parallel::ThreadPool;
+use acc_tsne::runtime::engines::{XlaAttractive, XlaKnn, XlaRepulsiveDense};
+use acc_tsne::runtime::Runtime;
+use acc_tsne::tsne::{run_tsne_custom, Implementation, TsneConfig};
+
+fn main() {
+    let rt = match Runtime::load("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("{e:#}");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "PJRT platform: {} ({} devices)",
+        rt.client.platform_name(),
+        rt.client.device_count()
+    );
+
+    let ds = gaussian_mixture::<f64>(1_000, 20, 8, 6.0, 42);
+    let pool = ThreadPool::with_all_cores();
+
+    // --- KNN: native blocked vs AOT Pallas sqdist tiles.
+    println!("\n[knn] n={} d={} k=30", ds.n, ds.d);
+    let t = Timer::start();
+    let native = BruteForceKnn::default().search(&pool, &ds.points, ds.n, ds.d, 30);
+    let t_native = t.elapsed();
+    let xla_knn = XlaKnn::new(&rt).expect("compile knn_sqdist artifact");
+    let t = Timer::start();
+    let offl: acc_tsne::knn::NeighborLists<f64> = xla_knn.search(&pool, &ds.points, ds.n, ds.d, 30);
+    let t_xla = t.elapsed();
+    let agree = (0..ds.n)
+        .filter(|&i| native.neighbors(i)[0] == offl.neighbors(i)[0])
+        .count();
+    println!("  native {t_native:.3}s | xla {t_xla:.3}s | nearest-neighbor agreement {agree}/{}", ds.n);
+
+    // --- Dense repulsion: AOT Pallas tile vs exact oracle.
+    let y32: Vec<f32> = (0..2 * 600).map(|i| ((i * 37) % 100) as f32 / 10.0 - 5.0).collect();
+    let rep = XlaRepulsiveDense::new(&rt).expect("compile repulsive_dense artifact");
+    let (raw, z) = rep.exact(&y32).expect("execute");
+    let y64: Vec<f64> = y32.iter().map(|&v| v as f64).collect();
+    let (want, want_z) = acc_tsne::gradient::exact::exact_repulsive(&pool, &y64);
+    let max_err = raw
+        .iter()
+        .zip(want.iter())
+        .map(|(g, w)| ((*g as f64) - w).abs())
+        .fold(0.0f64, f64::max);
+    println!("\n[repulsive_dense] Z xla {z:.1} vs exact {want_z:.1}; max force err {max_err:.2e}");
+
+    // --- Full t-SNE with the XLA attractive engine on the hot path.
+    println!("\n[end-to-end] acc-t-sne with XLA attractive engine (300 pts, 100 iters)");
+    let small = gaussian_mixture::<f64>(300, 8, 4, 8.0, 7);
+    let cfg = TsneConfig {
+        perplexity: 10.0,
+        n_iter: 100,
+        ..TsneConfig::default()
+    };
+    let eng = XlaAttractive::new(&rt).expect("compile attractive artifact");
+    let t = Timer::start();
+    let r_xla = run_tsne_custom(&small.points, small.n, small.d, &cfg, Implementation::AccTsne, Some(&eng));
+    let t_xla = t.elapsed();
+    let t = Timer::start();
+    let r_nat = run_tsne_custom(&small.points, small.n, small.d, &cfg, Implementation::AccTsne, None);
+    let t_nat = t.elapsed();
+    println!(
+        "  KL xla-engine {:.4} ({t_xla:.2}s) vs native {:.4} ({t_nat:.2}s)",
+        r_xla.kl_divergence, r_nat.kl_divergence
+    );
+    println!("\nall three layers compose: python authored, rust executed, no python at runtime");
+}

@@ -1,0 +1,90 @@
+"""AOT lowering: JAX/Pallas (L2/L1) → HLO **text** artifacts for the Rust
+runtime.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the published xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --outdir ../artifacts`` (from python/).
+Emits one .hlo.txt per graph plus manifest.json recording the frozen shapes
+that rust/src/runtime/engines.rs must agree with.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.attractive import B_ROWS, K_PAD
+from .kernels.morton import N_POINTS
+from .kernels.repulsive_dense import B_TILE, C_TILE
+from .kernels.sqdist import BC, BQ, D_PAD
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_artifacts():
+    """(name, lowered, manifest-entry) for every artifact."""
+    arts = []
+
+    lowered = jax.jit(model.knn_sqdist).lower(spec((BQ, D_PAD)), spec((BC, D_PAD)))
+    arts.append(("knn_sqdist", lowered, {"bq": BQ, "bc": BC, "d": D_PAD, "dtype": "f32"}))
+
+    n_src = 4096  # gather-source rows frozen into the attractive artifact
+    lowered = jax.jit(model.attractive_batch_rows).lower(
+        spec((n_src, 2)),
+        spec((B_ROWS,), jnp.int32),
+        spec((B_ROWS, K_PAD), jnp.int32),
+        spec((B_ROWS, K_PAD)),
+    )
+    arts.append(
+        ("attractive", lowered, {"n_src": n_src, "b": B_ROWS, "k": K_PAD, "dtype": "f32"})
+    )
+
+    lowered = jax.jit(model.morton_codes).lower(
+        spec((N_POINTS, 2)), spec((2,)), spec(())
+    )
+    arts.append(("morton", lowered, {"n": N_POINTS, "dtype": "f32->i32"}))
+
+    lowered = jax.jit(model.repulsive_dense).lower(spec((B_TILE, 2)), spec((C_TILE, 2)))
+    arts.append(("repulsive_dense", lowered, {"b": B_TILE, "c": C_TILE, "dtype": "f32"}))
+
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    manifest = {}
+    for name, lowered, meta in build_artifacts():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = meta
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.outdir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

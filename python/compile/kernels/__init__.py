@@ -1,0 +1,18 @@
+"""L1 — Pallas kernels for the Acc-t-SNE compute hot-spots.
+
+Every kernel is written for TPU-style tiling (BlockSpec-friendly shapes,
+MXU-aligned matmuls, VPU elementwise bodies) but lowered with
+``interpret=True`` so the CPU PJRT client can execute the resulting HLO
+(real-TPU lowering emits Mosaic custom-calls the CPU plugin cannot run —
+see DESIGN.md §Hardware-Adaptation).
+
+Kernels:
+- :mod:`.sqdist`          — MXU-tiled squared-Euclidean distance (KNN step).
+- :mod:`.attractive`      — VPU attractive-force tile over gathered neighbors.
+- :mod:`.morton`          — Algorithm 1 bit-interleave Morton encoding.
+- :mod:`.repulsive_dense` — dense O(N²) repulsion tile (exact-gradient oracle
+                            / TPU-friendly ablation of the BH traversal).
+- :mod:`.ref`             — pure-jnp oracles for all of the above.
+"""
+
+from . import attractive, morton, ref, repulsive_dense, sqdist  # noqa: F401

@@ -1,0 +1,42 @@
+"""Pallas kernel: attractive-force tile (paper §3.6, Algorithm 2).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper hand-gathers
+y_j with AVX-512 `vgatherdpd` inside the row loop. On TPU the gather belongs
+in XLA (L2 does `y[idx]`), and the kernel is the pure VPU body over the
+pre-gathered [B, K, 2] tile: d², PQ = p/(1+d²), and the K-reduction — dense,
+branch-free elementwise work.
+
+VMEM estimate at (B, K) = (256, 96), f32: yj tile 256·96·2·4 = 192 KiB,
+pv 96 KiB, yi/out 2·2 KiB → ≈ 300 KiB per grid step; the B=256 block keeps
+the (8,128) VPU lanes saturated on the K-major reduction.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Artifact shape (rust/src/runtime/engines.rs must agree): rows per batch and
+# neighbors per row (K = ⌊3·30⌋ = 90 padded to 96 for lane alignment).
+B_ROWS = 256
+K_PAD = 96
+
+
+def _kernel(yi_ref, yj_ref, pv_ref, o_ref):
+    yi = yi_ref[...]  # [B, 2]
+    yj = yj_ref[...]  # [B, K, 2]
+    pv = pv_ref[...]  # [B, K]
+    diff = yi[:, None, :] - yj
+    dsq = jnp.sum(diff * diff, axis=-1)
+    pq = pv / (1.0 + dsq)
+    o_ref[...] = jnp.sum(pq[..., None] * diff, axis=1)
+
+
+@jax.jit
+def attractive_tile(yi, yj, pv):
+    """[B,2], [B,K,2], [B,K] → [B,2]; zero-valued pv rows contribute nothing."""
+    b, _ = yi.shape
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((b, 2), yi.dtype),
+        interpret=True,
+    )(yi, yj, pv)

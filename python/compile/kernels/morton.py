@@ -1,0 +1,46 @@
+"""Pallas kernel: Morton encoding (paper §3.3, Algorithm 1).
+
+The magic-mask shift cascade is pure integer VPU work — the same code the
+paper auto-vectorizes with AVX. 32-bit codes (16 bits/dim) here: the CPU-PJRT
+artifact path keeps i32 (the rust `xla` crate's literal support), while the
+production Rust encoder uses the full 64-bit version.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Artifact batch (rust/src/runtime/engines.rs must agree).
+N_POINTS = 1024
+
+
+def _interleave16(m):
+    m = m & jnp.uint32(0x0000FFFF)
+    m = (m | (m << 8)) & jnp.uint32(0x00FF00FF)
+    m = (m | (m << 4)) & jnp.uint32(0x0F0F0F0F)
+    m = (m | (m << 2)) & jnp.uint32(0x33333333)
+    m = (m | (m << 1)) & jnp.uint32(0x55555555)
+    return m
+
+
+def _kernel(pts_ref, cent_ref, span_ref, o_ref):
+    pts = pts_ref[...]  # [N, 2] f32
+    cent = cent_ref[...]  # [2]
+    r_span = span_ref[0]
+    y_root = cent - r_span
+    scale = jnp.float32(1 << 15) / r_span
+    grid = (pts - y_root[None, :]) * scale
+    grid = jnp.clip(grid, 0.0, float((1 << 16) - 1)).astype(jnp.uint32)
+    code = _interleave16(grid[:, 0]) | (_interleave16(grid[:, 1]) << 1)
+    o_ref[...] = code.astype(jnp.int32)
+
+
+@jax.jit
+def morton_codes(pts, cent, r_span):
+    """[N,2] f32 points + root cell → [N] i32 Morton codes."""
+    n, _ = pts.shape
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(pts, cent, jnp.reshape(r_span, (1,)))

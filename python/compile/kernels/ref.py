@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the build-time correctness
+contract: pytest asserts kernel == ref before aot.py may emit artifacts)."""
+
+import jax.numpy as jnp
+
+
+def sqdist(xq, xc):
+    """Squared Euclidean distances: [BQ, D] × [BC, D] → [BQ, BC]."""
+    diff = xq[:, None, :] - xc[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def attractive(yi, yj, pv):
+    """Attractive force accumulation (paper Eq. 8 / Algorithm 2 inner loop).
+
+    yi: [B, 2] embedding points; yj: [B, K, 2] gathered neighbor coordinates;
+    pv: [B, K] sparse P values (0 padding contributes nothing).
+    Returns [B, 2]: sum_k pv/(1+d²) * (yi - yj).
+    """
+    diff = yi[:, None, :] - yj  # [B, K, 2]
+    dsq = jnp.sum(diff * diff, axis=-1)  # [B, K]
+    pq = pv / (1.0 + dsq)
+    return jnp.sum(pq[..., None] * diff, axis=1)
+
+
+def morton32(pts, cent, r_span):
+    """32-bit Morton codes (16 bits per dim) of 2-D points — Algorithm 1 with
+    a 2¹⁵ scale. pts: [N, 2] float32; returns int32 codes."""
+    y_root = cent - r_span  # [2]
+    scale = jnp.float32(1 << 15) / r_span
+    grid = (pts - y_root[None, :]) * scale
+    grid = jnp.clip(grid, 0.0, float((1 << 16) - 1)).astype(jnp.uint32)
+
+    def interleave16(m):
+        m = m & jnp.uint32(0x0000FFFF)
+        m = (m | (m << 8)) & jnp.uint32(0x00FF00FF)
+        m = (m | (m << 4)) & jnp.uint32(0x0F0F0F0F)
+        m = (m | (m << 2)) & jnp.uint32(0x33333333)
+        m = (m | (m << 1)) & jnp.uint32(0x55555555)
+        return m
+
+    code = interleave16(grid[:, 0]) | (interleave16(grid[:, 1]) << 1)
+    return code.astype(jnp.int32)
+
+
+def repulsive_dense(yi, yall):
+    """Dense repulsion tile: raw_b = Σ_c (1+d²)⁻² (yi_b − yall_c) and
+    z_b = Σ_c (1+d²)⁻¹ (self/duplicate terms included — the caller subtracts
+    the exact self count). yi: [B, 2], yall: [C, 2] → ([B, 2], [B])."""
+    diff = yi[:, None, :] - yall[None, :, :]  # [B, C, 2]
+    dsq = jnp.sum(diff * diff, axis=-1)
+    q = 1.0 / (1.0 + dsq)
+    raw = jnp.sum((q * q)[..., None] * diff, axis=1)
+    z = jnp.sum(q, axis=1)
+    return raw, z

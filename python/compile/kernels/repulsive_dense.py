@@ -1,0 +1,47 @@
+"""Pallas kernel: dense repulsion tile — the TPU-friendly ablation of the
+Barnes-Hut traversal.
+
+The BH DFS is pointer-chasing and data-dependent — hostile to MXU/VPU. The
+TPU-native formulation is the dense O(N²) tile: all-pairs (1+d²)⁻¹ within a
+[B, C] block, which is regular, maskable, and pipelines HBM→VMEM cleanly.
+Used as (a) the exact-gradient oracle behind the accuracy tests and (b) the
+`repulsive_dense` ablation bench.
+
+VMEM estimate at (B, C) = (256, 2048), f32: yall tile 2048·2·4 = 16 KiB,
+diff/q intermediates 256·2048·4 ≈ 2 MiB (fused by XLA in interpret path),
+outputs ≈ 2 KiB — the C=2048 corpus block is sized to amortize the yi tile
+reload while staying well under VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Artifact tile shape (rust/src/runtime/engines.rs must agree).
+B_TILE = 256
+C_TILE = 2048
+
+
+def _kernel(yi_ref, ya_ref, raw_ref, z_ref):
+    yi = yi_ref[...]  # [B, 2]
+    ya = ya_ref[...]  # [C, 2]
+    diff = yi[:, None, :] - ya[None, :, :]  # [B, C, 2]
+    dsq = jnp.sum(diff * diff, axis=-1)
+    q = 1.0 / (1.0 + dsq)
+    raw_ref[...] = jnp.sum((q * q)[..., None] * diff, axis=1)
+    z_ref[...] = jnp.sum(q, axis=1)
+
+
+@jax.jit
+def repulsive_dense_tile(yi, yall):
+    """[B,2] × [C,2] → (raw [B,2], z [B]); self terms included (q=1 at d=0,
+    force contribution 0) — callers subtract the self count from z."""
+    b, _ = yi.shape
+    return pl.pallas_call(
+        _kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b, 2), yi.dtype),
+            jax.ShapeDtypeStruct((b,), yi.dtype),
+        ),
+        interpret=True,
+    )(yi, yall)

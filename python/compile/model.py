@@ -1,0 +1,44 @@
+"""L2 — JAX compute graphs composing the L1 Pallas kernels.
+
+These are the functions aot.py lowers to HLO text. Gathers, padding and
+reshapes live here (XLA-native ops); the dense tile math lives in the
+kernels. Python never runs at serve time — the Rust runtime executes the
+lowered artifacts via PJRT.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import attractive as attr_k
+from .kernels import morton as morton_k
+from .kernels import repulsive_dense as rep_k
+from .kernels import sqdist as sq_k
+
+
+def knn_sqdist(xq, xc):
+    """Distance tile for the blocked-KNN hot loop: [BQ,D]×[BC,D] → [BQ,BC]."""
+    return sq_k.sqdist_tile(xq, xc)
+
+
+def attractive_batch_rows(y, rows, idx, val):
+    """Attractive forces for a batch of CSR rows (paper Algorithm 2).
+
+    y:    [N, 2]  full embedding (gather source);
+    rows: [B]     int32 — which embedding rows this batch computes forces for;
+    idx:  [B, K]  int32 neighbor columns (pad with 0);
+    val:  [B, K]  p_ij values (pad with 0 ⇒ padded lanes contribute nothing).
+    Returns [B, 2]. The gathers are XLA's job (TPU gather unit); the dense
+    tile math is the Pallas kernel's.
+    """
+    yi = jnp.take(y, rows, axis=0)  # [B, 2]
+    yj = jnp.take(y, idx.reshape(-1), axis=0).reshape(idx.shape + (2,))  # [B, K, 2]
+    return attr_k.attractive_tile(yi, yj, val)
+
+
+def morton_codes(pts, cent, r_span):
+    """Morton codes of a point batch (Algorithm 1, 32-bit)."""
+    return morton_k.morton_codes(pts, cent, r_span)
+
+
+def repulsive_dense(yi, yall):
+    """Dense repulsion tile (exact oracle / TPU ablation)."""
+    return rep_k.repulsive_dense_tile(yi, yall)

@@ -1,0 +1,135 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and data distributions (the kernels are
+shape-polymorphic pre-AOT; the frozen artifact shapes are separately pinned
+by test_aot.py)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import attractive, morton, ref, repulsive_dense, sqdist
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(rng, *shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------- sqdist
+
+@given(
+    bq=st.integers(1, 64),
+    bc=st.integers(1, 64),
+    d=st.integers(1, 40),
+    seed=st.integers(0, 2**31),
+)
+def test_sqdist_matches_ref(bq, bc, d, seed):
+    rng = np.random.default_rng(seed)
+    xq, xc = rand(rng, bq, d, scale=3.0), rand(rng, bc, d, scale=3.0)
+    got = np.asarray(sqdist.sqdist_tile(xq, xc))
+    want = np.asarray(ref.sqdist(jnp.asarray(xq), jnp.asarray(xc)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_sqdist_zero_distance_on_identical_rows():
+    x = np.ones((8, 16), dtype=np.float32)
+    got = np.asarray(sqdist.sqdist_tile(x, x))
+    np.testing.assert_allclose(got, 0.0, atol=1e-4)
+
+
+def test_sqdist_zero_padding_invariant():
+    rng = np.random.default_rng(0)
+    xq, xc = rand(rng, 16, 10), rand(rng, 16, 10)
+    pad = lambda a: np.pad(a, ((0, 0), (0, 22)))
+    got = np.asarray(sqdist.sqdist_tile(pad(xq), pad(xc)))
+    want = np.asarray(ref.sqdist(jnp.asarray(xq), jnp.asarray(xc)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ attractive
+
+@given(
+    b=st.integers(1, 48),
+    k=st.integers(1, 32),
+    seed=st.integers(0, 2**31),
+)
+def test_attractive_matches_ref(b, k, seed):
+    rng = np.random.default_rng(seed)
+    yi = rand(rng, b, 2, scale=5.0)
+    yj = rand(rng, b, k, 2, scale=5.0)
+    pv = np.abs(rand(rng, b, k, scale=0.01))
+    got = np.asarray(attractive.attractive_tile(yi, yj, pv))
+    want = np.asarray(ref.attractive(jnp.asarray(yi), jnp.asarray(yj), jnp.asarray(pv)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_attractive_zero_padding_contributes_nothing():
+    rng = np.random.default_rng(1)
+    yi = rand(rng, 8, 2)
+    yj = rand(rng, 8, 12, 2)
+    pv = np.abs(rand(rng, 8, 12, scale=0.1))
+    full = np.asarray(attractive.attractive_tile(yi, yj, pv))
+    yj_pad = np.concatenate([yj, rand(rng, 8, 4, 2)], axis=1)
+    pv_pad = np.concatenate([pv, np.zeros((8, 4), np.float32)], axis=1)
+    padded = np.asarray(attractive.attractive_tile(yi, yj_pad, pv_pad))
+    np.testing.assert_allclose(padded, full, rtol=1e-5, atol=1e-7)
+
+
+# ---------------------------------------------------------------- morton
+
+@given(n=st.integers(1, 256), seed=st.integers(0, 2**31))
+def test_morton_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    pts = rand(rng, n, 2, scale=4.0)
+    cent = pts.mean(axis=0)
+    r = np.float32(np.abs(pts - cent).max() + 1e-3)
+    got = np.asarray(morton.morton_codes(pts, cent, r))
+    want = np.asarray(ref.morton32(jnp.asarray(pts), jnp.asarray(cent), jnp.asarray(r)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_morton_paper_example():
+    # Paper Fig. 2: dim0 = 3, dim1 = 7 → 47. Use a cell making grid = coords.
+    # grid = (pts - (cent - r)) * 2^15 / r; choose cent=(0,0), r=2^15 so
+    # grid = pts + 2^15... instead verify interleave property via ref equality
+    # and z-ordering along the diagonal:
+    pts = np.array([[i / 10.0, i / 10.0] for i in range(10)], dtype=np.float32)
+    cent = np.array([0.45, 0.45], dtype=np.float32)
+    codes = np.asarray(morton.morton_codes(pts, cent, np.float32(0.5)))
+    # i32 is a reinterpretation of the u32 code (the rust side views it
+    # unsigned too); compare in u32 space.
+    codes_u = codes.view(np.uint32).astype(np.uint64)
+    assert (np.diff(codes_u.astype(np.int64)) >= 0).all(), "diagonal points must be z-ordered"
+
+
+# -------------------------------------------------------- repulsive_dense
+
+@given(b=st.integers(1, 32), c=st.integers(1, 64), seed=st.integers(0, 2**31))
+def test_repulsive_dense_matches_ref(b, c, seed):
+    rng = np.random.default_rng(seed)
+    yi = rand(rng, b, 2, scale=3.0)
+    yall = rand(rng, c, 2, scale=3.0)
+    raw_g, z_g = repulsive_dense.repulsive_dense_tile(yi, yall)
+    raw_w, z_w = ref.repulsive_dense(jnp.asarray(yi), jnp.asarray(yall))
+    np.testing.assert_allclose(np.asarray(raw_g), np.asarray(raw_w), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(z_g), np.asarray(z_w), rtol=1e-4, atol=1e-5)
+
+
+def test_repulsive_dense_self_term_is_identity():
+    y = np.array([[1.0, 2.0]], dtype=np.float32)
+    raw, z = repulsive_dense.repulsive_dense_tile(y, y)
+    np.testing.assert_allclose(np.asarray(raw), 0.0, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(z), 1.0, rtol=1e-6)
+
+
+def test_repulsive_far_points_vanish():
+    yi = np.array([[0.0, 0.0]], dtype=np.float32)
+    ya = np.array([[1e4, 1e4]], dtype=np.float32)
+    raw, z = repulsive_dense.repulsive_dense_tile(yi, ya)
+    assert abs(float(z[0])) < 1e-7
+    assert np.abs(np.asarray(raw)).max() < 1e-7

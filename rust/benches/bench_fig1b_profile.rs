@@ -1,0 +1,11 @@
+//! Regenerates paper Figure 1b: step-time profile of the daal4py-like
+//! baseline on the mouse-brain analog (the "flat profile" motivating the
+//! paper's accelerate-every-step strategy).
+
+use acc_tsne::eval::{experiments, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig::default();
+    println!("# Fig 1b bench: scale={} iters={}", cfg.scale, cfg.n_iter);
+    experiments::fig1b_profile(&cfg);
+}

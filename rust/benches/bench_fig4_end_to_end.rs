@@ -1,0 +1,18 @@
+//! Regenerates paper Figure 4: end-to-end time of all five implementations
+//! across the six datasets on all cores, with speedups over sklearn-like.
+//!
+//! Scaled-down defaults; set ACC_TSNE_SCALE / ACC_TSNE_ITERS for larger runs.
+
+use acc_tsne::data::datasets::PaperDataset;
+use acc_tsne::eval::{experiments, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig::default();
+    println!(
+        "# Fig 4 bench: scale={} iters={} threads={}",
+        cfg.scale,
+        cfg.n_iter,
+        cfg.resolved_threads()
+    );
+    experiments::fig4_end_to_end(&cfg, &PaperDataset::ALL);
+}

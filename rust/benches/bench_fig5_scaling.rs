@@ -1,0 +1,15 @@
+//! Regenerates paper Figure 5: end-to-end multicore scaling of all five
+//! implementations on the mouse-brain analog (speedup vs own 1-core time).
+
+use acc_tsne::eval::{experiments, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig::default();
+    println!(
+        "# Fig 5 bench: scale={} iters={} cores={:?}",
+        cfg.scale,
+        cfg.n_iter,
+        cfg.core_sweep()
+    );
+    experiments::fig5_scaling(&cfg);
+}

@@ -1,0 +1,15 @@
+//! Regenerates paper Figure 6a/6b: per-step multicore scaling of the
+//! daal4py-like baseline and Acc-t-SNE on the mouse-brain analog.
+
+use acc_tsne::eval::{experiments, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig::default();
+    println!(
+        "# Fig 6 bench: scale={} iters={} cores={:?}",
+        cfg.scale,
+        cfg.n_iter,
+        cfg.core_sweep()
+    );
+    experiments::fig6_step_scaling(&cfg);
+}

@@ -1,0 +1,152 @@
+//! Ablation micro-benchmarks for the individual design choices of paper §3:
+//!   morton encode: scalar vs SIMD;
+//!   sort: std sort vs parallel radix;
+//!   tree build: baseline level-wise vs morton;
+//!   summarize: sequential vs parallel;
+//!   attractive: scalar vs +prefetch vs +SIMD;
+//!   repulsive: baseline-tree layout vs morton (Z-order) layout;
+//!   BSP: sequential vs parallel.
+
+use acc_tsne::common::bench::Bencher;
+use acc_tsne::common::rng::Rng;
+use acc_tsne::gradient::attractive::{attractive_forces, Variant};
+use acc_tsne::gradient::repulsive::repulsive_forces;
+use acc_tsne::knn::{BruteForceKnn, KnnEngine};
+use acc_tsne::parallel::sort::radix_sort_pairs;
+use acc_tsne::parallel::ThreadPool;
+use acc_tsne::perplexity::{binary_search_perplexity, ParMode};
+use acc_tsne::quadtree::builder_baseline::build_baseline;
+use acc_tsne::quadtree::builder_morton::build_morton;
+use acc_tsne::quadtree::morton::{encode_points, encode_points_simd, RootCell};
+use acc_tsne::quadtree::summarize::{summarize_parallel, summarize_sequential};
+use acc_tsne::sparse::symmetrize;
+
+fn env_n() -> usize {
+    std::env::var("ACC_TSNE_MICRO_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200_000)
+}
+
+fn main() {
+    let n = env_n();
+    let pool = ThreadPool::with_all_cores();
+    let mut rng = Rng::new(42);
+    // Clustered embedding (realistic mid-optimization geometry).
+    let mut pos = Vec::with_capacity(2 * n);
+    for i in 0..n {
+        let c = (i % 13) as f64;
+        pos.push(c * 8.0 + rng.next_gaussian());
+        pos.push((c * 3.0) % 11.0 + rng.next_gaussian());
+    }
+    println!("# micro bench: n={n}, threads={}", pool.n_threads());
+
+    // --- morton encode
+    let root = RootCell::bounding(&pool, &pos);
+    let mut codes = vec![0u64; n];
+    let mut b = Bencher::new("morton_encode").sampling(1, 20, 3.0);
+    b.bench("scalar+mt", || encode_points(&pool, &pos, &root, &mut codes));
+    b.bench("simd+mt", || encode_points_simd(&pool, &pos, &root, &mut codes));
+    let seq_pool = ThreadPool::new(1);
+    b.bench("scalar-1t", || encode_points(&seq_pool, &pos, &root, &mut codes));
+    b.bench("simd-1t", || encode_points_simd(&seq_pool, &pos, &root, &mut codes));
+    b.report();
+
+    // --- sort
+    encode_points_simd(&pool, &pos, &root, &mut codes);
+    let mut b = Bencher::new("sort_morton_codes").sampling(1, 10, 3.0);
+    b.bench("std_sort_unstable", || {
+        let mut zipped: Vec<(u64, u32)> = codes.iter().copied().zip(0u32..).collect();
+        zipped.sort_unstable_by_key(|&(k, _)| k);
+        zipped.len()
+    });
+    b.bench("parallel_radix", || {
+        let mut k = codes.clone();
+        let mut p: Vec<u32> = (0..n as u32).collect();
+        radix_sort_pairs(&pool, &mut k, &mut p);
+        k.len()
+    });
+    b.report();
+
+    // --- tree build
+    let mut b = Bencher::new("tree_build").sampling(1, 10, 5.0);
+    b.bench("baseline_levelwise_seq", || build_baseline(&pool, &pos).nodes.len());
+    b.bench("morton_parallel", || build_morton(&pool, &pos).nodes.len());
+    b.bench("morton_1thread", || build_morton(&seq_pool, &pos).nodes.len());
+    b.report();
+
+    // --- summarize
+    let tree_m = build_morton(&pool, &pos);
+    let mut b = Bencher::new("summarize").sampling(1, 10, 3.0);
+    b.bench("sequential", || {
+        let mut t = tree_m.clone();
+        summarize_sequential(&mut t);
+    });
+    b.bench("parallel_subtrees", || {
+        let mut t = tree_m.clone();
+        summarize_parallel(&pool, &mut t);
+    });
+    b.report();
+
+    // --- repulsive: layout ablation
+    let mut tm = build_morton(&pool, &pos);
+    summarize_parallel(&pool, &mut tm);
+    let mut tb = build_baseline(&pool, &pos);
+    summarize_sequential(&mut tb);
+    let mut b = Bencher::new("repulsive_layout").sampling(1, 8, 5.0);
+    b.bench("baseline_tree_bfs_layout", || repulsive_forces(&pool, &tb, 0.5).z);
+    b.bench("morton_tree_zorder_layout", || repulsive_forces(&pool, &tm, 0.5).z);
+    b.report();
+
+    // --- attractive variants (needs a real sparse P)
+    let an = n.min(50_000);
+    let d = 10;
+    let data: Vec<f64> = (0..an * d).map(|_| rng.next_gaussian()).collect();
+    let knn = BruteForceKnn::default().search(&pool, &data, an, d, 90);
+    let cond = binary_search_perplexity(&pool, &knn, 30.0, ParMode::Parallel);
+    let p = symmetrize(&pool, &knn, &cond.p);
+    let y: Vec<f64> = (0..2 * an).map(|_| rng.next_gaussian() * 10.0).collect();
+    let mut out = vec![0.0f64; 2 * an];
+    let mut b = Bencher::new(&format!("attractive (n={an}, k=90)")).sampling(1, 15, 4.0);
+    b.bench("scalar", || attractive_forces(&pool, &p, &y, Variant::Scalar, &mut out));
+    b.bench("prefetch", || attractive_forces(&pool, &p, &y, Variant::Prefetch, &mut out));
+    b.bench("simd+prefetch", || attractive_forces(&pool, &p, &y, Variant::Simd, &mut out));
+    b.bench("scalar-1t", || attractive_forces(&seq_pool, &p, &y, Variant::Scalar, &mut out));
+    b.bench("prefetch-1t", || attractive_forces(&seq_pool, &p, &y, Variant::Prefetch, &mut out));
+    b.bench("simd+prefetch-1t", || attractive_forces(&seq_pool, &p, &y, Variant::Simd, &mut out));
+    b.report();
+
+    // --- θ ablation: BH speed/accuracy trade-off (paper Eq. 9's knob).
+    let an2 = n.min(20_000);
+    let y2: Vec<f64> = (0..2 * an2).map(|_| rng.next_gaussian() * 10.0).collect();
+    let mut t2 = build_morton(&pool, &y2);
+    summarize_parallel(&pool, &mut t2);
+    let (exact_raw, _) = acc_tsne::gradient::exact::exact_repulsive(&pool, &y2);
+    let mut b = Bencher::new(&format!("theta_ablation (n={an2})")).sampling(1, 8, 3.0);
+    for theta in [0.2, 0.5, 0.8] {
+        let s = b.bench(&format!("theta={theta}"), || repulsive_forces(&pool, &t2, theta).z);
+        let rep = repulsive_forces(&pool, &t2, theta);
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for i in 0..2 * an2 {
+            num += (rep.raw[i] - exact_raw[i]).powi(2);
+            den += exact_raw[i] * exact_raw[i];
+        }
+        println!(
+            "  theta={theta}: {:.3}ms, force rel-RMS error {:.2e}",
+            s.mean * 1e3,
+            (num / den).sqrt()
+        );
+    }
+    b.report();
+
+    // --- BSP
+    let mut b = Bencher::new("bsp").sampling(1, 10, 3.0);
+    b.bench("sequential", || {
+        binary_search_perplexity(&pool, &knn, 30.0, ParMode::Sequential).betas.len()
+    });
+    b.bench("parallel", || {
+        binary_search_perplexity(&pool, &knn, 30.0, ParMode::Parallel).betas.len()
+    });
+    b.report();
+}

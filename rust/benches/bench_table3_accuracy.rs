@@ -1,0 +1,11 @@
+//! Regenerates paper Table 3: KL divergence of sklearn-like, daal4py-like and
+//! Acc-t-SNE across the six datasets (accuracy parity claim).
+
+use acc_tsne::data::datasets::PaperDataset;
+use acc_tsne::eval::{experiments, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig::default();
+    println!("# Table 3 bench: scale={} iters={}", cfg.scale, cfg.n_iter);
+    experiments::table3_accuracy(&cfg, &PaperDataset::ALL);
+}

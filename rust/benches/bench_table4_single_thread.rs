@@ -1,0 +1,10 @@
+//! Regenerates paper Table 4: single-thread end-to-end time of all five
+//! implementations on the mouse-brain analog.
+
+use acc_tsne::eval::{experiments, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig::default();
+    println!("# Table 4 bench: scale={} iters={} (1 thread)", cfg.scale, cfg.n_iter);
+    experiments::table4_single_thread(&cfg);
+}

@@ -1,0 +1,11 @@
+//! Regenerates paper Tables 5 (single-thread) and 6 (all cores): per-step
+//! daal4py-like vs Acc-t-SNE on the mouse-brain analog.
+
+use acc_tsne::eval::{experiments, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig::default();
+    println!("# Table 5/6 bench: scale={} iters={}", cfg.scale, cfg.n_iter);
+    experiments::table56_steps(&cfg, 1);
+    experiments::table56_steps(&cfg, cfg.resolved_threads());
+}

@@ -1,0 +1,11 @@
+//! Regenerates paper Table S1: Acc-t-SNE in f32 vs f64 (time + KL) across
+//! the six datasets.
+
+use acc_tsne::data::datasets::PaperDataset;
+use acc_tsne::eval::{experiments, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig::default();
+    println!("# Table S1 bench: scale={} iters={}", cfg.scale, cfg.n_iter);
+    experiments::table_s1_precision(&cfg, &PaperDataset::ALL);
+}

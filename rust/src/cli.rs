@@ -1,0 +1,119 @@
+//! Minimal CLI argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `acc-tsne <subcommand> [--flag value | --switch]...`.
+//! Flags are typed at the call site: [`Args::get`], [`Args::get_parse`],
+//! [`Args::has`]. Unknown flags are rejected so typos fail loudly.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. Flags take the next token as value unless it starts
+    /// with `--` (then they're switches).
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut subcommand = None;
+        let mut flags = HashMap::new();
+        let mut switches = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    switches.push(name.to_string());
+                    i += 1;
+                }
+            } else if subcommand.is_none() {
+                subcommand = Some(tok.clone());
+                i += 1;
+            } else {
+                return Err(format!("unexpected positional argument '{tok}'"));
+            }
+        }
+        Ok(Args {
+            subcommand,
+            flags,
+            switches,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed flag with default; errors on unparseable values.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: cannot parse '{v}'")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Reject flags/switches outside the allowed set (catches typos).
+    pub fn ensure_known(&self, allowed: &[&str]) -> Result<(), String> {
+        for k in self.flags.keys().chain(self.switches.iter()) {
+            if !allowed.contains(&k.as_str()) {
+                return Err(format!("unknown flag --{k} (allowed: {})", allowed.join(", ")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = Args::parse(&argv("run --dataset mnist --iters 100 --verbose")).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("dataset"), Some("mnist"));
+        assert_eq!(a.get_parse::<usize>("iters", 0).unwrap(), 100);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn default_when_missing() {
+        let a = Args::parse(&argv("run")).unwrap();
+        assert_eq!(a.get_parse::<f64>("scale", 0.5).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn rejects_bad_value() {
+        let a = Args::parse(&argv("run --iters banana")).unwrap();
+        assert!(a.get_parse::<usize>("iters", 1).is_err());
+    }
+
+    #[test]
+    fn rejects_extra_positional() {
+        assert!(Args::parse(&argv("run stray")).is_err());
+    }
+
+    #[test]
+    fn ensure_known_catches_typos() {
+        let a = Args::parse(&argv("run --datset mnist")).unwrap();
+        assert!(a.ensure_known(&["dataset"]).is_err());
+        let b = Args::parse(&argv("run --dataset mnist")).unwrap();
+        assert!(b.ensure_known(&["dataset"]).is_ok());
+    }
+}

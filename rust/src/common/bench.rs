@@ -1,0 +1,125 @@
+//! Minimal criterion-replacement bench harness (criterion is unavailable in
+//! this offline environment).
+//!
+//! Usage from a `harness = false` bench binary:
+//! ```no_run
+//! use acc_tsne::common::bench::Bencher;
+//! let mut b = Bencher::new("morton_encode");
+//! b.bench("scalar", || { /* work */ });
+//! b.report();
+//! ```
+//! Each case is warmed up, then run until either `max_iters` iterations or
+//! `max_secs` seconds elapse; mean/median/min and relative spread are printed
+//! in a fixed-width table that the EXPERIMENTS.md capture scripts parse.
+
+use crate::common::stats::{fmt_secs, Summary};
+use std::time::Instant;
+
+/// One benchmark group (≈ criterion's `BenchmarkGroup`).
+pub struct Bencher {
+    group: String,
+    warmup_iters: usize,
+    max_iters: usize,
+    max_secs: f64,
+    results: Vec<(String, Summary)>,
+}
+
+impl Bencher {
+    pub fn new(group: &str) -> Self {
+        Bencher {
+            group: group.to_string(),
+            warmup_iters: 1,
+            max_iters: 10,
+            max_secs: 5.0,
+            results: Vec::new(),
+        }
+    }
+
+    /// Tune sampling (e.g. 1 iteration for multi-second end-to-end runs).
+    pub fn sampling(mut self, warmup: usize, max_iters: usize, max_secs: f64) -> Self {
+        self.warmup_iters = warmup;
+        self.max_iters = max_iters.max(1);
+        self.max_secs = max_secs;
+        self
+    }
+
+    /// Run one case; returns its summary (also recorded for `report`).
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> Summary {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.max_iters);
+        let start = Instant::now();
+        for _ in 0..self.max_iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+            if start.elapsed().as_secs_f64() > self.max_secs {
+                break;
+            }
+        }
+        let s = Summary::of(&samples);
+        self.results.push((name.to_string(), s));
+        s
+    }
+
+    /// Record an externally-measured sample set under this group.
+    pub fn record(&mut self, name: &str, samples: &[f64]) -> Summary {
+        let s = Summary::of(samples);
+        self.results.push((name.to_string(), s));
+        s
+    }
+
+    /// Print the group's table; returns (name, mean_secs) pairs.
+    pub fn report(&self) -> Vec<(String, f64)> {
+        println!("\n== bench group: {} ==", self.group);
+        println!(
+            "{:<40} {:>10} {:>10} {:>10} {:>8} {:>5}",
+            "case", "mean", "median", "min", "spread", "n"
+        );
+        for (name, s) in &self.results {
+            println!(
+                "{:<40} {:>10} {:>10} {:>10} {:>7.1}% {:>5}",
+                name,
+                fmt_secs(s.mean),
+                fmt_secs(s.median),
+                fmt_secs(s.min),
+                100.0 * s.rel_spread(),
+                s.n
+            );
+        }
+        self.results
+            .iter()
+            .map(|(n, s)| (n.clone(), s.mean))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bencher::new("test").sampling(1, 5, 1.0);
+        let s = b.bench("noop", || 1 + 1);
+        assert!(s.n >= 1 && s.n <= 5);
+        let rep = b.report();
+        assert_eq!(rep.len(), 1);
+        assert_eq!(rep[0].0, "noop");
+    }
+
+    #[test]
+    fn record_external_samples() {
+        let mut b = Bencher::new("test");
+        let s = b.record("ext", &[1.0, 2.0, 3.0]);
+        assert_eq!(s.mean, 2.0);
+    }
+
+    #[test]
+    fn respects_time_budget() {
+        let mut b = Bencher::new("budget").sampling(0, 1000, 0.05);
+        let s = b.bench("sleepy", || std::thread::sleep(std::time::Duration::from_millis(10)));
+        assert!(s.n < 1000);
+    }
+}

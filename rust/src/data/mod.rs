@@ -1,0 +1,82 @@
+//! Datasets: synthetic generators shaped like the paper's six benchmarks,
+//! a PCA substrate (the scRNA pipeline preprocesses with PCA → 20 PCs),
+//! and simple IO for embeddings/results.
+//!
+//! The paper's datasets (MNIST, CIFAR-10, mouse brain 1.3M, …) are not
+//! available offline; per the substitution rule we generate shape-matched
+//! Gaussian-mixture datasets — t-SNE's cost profile depends on N, D, K and
+//! embedding geometry, not on pixel content (see DESIGN.md §Substitutions).
+
+pub mod datasets;
+pub mod io;
+pub mod pca;
+pub mod synthetic;
+
+use crate::common::float::Real;
+
+/// An in-memory dataset: `n` points × `d` features, row-major, with class
+/// labels (used only for coloring the S1–S6 plots, never by the algorithm).
+#[derive(Clone, Debug)]
+pub struct Dataset<T: Real> {
+    pub name: String,
+    pub points: Vec<T>,
+    pub labels: Vec<u16>,
+    pub n: usize,
+    pub d: usize,
+}
+
+impl<T: Real> Dataset<T> {
+    pub fn new(name: impl Into<String>, points: Vec<T>, labels: Vec<u16>, n: usize, d: usize) -> Self {
+        assert_eq!(points.len(), n * d, "points length must be n*d");
+        assert_eq!(labels.len(), n, "labels length must be n");
+        Dataset {
+            name: name.into(),
+            points,
+            labels,
+            n,
+            d,
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[T] {
+        &self.points[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Convert precision (f64 dataset → f32 run for Table S1).
+    pub fn cast<U: Real>(&self) -> Dataset<U> {
+        Dataset {
+            name: self.name.clone(),
+            points: self.points.iter().map(|&v| U::from_f64(v.to_f64())).collect(),
+            labels: self.labels.clone(),
+            n: self.n,
+            d: self.d,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_access() {
+        let ds = Dataset::new("t", vec![1.0f64, 2.0, 3.0, 4.0], vec![0, 1], 2, 2);
+        assert_eq!(ds.row(0), &[1.0, 2.0]);
+        assert_eq!(ds.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn cast_roundtrip() {
+        let ds = Dataset::new("t", vec![1.5f64, -2.5], vec![0], 1, 2);
+        let f32ds: Dataset<f32> = ds.cast();
+        assert_eq!(f32ds.points, vec![1.5f32, -2.5]);
+        assert_eq!(f32ds.name, "t");
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Dataset::new("t", vec![1.0f64; 5], vec![0, 1], 2, 2);
+    }
+}

@@ -1,0 +1,198 @@
+//! Principal component analysis by subspace (block power) iteration.
+//!
+//! The paper's mouse-brain pipeline runs t-SNE on the first 20 principal
+//! components of the scRNA matrix; this module is that preprocessing
+//! substrate. Covariance-based: G = Xcᵀ·Xc / (n-1) built in parallel, then
+//! block power iteration with Gram–Schmidt orthonormalization.
+
+use crate::common::float::Real;
+use crate::common::rng::Rng;
+use crate::parallel::{parallel_for, Schedule, SyncSlice, ThreadPool};
+
+/// Project `data` (n×d row-major) onto its top-`k` principal components.
+/// Returns (projected n×k, explained variance per component).
+pub fn pca<T: Real>(
+    pool: &ThreadPool,
+    data: &[T],
+    n: usize,
+    d: usize,
+    k: usize,
+    iters: usize,
+    seed: u64,
+) -> (Vec<T>, Vec<f64>) {
+    assert_eq!(data.len(), n * d);
+    assert!(k <= d, "k must be <= d");
+    // Column means.
+    let mut mean = vec![0.0f64; d];
+    for i in 0..n {
+        for j in 0..d {
+            mean[j] += data[i * d + j].to_f64();
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n as f64;
+    }
+    // Covariance G = (X - mean)ᵀ (X - mean) / (n - 1), parallel over rows of G.
+    let mut g = vec![0.0f64; d * d];
+    {
+        let gs = SyncSlice::new(&mut g);
+        parallel_for(pool, d, Schedule::Dynamic { grain: 8 }, |range| {
+            for a in range {
+                // disjoint: row `a` of G is owned by this iteration
+                let row = unsafe { gs.slice_mut(a * d, d) };
+                for i in 0..n {
+                    let xa = data[i * d + a].to_f64() - mean[a];
+                    if xa == 0.0 {
+                        continue;
+                    }
+                    for b in 0..d {
+                        row[b] += xa * (data[i * d + b].to_f64() - mean[b]);
+                    }
+                }
+                let denom = (n.max(2) - 1) as f64;
+                for v in row.iter_mut() {
+                    *v /= denom;
+                }
+            }
+        });
+    }
+    // Block power iteration on G for the top-k eigenvectors.
+    let mut rng = Rng::new(seed);
+    let mut v: Vec<f64> = (0..k * d).map(|_| rng.next_gaussian()).collect();
+    orthonormalize(&mut v, k, d);
+    let mut gv = vec![0.0f64; k * d];
+    for _ in 0..iters {
+        // gv = G · vᵀ per component (G symmetric)
+        {
+            let gvs = SyncSlice::new(&mut gv);
+            let v_ref = &v;
+            parallel_for(pool, k * d, Schedule::Static, |range| {
+                for idx in range {
+                    let c = idx / d;
+                    let row = idx % d;
+                    let mut acc = 0.0;
+                    for b in 0..d {
+                        acc += g[row * d + b] * v_ref[c * d + b];
+                    }
+                    // disjoint: one slot per idx
+                    unsafe { *gvs.get_mut(idx) = acc };
+                }
+            });
+        }
+        std::mem::swap(&mut v, &mut gv);
+        orthonormalize(&mut v, k, d);
+    }
+    // Eigenvalues (explained variance): λ_c = v_cᵀ G v_c
+    let mut eigvals = vec![0.0f64; k];
+    for c in 0..k {
+        let vc = &v[c * d..(c + 1) * d];
+        let mut acc = 0.0;
+        for a in 0..d {
+            let mut dot = 0.0;
+            for b in 0..d {
+                dot += g[a * d + b] * vc[b];
+            }
+            acc += vc[a] * dot;
+        }
+        eigvals[c] = acc;
+    }
+    // Project: out[i][c] = (x_i - mean) · v_c, parallel over points.
+    let mut out = vec![T::ZERO; n * k];
+    {
+        let os = SyncSlice::new(&mut out);
+        let v_ref = &v;
+        parallel_for(pool, n, Schedule::Static, |range| {
+            for i in range {
+                for c in 0..k {
+                    let mut acc = 0.0;
+                    for j in 0..d {
+                        acc += (data[i * d + j].to_f64() - mean[j]) * v_ref[c * d + j];
+                    }
+                    // disjoint: row i owned by this iteration
+                    unsafe { *os.get_mut(i * k + c) = T::from_f64(acc) };
+                }
+            }
+        });
+    }
+    (out, eigvals)
+}
+
+/// Modified Gram–Schmidt on k row vectors of length d.
+fn orthonormalize(v: &mut [f64], k: usize, d: usize) {
+    for c in 0..k {
+        for p in 0..c {
+            let (head, tail) = v.split_at_mut(c * d);
+            let prev = &head[p * d..(p + 1) * d];
+            let cur = &mut tail[..d];
+            let dot: f64 = prev.iter().zip(cur.iter()).map(|(a, b)| a * b).sum();
+            for (x, y) in cur.iter_mut().zip(prev.iter()) {
+                *x -= dot * y;
+            }
+        }
+        let cur = &mut v[c * d..(c + 1) * d];
+        let norm: f64 = cur.iter().map(|x| x * x).sum::<f64>().sqrt().max(f64::MIN_POSITIVE);
+        for x in cur.iter_mut() {
+            *x /= norm;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::rng::Rng;
+
+    #[test]
+    fn recovers_dominant_direction() {
+        // Points along (1,1,0)/√2 with small noise: PC1 ≈ that direction.
+        let mut rng = Rng::new(1);
+        let n = 500;
+        let d = 3;
+        let mut data = vec![0.0f64; n * d];
+        for i in 0..n {
+            let t = rng.next_gaussian() * 10.0;
+            data[i * d] = t + 0.01 * rng.next_gaussian();
+            data[i * d + 1] = t + 0.01 * rng.next_gaussian();
+            data[i * d + 2] = 0.01 * rng.next_gaussian();
+        }
+        let pool = ThreadPool::new(4);
+        let (proj, eig) = pca(&pool, &data, n, d, 2, 50, 42);
+        assert_eq!(proj.len(), n * 2);
+        // PC1 variance should dominate
+        assert!(eig[0] > 50.0 * eig[1], "eig {eig:?}");
+        // Projection onto PC1 should correlate with t = (x+y)/2 up to sign.
+        let mut corr = 0.0;
+        for i in 0..n {
+            let t = 0.5 * (data[i * d] + data[i * d + 1]);
+            corr += t * proj[i * 2];
+        }
+        assert!(corr.abs() > 1.0);
+    }
+
+    #[test]
+    fn components_orthonormal() {
+        let mut v = vec![1.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 1.0];
+        orthonormalize(&mut v, 3, 3);
+        for a in 0..3 {
+            for b in 0..3 {
+                let dot: f64 = (0..3).map(|j| v[a * 3 + j] * v[b * 3 + j]).sum();
+                let expect = if a == b { 1.0 } else { 0.0 };
+                assert!((dot - expect).abs() < 1e-9, "({a},{b}) dot={dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn projection_centered() {
+        let mut rng = Rng::new(2);
+        let n = 200;
+        let d = 6;
+        let data: Vec<f64> = (0..n * d).map(|_| rng.next_gaussian() + 5.0).collect();
+        let pool = ThreadPool::new(2);
+        let (proj, _) = pca(&pool, &data, n, d, 3, 30, 1);
+        for c in 0..3 {
+            let mean: f64 = (0..n).map(|i| proj[i * 3 + c]).sum::<f64>() / n as f64;
+            assert!(mean.abs() < 1e-6, "component {c} mean {mean}");
+        }
+    }
+}

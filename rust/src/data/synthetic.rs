@@ -1,0 +1,145 @@
+//! Synthetic dataset generators.
+//!
+//! Two families:
+//! - [`gaussian_mixture`] — k isotropic clusters in d dims; the workhorse
+//!   analog for the image datasets (MNIST/CIFAR/...): t-SNE sees cluster
+//!   structure, not pixels.
+//! - [`scrna_like`] — single-cell RNA-seq analog for the mouse-brain dataset:
+//!   anisotropic log-normal clusters of very unequal sizes plus dropout
+//!   sparsity, then (in [`super::datasets`]) reduced with our PCA to 20 PCs
+//!   like the paper's pipeline. The unequal cluster mass is what stresses the
+//!   quadtree balance — the property the paper's dynamic scheduling targets.
+
+use super::Dataset;
+use crate::common::float::Real;
+use crate::common::rng::Rng;
+
+/// `k` Gaussian clusters in `d` dims. `separation` scales the distance between
+/// cluster centers relative to the unit within-cluster spread.
+pub fn gaussian_mixture<T: Real>(n: usize, d: usize, k: usize, separation: f64, seed: u64) -> Dataset<T> {
+    assert!(n > 0 && d > 0 && k > 0);
+    let mut rng = Rng::new(seed);
+    let centers: Vec<f64> = (0..k * d).map(|_| rng.next_gaussian() * separation).collect();
+    let mut points = vec![T::ZERO; n * d];
+    let mut labels = vec![0u16; n];
+    for i in 0..n {
+        let c = i % k; // balanced clusters
+        labels[i] = c as u16;
+        for j in 0..d {
+            points[i * d + j] = T::from_f64(centers[c * d + j] + rng.next_gaussian());
+        }
+    }
+    Dataset::new(format!("gmm-n{n}-d{d}-k{k}"), points, labels, n, d)
+}
+
+/// scRNA-seq-like generator: `k` clusters with Zipf-ish sizes, per-cluster
+/// anisotropic scales, log-normal expression, and `dropout` probability of
+/// zeroing an entry (the defining sparsity of scRNA counts).
+pub fn scrna_like<T: Real>(n: usize, genes: usize, k: usize, dropout: f64, seed: u64) -> Dataset<T> {
+    assert!(n > 0 && genes > 0 && k > 0);
+    let mut rng = Rng::new(seed);
+    // Zipf-like cluster weights → very unbalanced cluster sizes.
+    let weights: Vec<f64> = (1..=k).map(|i| 1.0 / i as f64).collect();
+    let wsum: f64 = weights.iter().sum();
+    let mut assignment: Vec<u16> = Vec::with_capacity(n);
+    for c in 0..k {
+        let cnt = ((weights[c] / wsum) * n as f64).ceil() as usize;
+        for _ in 0..cnt {
+            if assignment.len() < n {
+                assignment.push(c as u16);
+            }
+        }
+    }
+    while assignment.len() < n {
+        assignment.push(0);
+    }
+    rng.shuffle(&mut assignment);
+
+    let centers: Vec<f64> = (0..k * genes).map(|_| rng.next_gaussian() * 2.0).collect();
+    let scales: Vec<f64> = (0..k).map(|_| 0.5 + rng.next_f64()).collect();
+    let mut points = vec![T::ZERO; n * genes];
+    for i in 0..n {
+        let c = assignment[i] as usize;
+        for j in 0..genes {
+            if rng.next_f64() < dropout {
+                continue; // dropout: entry stays zero
+            }
+            // log-normal-ish expression around the cluster center
+            let v = (centers[c * genes + j] + scales[c] * rng.next_gaussian()).exp().ln_1p();
+            points[i * genes + j] = T::from_f64(v);
+        }
+    }
+    Dataset::new(format!("scrna-n{n}-g{genes}-k{k}"), points, assignment, n, genes)
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gmm_shapes_and_labels() {
+        let ds = gaussian_mixture::<f64>(100, 8, 5, 4.0, 1);
+        assert_eq!(ds.n, 100);
+        assert_eq!(ds.d, 8);
+        assert_eq!(ds.points.len(), 800);
+        assert!(ds.labels.iter().all(|&l| l < 5));
+        // every cluster present
+        for c in 0..5u16 {
+            assert!(ds.labels.contains(&c));
+        }
+    }
+
+    #[test]
+    fn gmm_deterministic() {
+        let a = gaussian_mixture::<f64>(50, 4, 3, 2.0, 7);
+        let b = gaussian_mixture::<f64>(50, 4, 3, 2.0, 7);
+        assert_eq!(a.points, b.points);
+        let c = gaussian_mixture::<f64>(50, 4, 3, 2.0, 8);
+        assert_ne!(a.points, c.points);
+    }
+
+    #[test]
+    fn gmm_clusters_are_separated() {
+        // With large separation, within-cluster distance << between-cluster.
+        let ds = gaussian_mixture::<f64>(200, 16, 4, 10.0, 3);
+        let dist = |a: usize, b: usize| -> f64 {
+            ds.row(a)
+                .iter()
+                .zip(ds.row(b))
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum::<f64>()
+                .sqrt()
+        };
+        let mut within = 0.0;
+        let mut between = 0.0;
+        let mut nw = 0;
+        let mut nb = 0;
+        for i in 0..50 {
+            for j in (i + 1)..50 {
+                if ds.labels[i] == ds.labels[j] {
+                    within += dist(i, j);
+                    nw += 1;
+                } else {
+                    between += dist(i, j);
+                    nb += 1;
+                }
+            }
+        }
+        assert!(between / nb as f64 > 2.0 * within / nw as f64);
+    }
+
+    #[test]
+    fn scrna_unbalanced_and_sparse() {
+        let ds = scrna_like::<f64>(1000, 50, 8, 0.5, 11);
+        assert_eq!(ds.n, 1000);
+        // cluster 0 (heaviest Zipf weight) much larger than cluster 7
+        let count = |c: u16| ds.labels.iter().filter(|&&l| l == c).count();
+        assert!(count(0) > 2 * count(7), "zipf imbalance expected");
+        // dropout produces many exact zeros
+        let zeros = ds.points.iter().filter(|&&v| v == 0.0).count();
+        assert!(zeros as f64 > 0.3 * ds.points.len() as f64);
+        // but data is not all zero
+        assert!(zeros < ds.points.len());
+    }
+}

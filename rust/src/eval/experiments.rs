@@ -1,0 +1,358 @@
+//! One function per paper table/figure. Every function prints its table and
+//! writes `results/<id>.csv`; benches and the CLI both call these.
+
+use super::{print_table, save_csv, ExpConfig};
+use crate::common::timer::Step;
+use crate::data::datasets::PaperDataset;
+use crate::data::Dataset;
+use crate::parallel::ThreadPool;
+use crate::tsne::{run_tsne, Implementation, TsneConfig, TsneResult};
+use crate::viz;
+
+fn gen(ds: PaperDataset, cfg: &ExpConfig) -> Dataset<f64> {
+    let pool = ThreadPool::new(cfg.resolved_threads());
+    ds.generate::<f64>(cfg.scale, cfg.seed, &pool)
+}
+
+fn tsne_cfg(cfg: &ExpConfig, threads: usize) -> TsneConfig {
+    TsneConfig {
+        n_iter: cfg.n_iter,
+        seed: cfg.seed,
+        n_threads: threads,
+        ..TsneConfig::default()
+    }
+}
+
+fn run(ds: &Dataset<f64>, cfg: &ExpConfig, imp: Implementation, threads: usize) -> TsneResult<f64> {
+    run_tsne(&ds.points, ds.n, ds.d, &tsne_cfg(cfg, threads), imp)
+}
+
+/// Figure 1b — step-time profile of the daal4py-like baseline on the
+/// mouse-brain analog, all cores.
+pub fn fig1b_profile(cfg: &ExpConfig) -> Vec<Vec<String>> {
+    let ds = gen(PaperDataset::Mouse1_3M, cfg);
+    let r = run(&ds, cfg, Implementation::Daal4pyLike, cfg.resolved_threads());
+    let rows: Vec<Vec<String>> = r
+        .step_times
+        .percentages()
+        .iter()
+        .map(|(s, pct)| {
+            vec![
+                s.name().to_string(),
+                format!("{:.2}", r.step_times.get(*s)),
+                format!("{pct:.1}%"),
+            ]
+        })
+        .collect();
+    print_table(
+        &format!("Fig 1b: daal4py-like profile ({}, n={})", ds.name, ds.n),
+        &["step", "seconds", "share"],
+        &rows,
+    );
+    save_csv(cfg, "fig1b_profile", &["step", "seconds", "share"], &rows);
+    rows
+}
+
+/// Figure 4 — end-to-end comparison of all five implementations across the
+/// six datasets, all cores; speedups reported over sklearn-like.
+pub fn fig4_end_to_end(cfg: &ExpConfig, datasets: &[PaperDataset]) -> Vec<Vec<String>> {
+    let threads = cfg.resolved_threads();
+    let mut rows = Vec::new();
+    for &d in datasets {
+        let ds = gen(d, cfg);
+        let mut base_time = None;
+        for imp in Implementation::ALL {
+            let r = run(&ds, cfg, imp, threads);
+            let t = r.step_times.total();
+            if imp == Implementation::SklearnLike {
+                base_time = Some(t);
+            }
+            let speedup = base_time.map(|b| b / t).unwrap_or(1.0);
+            rows.push(vec![
+                d.name().to_string(),
+                format!("{}", ds.n),
+                imp.name().to_string(),
+                format!("{t:.2}"),
+                format!("{speedup:.1}x"),
+                format!("{:.3}", r.kl_divergence),
+            ]);
+        }
+    }
+    let headers = ["dataset", "n", "impl", "seconds", "speedup-vs-sklearn", "kl"];
+    print_table(
+        &format!("Fig 4: end-to-end, {} threads, scale {}", threads, cfg.scale),
+        &headers,
+        &rows,
+    );
+    save_csv(cfg, "fig4_end_to_end", &headers, &rows);
+    rows
+}
+
+/// Table 3 — KL divergence of sklearn-like / daal4py-like / Acc-t-SNE across
+/// the datasets.
+pub fn table3_accuracy(cfg: &ExpConfig, datasets: &[PaperDataset]) -> Vec<Vec<String>> {
+    let threads = cfg.resolved_threads();
+    let mut rows = Vec::new();
+    for &d in datasets {
+        let ds = gen(d, cfg);
+        let kls: Vec<f64> = [
+            Implementation::SklearnLike,
+            Implementation::Daal4pyLike,
+            Implementation::AccTsne,
+        ]
+        .iter()
+        .map(|&imp| run(&ds, cfg, imp, threads).kl_divergence)
+        .collect();
+        rows.push(vec![
+            d.name().to_string(),
+            format!("{:.3}", kls[0]),
+            format!("{:.3}", kls[1]),
+            format!("{:.3}", kls[2]),
+        ]);
+    }
+    let headers = ["dataset", "sklearn", "daal4py", "acc-t-sne(optimized)"];
+    print_table("Table 3: KL divergence", &headers, &rows);
+    save_csv(cfg, "table3_accuracy", &headers, &rows);
+    rows
+}
+
+/// Table 4 — single-thread end-to-end on the mouse analog, all implementations.
+pub fn table4_single_thread(cfg: &ExpConfig) -> Vec<Vec<String>> {
+    let ds = gen(PaperDataset::Mouse1_3M, cfg);
+    let mut rows = Vec::new();
+    let mut base = None;
+    for imp in Implementation::ALL {
+        let r = run(&ds, cfg, imp, 1);
+        let t = r.step_times.total();
+        if imp == Implementation::SklearnLike {
+            base = Some(t);
+        }
+        rows.push(vec![
+            imp.name().to_string(),
+            format!("{t:.2}"),
+            format!("{:.1}x", base.map(|b| b / t).unwrap_or(1.0)),
+        ]);
+    }
+    let headers = ["implementation", "seconds", "speedup"];
+    print_table(
+        &format!("Table 4: single-thread end-to-end ({}, n={})", ds.name, ds.n),
+        &headers,
+        &rows,
+    );
+    save_csv(cfg, "table4_single_thread", &headers, &rows);
+    rows
+}
+
+/// Figure 5 — end-to-end multicore scaling of all implementations on the
+/// mouse analog (speedup vs own single-thread time).
+pub fn fig5_scaling(cfg: &ExpConfig) -> Vec<Vec<String>> {
+    let ds = gen(PaperDataset::Mouse1_3M, cfg);
+    let sweep = cfg.core_sweep();
+    let mut rows = Vec::new();
+    for imp in Implementation::ALL {
+        let mut base = None;
+        for &threads in &sweep {
+            let r = run(&ds, cfg, imp, threads);
+            let t = r.step_times.total();
+            if threads == 1 {
+                base = Some(t);
+            }
+            rows.push(vec![
+                imp.name().to_string(),
+                threads.to_string(),
+                format!("{t:.2}"),
+                format!("{:.1}x", base.map(|b| b / t).unwrap_or(1.0)),
+            ]);
+        }
+    }
+    let headers = ["impl", "cores", "seconds", "speedup-vs-1core"];
+    print_table(
+        &format!("Fig 5: end-to-end scaling ({}, n={})", ds.name, ds.n),
+        &headers,
+        &rows,
+    );
+    save_csv(cfg, "fig5_scaling", &headers, &rows);
+    rows
+}
+
+/// Tables 5 & 6 — per-step comparison daal4py-like vs Acc-t-SNE at a given
+/// thread count (1 ⇒ Table 5, all cores ⇒ Table 6).
+pub fn table56_steps(cfg: &ExpConfig, threads: usize) -> Vec<Vec<String>> {
+    let ds = gen(PaperDataset::Mouse1_3M, cfg);
+    let r_daal = run(&ds, cfg, Implementation::Daal4pyLike, threads);
+    let r_acc = run(&ds, cfg, Implementation::AccTsne, threads);
+    let steps = [
+        Step::Bsp,
+        Step::TreeBuild,
+        Step::Summarize,
+        Step::Attractive,
+        Step::Repulsive,
+    ];
+    let mut rows: Vec<Vec<String>> = steps
+        .iter()
+        .map(|&s| {
+            let (a, b) = (r_daal.step_times.get(s), r_acc.step_times.get(s));
+            vec![
+                s.name().to_string(),
+                format!("{a:.3}"),
+                format!("{b:.3}"),
+                format!("{:.1}x", a / b.max(1e-12)),
+            ]
+        })
+        .collect();
+    let (ta, tb) = (
+        r_daal.step_times.gradient_total() + r_daal.step_times.get(Step::Bsp),
+        r_acc.step_times.gradient_total() + r_acc.step_times.get(Step::Bsp),
+    );
+    rows.push(vec![
+        "TOTAL(excl. KNN)".to_string(),
+        format!("{ta:.3}"),
+        format!("{tb:.3}"),
+        format!("{:.1}x", ta / tb.max(1e-12)),
+    ]);
+    let headers = ["step", "daal4py (s)", "acc-t-sne (s)", "speedup"];
+    let which = if threads == 1 { "Table 5 (1 thread)" } else { "Table 6 (all cores)" };
+    print_table(
+        &format!("{which}: per-step ({}, n={}, {threads} threads)", ds.name, ds.n),
+        &headers,
+        &rows,
+    );
+    save_csv(
+        cfg,
+        &format!("table56_steps_t{threads}"),
+        &headers,
+        &rows,
+    );
+    rows
+}
+
+/// Figure 6a/6b — per-step multicore scaling for daal4py-like and Acc-t-SNE.
+pub fn fig6_step_scaling(cfg: &ExpConfig) -> Vec<Vec<String>> {
+    let ds = gen(PaperDataset::Mouse1_3M, cfg);
+    let sweep = cfg.core_sweep();
+    let steps = [
+        Step::Knn,
+        Step::Bsp,
+        Step::TreeBuild,
+        Step::Summarize,
+        Step::Attractive,
+        Step::Repulsive,
+    ];
+    let mut rows = Vec::new();
+    for imp in [Implementation::Daal4pyLike, Implementation::AccTsne] {
+        let mut base: Option<Vec<f64>> = None;
+        for &threads in &sweep {
+            let r = run(&ds, cfg, imp, threads);
+            let t: Vec<f64> = steps.iter().map(|&s| r.step_times.get(s)).collect();
+            if threads == 1 {
+                base = Some(t.clone());
+            }
+            let b = base.as_ref().unwrap();
+            for (i, &s) in steps.iter().enumerate() {
+                rows.push(vec![
+                    imp.name().to_string(),
+                    s.name().to_string(),
+                    threads.to_string(),
+                    format!("{:.3}", t[i]),
+                    format!("{:.1}x", b[i] / t[i].max(1e-12)),
+                ]);
+            }
+        }
+    }
+    let headers = ["impl", "step", "cores", "seconds", "speedup-vs-1core"];
+    print_table(
+        &format!("Fig 6: per-step scaling ({}, n={})", ds.name, ds.n),
+        &headers,
+        &rows,
+    );
+    save_csv(cfg, "fig6_step_scaling", &headers, &rows);
+    rows
+}
+
+/// Table S1 — Acc-t-SNE in f32 vs f64 across datasets.
+pub fn table_s1_precision(cfg: &ExpConfig, datasets: &[PaperDataset]) -> Vec<Vec<String>> {
+    let threads = cfg.resolved_threads();
+    let mut rows = Vec::new();
+    for &d in datasets {
+        let ds = gen(d, cfg);
+        let ds32 = ds.cast::<f32>();
+        let r64 = run(&ds, cfg, Implementation::AccTsne, threads);
+        let tc = tsne_cfg(cfg, threads);
+        let r32 = run_tsne(&ds32.points, ds32.n, ds32.d, &tc, Implementation::AccTsne);
+        let (t64, t32) = (r64.step_times.total(), r32.step_times.total());
+        rows.push(vec![
+            d.name().to_string(),
+            format!("{t32:.2}"),
+            format!("{:.3}", r32.kl_divergence),
+            format!("{t64:.2}"),
+            format!("{:.3}", r64.kl_divergence),
+            format!("{:.2}x", t64 / t32.max(1e-12)),
+        ]);
+    }
+    let headers = ["dataset", "time f32 (s)", "kl f32", "time f64 (s)", "kl f64", "speedup"];
+    print_table("Table S1: single vs double precision (Acc-t-SNE)", &headers, &rows);
+    save_csv(cfg, "tableS1_precision", &headers, &rows);
+    rows
+}
+
+/// Figures S1–S6 — embedding scatter plots per dataset (PPM + SVG + CSV).
+pub fn figs_s_plots(cfg: &ExpConfig, datasets: &[PaperDataset]) -> Vec<Vec<String>> {
+    let threads = cfg.resolved_threads();
+    std::fs::create_dir_all(&cfg.out_dir).ok();
+    let mut rows = Vec::new();
+    for &d in datasets {
+        let ds = gen(d, cfg);
+        let r = run(&ds, cfg, Implementation::AccTsne, threads);
+        let base = cfg.out_dir.join(format!("figS_{}", d.name()));
+        viz::write_ppm(base.with_extension("ppm"), &r.embedding, &ds.labels, 512).ok();
+        viz::write_svg(base.with_extension("svg"), &r.embedding, &ds.labels, 512).ok();
+        crate::data::io::write_embedding_csv(base.with_extension("csv"), &r.embedding, &ds.labels).ok();
+        rows.push(vec![
+            d.name().to_string(),
+            format!("{}", ds.n),
+            format!("{:.3}", r.kl_divergence),
+            base.with_extension("svg").display().to_string(),
+        ]);
+    }
+    let headers = ["dataset", "n", "kl", "plot"];
+    print_table("Figs S1–S6: embeddings", &headers, &rows);
+    save_csv(cfg, "figS_plots", &headers, &rows);
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExpConfig {
+        ExpConfig {
+            scale: 0.002,
+            n_iter: 12,
+            max_threads: 4,
+            out_dir: std::env::temp_dir().join(format!("acc_eval_{}", std::process::id())),
+            ..ExpConfig::default()
+        }
+    }
+
+    #[test]
+    fn fig1b_produces_all_steps() {
+        let rows = fig1b_profile(&tiny_cfg());
+        assert_eq!(rows.len(), 7); // all Step::ALL entries
+    }
+
+    #[test]
+    fn table56_has_total_row() {
+        let rows = table56_steps(&tiny_cfg(), 2);
+        assert_eq!(rows.last().unwrap()[0], "TOTAL(excl. KNN)");
+    }
+
+    #[test]
+    fn fig4_rows_cover_impls() {
+        let rows = fig4_end_to_end(&tiny_cfg(), &[PaperDataset::Digits]);
+        assert_eq!(rows.len(), Implementation::ALL.len());
+        // acc-t-sne should not be slower than sklearn-like even at tiny scale
+        let acc_row = rows.iter().find(|r| r[2] == "acc-t-sne").unwrap();
+        let speedup: f64 = acc_row[4].trim_end_matches('x').parse().unwrap();
+        assert!(speedup > 0.5, "unexpected slowdown: {speedup}");
+    }
+}

@@ -1,0 +1,128 @@
+//! Evaluation harness: regenerates every table and figure of the paper's
+//! §4 (see DESIGN.md §Experiment-index for the mapping). Each experiment
+//! prints a fixed-width table and writes a CSV under `results/`.
+
+pub mod experiments;
+
+use std::path::PathBuf;
+
+/// Shared experiment configuration. Scaled-down defaults keep the full bench
+/// suite in CI time; set `ACC_TSNE_SCALE` / `ACC_TSNE_ITERS` (or CLI flags)
+/// for paper-sized runs.
+#[derive(Clone, Debug)]
+pub struct ExpConfig {
+    /// Fraction of each dataset's paper-size N.
+    pub scale: f64,
+    /// Gradient iterations (paper: 1000).
+    pub n_iter: usize,
+    pub seed: u64,
+    /// Max threads for "all cores" experiments (0 ⇒ available cores).
+    pub max_threads: usize,
+    pub out_dir: PathBuf,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        let scale = std::env::var("ACC_TSNE_SCALE")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0.01);
+        let n_iter = std::env::var("ACC_TSNE_ITERS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(150);
+        ExpConfig {
+            scale,
+            n_iter,
+            seed: 42,
+            max_threads: 0,
+            out_dir: PathBuf::from("results"),
+        }
+    }
+}
+
+impl ExpConfig {
+    pub fn resolved_threads(&self) -> usize {
+        if self.max_threads == 0 {
+            crate::parallel::pool::available_cores()
+        } else {
+            self.max_threads
+        }
+    }
+
+    /// Thread counts for scaling sweeps: powers of two up to max, plus max.
+    pub fn core_sweep(&self) -> Vec<usize> {
+        let max = self.resolved_threads();
+        let mut v = vec![];
+        let mut c = 1;
+        while c < max {
+            v.push(c);
+            c *= 2;
+        }
+        v.push(max);
+        v.dedup();
+        v
+    }
+}
+
+/// Print a fixed-width table; returns nothing, purely cosmetic.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(8) + 2))
+            .collect::<String>()
+    };
+    println!("{}", fmt_row(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    println!("{}", "-".repeat(widths.iter().map(|w| w + 2).sum()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+/// Write the rows as CSV under the experiment output dir.
+pub fn save_csv(cfg: &ExpConfig, name: &str, headers: &[&str], rows: &[Vec<String>]) {
+    std::fs::create_dir_all(&cfg.out_dir).ok();
+    let path = cfg.out_dir.join(format!("{name}.csv"));
+    if let Err(e) = crate::data::io::write_csv(&path, &headers.join(","), rows) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    } else {
+        println!("[csv] {}", path.display());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn core_sweep_covers_one_to_max() {
+        let cfg = ExpConfig {
+            max_threads: 12,
+            ..ExpConfig::default()
+        };
+        let sweep = cfg.core_sweep();
+        assert_eq!(sweep.first(), Some(&1));
+        assert_eq!(sweep.last(), Some(&12));
+        assert!(sweep.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn single_core_sweep() {
+        let cfg = ExpConfig {
+            max_threads: 1,
+            ..ExpConfig::default()
+        };
+        assert_eq!(cfg.core_sweep(), vec![1]);
+    }
+}

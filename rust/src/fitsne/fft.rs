@@ -1,0 +1,245 @@
+//! FFT substrate for the FIt-SNE baseline (the paper compares against
+//! Linderman et al.'s FFT-interpolation t-SNE; no FFTW offline, so we own an
+//! iterative radix-2 Cooley-Tukey complex FFT and a row/column-parallel 2-D
+//! transform).
+
+use crate::parallel::{parallel_for, Schedule, SyncSlice, ThreadPool};
+
+/// Minimal complex number (no external num-complex dependency).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Cpx {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Cpx {
+    #[inline(always)]
+    pub fn new(re: f64, im: f64) -> Self {
+        Cpx { re, im }
+    }
+
+    #[inline(always)]
+    pub fn mul(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
+    }
+
+    #[inline(always)]
+    pub fn add(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re + o.re, self.im + o.im)
+    }
+
+    #[inline(always)]
+    pub fn sub(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+/// In-place radix-2 FFT. `data.len()` must be a power of two.
+/// `invert = true` computes the inverse transform including the 1/n scale.
+pub fn fft_inplace(data: &mut [Cpx], invert: bool) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "FFT length must be a power of two");
+    if n <= 1 {
+        return;
+    }
+    // bit-reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            data.swap(i, j);
+        }
+    }
+    let sign = if invert { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let wlen = Cpx::new(ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let mut w = Cpx::new(1.0, 0.0);
+            for k in 0..len / 2 {
+                let u = data[i + k];
+                let v = data[i + k + len / 2].mul(w);
+                data[i + k] = u.add(v);
+                data[i + k + len / 2] = u.sub(v);
+                w = w.mul(wlen);
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+    if invert {
+        let inv = 1.0 / n as f64;
+        for d in data.iter_mut() {
+            d.re *= inv;
+            d.im *= inv;
+        }
+    }
+}
+
+/// In-place 2-D FFT of a row-major `rows × cols` grid (both powers of two).
+/// Rows are transformed in parallel, then columns (via transpose-free strided
+/// copies, parallel over columns).
+pub fn fft2_inplace(pool: &ThreadPool, data: &mut [Cpx], rows: usize, cols: usize, invert: bool) {
+    assert_eq!(data.len(), rows * cols);
+    // rows
+    {
+        let ds = SyncSlice::new(data);
+        parallel_for(pool, rows, Schedule::Dynamic { grain: 4 }, |range| {
+            for r in range {
+                // disjoint: row r
+                let row = unsafe { ds.slice_mut(r * cols, cols) };
+                fft_inplace(row, invert);
+            }
+        });
+    }
+    // columns
+    {
+        let ds = SyncSlice::new(data);
+        parallel_for(pool, cols, Schedule::Dynamic { grain: 4 }, |range| {
+            let mut buf = vec![Cpx::default(); rows];
+            for c in range {
+                for r in 0..rows {
+                    // read-only overlap is fine; writes below are disjoint per column
+                    buf[r] = unsafe { *ds.get_mut(r * cols + c) };
+                }
+                fft_inplace(&mut buf, invert);
+                for r in 0..rows {
+                    // disjoint: column c slots
+                    unsafe { *ds.get_mut(r * cols + c) = buf[r] };
+                }
+            }
+        });
+    }
+}
+
+/// Circular 2-D convolution via FFT: `out = ifft2(fft2(a) ∘ fft2(b))`.
+/// Both grids `rows × cols`, powers of two. Used by tests; the FIt-SNE path
+/// caches the kernel transform across charge vectors instead.
+pub fn convolve2(pool: &ThreadPool, a: &[Cpx], b: &[Cpx], rows: usize, cols: usize) -> Vec<Cpx> {
+    let mut fa = a.to_vec();
+    let mut fb = b.to_vec();
+    fft2_inplace(pool, &mut fa, rows, cols, false);
+    fft2_inplace(pool, &mut fb, rows, cols, false);
+    for (x, y) in fa.iter_mut().zip(fb.iter()) {
+        *x = x.mul(*y);
+    }
+    fft2_inplace(pool, &mut fa, rows, cols, true);
+    fa
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::rng::Rng;
+
+    fn naive_dft(data: &[Cpx], invert: bool) -> Vec<Cpx> {
+        let n = data.len();
+        let sign = if invert { 1.0 } else { -1.0 };
+        let mut out = vec![Cpx::default(); n];
+        for k in 0..n {
+            let mut acc = Cpx::default();
+            for t in 0..n {
+                let ang = sign * 2.0 * std::f64::consts::PI * (k * t) as f64 / n as f64;
+                acc = acc.add(data[t].mul(Cpx::new(ang.cos(), ang.sin())));
+            }
+            out[k] = if invert {
+                Cpx::new(acc.re / n as f64, acc.im / n as f64)
+            } else {
+                acc
+            };
+        }
+        out
+    }
+
+    #[test]
+    fn matches_naive_dft() {
+        let mut rng = Rng::new(1);
+        for n in [1usize, 2, 8, 64, 256] {
+            let data: Vec<Cpx> = (0..n).map(|_| Cpx::new(rng.next_gaussian(), rng.next_gaussian())).collect();
+            let mut fast = data.clone();
+            fft_inplace(&mut fast, false);
+            let slow = naive_dft(&data, false);
+            for i in 0..n {
+                assert!((fast[i].re - slow[i].re).abs() < 1e-8, "n={n} i={i}");
+                assert!((fast[i].im - slow[i].im).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        let mut rng = Rng::new(2);
+        let data: Vec<Cpx> = (0..128).map(|_| Cpx::new(rng.next_gaussian(), 0.0)).collect();
+        let mut x = data.clone();
+        fft_inplace(&mut x, false);
+        fft_inplace(&mut x, true);
+        for i in 0..data.len() {
+            assert!((x[i].re - data[i].re).abs() < 1e-12);
+            assert!(x[i].im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_power_of_two() {
+        let mut d = vec![Cpx::default(); 12];
+        fft_inplace(&mut d, false);
+    }
+
+    #[test]
+    fn fft2_roundtrip() {
+        let mut rng = Rng::new(3);
+        let (r, c) = (16, 32);
+        let data: Vec<Cpx> = (0..r * c).map(|_| Cpx::new(rng.next_gaussian(), 0.0)).collect();
+        let pool = ThreadPool::new(4);
+        let mut x = data.clone();
+        fft2_inplace(&pool, &mut x, r, c, false);
+        fft2_inplace(&pool, &mut x, r, c, true);
+        for i in 0..data.len() {
+            assert!((x[i].re - data[i].re).abs() < 1e-11);
+        }
+    }
+
+    #[test]
+    fn convolution_matches_direct() {
+        let mut rng = Rng::new(4);
+        let (r, c) = (8, 8);
+        let a: Vec<Cpx> = (0..r * c).map(|_| Cpx::new(rng.next_gaussian(), 0.0)).collect();
+        let b: Vec<Cpx> = (0..r * c).map(|_| Cpx::new(rng.next_gaussian(), 0.0)).collect();
+        let pool = ThreadPool::new(2);
+        let got = convolve2(&pool, &a, &b, r, c);
+        // direct circular convolution
+        for or in 0..r {
+            for oc in 0..c {
+                let mut acc = 0.0;
+                for ir in 0..r {
+                    for ic in 0..c {
+                        let br = (or + r - ir) % r;
+                        let bc = (oc + c - ic) % c;
+                        acc += a[ir * c + ic].re * b[br * c + bc].re;
+                    }
+                }
+                let g = got[or * c + oc].re;
+                assert!((g - acc).abs() < 1e-9, "({or},{oc}): {g} vs {acc}");
+            }
+        }
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        let mut rng = Rng::new(5);
+        let data: Vec<Cpx> = (0..256).map(|_| Cpx::new(rng.next_gaussian(), rng.next_gaussian())).collect();
+        let time_e: f64 = data.iter().map(|c| c.re * c.re + c.im * c.im).sum();
+        let mut f = data.clone();
+        fft_inplace(&mut f, false);
+        let freq_e: f64 = f.iter().map(|c| c.re * c.re + c.im * c.im).sum::<f64>() / 256.0;
+        assert!((time_e - freq_e).abs() < 1e-8 * time_e);
+    }
+}

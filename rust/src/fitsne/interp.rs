@@ -1,0 +1,84 @@
+//! Polynomial (Lagrange) interpolation onto the FIt-SNE grid.
+//!
+//! Each grid interval carries `P` equispaced interpolation nodes at relative
+//! positions (k + 0.5)/P. A point's charge is scattered to its interval's
+//! nodes with Lagrange basis weights; potentials are gathered back with the
+//! same weights (Linderman et al. 2019, §"Polynomial interpolation").
+
+/// Interpolation nodes per interval (FIt-SNE default p = 3).
+pub const P_NODES: usize = 3;
+
+/// Relative node positions inside the unit interval.
+#[inline]
+pub fn node_positions() -> [f64; P_NODES] {
+    let mut pos = [0.0; P_NODES];
+    for (k, p) in pos.iter_mut().enumerate() {
+        *p = (k as f64 + 0.5) / P_NODES as f64;
+    }
+    pos
+}
+
+/// Lagrange basis weights at relative position `t ∈ [0,1)`:
+/// `w_k(t) = Π_{m≠k} (t - x_m) / (x_k - x_m)`.
+#[inline]
+pub fn lagrange_weights(t: f64) -> [f64; P_NODES] {
+    let x = node_positions();
+    let mut w = [0.0; P_NODES];
+    for k in 0..P_NODES {
+        let mut num = 1.0;
+        let mut den = 1.0;
+        for m in 0..P_NODES {
+            if m == k {
+                continue;
+            }
+            num *= t - x[m];
+            den *= x[k] - x[m];
+        }
+        w[k] = num / den;
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::rng::Rng;
+
+    #[test]
+    fn partition_of_unity() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let t = rng.next_f64();
+            let w = lagrange_weights(t);
+            let s: f64 = w.iter().sum();
+            assert!((s - 1.0).abs() < 1e-12, "t={t}: sum={s}");
+        }
+    }
+
+    #[test]
+    fn exact_at_nodes() {
+        let x = node_positions();
+        for (k, &xk) in x.iter().enumerate() {
+            let w = lagrange_weights(xk);
+            for m in 0..P_NODES {
+                let want = if m == k { 1.0 } else { 0.0 };
+                assert!((w[m] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn reproduces_polynomials_up_to_degree() {
+        // Lagrange interpolation over P nodes is exact for degree ≤ P-1.
+        let mut rng = Rng::new(2);
+        let x = node_positions();
+        for _ in 0..50 {
+            let (a, b, c) = (rng.next_gaussian(), rng.next_gaussian(), rng.next_gaussian());
+            let f = |t: f64| a + b * t + c * t * t; // degree 2 = P_NODES-1
+            let t = rng.next_f64();
+            let w = lagrange_weights(t);
+            let interp: f64 = (0..P_NODES).map(|k| w[k] * f(x[k])).sum();
+            assert!((interp - f(t)).abs() < 1e-10, "t={t}");
+        }
+    }
+}

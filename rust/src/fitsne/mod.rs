@@ -1,0 +1,333 @@
+//! FIt-SNE: FFT-accelerated interpolation-based repulsive forces
+//! (Linderman, Rachh, Hoskins, Steinerberger, Kluger — Nature Methods 2019).
+//!
+//! The paper's Figures 4–5 and Table 4 compare Acc-t-SNE against FIt-SNE, so
+//! the whole engine is built here: the repulsive N-body sums are evaluated by
+//! scattering charges onto a regular grid (Lagrange interpolation, [`interp`]),
+//! convolving with the squared-Cauchy kernels via FFT ([`fft`]), and gathering
+//! back. Replaces the quadtree (steps 3/4/6) inside the [`crate::tsne`]
+//! pipeline; KNN/BSP/attractive are shared.
+//!
+//! Charges and kernels (2-D embedding):
+//! - `K1(d) = (1+d²)⁻¹`, charge 1 → Z (after subtracting N self-terms);
+//! - `K2(d) = (1+d²)⁻²`, charges (1, x_j, y_j) →
+//!   `raw_i = y_i·φ_1(i) − φ_{x,y}(i)` (the un-normalized repulsive force).
+
+pub mod fft;
+pub mod interp;
+
+use crate::common::float::Real;
+use crate::gradient::repulsive::Repulsion;
+use crate::parallel::{parallel_for, Schedule, SyncSlice, ThreadPool};
+use fft::{fft2_inplace, Cpx};
+use interp::{lagrange_weights, P_NODES};
+
+/// FIt-SNE tuning knobs (Linderman defaults scaled to this testbed).
+#[derive(Clone, Copy, Debug)]
+pub struct FitsneParams {
+    /// Minimum grid intervals per dimension.
+    pub min_intervals: usize,
+    /// Cap on intervals (bounds FFT memory: grid = intervals × P_NODES).
+    pub max_intervals: usize,
+    /// Target interval side length (kernel scale is 1 ⇒ ~1.0).
+    pub interval_size: f64,
+}
+
+impl Default for FitsneParams {
+    fn default() -> Self {
+        FitsneParams {
+            min_intervals: 50,
+            max_intervals: 128,
+            interval_size: 1.0,
+        }
+    }
+}
+
+/// Number of charge vectors batched through the K2 convolution.
+const N_TERMS: usize = 3; // (1, x, y)
+
+/// Compute FIt-SNE repulsive accumulations (same contract as the BH
+/// [`crate::gradient::repulsive::repulsive_forces`]): raw forces per point in
+/// original order plus the ordered-pair normalization Z.
+pub fn fitsne_repulsive<T: Real>(pool: &ThreadPool, y: &[T], params: &FitsneParams) -> Repulsion<T> {
+    let n = y.len() / 2;
+    assert!(n > 0);
+    // Bounding box (shared helper from the quadtree's RootCell).
+    let root = crate::quadtree::morton::RootCell::bounding(pool, y);
+    let span = 2.0 * root.r_span;
+    let n_int = ((span / params.interval_size).ceil() as usize)
+        .clamp(params.min_intervals, params.max_intervals);
+    let n_grid = n_int * P_NODES; // nodes per dimension
+    let h_int = span / n_int as f64; // interval side
+    let h_node = h_int / P_NODES as f64; // node spacing
+    let x0 = root.cent[0] - root.r_span;
+    let y0 = root.cent[1] - root.r_span;
+    let m = (2 * n_grid).next_power_of_two(); // FFT size per dim
+
+    // --- Scatter: charge grids for K2 ⊗ (1, x, y) and K1 ⊗ 1.
+    // Sequential scatter per grid would race; scatter into per-thread grids
+    // and reduce (n_grid² ≤ 384² f64 ≈ 1.2 MB per charge — acceptable).
+    let nt = pool.n_threads();
+    let gsz = n_grid * n_grid;
+    let mut partial = vec![0.0f64; nt * gsz * N_TERMS];
+    {
+        let ps = SyncSlice::new(&mut partial);
+        pool.broadcast(|tid| {
+            let (s, e) = crate::parallel::par_for::static_chunk(n, nt, tid);
+            // disjoint: per-thread block
+            let local = unsafe { ps.slice_mut(tid * gsz * N_TERMS, gsz * N_TERMS) };
+            for i in s..e {
+                let px = y[2 * i].to_f64();
+                let py = y[2 * i + 1].to_f64();
+                let (bx, tx) = locate(px, x0, h_int, n_int);
+                let (by, ty) = locate(py, y0, h_int, n_int);
+                let wx = lagrange_weights(tx);
+                let wy = lagrange_weights(ty);
+                let charges = [1.0, px, py];
+                for kx in 0..P_NODES {
+                    let gx = bx * P_NODES + kx;
+                    for ky in 0..P_NODES {
+                        let gy = by * P_NODES + ky;
+                        let w = wx[kx] * wy[ky];
+                        let cell = gx * n_grid + gy;
+                        for (t, &c) in charges.iter().enumerate() {
+                            local[t * gsz + cell] += w * c;
+                        }
+                    }
+                }
+            }
+        });
+    }
+    // Reduce thread partials into N_TERMS grids.
+    let mut charge_grids = vec![0.0f64; gsz * N_TERMS];
+    {
+        let cg = SyncSlice::new(&mut charge_grids);
+        let partial = &partial;
+        parallel_for(pool, gsz * N_TERMS, Schedule::Static, |range| {
+            for idx in range {
+                let mut acc = 0.0;
+                for t in 0..nt {
+                    acc += partial[t * gsz * N_TERMS + idx];
+                }
+                // disjoint: slot idx
+                unsafe { *cg.get_mut(idx) = acc };
+            }
+        });
+    }
+
+    // --- Kernel transforms (K1, K2) on the padded M×M grid.
+    let kernel = |dsq: f64, squared: bool| {
+        let v = 1.0 / (1.0 + dsq);
+        if squared {
+            v * v
+        } else {
+            v
+        }
+    };
+    let mut fk1 = build_kernel_grid(pool, n_grid, m, h_node, |d| kernel(d, false));
+    let mut fk2 = build_kernel_grid(pool, n_grid, m, h_node, |d| kernel(d, true));
+    fft2_inplace(pool, &mut fk1, m, m, false);
+    fft2_inplace(pool, &mut fk2, m, m, false);
+
+    // --- Convolve each charge grid with its kernel.
+    // potentials: phi_k1_1, phi_k2_1, phi_k2_x, phi_k2_y
+    let mut potentials: Vec<Vec<f64>> = Vec::with_capacity(4);
+    for (term, use_k2) in [(0usize, false), (0, true), (1, true), (2, true)] {
+        let grid = &charge_grids[term * gsz..(term + 1) * gsz];
+        let mut padded = vec![Cpx::default(); m * m];
+        for gx in 0..n_grid {
+            for gy in 0..n_grid {
+                padded[gx * m + gy] = Cpx::new(grid[gx * n_grid + gy], 0.0);
+            }
+        }
+        fft2_inplace(pool, &mut padded, m, m, false);
+        let fk = if use_k2 { &fk2 } else { &fk1 };
+        for (p, k) in padded.iter_mut().zip(fk.iter()) {
+            *p = p.mul(*k);
+        }
+        fft2_inplace(pool, &mut padded, m, m, true);
+        let mut pot = vec![0.0f64; gsz];
+        for gx in 0..n_grid {
+            for gy in 0..n_grid {
+                pot[gx * n_grid + gy] = padded[gx * m + gy].re;
+            }
+        }
+        potentials.push(pot);
+    }
+
+    // --- Gather potentials back to points and assemble forces + Z.
+    let mut raw = vec![T::ZERO; 2 * n];
+    let mut z_parts = vec![0.0f64; nt];
+    {
+        let rs = SyncSlice::new(&mut raw);
+        let zs = SyncSlice::new(&mut z_parts);
+        let potentials = &potentials;
+        pool.broadcast(|tid| {
+            let (s, e) = crate::parallel::par_for::static_chunk(n, nt, tid);
+            let mut z_local = 0.0;
+            for i in s..e {
+                let px = y[2 * i].to_f64();
+                let py = y[2 * i + 1].to_f64();
+                let (bx, tx) = locate(px, x0, h_int, n_int);
+                let (by, ty) = locate(py, y0, h_int, n_int);
+                let wx = lagrange_weights(tx);
+                let wy = lagrange_weights(ty);
+                let mut phi = [0.0f64; 4];
+                for kx in 0..P_NODES {
+                    let gx = bx * P_NODES + kx;
+                    for ky in 0..P_NODES {
+                        let gy = by * P_NODES + ky;
+                        let w = wx[kx] * wy[ky];
+                        let cell = gx * n_grid + gy;
+                        for (t, p) in potentials.iter().enumerate() {
+                            phi[t] += w * p[cell];
+                        }
+                    }
+                }
+                // K1 self-term: q(i,i) = 1 → subtract per point.
+                z_local += phi[0] - 1.0;
+                // raw_i = y_i φ_{K2,1} − φ_{K2,(x,y)}; K2 self-term cancels.
+                let fx = px * phi[1] - phi[2];
+                let fy = py * phi[1] - phi[3];
+                // disjoint: slots 2i, 2i+1
+                unsafe {
+                    *rs.get_mut(2 * i) = T::from_f64(fx);
+                    *rs.get_mut(2 * i + 1) = T::from_f64(fy);
+                }
+            }
+            unsafe { *zs.get_mut(tid) = z_local };
+        });
+    }
+    let z: f64 = z_parts.iter().sum();
+    Repulsion {
+        raw,
+        z: T::from_f64(z.max(f64::MIN_POSITIVE)),
+    }
+}
+
+/// Interval index and relative position of coordinate `v`.
+#[inline]
+fn locate(v: f64, origin: f64, h: f64, n_int: usize) -> (usize, f64) {
+    let rel = (v - origin) / h;
+    let b = (rel.floor() as isize).clamp(0, n_int as isize - 1) as usize;
+    ((b), (rel - b as f64).clamp(0.0, 1.0))
+}
+
+/// Kernel grid with circulant (wrap-around) layout: entry (a, b) holds
+/// K(offset(a)·h, offset(b)·h) with offset(a) = a for a < n_grid and a − M for
+/// a ≥ M − n_grid + 1 (zero in the unused middle band).
+fn build_kernel_grid(
+    pool: &ThreadPool,
+    n_grid: usize,
+    m: usize,
+    h: f64,
+    kf: impl Fn(f64) -> f64 + Sync,
+) -> Vec<Cpx> {
+    let offset = |a: usize| -> Option<f64> {
+        if a < n_grid {
+            Some(a as f64)
+        } else if a + n_grid > m {
+            Some(a as f64 - m as f64)
+        } else {
+            None
+        }
+    };
+    let mut grid = vec![Cpx::default(); m * m];
+    {
+        let gs = SyncSlice::new(&mut grid);
+        parallel_for(pool, m, Schedule::Static, |range| {
+            for a in range {
+                let Some(da) = offset(a) else { continue };
+                // disjoint: row a
+                let row = unsafe { gs.slice_mut(a * m, m) };
+                for (b, slot) in row.iter_mut().enumerate() {
+                    let Some(db) = offset(b) else { continue };
+                    let dsq = (da * h) * (da * h) + (db * h) * (db * h);
+                    *slot = Cpx::new(kf(dsq), 0.0);
+                }
+            }
+        });
+    }
+    grid
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::rng::Rng;
+    use crate::gradient::exact::exact_repulsive;
+
+    fn random_y(n: usize, scale: f64, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..2 * n).map(|_| rng.next_gaussian() * scale).collect()
+    }
+
+    #[test]
+    fn z_close_to_exact() {
+        let y = random_y(800, 5.0, 1);
+        let pool = ThreadPool::new(4);
+        let fit = fitsne_repulsive(&pool, &y, &FitsneParams::default());
+        let (_, z) = exact_repulsive(&pool, &y);
+        let rel = (fit.z - z).abs() / z;
+        assert!(rel < 0.01, "Z rel error {rel}: {} vs {z}", fit.z);
+    }
+
+    #[test]
+    fn forces_close_to_exact() {
+        let y = random_y(600, 8.0, 2);
+        let pool = ThreadPool::new(4);
+        let fit = fitsne_repulsive(&pool, &y, &FitsneParams::default());
+        let (want, _) = exact_repulsive(&pool, &y);
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for i in 0..y.len() {
+            num += (fit.raw[i] - want[i]) * (fit.raw[i] - want[i]);
+            den += want[i] * want[i];
+        }
+        // p = 3 Lagrange nodes give a few-percent force accuracy (the
+        // gradient-descent path only needs the direction field; Linderman's
+        // p=3 setting is in the same regime).
+        let rel = (num / den).sqrt();
+        assert!(rel < 0.06, "relative RMS {rel}");
+    }
+
+    #[test]
+    fn tight_cluster_stays_finite() {
+        // Early iterations: all points within 1e-4 of origin → single interval.
+        let y = random_y(300, 1e-4, 3);
+        let pool = ThreadPool::new(2);
+        let fit = fitsne_repulsive(&pool, &y, &FitsneParams::default());
+        assert!(fit.raw.iter().all(|v| v.is_finite()));
+        assert!(fit.z > 0.0 && fit.z.is_finite());
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let y = random_y(400, 4.0, 4);
+        let a = fitsne_repulsive(&ThreadPool::new(1), &y, &FitsneParams::default());
+        let b = fitsne_repulsive(&ThreadPool::new(8), &y, &FitsneParams::default());
+        for i in 0..y.len() {
+            assert!(
+                (a.raw[i] - b.raw[i]).abs() < 1e-9 * (1.0 + a.raw[i].abs()),
+                "idx {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn f32_pipeline_works() {
+        let y64 = random_y(200, 3.0, 5);
+        let y32: Vec<f32> = y64.iter().map(|&v| v as f32).collect();
+        let pool = ThreadPool::new(2);
+        let fit = fitsne_repulsive(&pool, &y32, &FitsneParams::default());
+        let (want, z) = exact_repulsive(&pool, &y64);
+        assert!(((fit.z as f64) - z).abs() / z < 0.02);
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for i in 0..y64.len() {
+            num += (fit.raw[i] as f64 - want[i]).powi(2);
+            den += want[i] * want[i];
+        }
+        assert!((num / den).sqrt() < 0.05);
+    }
+}

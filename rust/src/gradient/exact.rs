@@ -1,0 +1,221 @@
+//! Exact O(N²) force/gradient oracles.
+//!
+//! Used by (1) the test suite, to bound the BH and FIt-SNE approximation
+//! errors; (2) the accuracy harness (Table 3's KL needs the exact Z on small
+//! datasets); (3) the `repulsive_dense` hardware-adaptation ablation (the
+//! TPU-friendly dense-tile formulation mirrored by the Pallas kernel).
+
+use crate::common::float::Real;
+use crate::parallel::{parallel_for, Schedule, SyncSlice, ThreadPool};
+use crate::sparse::CsrMatrix;
+
+/// Exact repulsive accumulations: `raw_i = Σ_{j≠i} (1+d²)⁻² (y_i−y_j)` and
+/// `Z = Σ_{k≠l} (1+d²)⁻¹` (ordered pairs).
+pub fn exact_repulsive<T: Real>(pool: &ThreadPool, y: &[T]) -> (Vec<T>, T) {
+    let n = y.len() / 2;
+    let mut raw = vec![T::ZERO; 2 * n];
+    let nt = pool.n_threads();
+    let mut z_parts = vec![T::ZERO; nt];
+    {
+        let rs = SyncSlice::new(&mut raw);
+        let zs = SyncSlice::new(&mut z_parts);
+        pool.broadcast(|tid| {
+            let (s, e) = crate::parallel::par_for::static_chunk(n, nt, tid);
+            let mut z_local = T::ZERO;
+            for i in s..e {
+                let yix = y[2 * i];
+                let yiy = y[2 * i + 1];
+                let mut fx = T::ZERO;
+                let mut fy = T::ZERO;
+                for j in 0..n {
+                    if j == i {
+                        continue;
+                    }
+                    let dx = yix - y[2 * j];
+                    let dy = yiy - y[2 * j + 1];
+                    let q = T::ONE / (T::ONE + dx * dx + dy * dy);
+                    z_local += q;
+                    let qq = q * q;
+                    fx += qq * dx;
+                    fy += qq * dy;
+                }
+                // disjoint: slots 2i, 2i+1
+                unsafe {
+                    *rs.get_mut(2 * i) = fx;
+                    *rs.get_mut(2 * i + 1) = fy;
+                }
+            }
+            unsafe { *zs.get_mut(tid) = z_local };
+        });
+    }
+    let mut z = T::ZERO;
+    for zp in z_parts {
+        z += zp;
+    }
+    (raw, z)
+}
+
+/// Exact KL gradient: `∂C/∂y_i = 4 Σ_j (p_ij − q_ij) q_ij Z (y_i − y_j)`
+/// with dense Q. `p` supplies the sparse P (zero elsewhere). The oracle for
+/// end-to-end gradient tests.
+pub fn exact_gradient<T: Real>(pool: &ThreadPool, p: &CsrMatrix<T>, y: &[T]) -> Vec<T> {
+    let n = p.n;
+    assert_eq!(y.len(), 2 * n);
+    // Z first (exact).
+    let (_, z) = exact_repulsive(pool, y);
+    let mut grad = vec![T::ZERO; 2 * n];
+    {
+        let gs = SyncSlice::new(&mut grad);
+        parallel_for(pool, n, Schedule::Static, |range| {
+            for i in range {
+                let yix = y[2 * i];
+                let yiy = y[2 * i + 1];
+                let (cols, vals) = p.row(i);
+                let mut gx = T::ZERO;
+                let mut gy = T::ZERO;
+                // attractive part over sparse P
+                for (c, v) in cols.iter().zip(vals.iter()) {
+                    let j = *c as usize;
+                    let dx = yix - y[2 * j];
+                    let dy = yiy - y[2 * j + 1];
+                    let qz_inv = T::ONE / (T::ONE + dx * dx + dy * dy); // q_ij * Z
+                    gx += *v * qz_inv * dx;
+                    gy += *v * qz_inv * dy;
+                }
+                // repulsive part over all pairs
+                let mut rx = T::ZERO;
+                let mut ry = T::ZERO;
+                for j in 0..n {
+                    if j == i {
+                        continue;
+                    }
+                    let dx = yix - y[2 * j];
+                    let dy = yiy - y[2 * j + 1];
+                    let u = T::ONE / (T::ONE + dx * dx + dy * dy);
+                    // q_ij² Z (y_i−y_j) = u²/Z (y_i−y_j)
+                    rx += u * u * dx;
+                    ry += u * u * dy;
+                }
+                let four = T::TWO * T::TWO;
+                // disjoint: slots 2i, 2i+1
+                unsafe {
+                    *gs.get_mut(2 * i) = four * (gx - rx / z);
+                    *gs.get_mut(2 * i + 1) = four * (gy - ry / z);
+                }
+            }
+        });
+    }
+    grad
+}
+
+/// Exact KL divergence over the sparse-P support with exact Z:
+/// `C = Σ_{(i,j) ∈ P} p_ij ln(p_ij / q_ij)` (the quantity Table 3 reports).
+pub fn exact_kl<T: Real>(pool: &ThreadPool, p: &CsrMatrix<T>, y: &[T]) -> f64 {
+    let (_, z) = exact_repulsive(pool, y);
+    kl_with_z(p, y, z.to_f64())
+}
+
+/// KL over sparse-P support given a (possibly BH-approximated) Z.
+pub fn kl_with_z<T: Real>(p: &CsrMatrix<T>, y: &[T], z: f64) -> f64 {
+    let mut c = 0.0f64;
+    for i in 0..p.n {
+        let (cols, vals) = p.row(i);
+        for (cc, v) in cols.iter().zip(vals.iter()) {
+            let pij = v.to_f64();
+            if pij <= 0.0 {
+                continue;
+            }
+            let j = *cc as usize;
+            let dx = (y[2 * i] - y[2 * j]).to_f64();
+            let dy = (y[2 * i + 1] - y[2 * j + 1]).to_f64();
+            let qij = (1.0 / (1.0 + dx * dx + dy * dy)) / z;
+            c += pij * (pij / qij.max(f64::MIN_POSITIVE)).ln();
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::rng::Rng;
+    use crate::knn::{BruteForceKnn, KnnEngine};
+    use crate::perplexity::{binary_search_perplexity, ParMode};
+    use crate::sparse::symmetrize;
+
+    fn setup(n: usize, seed: u64) -> (CsrMatrix<f64>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let d = 4;
+        let data: Vec<f64> = (0..n * d).map(|_| rng.next_gaussian()).collect();
+        let pool = ThreadPool::new(4);
+        let knn = BruteForceKnn::default().search(&pool, &data, n, d, 12);
+        let cond = binary_search_perplexity(&pool, &knn, 4.0, ParMode::Parallel);
+        let p = symmetrize(&pool, &knn, &cond.p);
+        let y: Vec<f64> = (0..2 * n).map(|_| rng.next_gaussian() * 0.1).collect();
+        (p, y)
+    }
+
+    #[test]
+    fn z_counts_ordered_pairs_at_large_distance() {
+        // Two far points: q ≈ 1/d², Z tiny; two coincident: q = 1 each way.
+        let pool = ThreadPool::new(1);
+        let y = vec![0.0f64, 0.0, 0.0, 0.0];
+        let (_, z) = exact_repulsive(&pool, &y);
+        assert!((z - 2.0).abs() < 1e-12, "two coincident points: Z = 2·1");
+    }
+
+    #[test]
+    fn gradient_is_descent_direction() {
+        // Numerically verify: C(y - ε·grad) < C(y).
+        let (p, y) = setup(80, 1);
+        let pool = ThreadPool::new(4);
+        let grad = exact_gradient(&pool, &p, &y);
+        let c0 = exact_kl(&pool, &p, &y);
+        let eps = 1e-3;
+        let y2: Vec<f64> = y.iter().zip(grad.iter()).map(|(a, g)| a - eps * g).collect();
+        let c1 = exact_kl(&pool, &p, &y2);
+        assert!(c1 < c0, "KL must decrease along -grad: {c0} -> {c1}");
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let (p, y) = setup(30, 2);
+        let pool = ThreadPool::new(2);
+        let grad = exact_gradient(&pool, &p, &y);
+        let h = 1e-6;
+        for probe in [0usize, 7, 13, 42] {
+            let mut yp = y.clone();
+            let mut ym = y.clone();
+            yp[probe] += h;
+            ym[probe] -= h;
+            let fd = (exact_kl(&pool, &p, &yp) - exact_kl(&pool, &p, &ym)) / (2.0 * h);
+            assert!(
+                (grad[probe] - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+                "idx {probe}: analytic {} vs fd {fd}",
+                grad[probe]
+            );
+        }
+    }
+
+    #[test]
+    fn kl_nonnegative_at_optimum_neighborhood() {
+        // KL of any configuration is ≥ 0 up to the sparse-support truncation;
+        // at random far-flung y it should be clearly positive.
+        let (p, mut y) = setup(60, 3);
+        for v in y.iter_mut() {
+            *v *= 100.0;
+        }
+        let pool = ThreadPool::new(2);
+        assert!(exact_kl(&pool, &p, &y) > 0.0);
+    }
+
+    #[test]
+    fn parallel_matches_single_thread() {
+        let (p, y) = setup(120, 4);
+        let g1 = exact_gradient(&ThreadPool::new(1), &p, &y);
+        let g8 = exact_gradient(&ThreadPool::new(8), &p, &y);
+        for i in 0..g1.len() {
+            assert!((g1[i] - g8[i]).abs() < 1e-12 * (1.0 + g1[i].abs()));
+        }
+    }
+}

@@ -1,0 +1,67 @@
+//! Gradient computation and descent (pipeline steps 5–6 + update).
+//!
+//! The KL gradient splits into attractive and repulsive parts (paper Eq. 6–8):
+//!
+//! ```text
+//! ∂C/∂y_i = 4 · ( exag · F_attr_i  −  F_rep_raw_i / Z )
+//! F_attr_i    = Σ_j  p_ij (1+‖y_i−y_j‖²)⁻¹ (y_i − y_j)        — over sparse P
+//! F_rep_raw_i = Σ_j  (1+‖y_i−y_j‖²)⁻² (y_i − y_j)             — BH-approximated
+//! Z           = Σ_{k≠l} (1+‖y_k−y_l‖²)⁻¹                      — BH-accumulated
+//! ```
+//!
+//! - [`attractive`] — Algorithm 2 with scalar / +software-prefetch / +SIMD variants.
+//! - [`repulsive`] — Barnes-Hut quadtree traversal (Eq. 9 criterion).
+//! - [`exact`] — O(N²) oracle for both, used by tests and the accuracy harness.
+//! - [`update`] — gains/momentum/early-exaggeration descent step.
+
+pub mod attractive;
+pub mod exact;
+pub mod repulsive;
+pub mod update;
+
+use crate::common::float::Real;
+use crate::parallel::{parallel_for, Schedule, SyncSlice, ThreadPool};
+
+/// Combine attractive and repulsive accumulations into the KL gradient
+/// (in-place into `grad`). `exaggeration` scales the attractive term (the
+/// early-exaggeration trick multiplies P).
+pub fn combine_gradient<T: Real>(
+    pool: &ThreadPool,
+    attr: &[T],
+    rep_raw: &[T],
+    z: T,
+    exaggeration: T,
+    grad: &mut [T],
+) {
+    let n2 = grad.len();
+    assert_eq!(attr.len(), n2);
+    assert_eq!(rep_raw.len(), n2);
+    let inv_z = T::ONE / z.max_r(T::TINY);
+    let four = T::TWO * T::TWO;
+    let gs = SyncSlice::new(grad);
+    parallel_for(pool, n2, Schedule::Static, |range| {
+        for i in range {
+            let g = four * (exaggeration * attr[i] - rep_raw[i] * inv_z);
+            // disjoint: slot i
+            unsafe { *gs.get_mut(i) = g };
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combine_matches_formula() {
+        let pool = ThreadPool::new(2);
+        let attr = vec![1.0f64, -2.0, 0.5, 0.0];
+        let rep = vec![4.0f64, 2.0, -1.0, 8.0];
+        let mut grad = vec![0.0f64; 4];
+        combine_gradient(&pool, &attr, &rep, 2.0, 3.0, &mut grad);
+        for i in 0..4 {
+            let want = 4.0 * (3.0 * attr[i] - rep[i] / 2.0);
+            assert!((grad[i] - want).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! Repulsive force computation (pipeline step 6, paper §3.5): Barnes-Hut
+//! traversal of the summarized quadtree.
+//!
+//! For each point, a DFS from the root; a cell is accepted as a single
+//! pseudo-point when it satisfies Eq. 9, `r_cell² < θ² · ‖y_i − y_cell‖²`
+//! (the vdMaaten squared form with `r_cell` = cell side length). Accepted
+//! cells contribute `count · q²` to the force and `count · q` to the
+//! normalization Z, with `q = (1+d²)⁻¹`.
+//!
+//! The layout story (the paper's §3.5 claim): traversal order = the tree's
+//! point layout. On a morton tree the per-thread point batches are Z-order
+//! neighbors that visit nearly the same nodes, which sit contiguously in
+//! memory — measured as `tree_layout` in `bench_micro_kernels`.
+
+use super::super::quadtree::{QuadTree, NO_CHILD};
+use crate::common::float::Real;
+use crate::parallel::{SyncSlice, ThreadPool};
+
+/// Result of the repulsive step: raw (un-normalized) forces per point in
+/// ORIGINAL index order, and the accumulated normalization Z.
+pub struct Repulsion<T: Real> {
+    pub raw: Vec<T>,
+    pub z: T,
+}
+
+/// Compute BH-approximate repulsive accumulations for all points.
+///
+/// `theta` is the paper's θ accuracy knob (0.5 default; 0 = exact traversal).
+pub fn repulsive_forces<T: Real>(pool: &ThreadPool, tree: &QuadTree<T>, theta: f64) -> Repulsion<T> {
+    let n = tree.n_points();
+    let theta_sq = T::from_f64(theta * theta);
+    let mut raw = vec![T::ZERO; 2 * n];
+    let nt = pool.n_threads();
+    let mut z_parts = vec![T::ZERO; nt];
+    {
+        let rs = SyncSlice::new(&mut raw);
+        let zs = SyncSlice::new(&mut z_parts);
+        pool.broadcast(|tid| {
+            let (s, e) = crate::parallel::par_for::static_chunk(n, nt, tid);
+            let mut stack: Vec<u32> = Vec::with_capacity(128);
+            let mut z_local = T::ZERO;
+            // Walk points in layout order (Z-order on morton trees): adjacent
+            // points traverse nearly identical node sets.
+            for p in s..e {
+                let yix = tree.point_pos[2 * p];
+                let yiy = tree.point_pos[2 * p + 1];
+                let (fx, fy, z) = point_repulsion(tree, p, yix, yiy, theta_sq, &mut stack);
+                z_local += z;
+                let orig = tree.point_idx[p] as usize;
+                // disjoint: each layout slot has a unique original index
+                unsafe {
+                    *rs.get_mut(2 * orig) = fx;
+                    *rs.get_mut(2 * orig + 1) = fy;
+                }
+            }
+            // disjoint: slot tid
+            unsafe { *zs.get_mut(tid) = z_local };
+        });
+    }
+    let mut z = T::ZERO;
+    for zp in z_parts {
+        z += zp;
+    }
+    Repulsion { raw, z }
+}
+
+#[inline]
+fn point_repulsion<T: Real>(
+    tree: &QuadTree<T>,
+    p: usize,
+    yix: T,
+    yiy: T,
+    theta_sq: T,
+    stack: &mut Vec<u32>,
+) -> (T, T, T) {
+    let mut fx = T::ZERO;
+    let mut fy = T::ZERO;
+    let mut z = T::ZERO;
+    stack.clear();
+    stack.push(0);
+    while let Some(ni) = stack.pop() {
+        let node = &tree.nodes[ni as usize];
+        let dx = yix - node.com[0];
+        let dy = yiy - node.com[1];
+        let dist_sq = dx * dx + dy * dy;
+        let w = node.width;
+        if node.is_leaf() {
+            // Leaf: usually one point; multiple only for (near-)duplicates.
+            let (s, e) = (node.point_start as usize, node.point_end as usize);
+            if s <= p && p < e {
+                // own leaf: iterate, skipping self
+                for t in s..e {
+                    if t == p {
+                        continue;
+                    }
+                    let ddx = yix - tree.point_pos[2 * t];
+                    let ddy = yiy - tree.point_pos[2 * t + 1];
+                    let q = T::ONE / (T::ONE + ddx * ddx + ddy * ddy);
+                    z += q;
+                    let qq = q * q;
+                    fx += qq * ddx;
+                    fy += qq * ddy;
+                }
+            } else if e - s == 1 {
+                let q = T::ONE / (T::ONE + dist_sq);
+                z += q;
+                let qq = q * q;
+                fx += qq * dx;
+                fy += qq * dy;
+            } else {
+                // foreign multi-point leaf: all points share (almost) one
+                // location — the COM approximation is exact at grid resolution.
+                let cnt = T::from_usize(node.count as usize);
+                let q = T::ONE / (T::ONE + dist_sq);
+                z += cnt * q;
+                let qq = q * q;
+                fx += cnt * qq * dx;
+                fy += cnt * qq * dy;
+            }
+        } else if w * w < theta_sq * dist_sq {
+            // Eq. 9 satisfied: summary stands in for the whole cell.
+            let cnt = T::from_usize(node.count as usize);
+            let q = T::ONE / (T::ONE + dist_sq);
+            z += cnt * q;
+            let qq = q * q;
+            fx += cnt * qq * dx;
+            fy += cnt * qq * dy;
+        } else {
+            for &c in &node.children {
+                if c != NO_CHILD {
+                    stack.push(c as u32);
+                }
+            }
+        }
+    }
+    (fx, fy, z)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::exact::exact_repulsive;
+    use super::*;
+    use crate::common::rng::Rng;
+    use crate::quadtree::builder_baseline::build_baseline;
+    use crate::quadtree::builder_morton::build_morton;
+    use crate::quadtree::summarize::{summarize_parallel, summarize_sequential};
+
+    fn random_y(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..2 * n).map(|_| rng.next_gaussian() * 3.0).collect()
+    }
+
+    #[test]
+    fn theta_zero_matches_exact() {
+        let n = 400;
+        let y = random_y(n, 1);
+        let pool = ThreadPool::new(4);
+        let mut tree = build_morton(&pool, &y);
+        summarize_parallel(&pool, &mut tree);
+        let got = repulsive_forces(&pool, &tree, 0.0);
+        let (want, want_z) = exact_repulsive(&pool, &y);
+        assert!(
+            (got.z - want_z).abs() < 1e-9 * want_z,
+            "Z {} vs {}",
+            got.z,
+            want_z
+        );
+        for i in 0..2 * n {
+            assert!(
+                (got.raw[i] - want[i]).abs() < 1e-9 * (1.0 + want[i].abs()),
+                "idx {i}: {} vs {}",
+                got.raw[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn theta_half_approximates_exact() {
+        let n = 1500;
+        let y = random_y(n, 2);
+        let pool = ThreadPool::new(4);
+        let mut tree = build_morton(&pool, &y);
+        summarize_parallel(&pool, &mut tree);
+        let got = repulsive_forces(&pool, &tree, 0.5);
+        let (want, want_z) = exact_repulsive(&pool, &y);
+        // Z within 1%
+        assert!((got.z - want_z).abs() < 0.01 * want_z, "Z {} vs {want_z}", got.z);
+        // force field within a few % in RMS
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for i in 0..2 * n {
+            num += (got.raw[i] - want[i]) * (got.raw[i] - want[i]);
+            den += want[i] * want[i];
+        }
+        let rel = (num / den).sqrt();
+        assert!(rel < 0.05, "relative RMS error {rel}");
+    }
+
+    #[test]
+    fn baseline_and_morton_trees_agree() {
+        let n = 800;
+        let y = random_y(n, 3);
+        let pool = ThreadPool::new(4);
+        let mut tm = build_morton(&pool, &y);
+        summarize_parallel(&pool, &mut tm);
+        let mut tb = build_baseline(&pool, &y);
+        summarize_sequential(&mut tb);
+        let a = repulsive_forces(&pool, &tm, 0.5);
+        let b = repulsive_forces(&pool, &tb, 0.5);
+        assert!((a.z - b.z).abs() < 1e-6 * a.z);
+        for i in 0..2 * n {
+            assert!(
+                (a.raw[i] - b.raw[i]).abs() < 1e-6 * (1.0 + a.raw[i].abs()),
+                "idx {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn duplicates_no_self_interaction_blowup() {
+        let mut y = random_y(100, 4);
+        for i in 0..10 {
+            y[2 * i] = 1.5;
+            y[2 * i + 1] = -2.5;
+        }
+        let pool = ThreadPool::new(2);
+        let mut tree = build_morton(&pool, &y);
+        summarize_parallel(&pool, &mut tree);
+        let rep = repulsive_forces(&pool, &tree, 0.5);
+        assert!(rep.raw.iter().all(|v| v.is_finite()));
+        assert!(rep.z.is_finite() && rep.z > 0.0);
+        // Z counts ordered pairs: must be < n(n-1)
+        assert!(rep.z < (100.0 * 99.0));
+    }
+
+    #[test]
+    fn two_points_repel_directly() {
+        let y = vec![0.0, 0.0, 1.0, 0.0];
+        let pool = ThreadPool::new(1);
+        let mut tree = build_morton(&pool, &y);
+        summarize_sequential(&mut tree);
+        let rep = repulsive_forces(&pool, &tree, 0.5);
+        // raw_0 = (1+1)⁻² * (0-1) = -0.25 on x
+        assert!((rep.raw[0] - (-0.25)).abs() < 1e-12);
+        assert!((rep.raw[2] - 0.25).abs() < 1e-12);
+        // Z = 2 * (1+1)⁻¹ = 1
+        assert!((rep.z - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let y = random_y(600, 5);
+        let pool1 = ThreadPool::new(1);
+        let pool8 = ThreadPool::new(8);
+        let mut t1 = build_morton(&pool1, &y);
+        summarize_sequential(&mut t1);
+        let mut t8 = build_morton(&pool8, &y);
+        summarize_parallel(&pool8, &mut t8);
+        let a = repulsive_forces(&pool1, &t1, 0.5);
+        let b = repulsive_forces(&pool8, &t8, 0.5);
+        // structures may be stitched differently; forces must agree to fp noise
+        for i in 0..y.len() {
+            assert!((a.raw[i] - b.raw[i]).abs() < 1e-10 * (1.0 + a.raw[i].abs()));
+        }
+    }
+}

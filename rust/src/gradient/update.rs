@@ -1,0 +1,215 @@
+//! Gradient-descent update with gains, momentum, and early exaggeration —
+//! the standard vdMaaten/sklearn schedule the paper runs (1000 iterations,
+//! sklearn defaults).
+
+use crate::common::float::Real;
+use crate::common::rng::Rng;
+use crate::parallel::{parallel_for, Schedule, SyncSlice, ThreadPool};
+
+/// Descent hyper-parameters (sklearn-2022 defaults, as used by the paper).
+#[derive(Clone, Copy, Debug)]
+pub struct UpdateParams {
+    pub learning_rate: f64,
+    pub momentum_early: f64,
+    pub momentum_late: f64,
+    /// Iteration at which momentum switches and exaggeration stops.
+    pub exaggeration_iters: usize,
+    pub early_exaggeration: f64,
+    pub min_gain: f64,
+}
+
+impl Default for UpdateParams {
+    fn default() -> Self {
+        UpdateParams {
+            learning_rate: 200.0,
+            momentum_early: 0.5,
+            momentum_late: 0.8,
+            exaggeration_iters: 250,
+            early_exaggeration: 12.0,
+            min_gain: 0.01,
+        }
+    }
+}
+
+/// Mutable optimizer state.
+#[derive(Clone, Debug)]
+pub struct Optimizer<T: Real> {
+    pub velocity: Vec<T>,
+    pub gains: Vec<T>,
+    pub params: UpdateParams,
+}
+
+impl<T: Real> Optimizer<T> {
+    pub fn new(n: usize, params: UpdateParams) -> Self {
+        Optimizer {
+            velocity: vec![T::ZERO; 2 * n],
+            gains: vec![T::ONE; 2 * n],
+            params,
+        }
+    }
+
+    /// Current exaggeration factor at `iter`.
+    #[inline]
+    pub fn exaggeration(&self, iter: usize) -> T {
+        if iter < self.params.exaggeration_iters {
+            T::from_f64(self.params.early_exaggeration)
+        } else {
+            T::ONE
+        }
+    }
+
+    /// One descent step: gains update (0.2/0.8 rule), momentum, position
+    /// update, then recentring (paper/sklearn keep the embedding zero-mean).
+    pub fn step(&mut self, pool: &ThreadPool, iter: usize, grad: &[T], y: &mut [T]) {
+        let n2 = y.len();
+        assert_eq!(grad.len(), n2);
+        assert_eq!(self.velocity.len(), n2);
+        let momentum = T::from_f64(if iter < self.params.exaggeration_iters {
+            self.params.momentum_early
+        } else {
+            self.params.momentum_late
+        });
+        let eta = T::from_f64(self.params.learning_rate);
+        let min_gain = T::from_f64(self.params.min_gain);
+        {
+            let vs = SyncSlice::new(&mut self.velocity);
+            let gs = SyncSlice::new(&mut self.gains);
+            let ys = SyncSlice::new(y);
+            parallel_for(pool, n2, Schedule::Static, |range| {
+                for i in range {
+                    // disjoint: slot i
+                    unsafe {
+                        let v = vs.get_mut(i);
+                        let g = gs.get_mut(i);
+                        let yy = ys.get_mut(i);
+                        let grad_i = grad[i];
+                        // sign disagreement → growing step; agreement → shrink
+                        let same_sign = (grad_i > T::ZERO) == (*v > T::ZERO);
+                        *g = if same_sign {
+                            (*g * T::from_f64(0.8)).max_r(min_gain)
+                        } else {
+                            *g + T::from_f64(0.2)
+                        };
+                        *v = momentum * *v - eta * *g * grad_i;
+                        *yy += *v;
+                    }
+                }
+            });
+        }
+        recenter(pool, y);
+    }
+}
+
+/// Subtract the mean so the embedding stays centered.
+pub fn recenter<T: Real>(pool: &ThreadPool, y: &mut [T]) {
+    let n = y.len() / 2;
+    if n == 0 {
+        return;
+    }
+    let mut mean = [T::ZERO; 2];
+    for i in 0..n {
+        mean[0] += y[2 * i];
+        mean[1] += y[2 * i + 1];
+    }
+    let inv = T::ONE / T::from_usize(n);
+    mean[0] *= inv;
+    mean[1] *= inv;
+    let ys = SyncSlice::new(y);
+    parallel_for(pool, n, Schedule::Static, |range| {
+        for i in range {
+            // disjoint: slots 2i, 2i+1
+            unsafe {
+                *ys.get_mut(2 * i) -= mean[0];
+                *ys.get_mut(2 * i + 1) -= mean[1];
+            }
+        }
+    });
+}
+
+/// Random N(0, 1e-4) initial embedding (vdMaaten's initialization).
+pub fn random_init<T: Real>(n: usize, seed: u64) -> Vec<T> {
+    let mut rng = Rng::new(seed);
+    (0..2 * n).map(|_| T::from_f64(rng.next_gaussian() * 1e-4)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_moves_against_gradient() {
+        let pool = ThreadPool::new(2);
+        let mut opt = Optimizer::<f64>::new(2, UpdateParams::default());
+        let mut y = vec![0.0, 0.0, 1.0, 1.0];
+        let grad = vec![1.0, 0.0, -1.0, 0.0];
+        let y0 = y.clone();
+        opt.step(&pool, 0, &grad, &mut y);
+        // displacement (before recentring both moved oppositely): y0 moved -x, y1 moved +x
+        let d0 = y[0] - y0[0];
+        let d1 = y[2] - y0[2];
+        assert!(d0 < d1, "relative motion must follow -grad: {d0} vs {d1}");
+    }
+
+    #[test]
+    fn recenter_zeroes_mean() {
+        let pool = ThreadPool::new(2);
+        let mut y = vec![1.0, 2.0, 3.0, 6.0, 5.0, 10.0];
+        recenter(&pool, &mut y);
+        let mx: f64 = (0..3).map(|i| y[2 * i]).sum();
+        let my: f64 = (0..3).map(|i| y[2 * i + 1]).sum();
+        assert!(mx.abs() < 1e-12 && my.abs() < 1e-12);
+    }
+
+    #[test]
+    fn gains_grow_on_sign_flip_and_clamp() {
+        let pool = ThreadPool::new(1);
+        let mut opt = Optimizer::<f64>::new(1, UpdateParams::default());
+        let mut y = vec![0.0, 0.0];
+        // First step establishes velocity sign; gradient positive → v negative.
+        opt.step(&pool, 0, &[1.0, 1.0], &mut y);
+        let g_after_1 = opt.gains[0];
+        // Same-sign gradient again: v<0, grad>0 → signs differ → gain grows.
+        opt.step(&pool, 1, &[1.0, 1.0], &mut y);
+        assert!(opt.gains[0] > g_after_1);
+        // Hammer with alternating huge gradients; gains must stay ≥ min_gain.
+        for it in 2..60 {
+            let s = if it % 2 == 0 { 1.0 } else { -1.0 };
+            opt.step(&pool, it, &[s, s], &mut y);
+        }
+        assert!(opt.gains.iter().all(|&g| g >= 0.01));
+    }
+
+    #[test]
+    fn exaggeration_schedule() {
+        let opt = Optimizer::<f64>::new(1, UpdateParams::default());
+        assert_eq!(opt.exaggeration(0), 12.0);
+        assert_eq!(opt.exaggeration(249), 12.0);
+        assert_eq!(opt.exaggeration(250), 1.0);
+    }
+
+    #[test]
+    fn momentum_switch() {
+        let pool = ThreadPool::new(1);
+        let params = UpdateParams::default();
+        let mut opt = Optimizer::<f64>::new(1, params);
+        let mut y = vec![0.0, 0.0];
+        // constant gradient: velocity magnitude grows with momentum
+        for it in 0..5 {
+            opt.step(&pool, it, &[1.0, 0.0], &mut y);
+        }
+        let v_early = opt.velocity[0].abs();
+        for it in 250..255 {
+            opt.step(&pool, it, &[1.0, 0.0], &mut y);
+        }
+        let v_late = opt.velocity[0].abs();
+        assert!(v_late > v_early, "higher momentum accumulates more velocity");
+    }
+
+    #[test]
+    fn random_init_scale() {
+        let y = random_init::<f64>(1000, 42);
+        assert_eq!(y.len(), 2000);
+        let var: f64 = y.iter().map(|v| v * v).sum::<f64>() / 2000.0;
+        assert!((var.sqrt() - 1e-4).abs() < 2e-5, "std {}", var.sqrt());
+    }
+}

@@ -1,0 +1,300 @@
+//! K-nearest-neighbors (pipeline step 1, paper §3.1).
+//!
+//! The paper reuses daal4py's KNN ("fairly efficient and scales well"), so
+//! ours has the same design goals: blocked brute-force — cache-tiled distance
+//! computation `‖q−c‖² = ‖q‖² + ‖c‖² − 2⟨q,c⟩` with a per-query bounded heap —
+//! parallel over query blocks with dynamic scheduling.
+//!
+//! Two engines implement [`KnnEngine`]:
+//! - [`BruteForceKnn`] (native Rust, default, this file);
+//! - `runtime::engines::XlaKnn` — the distance tile computed by the AOT
+//!   Pallas `sqdist` kernel through PJRT (L1/L2 integration path).
+
+pub mod select;
+pub mod vptree;
+
+use crate::common::float::Real;
+use crate::parallel::{parallel_for, Schedule, SyncSlice, ThreadPool};
+use select::KBest;
+
+/// Neighbor lists for all points: `k` neighbors per point, distances are
+/// **squared** Euclidean (the Gaussian kernel in Eq. 2 consumes d²).
+#[derive(Clone, Debug)]
+pub struct NeighborLists<T: Real> {
+    pub n: usize,
+    pub k: usize,
+    /// `indices[i*k + j]` = j-th nearest neighbor of point i (self excluded).
+    pub indices: Vec<u32>,
+    /// Squared distances, ascending per row.
+    pub distances_sq: Vec<T>,
+}
+
+impl<T: Real> NeighborLists<T> {
+    #[inline]
+    pub fn neighbors(&self, i: usize) -> &[u32] {
+        &self.indices[i * self.k..(i + 1) * self.k]
+    }
+
+    #[inline]
+    pub fn dists(&self, i: usize) -> &[T] {
+        &self.distances_sq[i * self.k..(i + 1) * self.k]
+    }
+}
+
+/// A KNN engine (native or XLA-offloaded).
+pub trait KnnEngine<T: Real> {
+    fn name(&self) -> &'static str;
+    /// Find the `k` nearest neighbors of every point in `data` (n×d), self
+    /// excluded. `k < n` required.
+    fn search(&self, pool: &ThreadPool, data: &[T], n: usize, d: usize, k: usize) -> NeighborLists<T>;
+}
+
+/// Cache-blocked brute-force KNN.
+pub struct BruteForceKnn {
+    /// Query rows per tile (per-thread working set).
+    pub block_q: usize,
+    /// Corpus rows per tile.
+    pub block_c: usize,
+}
+
+impl Default for BruteForceKnn {
+    fn default() -> Self {
+        // 64×256 f64 dot tile = 128 KiB — fits L2 alongside the query rows.
+        BruteForceKnn {
+            block_q: 64,
+            block_c: 256,
+        }
+    }
+}
+
+impl<T: Real> KnnEngine<T> for BruteForceKnn {
+    fn name(&self) -> &'static str {
+        "brute-force-native"
+    }
+
+    fn search(&self, pool: &ThreadPool, data: &[T], n: usize, d: usize, k: usize) -> NeighborLists<T> {
+        assert!(k < n, "k ({k}) must be < n ({n})");
+        assert_eq!(data.len(), n * d);
+        let bq = self.block_q.clamp(1, n);
+        let bc = self.block_c.clamp(1, n);
+
+        // ‖x‖² for every point, parallel.
+        let mut norms = vec![T::ZERO; n];
+        {
+            let ns = SyncSlice::new(&mut norms);
+            parallel_for(pool, n, Schedule::Static, |range| {
+                for i in range {
+                    let row = &data[i * d..(i + 1) * d];
+                    let mut acc = T::ZERO;
+                    for &v in row {
+                        acc += v * v;
+                    }
+                    // disjoint: slot i
+                    unsafe { *ns.get_mut(i) = acc };
+                }
+            });
+        }
+
+        let n_qblocks = n.div_ceil(bq);
+        let mut indices = vec![0u32; n * k];
+        let mut dists = vec![T::ZERO; n * k];
+        {
+            let is = SyncSlice::new(&mut indices);
+            let ds = SyncSlice::new(&mut dists);
+            let norms = &norms;
+            // Dynamic over query blocks: block cost is uniform but this keeps
+            // the tail balanced when n_qblocks % threads != 0.
+            // Feature-dim tile for the transposed corpus panel: bounds the
+            // per-thread scratch at BC×DT elements (256×128×8B = 256 KiB)
+            // so the panel streams through L2 while the dot tile stays hot.
+            let dt = 128usize.min(d);
+            parallel_for(pool, n_qblocks, Schedule::Dynamic { grain: 1 }, |range| {
+                let mut dots = vec![T::ZERO; bq * bc];
+                let mut panel = vec![T::ZERO; bc * dt]; // [j][ci] transposed corpus
+                let mut heaps: Vec<KBest<T>> = Vec::with_capacity(bq);
+                for qb in range {
+                    let q0 = qb * bq;
+                    let q1 = (q0 + bq).min(n);
+                    heaps.clear();
+                    heaps.resize_with(q1 - q0, || KBest::new(k));
+                    let mut c0 = 0;
+                    while c0 < n {
+                        let c1 = (c0 + bc).min(n);
+                        let cw = c1 - c0;
+                        dots[..(q1 - q0) * bc].fill(T::ZERO);
+                        // dots[qi][ci] = ⟨q, c⟩, accumulated over feature
+                        // tiles; the corpus tile is transposed once per
+                        // (tile, corpus block) so the innermost loop is a
+                        // contiguous FMA over ci (auto-vectorizes to AVX-512).
+                        let mut j0 = 0;
+                        while j0 < d {
+                            let j1 = (j0 + dt).min(d);
+                            for j in j0..j1 {
+                                let prow = &mut panel[(j - j0) * bc..(j - j0) * bc + cw];
+                                for (ci, p) in prow.iter_mut().enumerate() {
+                                    *p = data[(c0 + ci) * d + j];
+                                }
+                            }
+                            for (qi, q) in (q0..q1).enumerate() {
+                                let qrow = &data[q * d + j0..q * d + j1];
+                                let drow = &mut dots[qi * bc..qi * bc + cw];
+                                for (j, &qv) in qrow.iter().enumerate() {
+                                    let prow = &panel[j * bc..j * bc + cw];
+                                    for (dv, &pv) in drow.iter_mut().zip(prow.iter()) {
+                                        *dv += qv * pv;
+                                    }
+                                }
+                            }
+                            j0 = j1;
+                        }
+                        for (qi, q) in (q0..q1).enumerate() {
+                            let heap = &mut heaps[qi];
+                            let nq = norms[q];
+                            for (ci, c) in (c0..c1).enumerate() {
+                                if c == q {
+                                    continue; // exclude self
+                                }
+                                let dist = (nq + norms[c] - T::TWO * dots[qi * bc + ci]).max_r(T::ZERO);
+                                heap.push(dist, c as u32);
+                            }
+                        }
+                        c0 = c1;
+                    }
+                    for (qi, q) in (q0..q1).enumerate() {
+                        let sorted = std::mem::replace(&mut heaps[qi], KBest::new(1)).into_sorted();
+                        debug_assert_eq!(sorted.len(), k);
+                        for (j, (dist, idx)) in sorted.into_iter().enumerate() {
+                            // disjoint: rows q of indices/dists owned by this block
+                            unsafe {
+                                *is.get_mut(q * k + j) = idx;
+                                *ds.get_mut(q * k + j) = dist;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        NeighborLists {
+            n,
+            k,
+            indices,
+            distances_sq: dists,
+        }
+    }
+}
+
+/// Exact O(n²d) reference KNN — the oracle the blocked engine is tested against.
+pub fn knn_reference<T: Real>(data: &[T], n: usize, d: usize, k: usize) -> NeighborLists<T> {
+    assert!(k < n);
+    let mut indices = vec![0u32; n * k];
+    let mut dists = vec![T::ZERO; n * k];
+    for i in 0..n {
+        let mut cand: Vec<(T, u32)> = (0..n)
+            .filter(|&j| j != i)
+            .map(|j| {
+                let mut acc = T::ZERO;
+                for t in 0..d {
+                    let diff = data[i * d + t] - data[j * d + t];
+                    acc += diff * diff;
+                }
+                (acc, j as u32)
+            })
+            .collect();
+        cand.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        for j in 0..k {
+            indices[i * k + j] = cand[j].1;
+            dists[i * k + j] = cand[j].0;
+        }
+    }
+    NeighborLists {
+        n,
+        k,
+        indices,
+        distances_sq: dists,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::rng::Rng;
+
+    fn random_data(n: usize, d: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n * d).map(|_| rng.next_gaussian()).collect()
+    }
+
+    #[test]
+    fn matches_reference_exactly_on_distances() {
+        let n = 300;
+        let d = 7;
+        let k = 12;
+        let data = random_data(n, d, 5);
+        let pool = ThreadPool::new(4);
+        let got = BruteForceKnn::default().search(&pool, &data, n, d, k);
+        let want = knn_reference(&data, n, d, k);
+        for i in 0..n {
+            for j in 0..k {
+                let g = got.distances_sq[i * k + j];
+                let w = want.distances_sq[i * k + j];
+                assert!(
+                    (g - w).abs() < 1e-9 * (1.0 + w.abs()),
+                    "row {i} pos {j}: {g} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn excludes_self_and_sorted() {
+        let n = 200;
+        let data = random_data(n, 4, 9);
+        let pool = ThreadPool::new(3);
+        let nl = BruteForceKnn::default().search(&pool, &data, n, 4, 8);
+        for i in 0..n {
+            assert!(nl.neighbors(i).iter().all(|&j| j as usize != i), "self in row {i}");
+            let dr = nl.dists(i);
+            assert!(dr.windows(2).all(|w| w[0] <= w[1]), "row {i} unsorted");
+        }
+    }
+
+    #[test]
+    fn block_boundary_sizes() {
+        // n not divisible by either block size.
+        let n = 130;
+        let d = 3;
+        let k = 5;
+        let data = random_data(n, d, 2);
+        let pool = ThreadPool::new(4);
+        let eng = BruteForceKnn { block_q: 32, block_c: 48 };
+        let got = eng.search(&pool, &data, n, d, k);
+        let want = knn_reference(&data, n, d, k);
+        for i in 0..n {
+            assert_eq!(got.neighbors(i), want.neighbors(i), "row {i}");
+        }
+    }
+
+    #[test]
+    fn duplicate_points_ok() {
+        let mut data = random_data(50, 4, 3);
+        for j in 0..4 {
+            data[4 + j] = data[j]; // point 1 == point 0
+        }
+        let pool = ThreadPool::new(2);
+        let nl = BruteForceKnn::default().search(&pool, &data, 50, 4, 3);
+        // nearest neighbor of 0 is its duplicate at distance ~0
+        assert_eq!(nl.neighbors(0)[0], 1);
+        assert!(nl.dists(0)[0] < 1e-12);
+    }
+
+    #[test]
+    fn single_thread_matches_parallel() {
+        let n = 257;
+        let data = random_data(n, 5, 8);
+        let p1 = ThreadPool::new(1);
+        let p4 = ThreadPool::new(4);
+        let a = BruteForceKnn::default().search(&p1, &data, n, 5, 10);
+        let b = BruteForceKnn::default().search(&p4, &data, n, 5, 10);
+        assert_eq!(a.indices, b.indices);
+    }
+}

@@ -1,0 +1,154 @@
+//! Bounded k-selection: a fixed-capacity max-heap keeping the k smallest
+//! (distance, index) pairs seen. The KNN inner loop pushes every candidate;
+//! the heap root is the current k-th best, giving an O(log k) accept path and
+//! an O(1) reject path (the common case).
+
+use crate::common::float::Real;
+
+/// Max-heap over distance holding at most `k` best (smallest) candidates.
+#[derive(Clone, Debug)]
+pub struct KBest<T: Real> {
+    k: usize,
+    heap: Vec<(T, u32)>,
+}
+
+impl<T: Real> KBest<T> {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "k must be positive");
+        KBest {
+            k,
+            heap: Vec::with_capacity(k),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Current acceptance threshold (k-th best distance), if full.
+    #[inline]
+    pub fn threshold(&self) -> Option<T> {
+        if self.heap.len() == self.k {
+            Some(self.heap[0].0)
+        } else {
+            None
+        }
+    }
+
+    /// Offer a candidate.
+    #[inline]
+    pub fn push(&mut self, dist: T, idx: u32) {
+        if self.heap.len() < self.k {
+            self.heap.push((dist, idx));
+            self.sift_up(self.heap.len() - 1);
+        } else if dist < self.heap[0].0 {
+            self.heap[0] = (dist, idx);
+            self.sift_down(0);
+        }
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[i].0 > self.heap[parent].0 {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let l = 2 * i + 1;
+            let r = 2 * i + 2;
+            let mut largest = i;
+            if l < n && self.heap[l].0 > self.heap[largest].0 {
+                largest = l;
+            }
+            if r < n && self.heap[r].0 > self.heap[largest].0 {
+                largest = r;
+            }
+            if largest == i {
+                break;
+            }
+            self.heap.swap(i, largest);
+            i = largest;
+        }
+    }
+
+    /// Drain into (distance-ascending) sorted order.
+    pub fn into_sorted(mut self) -> Vec<(T, u32)> {
+        self.heap
+            .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        self.heap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::rng::Rng;
+
+    #[test]
+    fn keeps_k_smallest() {
+        let mut kb = KBest::<f64>::new(3);
+        for (i, d) in [5.0, 1.0, 9.0, 2.0, 7.0, 0.5].iter().enumerate() {
+            kb.push(*d, i as u32);
+        }
+        let out = kb.into_sorted();
+        let dists: Vec<f64> = out.iter().map(|p| p.0).collect();
+        assert_eq!(dists, vec![0.5, 1.0, 2.0]);
+        let idxs: Vec<u32> = out.iter().map(|p| p.1).collect();
+        assert_eq!(idxs, vec![5, 1, 3]);
+    }
+
+    #[test]
+    fn underfull_returns_all() {
+        let mut kb = KBest::<f32>::new(10);
+        kb.push(3.0, 0);
+        kb.push(1.0, 1);
+        let out = kb.into_sorted();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].1, 1);
+    }
+
+    #[test]
+    fn threshold_only_when_full() {
+        let mut kb = KBest::<f64>::new(2);
+        assert!(kb.threshold().is_none());
+        kb.push(4.0, 0);
+        assert!(kb.threshold().is_none());
+        kb.push(2.0, 1);
+        assert_eq!(kb.threshold(), Some(4.0));
+        kb.push(1.0, 2);
+        assert_eq!(kb.threshold(), Some(2.0));
+    }
+
+    #[test]
+    fn matches_full_sort_randomized() {
+        let mut rng = Rng::new(99);
+        for _ in 0..50 {
+            let n = 1 + rng.next_below(200);
+            let k = 1 + rng.next_below(20);
+            let dists: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+            let mut kb = KBest::new(k);
+            for (i, &d) in dists.iter().enumerate() {
+                kb.push(d, i as u32);
+            }
+            let got: Vec<f64> = kb.into_sorted().iter().map(|p| p.0).collect();
+            let mut want = dists.clone();
+            want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            want.truncate(k);
+            assert_eq!(got, want);
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! Vantage-point tree KNN — the neighbor search Multicore-TSNE (and
+//! vdMaaten's original BH t-SNE code) actually uses, built here so the
+//! `MulticoreLike` baseline reproduces that implementation's real KNN
+//! behaviour: exact results, but pointer-chasing traversal with one query at
+//! a time and no cache blocking (the contrast to the blocked engine the
+//! paper inherits from daal4py).
+//!
+//! Construction: recursive median-split on distance to a vantage point
+//! (vdMaaten's scheme). Search: branch-and-bound DFS with a bounded max-heap
+//! (`KBest`) and the τ pruning radius. Parallel across queries.
+
+use super::select::KBest;
+use super::{KnnEngine, NeighborLists};
+use crate::common::float::Real;
+use crate::common::rng::Rng;
+use crate::parallel::{parallel_for, Schedule, SyncSlice, ThreadPool};
+
+struct VpNode<T> {
+    /// Index (into the dataset) of the vantage point.
+    point: u32,
+    /// Points inside `threshold` of the vantage point go left.
+    threshold: T,
+    left: i32,
+    right: i32,
+}
+
+/// An immutable VP-tree over a dataset (borrowed; the tree stores indices).
+pub struct VpTree<'a, T: Real> {
+    data: &'a [T],
+    d: usize,
+    nodes: Vec<VpNode<T>>,
+    root: i32,
+}
+
+#[inline(always)]
+fn dist_sq<T: Real>(data: &[T], d: usize, a: usize, b: usize) -> T {
+    let (ra, rb) = (&data[a * d..(a + 1) * d], &data[b * d..(b + 1) * d]);
+    let mut acc = T::ZERO;
+    for (x, y) in ra.iter().zip(rb.iter()) {
+        let diff = *x - *y;
+        acc += diff * diff;
+    }
+    acc
+}
+
+impl<'a, T: Real> VpTree<'a, T> {
+    /// Build over all `n` points of `data` (n × d). Deterministic for a
+    /// given `seed` (vantage points are drawn randomly, as in vdMaaten).
+    pub fn build(data: &'a [T], n: usize, d: usize, seed: u64) -> Self {
+        assert_eq!(data.len(), n * d);
+        let mut items: Vec<u32> = (0..n as u32).collect();
+        let mut nodes = Vec::with_capacity(2 * n);
+        let mut rng = Rng::new(seed);
+        let root = Self::build_rec(data, d, &mut items[..], &mut nodes, &mut rng);
+        VpTree {
+            data,
+            d,
+            nodes,
+            root,
+        }
+    }
+
+    fn build_rec(
+        data: &[T],
+        d: usize,
+        items: &mut [u32],
+        nodes: &mut Vec<VpNode<T>>,
+        rng: &mut Rng,
+    ) -> i32 {
+        if items.is_empty() {
+            return -1;
+        }
+        // Random vantage point → swap to front.
+        let pick = rng.next_below(items.len());
+        items.swap(0, pick);
+        let vp = items[0] as usize;
+        if items.len() == 1 {
+            let id = nodes.len() as i32;
+            nodes.push(VpNode {
+                point: vp as u32,
+                threshold: T::ZERO,
+                left: -1,
+                right: -1,
+            });
+            return id;
+        }
+        // Median split of the rest by distance to the vantage point.
+        let rest = &mut items[1..];
+        let mid = rest.len() / 2;
+        rest.select_nth_unstable_by(mid, |&a, &b| {
+            dist_sq(data, d, vp, a as usize)
+                .partial_cmp(&dist_sq(data, d, vp, b as usize))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let threshold = dist_sq(data, d, vp, rest[mid] as usize);
+        let id = nodes.len();
+        nodes.push(VpNode {
+            point: vp as u32,
+            threshold,
+            left: -1,
+            right: -1,
+        });
+        // Re-borrow items mutably in two halves (vp excluded).
+        let (near, far) = items[1..].split_at_mut(mid);
+        let left = Self::build_rec(data, d, near, nodes, rng);
+        let right = Self::build_rec(data, d, far, nodes, rng);
+        nodes[id].left = left;
+        nodes[id].right = right;
+        id as i32
+    }
+
+    /// k nearest neighbors of `query` (dataset index), self excluded.
+    /// Returns (squared distance, index) ascending.
+    pub fn knn(&self, query: usize, k: usize) -> Vec<(T, u32)> {
+        let mut best = KBest::new(k);
+        let mut stack: Vec<i32> = vec![self.root];
+        while let Some(ni) = stack.pop() {
+            if ni < 0 {
+                continue;
+            }
+            let node = &self.nodes[ni as usize];
+            let dist = dist_sq(self.data, self.d, query, node.point as usize);
+            if node.point as usize != query {
+                best.push(dist, node.point);
+            }
+            // τ² pruning: with squared distances, a child region can contain a
+            // better candidate iff its distance bound beats the current τ.
+            // Using the triangle inequality on true distances:
+            //   |√dist − √threshold| < √τ  ⇔  explore the far side too.
+            let tau = best.threshold().unwrap_or(T::MAX_REAL);
+            let (first, second) = if dist < node.threshold {
+                (node.left, node.right)
+            } else {
+                (node.right, node.left)
+            };
+            // Visit the near side unconditionally (push second so it pops
+            // after the far-side check below... order: push far-conditional
+            // first, near last so near is explored first).
+            let explore_far = {
+                let sd = dist.to_f64().sqrt();
+                let st = node.threshold.to_f64().sqrt();
+                let stau = tau.to_f64().sqrt();
+                (sd - st).abs() < stau
+            };
+            if explore_far {
+                stack.push(second);
+            }
+            stack.push(first);
+        }
+        best.into_sorted()
+    }
+}
+
+/// [`KnnEngine`] backed by a VP-tree (the Multicore-TSNE KNN architecture).
+pub struct VpTreeKnn {
+    pub seed: u64,
+}
+
+impl Default for VpTreeKnn {
+    fn default() -> Self {
+        VpTreeKnn { seed: 0x5EED }
+    }
+}
+
+impl<T: Real> KnnEngine<T> for VpTreeKnn {
+    fn name(&self) -> &'static str {
+        "vp-tree"
+    }
+
+    fn search(&self, pool: &ThreadPool, data: &[T], n: usize, d: usize, k: usize) -> NeighborLists<T> {
+        assert!(k < n, "k must be < n");
+        let tree = VpTree::build(data, n, d, self.seed);
+        let mut indices = vec![0u32; n * k];
+        let mut dists = vec![T::ZERO; n * k];
+        {
+            let is = SyncSlice::new(&mut indices);
+            let ds = SyncSlice::new(&mut dists);
+            let tree = &tree;
+            parallel_for(pool, n, Schedule::Dynamic { grain: 64 }, |range| {
+                for i in range {
+                    let found = tree.knn(i, k);
+                    debug_assert_eq!(found.len(), k);
+                    for (j, (dist, idx)) in found.into_iter().enumerate() {
+                        // disjoint: row i
+                        unsafe {
+                            *is.get_mut(i * k + j) = idx;
+                            *ds.get_mut(i * k + j) = dist;
+                        }
+                    }
+                }
+            });
+        }
+        NeighborLists {
+            n,
+            k,
+            indices,
+            distances_sq: dists,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::knn_reference;
+    use super::*;
+
+    fn random_data(n: usize, d: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n * d).map(|_| rng.next_gaussian()).collect()
+    }
+
+    #[test]
+    fn exact_vs_reference() {
+        let (n, d, k) = (400, 6, 10);
+        let data = random_data(n, d, 1);
+        let pool = ThreadPool::new(4);
+        let got: NeighborLists<f64> = VpTreeKnn::default().search(&pool, &data, n, d, k);
+        let want = knn_reference(&data, n, d, k);
+        for i in 0..n {
+            for j in 0..k {
+                let (g, w) = (got.distances_sq[i * k + j], want.distances_sq[i * k + j]);
+                assert!((g - w).abs() < 1e-9 * (1.0 + w.abs()), "row {i} pos {j}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn excludes_self() {
+        let data = random_data(100, 4, 2);
+        let pool = ThreadPool::new(2);
+        let nl: NeighborLists<f64> = VpTreeKnn::default().search(&pool, &data, 100, 4, 5);
+        for i in 0..100 {
+            assert!(nl.neighbors(i).iter().all(|&j| j as usize != i));
+        }
+    }
+
+    #[test]
+    fn handles_duplicates() {
+        let mut data = random_data(60, 3, 3);
+        for j in 0..3 {
+            data[3 + j] = data[j];
+            data[6 + j] = data[j];
+        }
+        let pool = ThreadPool::new(2);
+        let nl: NeighborLists<f64> = VpTreeKnn::default().search(&pool, &data, 60, 3, 4);
+        assert!(nl.dists(0)[0] < 1e-12);
+        assert!(nl.dists(0)[1] < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let data = random_data(300, 5, 4);
+        let a: NeighborLists<f64> = VpTreeKnn::default().search(&ThreadPool::new(1), &data, 300, 5, 8);
+        let b: NeighborLists<f64> = VpTreeKnn::default().search(&ThreadPool::new(8), &data, 300, 5, 8);
+        assert_eq!(a.indices, b.indices);
+    }
+
+    #[test]
+    fn f32_works() {
+        let data: Vec<f32> = random_data(200, 4, 5).iter().map(|&v| v as f32).collect();
+        let pool = ThreadPool::new(2);
+        let got: NeighborLists<f32> = VpTreeKnn::default().search(&pool, &data, 200, 4, 6);
+        let want = knn_reference(&data, 200, 4, 6);
+        for i in 0..200 {
+            for j in 0..6 {
+                let (g, w) = (got.distances_sq[i * 6 + j], want.distances_sq[i * 6 + j]);
+                assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "row {i}");
+            }
+        }
+    }
+}

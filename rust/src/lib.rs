@@ -1,0 +1,46 @@
+//! # Acc-t-SNE
+//!
+//! A production-quality reproduction of *"Accelerating Barnes-Hut t-SNE Algorithm
+//! by Efficient Parallelization on Multi-Core CPUs"* (Chaudhary et al., Intel, 2022)
+//! as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate implements the full Barnes-Hut t-SNE pipeline — KNN, binary-search
+//! perplexity, quadtree construction, summarization, attractive and repulsive
+//! force computation — together with every baseline the paper compares against
+//! (scikit-learn-like, Multicore-TSNE-like, daal4py-like, FIt-SNE) and a benchmark
+//! harness that regenerates every table and figure in the paper's evaluation.
+//!
+//! ## Layers
+//! - **L3 (this crate)**: the parallel coordinator — thread pool, per-step
+//!   schedulers, CLI, metrics, benchmarks.
+//! - **L2/L1 (python/compile)**: JAX graphs calling Pallas kernels, AOT-lowered to
+//!   HLO text in `artifacts/`, executed from [`runtime`] via PJRT.
+//!
+//! ## Quickstart
+//! ```no_run
+//! use acc_tsne::tsne::{TsneConfig, Implementation, run_tsne};
+//! use acc_tsne::data::synthetic::gaussian_mixture;
+//!
+//! let ds = gaussian_mixture::<f64>(2_000, 16, 10, 4.0, 42);
+//! let cfg = TsneConfig { n_iter: 500, ..TsneConfig::default() };
+//! let result = run_tsne(&ds.points, ds.n, ds.d, &cfg, Implementation::AccTsne);
+//! println!("KL divergence = {:.3}", result.kl_divergence);
+//! ```
+#![feature(portable_simd)]
+#![allow(clippy::needless_range_loop)]
+
+pub mod cli;
+pub mod common;
+pub mod data;
+pub mod eval;
+pub mod fitsne;
+pub mod gradient;
+pub mod knn;
+pub mod metrics;
+pub mod parallel;
+pub mod perplexity;
+pub mod quadtree;
+pub mod runtime;
+pub mod sparse;
+pub mod tsne;
+pub mod viz;

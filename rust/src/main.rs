@@ -1,0 +1,183 @@
+//! acc-tsne — CLI launcher for the Acc-t-SNE reproduction.
+//!
+//! ```text
+//! acc-tsne run       --dataset mnist --impl acc-t-sne [--scale F --iters N --threads N --out emb.csv --plot out.svg --f32]
+//! acc-tsne compare   [--scale F --iters N]           # Fig 4 + Table 3
+//! acc-tsne scaling   [--scale F --iters N]           # Fig 5
+//! acc-tsne steps     [--threads N]                   # Tables 5/6 (+ Fig 6 with --sweep)
+//! acc-tsne profile                                   # Fig 1b
+//! acc-tsne precision                                 # Table S1
+//! acc-tsne viz                                       # Figs S1–S6
+//! acc-tsne info                                      # system + dataset registry
+//! ```
+
+use acc_tsne::cli::Args;
+use acc_tsne::data::datasets::PaperDataset;
+use acc_tsne::eval::{experiments, ExpConfig};
+use acc_tsne::parallel::pool::available_cores;
+use acc_tsne::parallel::ThreadPool;
+use acc_tsne::tsne::{run_tsne, Implementation, TsneConfig};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match real_main(&argv) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+const COMMON_FLAGS: &[&str] = &[
+    "dataset", "impl", "scale", "iters", "threads", "seed", "out", "plot", "f32", "sweep",
+    "perplexity", "theta",
+];
+
+fn exp_config(args: &Args) -> Result<ExpConfig, String> {
+    let mut cfg = ExpConfig::default();
+    cfg.scale = args.get_parse("scale", cfg.scale)?;
+    cfg.n_iter = args.get_parse("iters", cfg.n_iter)?;
+    cfg.seed = args.get_parse("seed", cfg.seed)?;
+    cfg.max_threads = args.get_parse("threads", cfg.max_threads)?;
+    Ok(cfg)
+}
+
+fn real_main(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv)?;
+    args.ensure_known(COMMON_FLAGS)?;
+    let sub = args.subcommand.as_deref().unwrap_or("help");
+    match sub {
+        "run" => cmd_run(&args),
+        "compare" => {
+            let cfg = exp_config(&args)?;
+            experiments::fig4_end_to_end(&cfg, &PaperDataset::ALL);
+            experiments::table3_accuracy(&cfg, &PaperDataset::ALL);
+            Ok(())
+        }
+        "scaling" => {
+            let cfg = exp_config(&args)?;
+            experiments::fig5_scaling(&cfg);
+            Ok(())
+        }
+        "steps" => {
+            let cfg = exp_config(&args)?;
+            experiments::table56_steps(&cfg, 1);
+            experiments::table56_steps(&cfg, cfg.resolved_threads());
+            if args.has("sweep") {
+                experiments::fig6_step_scaling(&cfg);
+            }
+            Ok(())
+        }
+        "profile" => {
+            let cfg = exp_config(&args)?;
+            experiments::fig1b_profile(&cfg);
+            Ok(())
+        }
+        "precision" => {
+            let cfg = exp_config(&args)?;
+            experiments::table_s1_precision(&cfg, &PaperDataset::ALL);
+            Ok(())
+        }
+        "viz" => {
+            let cfg = exp_config(&args)?;
+            experiments::figs_s_plots(&cfg, &PaperDataset::ALL);
+            Ok(())
+        }
+        "info" => cmd_info(),
+        _ => {
+            println!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let dataset = args.get("dataset").unwrap_or("digits");
+    let ds_kind = PaperDataset::from_name(dataset)
+        .ok_or_else(|| format!("unknown dataset '{dataset}' (see `acc-tsne info`)"))?;
+    let imp = Implementation::from_name(args.get("impl").unwrap_or("acc-t-sne"))
+        .ok_or_else(|| "unknown --impl (sklearn|multicore|daal4py|acc-t-sne|fit-sne)".to_string())?;
+    let exp = exp_config(args)?;
+    let cfg = TsneConfig {
+        n_iter: exp.n_iter,
+        seed: exp.seed,
+        n_threads: exp.max_threads,
+        perplexity: args.get_parse("perplexity", 30.0)?,
+        theta: args.get_parse("theta", 0.5)?,
+        ..TsneConfig::default()
+    };
+    let pool = ThreadPool::new(exp.resolved_threads());
+    println!(
+        "dataset={dataset} scale={} impl={} threads={} iters={}",
+        exp.scale,
+        imp.name(),
+        exp.resolved_threads(),
+        cfg.n_iter
+    );
+    let ds = ds_kind.generate::<f64>(exp.scale, exp.seed, &pool);
+    println!("n={} d={}", ds.n, ds.d);
+
+    let (kl, times, embedding, labels) = if args.has("f32") {
+        let ds32 = ds.cast::<f32>();
+        let r = run_tsne(&ds32.points, ds32.n, ds32.d, &cfg, imp);
+        (
+            r.kl_divergence,
+            r.step_times,
+            r.embedding.iter().map(|&v| v as f64).collect::<Vec<f64>>(),
+            ds32.labels,
+        )
+    } else {
+        let r = run_tsne(&ds.points, ds.n, ds.d, &cfg, imp);
+        (r.kl_divergence, r.step_times, r.embedding, ds.labels)
+    };
+
+    println!("KL divergence = {kl:.4}");
+    println!("total time    = {:.2}s", times.total());
+    for (step, pct) in times.percentages() {
+        println!("  {:<11} {:>8.3}s  {:>5.1}%", step.name(), times.get(step), pct);
+    }
+    if let Some(out) = args.get("out") {
+        acc_tsne::data::io::write_embedding_csv(out, &embedding, &labels)
+            .map_err(|e| format!("writing {out}: {e}"))?;
+        println!("[csv] {out}");
+    }
+    if let Some(plot) = args.get("plot") {
+        if plot.ends_with(".svg") {
+            acc_tsne::viz::write_svg(plot, &embedding, &labels, 768)
+        } else {
+            acc_tsne::viz::write_ppm(plot, &embedding, &labels, 768)
+        }
+        .map_err(|e| format!("writing {plot}: {e}"))?;
+        println!("[plot] {plot}");
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<(), String> {
+    println!("acc-tsne — Barnes-Hut t-SNE (Chaudhary et al. 2022) reproduction");
+    println!("cores available : {}", available_cores());
+    println!(
+        "implementations : {}",
+        Implementation::ALL.map(|i| i.name()).join(", ")
+    );
+    println!("datasets (synthetic analogs @ paper shape):");
+    for d in PaperDataset::ALL {
+        let (n, dim, k) = d.spec();
+        println!("  {:<14} n={:<9} d={:<6} classes={k}", d.name(), n, dim);
+    }
+    println!("artifacts dir   : artifacts/ (run `make artifacts`)");
+    Ok(())
+}
+
+const HELP: &str = "\
+acc-tsne <subcommand> [flags]
+  run        one t-SNE run  (--dataset --impl --scale --iters --threads --out --plot --f32)
+  compare    Fig 4 + Table 3 across datasets and implementations
+  scaling    Fig 5 end-to-end multicore scaling
+  steps      Tables 5/6 per-step comparison (--sweep adds Fig 6)
+  profile    Fig 1b baseline profile
+  precision  Table S1 f32 vs f64
+  viz        Figs S1-S6 embedding plots
+  info       system + dataset registry
+common flags: --scale F  --iters N  --threads N  --seed N";

@@ -1,0 +1,63 @@
+//! Embedding quality metrics.
+//!
+//! - KL divergence (paper Table 3 / S1): re-exported from the gradient oracle
+//!   ([`exact_kl`] for exact-Z small-N evaluation; runs report the BH-Z
+//!   variant computed inside the pipeline).
+//! - [`neighbor_preservation`]: fraction of high-dimensional k-NN retained in
+//!   the embedding — a structural check the paper's scatter plots (S1–S6)
+//!   make visually; we make it numeric so tests can assert it.
+
+pub use crate::gradient::exact::{exact_kl, kl_with_z};
+
+use crate::common::float::Real;
+use crate::knn::{BruteForceKnn, KnnEngine};
+use crate::parallel::ThreadPool;
+
+/// Mean fraction of each point's `k` high-dim neighbors that are also among
+/// its `k` low-dim neighbors (1.0 = perfect local-structure preservation).
+pub fn neighbor_preservation<T: Real>(
+    pool: &ThreadPool,
+    high: &[T],
+    n: usize,
+    d: usize,
+    embedding: &[T],
+    k: usize,
+) -> f64 {
+    assert_eq!(embedding.len(), 2 * n);
+    let eng = BruteForceKnn::default();
+    let hi = eng.search(pool, high, n, d, k);
+    let lo = eng.search(pool, embedding, n, 2, k);
+    let mut preserved = 0usize;
+    for i in 0..n {
+        let hset: std::collections::HashSet<u32> = hi.neighbors(i).iter().copied().collect();
+        preserved += lo.neighbors(i).iter().filter(|j| hset.contains(j)).count();
+    }
+    preserved as f64 / (n * k) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::rng::Rng;
+
+    #[test]
+    fn identity_embedding_of_2d_data_preserves_everything() {
+        let mut rng = Rng::new(1);
+        let n = 200;
+        let data: Vec<f64> = (0..2 * n).map(|_| rng.next_gaussian()).collect();
+        let pool = ThreadPool::new(2);
+        let np = neighbor_preservation(&pool, &data, n, 2, &data, 10);
+        assert_eq!(np, 1.0);
+    }
+
+    #[test]
+    fn random_embedding_preserves_nothing_much() {
+        let mut rng = Rng::new(2);
+        let n = 300;
+        let data: Vec<f64> = (0..8 * n).map(|_| rng.next_gaussian()).collect();
+        let emb: Vec<f64> = (0..2 * n).map(|_| rng.next_gaussian()).collect();
+        let pool = ThreadPool::new(2);
+        let np = neighbor_preservation(&pool, &data, n, 8, &emb, 10);
+        assert!(np < 0.2, "random embedding preservation {np}");
+    }
+}

@@ -1,0 +1,94 @@
+//! Parallelization substrate — the OpenMP analog the paper's techniques assume.
+//!
+//! The paper parallelizes with OpenMP (`#pragma omp parallel for` with static
+//! and dynamic scheduling). Offline, with no rayon, we own the equivalent:
+//!
+//! - [`pool::ThreadPool`] — persistent workers, caller participates as thread 0,
+//!   exact thread-count control (needed for the Fig 5/6 scaling sweeps).
+//! - [`par_for`] — static / dynamic(grain) loop scheduling over index ranges.
+//! - [`scan`] — parallel exclusive prefix sums.
+//! - [`sort`] — parallel LSD radix sort for (morton code, point index) pairs.
+
+pub mod par_for;
+pub mod pool;
+pub mod scan;
+pub mod sort;
+
+pub use par_for::{parallel_for, parallel_for_idx, Schedule};
+pub use pool::ThreadPool;
+
+/// Shared mutable slice for disjoint parallel writes.
+///
+/// Rust's aliasing rules forbid `&mut [T]` captured by a `Fn` closure running
+/// on several threads; the paper's algorithms (scatter into per-point force
+/// arrays, radix scatter, subtree construction) all write *disjoint* index
+/// sets per thread. `SyncSlice` is the narrow unsafe escape hatch for that
+/// pattern; every use site documents its disjointness argument.
+#[derive(Clone, Copy)]
+pub struct SyncSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for SyncSlice<'_, T> {}
+unsafe impl<T: Send> Sync for SyncSlice<'_, T> {}
+
+impl<'a, T> SyncSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> Self {
+        SyncSlice {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    #[inline(always)]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline(always)]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write `slot` i. Safety: no two threads may touch the same index
+    /// concurrently, and `i < len`.
+    #[inline(always)]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
+
+    /// Reborrow a disjoint subrange as a regular mutable slice.
+    /// Safety: ranges handed to different threads must not overlap.
+    #[inline(always)]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_slice_disjoint_writes() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0usize; 1000];
+        let s = SyncSlice::new(&mut data);
+        parallel_for(&pool, 1000, Schedule::Static, |range| {
+            for i in range {
+                // disjoint: parallel_for ranges never overlap
+                unsafe { *s.get_mut(i) = i * 2 };
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i * 2);
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Loop scheduling over index ranges — the `#pragma omp for` analog.
+//!
+//! Two schedules, mirroring the paper's usage:
+//! - `Static`: contiguous equal chunks, one per thread. Used when iterations
+//!   are uniform (morton encoding, BSP, attractive/repulsive over points).
+//! - `Dynamic { grain }`: threads pull `grain`-sized chunks from an atomic
+//!   counter. Used when work per item varies wildly (subtree construction —
+//!   paper §3.3 "dynamic thread scheduling over the nodes").
+
+use super::pool::ThreadPool;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    Static,
+    Dynamic { grain: usize },
+}
+
+/// Run `f` over disjoint subranges covering `0..n` on all pool threads.
+pub fn parallel_for<F>(pool: &ThreadPool, n: usize, sched: Schedule, f: F)
+where
+    F: Fn(Range<usize>) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let nt = pool.n_threads();
+    if nt == 1 {
+        f(0..n);
+        return;
+    }
+    match sched {
+        Schedule::Static => {
+            pool.broadcast(|tid| {
+                let (start, end) = static_chunk(n, nt, tid);
+                if start < end {
+                    f(start..end);
+                }
+            });
+        }
+        Schedule::Dynamic { grain } => {
+            let grain = grain.max(1);
+            let cursor = AtomicUsize::new(0);
+            pool.broadcast(|_tid| loop {
+                let start = cursor.fetch_add(grain, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + grain).min(n);
+                f(start..end);
+            });
+        }
+    }
+}
+
+/// Convenience: per-index closure with static scheduling.
+pub fn parallel_for_idx<F>(pool: &ThreadPool, n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    parallel_for(pool, n, Schedule::Static, |range| {
+        for i in range {
+            f(i);
+        }
+    });
+}
+
+/// Contiguous chunk boundaries for static scheduling; distributes the
+/// remainder one extra element to the first `n % nt` threads.
+#[inline]
+pub fn static_chunk(n: usize, nt: usize, tid: usize) -> (usize, usize) {
+    let base = n / nt;
+    let rem = n % nt;
+    let start = tid * base + tid.min(rem);
+    let len = base + usize::from(tid < rem);
+    (start, start + len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn static_chunks_partition_exactly() {
+        for n in [0, 1, 5, 100, 101, 1024] {
+            for nt in [1, 2, 3, 8, 17] {
+                let mut covered = 0;
+                let mut prev_end = 0;
+                for tid in 0..nt {
+                    let (s, e) = static_chunk(n, nt, tid);
+                    assert_eq!(s, prev_end);
+                    prev_end = e;
+                    covered += e - s;
+                }
+                assert_eq!(prev_end, n);
+                assert_eq!(covered, n);
+            }
+        }
+    }
+
+    fn sum_check(sched: Schedule, nt: usize, n: usize) {
+        let pool = ThreadPool::new(nt);
+        let sum = AtomicU64::new(0);
+        parallel_for(&pool, n, sched, |range| {
+            let local: u64 = range.map(|i| i as u64).sum();
+            sum.fetch_add(local, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), (n as u64 * (n as u64 - 1)) / 2);
+    }
+
+    #[test]
+    fn static_covers_all_indices() {
+        sum_check(Schedule::Static, 4, 10_000);
+        sum_check(Schedule::Static, 1, 1_000);
+        sum_check(Schedule::Static, 16, 17);
+    }
+
+    #[test]
+    fn dynamic_covers_all_indices() {
+        sum_check(Schedule::Dynamic { grain: 64 }, 4, 10_000);
+        sum_check(Schedule::Dynamic { grain: 1 }, 8, 1_000);
+        sum_check(Schedule::Dynamic { grain: 100_000 }, 4, 1_000);
+    }
+
+    #[test]
+    fn empty_range_is_noop() {
+        let pool = ThreadPool::new(4);
+        parallel_for(&pool, 0, Schedule::Static, |_| panic!("must not run"));
+        parallel_for(&pool, 0, Schedule::Dynamic { grain: 8 }, |_| {
+            panic!("must not run")
+        });
+    }
+
+    #[test]
+    fn ranges_are_disjoint_dynamic() {
+        let pool = ThreadPool::new(8);
+        let n = 5000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(&pool, n, Schedule::Dynamic { grain: 7 }, |range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_idx_runs_each_once() {
+        let pool = ThreadPool::new(3);
+        let hits: Vec<AtomicU64> = (0..257).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_idx(&pool, 257, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+}

@@ -1,0 +1,246 @@
+//! Persistent thread pool with caller participation.
+//!
+//! Design constraints from the paper's evaluation:
+//! - **Exact thread-count control.** Fig 5/6 sweep 1..32 cores; a pool of
+//!   `n` means exactly `n` OS threads do work (`n-1` workers + the caller as
+//!   thread 0). `n = 1` never spawns and never synchronizes, so single-thread
+//!   baselines (Tables 4/5) measure the pure algorithm.
+//! - **Low dispatch overhead.** One `Mutex`+`Condvar` epoch broadcast per
+//!   parallel region (~a few µs), amortized across 1000 gradient iterations.
+//!   A parallel region is `broadcast(f)`: run `f(tid)` on every thread, then
+//!   barrier.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Type-erased pointer to the current parallel region's closure.
+/// Valid only while `broadcast` is blocked, which is exactly when workers run it.
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+unsafe impl Send for JobPtr {}
+
+struct State {
+    job: Option<JobPtr>,
+    epoch: u64,
+    shutdown: bool,
+}
+
+struct Inner {
+    state: Mutex<State>,
+    start_cv: Condvar,
+    done_cv: Condvar,
+    remaining: AtomicUsize,
+    done_lock: Mutex<()>,
+}
+
+/// Persistent pool of `n - 1` workers; the constructing thread acts as tid 0.
+pub struct ThreadPool {
+    inner: Arc<Inner>,
+    n_threads: usize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Create a pool that will run parallel regions on `n_threads` threads.
+    /// `n_threads = 0` is clamped to 1.
+    pub fn new(n_threads: usize) -> Self {
+        let n_threads = n_threads.max(1);
+        let inner = Arc::new(Inner {
+            state: Mutex::new(State {
+                job: None,
+                epoch: 0,
+                shutdown: false,
+            }),
+            start_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            remaining: AtomicUsize::new(0),
+            done_lock: Mutex::new(()),
+        });
+        let mut handles = Vec::new();
+        for tid in 1..n_threads {
+            let inner = Arc::clone(&inner);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("acc-tsne-worker-{tid}"))
+                    .spawn(move || worker_loop(inner, tid))
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool {
+            inner,
+            n_threads,
+            handles,
+        }
+    }
+
+    /// Create a pool sized to all available hardware threads.
+    pub fn with_all_cores() -> Self {
+        Self::new(available_cores())
+    }
+
+    #[inline]
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Run `f(tid)` on every thread of the pool (tid in `0..n_threads`), with
+    /// the caller executing tid 0. Returns after all threads finish (barrier).
+    pub fn broadcast<F: Fn(usize) + Sync>(&self, f: F) {
+        if self.n_threads == 1 {
+            f(0);
+            return;
+        }
+        let nworkers = self.n_threads - 1;
+        // Erase the closure's lifetime: workers only dereference the pointer
+        // between the epoch bump below and the `remaining == 0` barrier, and
+        // this function does not return before that barrier.
+        let job: JobPtr = unsafe {
+            JobPtr(std::mem::transmute::<
+                *const (dyn Fn(usize) + Sync),
+                *const (dyn Fn(usize) + Sync + 'static),
+            >(&f as &(dyn Fn(usize) + Sync) as *const _))
+        };
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            self.inner.remaining.store(nworkers, Ordering::Release);
+            st.job = Some(job);
+            st.epoch += 1;
+            drop(st);
+            self.inner.start_cv.notify_all();
+        }
+        // Caller participates as tid 0.
+        f(0);
+        // Barrier: wait for all workers.
+        if self.inner.remaining.load(Ordering::Acquire) != 0 {
+            let mut guard = self.inner.done_lock.lock().unwrap();
+            while self.inner.remaining.load(Ordering::Acquire) != 0 {
+                guard = self.inner.done_cv.wait(guard).unwrap();
+            }
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+            st.epoch += 1;
+        }
+        self.inner.start_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(inner: Arc<Inner>, tid: usize) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = inner.state.lock().unwrap();
+            while st.epoch == seen_epoch && !st.shutdown {
+                st = inner.start_cv.wait(st).unwrap();
+            }
+            if st.shutdown {
+                return;
+            }
+            seen_epoch = st.epoch;
+            st.job
+        };
+        if let Some(JobPtr(ptr)) = job {
+            // Safety: `broadcast` keeps the closure alive until the barrier.
+            let f = unsafe { &*ptr };
+            f(tid);
+            if inner.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                let _g = inner.done_lock.lock().unwrap();
+                inner.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+/// Number of available hardware threads.
+pub fn available_cores() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn all_tids_run_exactly_once() {
+        for n in [1, 2, 4, 7] {
+            let pool = ThreadPool::new(n);
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool.broadcast(|tid| {
+                hits[tid].fetch_add(1, Ordering::Relaxed);
+            });
+            for (tid, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "tid {tid} of {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_is_a_barrier() {
+        let pool = ThreadPool::new(4);
+        let counter = AtomicU64::new(0);
+        for _ in 0..50 {
+            pool.broadcast(|_| {
+                counter.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn reusable_across_regions_with_different_closures() {
+        let pool = ThreadPool::new(3);
+        let a = AtomicU64::new(0);
+        let b = AtomicU64::new(0);
+        pool.broadcast(|tid| {
+            a.fetch_add(tid as u64, Ordering::Relaxed);
+        });
+        pool.broadcast(|tid| {
+            b.fetch_add((tid * 10) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(a.load(Ordering::Relaxed), 0 + 1 + 2);
+        assert_eq!(b.load(Ordering::Relaxed), 0 + 10 + 20);
+    }
+
+    #[test]
+    fn zero_threads_clamped_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.n_threads(), 1);
+        let hit = AtomicU64::new(0);
+        pool.broadcast(|_| {
+            hit.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hit.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn nested_data_capture_by_ref() {
+        let pool = ThreadPool::new(4);
+        let data: Vec<u64> = (0..100).collect();
+        let sum = AtomicU64::new(0);
+        pool.broadcast(|tid| {
+            let local: u64 = data.iter().skip(tid).step_by(4).sum();
+            sum.fetch_add(local, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), (0..100).sum::<u64>());
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(8);
+        pool.broadcast(|_| {});
+        drop(pool); // must not hang
+    }
+}

@@ -1,0 +1,94 @@
+//! Parallel exclusive prefix sums.
+//!
+//! Used by the radix-sort scatter phase and by level construction in the
+//! morton quadtree builder (turning per-node child counts into offsets).
+
+use super::par_for::static_chunk;
+use super::pool::ThreadPool;
+use super::SyncSlice;
+
+/// In-place exclusive prefix sum; returns the grand total.
+/// `[3, 1, 4]` becomes `[0, 3, 4]` and returns `8`.
+pub fn exclusive_scan_seq(data: &mut [usize]) -> usize {
+    let mut acc = 0usize;
+    for v in data.iter_mut() {
+        let x = *v;
+        *v = acc;
+        acc += x;
+    }
+    acc
+}
+
+/// Parallel in-place exclusive prefix sum; returns the grand total.
+///
+/// Three-phase: per-chunk local sums → sequential scan of chunk totals
+/// (nt elements — negligible) → per-chunk local exclusive scan with offset.
+pub fn exclusive_scan(pool: &ThreadPool, data: &mut [usize]) -> usize {
+    let n = data.len();
+    let nt = pool.n_threads();
+    if nt == 1 || n < 4096 {
+        return exclusive_scan_seq(data);
+    }
+    let mut chunk_totals = vec![0usize; nt];
+    {
+        let totals = SyncSlice::new(&mut chunk_totals);
+        let d = &*data;
+        pool.broadcast(|tid| {
+            let (s, e) = static_chunk(n, nt, tid);
+            // disjoint: one slot per tid
+            unsafe { *totals.get_mut(tid) = d[s..e].iter().sum() };
+        });
+    }
+    let total = exclusive_scan_seq(&mut chunk_totals);
+    {
+        let d = SyncSlice::new(data);
+        let offsets = &chunk_totals;
+        pool.broadcast(|tid| {
+            let (s, e) = static_chunk(n, nt, tid);
+            // disjoint: static chunks never overlap
+            let chunk = unsafe { d.slice_mut(s, e - s) };
+            let mut acc = offsets[tid];
+            for v in chunk.iter_mut() {
+                let x = *v;
+                *v = acc;
+                acc += x;
+            }
+        });
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::rng::Rng;
+
+    #[test]
+    fn seq_scan_basic() {
+        let mut v = vec![3, 1, 4, 1, 5];
+        let total = exclusive_scan_seq(&mut v);
+        assert_eq!(v, vec![0, 3, 4, 8, 9]);
+        assert_eq!(total, 14);
+    }
+
+    #[test]
+    fn seq_scan_empty() {
+        let mut v: Vec<usize> = vec![];
+        assert_eq!(exclusive_scan_seq(&mut v), 0);
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let mut rng = Rng::new(42);
+        for n in [0, 1, 100, 4096, 10_001, 100_000] {
+            let orig: Vec<usize> = (0..n).map(|_| rng.next_below(1000)).collect();
+            let mut seq = orig.clone();
+            let mut par = orig.clone();
+            let ts = exclusive_scan_seq(&mut seq);
+            let pool = ThreadPool::new(6);
+            let tp = exclusive_scan(&pool, &mut par);
+            assert_eq!(ts, tp, "total mismatch n={n}");
+            assert_eq!(seq, par, "scan mismatch n={n}");
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! Binary-search perplexity (pipeline step 2, paper §3.2).
+//!
+//! For each point i, finds the Gaussian precision β_i = 1/2σ_i² such that the
+//! conditional distribution over its ⌊3u⌋ KNN distances has perplexity u, then
+//! emits the row-normalized conditionals p_{j|i} (Eq. 2).
+//!
+//! The paper's key observation: rows are independent, and prior
+//! implementations (sklearn/daal4py) compute them sequentially; Acc-t-SNE
+//! multithreads them (with Numba there, with our pool here). Both variants are
+//! kept so the BSP rows of Tables 5/6 can be regenerated.
+
+use crate::common::float::Real;
+use crate::knn::NeighborLists;
+use crate::parallel::{parallel_for, Schedule, SyncSlice, ThreadPool};
+
+/// Max binary-search iterations (vdMaaten's reference uses 50).
+const MAX_ITER: usize = 50;
+/// Entropy tolerance.
+const TOL: f64 = 1e-5;
+
+/// Run mode for baseline-vs-ours step comparisons.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParMode {
+    /// Prior implementations: one thread walks all rows.
+    Sequential,
+    /// Acc-t-SNE: rows distributed across the pool.
+    Parallel,
+}
+
+/// Result of the BSP step.
+#[derive(Clone, Debug)]
+pub struct Conditionals<T: Real> {
+    /// Row-normalized conditional probabilities, aligned with
+    /// `NeighborLists::indices` (n × k).
+    pub p: Vec<T>,
+    /// Fitted precisions β_i.
+    pub betas: Vec<T>,
+}
+
+/// Solve one row: binary search β so that perplexity(p_{·|i}) = `perplexity`.
+/// Writes normalized conditionals into `out` and returns β.
+///
+/// Matches the vdMaaten/sklearn `_binary_search_perplexity` logic: H computed
+/// in nats, β doubled/halved until bracketed, then bisected.
+pub fn bsp_row<T: Real>(dist_sq: &[T], perplexity: f64, out: &mut [T]) -> T {
+    debug_assert_eq!(dist_sq.len(), out.len());
+    let desired_entropy = T::from_f64(perplexity.ln());
+    let mut beta = T::ONE;
+    let mut beta_min = T::MIN_REAL; // acts as -inf sentinel
+    let mut beta_max = T::MAX_REAL; // +inf sentinel
+    let tol = T::from_f64(TOL);
+
+    for _ in 0..MAX_ITER {
+        // p_j = exp(-β d_j²); accumulate Σp and Σ β d² p for the entropy.
+        let mut sum_p = T::ZERO;
+        let mut sum_disp = T::ZERO;
+        for (o, &dsq) in out.iter_mut().zip(dist_sq.iter()) {
+            let p = (-beta * dsq).exp();
+            *o = p;
+            sum_p += p;
+            sum_disp += dsq * p;
+        }
+        let sum_p = sum_p.max_r(T::TINY);
+        // H = ln Σp + β · (Σ d² p) / Σp
+        let entropy = sum_p.ln() + beta * sum_disp / sum_p;
+        let diff = entropy - desired_entropy;
+        if diff.abs() <= tol {
+            break;
+        }
+        if diff > T::ZERO {
+            // entropy too high → distribution too flat → increase β
+            beta_min = beta;
+            if beta_max == T::MAX_REAL {
+                beta *= T::TWO;
+            } else {
+                beta = (beta + beta_max) * T::HALF;
+            }
+        } else {
+            beta_max = beta;
+            if beta_min == T::MIN_REAL {
+                beta *= T::HALF;
+            } else {
+                beta = (beta + beta_min) * T::HALF;
+            }
+        }
+    }
+    // Normalize the final p row.
+    let mut sum_p = T::ZERO;
+    for (o, &dsq) in out.iter_mut().zip(dist_sq.iter()) {
+        let p = (-beta * dsq).exp();
+        *o = p;
+        sum_p += p;
+    }
+    let inv = T::ONE / sum_p.max_r(T::TINY);
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+    beta
+}
+
+/// BSP over all points (paper step 2).
+pub fn binary_search_perplexity<T: Real>(
+    pool: &ThreadPool,
+    knn: &NeighborLists<T>,
+    perplexity: f64,
+    mode: ParMode,
+) -> Conditionals<T> {
+    let n = knn.n;
+    let k = knn.k;
+    assert!(
+        perplexity <= k as f64,
+        "perplexity {perplexity} needs at least {perplexity} neighbors, have {k}"
+    );
+    let mut p = vec![T::ZERO; n * k];
+    let mut betas = vec![T::ZERO; n];
+    match mode {
+        ParMode::Sequential => {
+            for i in 0..n {
+                betas[i] = bsp_row(knn.dists(i), perplexity, &mut p[i * k..(i + 1) * k]);
+            }
+        }
+        ParMode::Parallel => {
+            let ps = SyncSlice::new(&mut p);
+            let bs = SyncSlice::new(&mut betas);
+            parallel_for(pool, n, Schedule::Static, |range| {
+                for i in range {
+                    // disjoint: row i and slot i
+                    let row = unsafe { ps.slice_mut(i * k, k) };
+                    let beta = bsp_row(knn.dists(i), perplexity, row);
+                    unsafe { *bs.get_mut(i) = beta };
+                }
+            });
+        }
+    }
+    Conditionals { p, betas }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::rng::Rng;
+    use crate::knn::{BruteForceKnn, KnnEngine};
+
+    fn perplexity_of(p: &[f64]) -> f64 {
+        let h: f64 = p
+            .iter()
+            .filter(|&&x| x > 0.0)
+            .map(|&x| -x * x.ln())
+            .sum();
+        h.exp()
+    }
+
+    #[test]
+    fn row_hits_target_perplexity() {
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let k = 30;
+            let dists: Vec<f64> = (0..k).map(|_| rng.next_f64() * 10.0 + 0.01).collect();
+            let mut out = vec![0.0; k];
+            bsp_row(&dists, 10.0, &mut out);
+            let u = perplexity_of(&out);
+            assert!((u - 10.0).abs() < 0.01, "perplexity {u}");
+            assert!((out.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn closer_points_get_higher_p() {
+        let dists = vec![0.1, 0.5, 1.0, 2.0, 4.0, 8.0];
+        let mut out = vec![0.0; 6];
+        bsp_row(&dists, 3.0, &mut out);
+        assert!(out.windows(2).all(|w| w[0] >= w[1]), "{out:?}");
+    }
+
+    #[test]
+    fn beta_adapts_to_density() {
+        // Dense region (small distances) → larger β than sparse region.
+        let mut dense_out = vec![0.0; 10];
+        let mut sparse_out = vec![0.0; 10];
+        let dense: Vec<f64> = (1..=10).map(|i| 0.01 * i as f64).collect();
+        let sparse: Vec<f64> = (1..=10).map(|i| 10.0 * i as f64).collect();
+        let b_dense = bsp_row(&dense, 5.0, &mut dense_out);
+        let b_sparse = bsp_row(&sparse, 5.0, &mut sparse_out);
+        assert!(b_dense > b_sparse * 10.0, "{b_dense} vs {b_sparse}");
+    }
+
+    #[test]
+    fn sequential_and_parallel_agree() {
+        let mut rng = Rng::new(2);
+        let n = 150;
+        let d = 6;
+        let data: Vec<f64> = (0..n * d).map(|_| rng.next_gaussian()).collect();
+        let pool = ThreadPool::new(4);
+        let knn = BruteForceKnn::default().search(&pool, &data, n, d, 20);
+        let seq = binary_search_perplexity(&pool, &knn, 6.0, ParMode::Sequential);
+        let par = binary_search_perplexity(&pool, &knn, 6.0, ParMode::Parallel);
+        assert_eq!(seq.p, par.p);
+        assert_eq!(seq.betas, par.betas);
+    }
+
+    #[test]
+    fn f32_also_converges() {
+        let mut rng = Rng::new(3);
+        let k = 24;
+        let dists: Vec<f32> = (0..k).map(|_| (rng.next_f64() * 5.0 + 0.1) as f32).collect();
+        let mut out = vec![0.0f32; k];
+        bsp_row(&dists, 8.0, &mut out);
+        let u = perplexity_of(&out.iter().map(|&x| x as f64).collect::<Vec<_>>());
+        assert!((u - 8.0).abs() < 0.05, "perplexity {u}");
+    }
+
+    #[test]
+    #[should_panic(expected = "perplexity")]
+    fn rejects_perplexity_above_k() {
+        let pool = ThreadPool::new(1);
+        let knn = NeighborLists::<f64> {
+            n: 4,
+            k: 2,
+            indices: vec![1, 2, 0, 2, 0, 1, 0, 1],
+            distances_sq: vec![1.0; 8],
+        };
+        binary_search_perplexity(&pool, &knn, 30.0, ParMode::Parallel);
+    }
+}

@@ -1,0 +1,218 @@
+//! Baseline quadtree builder — the daal4py algorithm the paper profiles
+//! (§3.3): level-by-level BFS where splitting a cell re-partitions all of its
+//! points into the four quadrants, "so each point is traversed as many times
+//! as the depth of the tree for that point". Sequential, like daal4py's.
+//!
+//! Produces the same [`QuadTree`] shape as the morton builder (same bounding
+//! square, same power-of-2 subdivision) so summarization and repulsion run on
+//! either; only construction cost and memory layout differ. Points end up
+//! gathered in BFS-discovery order — the scattered layout whose DFS-traversal
+//! cache behaviour the paper's Z-order layout improves on.
+
+use super::morton::{RootCell, MAX_LEVEL};
+use super::{Node, QuadTree, NO_CHILD};
+use crate::common::float::Real;
+use crate::parallel::ThreadPool;
+
+struct Pending {
+    node_idx: u32,
+    /// Original indices of the points in this cell (re-partitioned per level —
+    /// the O(N·depth) cost center of the baseline).
+    points: Vec<u32>,
+    level: usize,
+    center: [f64; 2],
+    width: f64,
+}
+
+/// Build the quadtree by level-by-level re-partitioning (daal4py style).
+/// `pool` is only used to compute the bounding box (as daal4py does); the
+/// construction itself is sequential.
+pub fn build_baseline<T: Real>(pool: &ThreadPool, pos: &[T]) -> QuadTree<T> {
+    let n = pos.len() / 2;
+    assert!(n > 0, "cannot build a tree over zero points");
+    let root_cell = RootCell::bounding(pool, pos);
+    let root_width = 2.0 * root_cell.r_span;
+
+    let mut nodes: Vec<Node<T>> = Vec::with_capacity(2 * n);
+    nodes.push(new_node::<T>(n as u32, root_cell.cent, root_width));
+    let mut point_pos = vec![T::ZERO; 2 * n];
+    let mut point_idx = Vec::with_capacity(n);
+
+    let mut frontier = vec![Pending {
+        node_idx: 0,
+        points: (0..n as u32).collect(),
+        level: 0,
+        center: root_cell.cent,
+        width: root_width,
+    }];
+    let mut depth = 0usize;
+
+    while !frontier.is_empty() {
+        let mut next = Vec::new();
+        for cell in frontier.drain(..) {
+            depth = depth.max(cell.level);
+            let is_leaf = cell.points.len() == 1
+                || cell.level >= MAX_LEVEL
+                || all_coincident(pos, &cell.points);
+            if is_leaf {
+                let start = point_idx.len() as u32;
+                for &p in &cell.points {
+                    point_pos[2 * point_idx.len()] = pos[2 * p as usize];
+                    point_pos[2 * point_idx.len() + 1] = pos[2 * p as usize + 1];
+                    point_idx.push(p);
+                }
+                let node = &mut nodes[cell.node_idx as usize];
+                node.point_start = start;
+                node.point_end = point_idx.len() as u32;
+                continue;
+            }
+            // Re-partition: walk every point of the cell (the per-level cost).
+            let mut buckets: [Vec<u32>; 4] = [Vec::new(), Vec::new(), Vec::new(), Vec::new()];
+            for &p in &cell.points {
+                let x = pos[2 * p as usize].to_f64();
+                let y = pos[2 * p as usize + 1].to_f64();
+                let q = usize::from(x >= cell.center[0]) | (usize::from(y >= cell.center[1]) << 1);
+                buckets[q].push(p);
+            }
+            for (q, bucket) in buckets.into_iter().enumerate() {
+                if bucket.is_empty() {
+                    continue;
+                }
+                let (c_center, c_width) = child_geometry(cell.center, cell.width, q);
+                let idx = nodes.len() as u32;
+                nodes.push(new_node::<T>(bucket.len() as u32, c_center, c_width));
+                nodes[cell.node_idx as usize].children[q] = idx as i32;
+                next.push(Pending {
+                    node_idx: idx,
+                    points: bucket,
+                    level: cell.level + 1,
+                    center: c_center,
+                    width: c_width,
+                });
+            }
+        }
+        frontier = next;
+    }
+
+    QuadTree {
+        nodes,
+        point_pos,
+        point_idx,
+        subtree_roots: Vec::new(),
+        depth,
+    }
+}
+
+fn new_node<T: Real>(count: u32, center: [f64; 2], width: f64) -> Node<T> {
+    Node {
+        children: [NO_CHILD; 4],
+        count,
+        point_start: 0,
+        point_end: 0,
+        center: [T::from_f64(center[0]), T::from_f64(center[1])],
+        width: T::from_f64(width),
+        com: [T::ZERO; 2],
+    }
+}
+
+#[inline]
+fn child_geometry(center: [f64; 2], width: f64, q: usize) -> ([f64; 2], f64) {
+    let off = width * 0.25;
+    (
+        [
+            center[0] + if q & 1 == 1 { off } else { -off },
+            center[1] + if q & 2 == 2 { off } else { -off },
+        ],
+        width * 0.5,
+    )
+}
+
+fn all_coincident<T: Real>(pos: &[T], points: &[u32]) -> bool {
+    let p0 = points[0] as usize;
+    points.iter().all(|&p| {
+        let p = p as usize;
+        pos[2 * p] == pos[2 * p0] && pos[2 * p + 1] == pos[2 * p0 + 1]
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::builder_morton::build_morton;
+    use super::*;
+    use crate::common::rng::Rng;
+    use crate::quadtree::tree_stats;
+
+    fn random_pos(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..2 * n).map(|_| rng.next_gaussian() * 3.0).collect()
+    }
+
+    #[test]
+    fn valid_on_random_points() {
+        for n in [1, 2, 7, 333, 2000] {
+            let pos = random_pos(n, n as u64 + 100);
+            let pool = ThreadPool::new(2);
+            let tree = build_baseline(&pool, &pos);
+            tree.validate().unwrap_or_else(|e| panic!("n={n}: {e}"));
+        }
+    }
+
+    #[test]
+    fn identical_points_terminate() {
+        let pos = vec![0.5f64; 2 * 40];
+        let pool = ThreadPool::new(1);
+        let tree = build_baseline(&pool, &pos);
+        tree.validate().unwrap();
+        assert_eq!(tree.root().count, 40);
+        assert!(tree.depth <= 1);
+    }
+
+    #[test]
+    fn same_leaf_partition_as_morton_builder() {
+        // Both builders subdivide the same root square with the same rule, so
+        // leaf point-sets must coincide (morton grid vs float comparisons can
+        // disagree only for points exactly on cell boundaries — the random
+        // continuum makes that probability zero).
+        let pos = random_pos(1500, 21);
+        let pool = ThreadPool::new(4);
+        let a = build_baseline(&pool, &pos);
+        let b = build_morton(&pool, &pos);
+        let (sa, sb) = (tree_stats(&a), tree_stats(&b));
+        assert_eq!(sa.leaves, sb.leaves, "{sa:?} vs {sb:?}");
+        assert_eq!(sa.depth, sb.depth, "{sa:?} vs {sb:?}");
+        // identical multiset of leaf sizes at identical cells → compare sorted
+        // (depth, count) pairs
+        let sig = |t: &QuadTree<f64>| {
+            let mut v: Vec<(u64, u64, u32)> = t
+                .nodes
+                .iter()
+                .filter(|n| n.is_leaf())
+                .map(|n| {
+                    (
+                        (n.center[0].to_f64() * 1e6).round() as u64,
+                        (n.center[1].to_f64() * 1e6).round() as u64,
+                        n.count,
+                    )
+                })
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(sig(&a), sig(&b));
+    }
+
+    #[test]
+    fn bfs_level_order_nodes() {
+        // Parent index < child index (BFS append order).
+        let pos = random_pos(300, 5);
+        let pool = ThreadPool::new(1);
+        let tree = build_baseline(&pool, &pos);
+        for (i, node) in tree.nodes.iter().enumerate() {
+            for &c in &node.children {
+                if c != NO_CHILD {
+                    assert!((c as usize) > i);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,472 @@
+//! Morton-code quadtree builder — the paper's §3.3 contribution.
+//!
+//! Pipeline: encode (Alg. 1, SIMD + multithreaded) → parallel radix sort →
+//! gather points into Z-order → sequential top-level expansion until the
+//! frontier holds ≥ `SUBTREE_FACTOR ×` threads nodes → parallel subtree
+//! construction with dynamic scheduling, each subtree stored contiguously.
+//!
+//! Each point is touched once (vs once-per-level in the baseline): a node's
+//! children are found by binary-searching quadrant-digit boundaries in its
+//! sorted code range, so splitting costs O(log range) instead of O(range).
+//!
+//! Duplicate handling: a range whose codes are all identical (points closer
+//! than the 2⁻³² grid) becomes a multi-point leaf immediately; the baseline
+//! builder instead chains single-child nodes to the depth cap — both give the
+//! same mass distribution, which is what the force computation consumes.
+
+use super::morton::{encode_points_simd, quadrant_at, RootCell, MAX_LEVEL};
+use super::{Node, QuadTree, NO_CHILD};
+use crate::common::float::Real;
+use crate::parallel::sort::radix_sort_pairs;
+use crate::parallel::{parallel_for, Schedule, SyncSlice, ThreadPool};
+
+/// Frontier nodes per thread before switching to parallel subtree builds
+/// (paper: "sufficiently larger than the number of threads" for dynamic
+/// scheduling to balance).
+const SUBTREE_FACTOR: usize = 8;
+
+struct Frontier {
+    node_idx: u32,
+    start: usize,
+    end: usize,
+    level: usize,
+    center: [f64; 2],
+    width: f64,
+}
+
+/// Below this point count the pool dispatch overhead (a broadcast per
+/// phase: bbox, encode, 8 sort passes, gather, build, stitch) exceeds the
+/// work itself; a single-thread build with no broadcasts wins. Crossover
+/// measured at ~80–100k points on 24 cores (EXPERIMENTS.md §Perf).
+const SMALL_N: usize = 65_536;
+
+/// Build the quadtree of the embedding `pos` (interleaved x,y).
+pub fn build_morton<T: Real>(pool: &ThreadPool, pos: &[T]) -> QuadTree<T> {
+    let n = pos.len() / 2;
+    assert!(n > 0, "cannot build a tree over zero points");
+    if n < SMALL_N || pool.n_threads() == 1 {
+        return build_morton_small(pos);
+    }
+    let root_cell = RootCell::bounding(pool, pos);
+
+    // (1) Morton codes, SIMD + multithreaded.
+    let mut codes = vec![0u64; n];
+    encode_points_simd(pool, pos, &root_cell, &mut codes);
+
+    // (2) Parallel radix sort of (code, original index).
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    radix_sort_pairs(pool, &mut codes, &mut order);
+
+    // (3) Gather coordinates into Z-order (contiguous leaf ranges).
+    let mut point_pos = vec![T::ZERO; 2 * n];
+    {
+        let ps = SyncSlice::new(&mut point_pos);
+        let order = &order;
+        parallel_for(pool, n, Schedule::Static, |range| {
+            for i in range {
+                let src = order[i] as usize;
+                // disjoint: slots 2i, 2i+1
+                unsafe {
+                    *ps.get_mut(2 * i) = pos[2 * src];
+                    *ps.get_mut(2 * i + 1) = pos[2 * src + 1];
+                }
+            }
+        });
+    }
+
+    let root_width = 2.0 * root_cell.r_span;
+    let mut nodes: Vec<Node<T>> = Vec::with_capacity(2 * n);
+    nodes.push(new_node::<T>(n as u32, root_cell.cent, root_width));
+
+    // (4) Sequential top expansion, level by level (BFS), keeping top nodes
+    // level-contiguous, until the frontier is wide enough for the pool.
+    let target = (SUBTREE_FACTOR * pool.n_threads()).max(4);
+    let mut frontier = vec![Frontier {
+        node_idx: 0,
+        start: 0,
+        end: n,
+        level: 0,
+        center: root_cell.cent,
+        width: root_width,
+    }];
+    let mut depth = 0usize;
+    loop {
+        // Finalize unsplittable entries as leaves; keep splittable ones.
+        let mut splittable = Vec::with_capacity(frontier.len());
+        for f in frontier.drain(..) {
+            depth = depth.max(f.level);
+            if is_leaf_range(&codes, f.start, f.end, f.level) {
+                finalize_leaf(&mut nodes, &f);
+            } else {
+                splittable.push(f);
+            }
+        }
+        if splittable.is_empty() || splittable.len() >= target {
+            frontier = splittable;
+            break;
+        }
+        let mut next = Vec::with_capacity(splittable.len() * 4);
+        for f in splittable {
+            split_node(&mut nodes, &codes, &f, &mut next);
+        }
+        frontier = next;
+    }
+    let top_len = nodes.len();
+
+    // (5) Parallel subtree builds with dynamic scheduling. Each subtree is
+    // appended as one contiguous block (paper: "store all the nodes ... in a
+    // contiguous manner to aid data locality").
+    let mut local_results: Vec<Option<(Vec<Node<T>>, Node<T>, usize)>> =
+        (0..frontier.len()).map(|_| None).collect();
+    {
+        let res = SyncSlice::new(&mut local_results);
+        let codes = &codes;
+        let frontier = &frontier;
+        parallel_for(pool, frontier.len(), Schedule::Dynamic { grain: 1 }, |range| {
+            for fi in range {
+                let f = &frontier[fi];
+                let mut local: Vec<Node<T>> = Vec::new();
+                let mut local_depth = f.level;
+                let root = build_local(
+                    codes,
+                    f.start,
+                    f.end,
+                    f.level,
+                    f.center,
+                    f.width,
+                    &mut local,
+                    &mut local_depth,
+                );
+                // disjoint: slot fi
+                unsafe { *res.get_mut(fi) = Some((local, root, local_depth)) };
+            }
+        });
+    }
+    // Stitch: compute block offsets, remap local child indices to global.
+    let mut offsets = Vec::with_capacity(frontier.len());
+    let mut total = top_len;
+    for r in &local_results {
+        let (local, _, d) = r.as_ref().expect("subtree built");
+        offsets.push(total);
+        total += local.len();
+        depth = depth.max(*d);
+    }
+    nodes.resize(total, new_node::<T>(0, [0.0; 2], 1.0));
+    {
+        let ns = SyncSlice::new(&mut nodes);
+        let local_results = &local_results;
+        let offsets = &offsets;
+        let frontier = &frontier;
+        parallel_for(pool, frontier.len(), Schedule::Dynamic { grain: 1 }, |range| {
+            for fi in range {
+                let (local, root, _) = local_results[fi].as_ref().unwrap();
+                let base = offsets[fi] as i32;
+                let mut root = root.clone();
+                remap_children(&mut root, base);
+                // disjoint: frontier node slots are unique; block ranges disjoint
+                unsafe { *ns.get_mut(frontier[fi].node_idx as usize) = root };
+                for (li, node) in local.iter().enumerate() {
+                    let mut node = node.clone();
+                    remap_children(&mut node, base);
+                    unsafe { *ns.get_mut(offsets[fi] + li) = node };
+                }
+            }
+        });
+    }
+
+    QuadTree {
+        nodes,
+        point_pos,
+        point_idx: order,
+        subtree_roots: frontier.iter().map(|f| f.node_idx).collect(),
+        depth,
+    }
+}
+
+/// Single-thread morton build: same algorithm, zero pool dispatches.
+fn build_morton_small<T: Real>(pos: &[T]) -> QuadTree<T> {
+    let n = pos.len() / 2;
+    // bbox
+    let (mut lo, mut hi) = ([f64::INFINITY; 2], [f64::NEG_INFINITY; 2]);
+    for i in 0..n {
+        for d in 0..2 {
+            let v = pos[2 * i + d].to_f64();
+            lo[d] = lo[d].min(v);
+            hi[d] = hi[d].max(v);
+        }
+    }
+    let cent = [(lo[0] + hi[0]) * 0.5, (lo[1] + hi[1]) * 0.5];
+    let span = ((hi[0] - lo[0]).max(hi[1] - lo[1]) * 0.5).max(f64::MIN_POSITIVE);
+    let root_cell = RootCell {
+        cent,
+        r_span: span * (1.0 + 1e-9),
+    };
+    // encode + sort
+    let mut pairs: Vec<(u64, u32)> = (0..n)
+        .map(|i| {
+            (
+                root_cell.encode(pos[2 * i].to_f64(), pos[2 * i + 1].to_f64()),
+                i as u32,
+            )
+        })
+        .collect();
+    pairs.sort_unstable_by_key(|&(c, _)| c);
+    let codes: Vec<u64> = pairs.iter().map(|&(c, _)| c).collect();
+    let order: Vec<u32> = pairs.iter().map(|&(_, i)| i).collect();
+    let mut point_pos = vec![T::ZERO; 2 * n];
+    for (i, &src) in order.iter().enumerate() {
+        point_pos[2 * i] = pos[2 * src as usize];
+        point_pos[2 * i + 1] = pos[2 * src as usize + 1];
+    }
+    // recursive build into one buffer; root appended last, then moved to 0.
+    let root_width = 2.0 * root_cell.r_span;
+    let mut nodes: Vec<Node<T>> = Vec::with_capacity(2 * n);
+    let mut depth = 0usize;
+    let root = build_local(&codes, 0, n, 0, root_cell.cent, root_width, &mut nodes, &mut depth);
+    nodes.push(root);
+    let last = nodes.len() - 1;
+    nodes.swap(0, last);
+    // fix children of the swapped pair: root (now at 0) kept its child
+    // indices (all < last); the node moved to `last` must be re-pointed by
+    // its parent — find and patch (single scan, small n).
+    if last != 0 {
+        for node in nodes.iter_mut() {
+            for c in node.children.iter_mut() {
+                if *c == 0 {
+                    *c = last as i32;
+                } else if *c == last as i32 {
+                    *c = 0;
+                }
+            }
+        }
+    }
+    QuadTree {
+        nodes,
+        point_pos,
+        point_idx: order,
+        subtree_roots: Vec::new(),
+        depth,
+    }
+}
+
+fn new_node<T: Real>(count: u32, center: [f64; 2], width: f64) -> Node<T> {
+    Node {
+        children: [NO_CHILD; 4],
+        count,
+        point_start: 0,
+        point_end: 0,
+        center: [T::from_f64(center[0]), T::from_f64(center[1])],
+        width: T::from_f64(width),
+        com: [T::ZERO; 2],
+    }
+}
+
+#[inline]
+fn is_leaf_range(codes: &[u64], start: usize, end: usize, level: usize) -> bool {
+    end - start == 1 || level >= MAX_LEVEL || codes[start] == codes[end - 1]
+}
+
+fn finalize_leaf<T: Real>(nodes: &mut [Node<T>], f: &Frontier) {
+    let node = &mut nodes[f.node_idx as usize];
+    node.point_start = f.start as u32;
+    node.point_end = f.end as u32;
+}
+
+/// Quadrant boundaries of a sorted code range at `level`: binary search the
+/// first index whose digit is ≥ q (O(log range) per split — the "touch each
+/// point once" property).
+#[inline]
+fn quadrant_bounds(codes: &[u64], start: usize, end: usize, level: usize) -> [usize; 5] {
+    let mut b = [start, end, end, end, end];
+    let slice = &codes[start..end];
+    for q in 1..4u64 {
+        b[q as usize] = start + slice.partition_point(|&c| (quadrant_at(c, level) as u64) < q);
+    }
+    b[4] = end;
+    b
+}
+
+#[inline]
+fn child_geometry(center: [f64; 2], width: f64, q: usize) -> ([f64; 2], f64) {
+    let cw = width * 0.5;
+    let off = width * 0.25;
+    (
+        [
+            center[0] + if q & 1 == 1 { off } else { -off },
+            center[1] + if q & 2 == 2 { off } else { -off },
+        ],
+        cw,
+    )
+}
+
+/// Split a top-region node; children are appended to `nodes` (BFS order) and
+/// pushed on the next frontier.
+fn split_node<T: Real>(nodes: &mut Vec<Node<T>>, codes: &[u64], f: &Frontier, next: &mut Vec<Frontier>) {
+    let b = quadrant_bounds(codes, f.start, f.end, f.level);
+    for q in 0..4 {
+        let (s, e) = (b[q], b[q + 1]);
+        if s == e {
+            continue;
+        }
+        let (c_center, c_width) = child_geometry(f.center, f.width, q);
+        let idx = nodes.len() as u32;
+        nodes.push(new_node::<T>((e - s) as u32, c_center, c_width));
+        nodes[f.node_idx as usize].children[q] = idx as i32;
+        next.push(Frontier {
+            node_idx: idx,
+            start: s,
+            end: e,
+            level: f.level + 1,
+            center: c_center,
+            width: c_width,
+        });
+    }
+}
+
+/// Recursive subtree construction into a local buffer. Children are appended
+/// (post-order) before the parent is returned; indices are local and remapped
+/// to global by the caller.
+#[allow(clippy::too_many_arguments)]
+fn build_local<T: Real>(
+    codes: &[u64],
+    start: usize,
+    end: usize,
+    level: usize,
+    center: [f64; 2],
+    width: f64,
+    out: &mut Vec<Node<T>>,
+    depth: &mut usize,
+) -> Node<T> {
+    *depth = (*depth).max(level);
+    let mut node = new_node::<T>((end - start) as u32, center, width);
+    if is_leaf_range(codes, start, end, level) {
+        node.point_start = start as u32;
+        node.point_end = end as u32;
+        return node;
+    }
+    let b = quadrant_bounds(codes, start, end, level);
+    for q in 0..4 {
+        let (s, e) = (b[q], b[q + 1]);
+        if s == e {
+            continue;
+        }
+        let (c_center, c_width) = child_geometry(center, width, q);
+        let child = build_local(codes, s, e, level + 1, c_center, c_width, out, depth);
+        out.push(child);
+        node.children[q] = (out.len() - 1) as i32;
+    }
+    node
+}
+
+fn remap_children<T: Real>(node: &mut Node<T>, base: i32) {
+    for c in node.children.iter_mut() {
+        if *c != NO_CHILD {
+            *c += base;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::rng::Rng;
+    use crate::quadtree::tree_stats;
+
+    fn random_pos(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..2 * n).map(|_| rng.next_gaussian() * 3.0).collect()
+    }
+
+    #[test]
+    fn valid_on_random_points() {
+        for n in [1, 2, 5, 100, 2000] {
+            let pos = random_pos(n, n as u64);
+            let pool = ThreadPool::new(4);
+            let tree = build_morton(&pool, &pos);
+            tree.validate().unwrap_or_else(|e| panic!("n={n}: {e}"));
+            assert_eq!(tree.n_points(), n);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let pos = random_pos(3000, 7);
+        let t1 = build_morton(&ThreadPool::new(1), &pos);
+        let t8 = build_morton(&ThreadPool::new(8), &pos);
+        // Same point layout (Z-order is thread-count independent)...
+        assert_eq!(t1.point_idx, t8.point_idx);
+        // ...same structure counts and depth even though node order differs
+        // (t1 builds one subtree; t8 stitches many blocks).
+        let (s1, s8) = (tree_stats(&t1), tree_stats(&t8));
+        assert_eq!(s1.leaves, s8.leaves);
+        assert_eq!(s1.depth, s8.depth);
+        assert_eq!(s1.max_leaf_points, s8.max_leaf_points);
+    }
+
+    #[test]
+    fn duplicates_become_multipoint_leaf() {
+        let mut pos = random_pos(64, 9);
+        // 8 copies of the same point
+        for i in 0..8 {
+            pos[2 * i] = 0.123;
+            pos[2 * i + 1] = -0.456;
+        }
+        let pool = ThreadPool::new(4);
+        let tree = build_morton(&pool, &pos);
+        tree.validate().unwrap();
+        let st = tree_stats(&tree);
+        assert!(st.max_leaf_points >= 8, "stats {st:?}");
+    }
+
+    #[test]
+    fn all_identical_points() {
+        let pos = vec![1.0f64; 2 * 50]; // 50 copies of (1,1)
+        let pool = ThreadPool::new(4);
+        let tree = build_morton(&pool, &pos);
+        tree.validate().unwrap();
+        assert_eq!(tree.root().count, 50);
+    }
+
+    #[test]
+    fn two_points() {
+        let pos = vec![-1.0f64, -1.0, 1.0, 1.0];
+        let pool = ThreadPool::new(2);
+        let tree = build_morton(&pool, &pos);
+        tree.validate().unwrap();
+        let st = tree_stats(&tree);
+        assert_eq!(st.leaves, 2);
+    }
+
+    #[test]
+    fn z_order_layout_is_sorted_codes() {
+        let pos = random_pos(500, 11);
+        let pool = ThreadPool::new(4);
+        let tree = build_morton(&pool, &pos);
+        let root = RootCell::bounding(&pool, &pos);
+        let mut prev = 0u64;
+        for i in 0..tree.n_points() {
+            let c = root.encode(tree.point_pos[2 * i].to_f64(), tree.point_pos[2 * i + 1].to_f64());
+            assert!(c >= prev, "gathered points must be in Z-order");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn clustered_points_make_deep_unbalanced_tree() {
+        let mut rng = Rng::new(13);
+        let mut pos = Vec::with_capacity(2 * 1000);
+        for _ in 0..900 {
+            // dense cluster
+            pos.push(0.001 * rng.next_gaussian());
+            pos.push(0.001 * rng.next_gaussian());
+        }
+        for _ in 0..100 {
+            pos.push(rng.next_gaussian() * 100.0);
+            pos.push(rng.next_gaussian() * 100.0);
+        }
+        let pool = ThreadPool::new(4);
+        let tree = build_morton(&pool, &pos);
+        tree.validate().unwrap();
+        assert!(tree.depth > 8, "depth {}", tree.depth);
+    }
+}

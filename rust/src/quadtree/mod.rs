@@ -1,0 +1,232 @@
+//! Quadtree construction (pipeline step 3) and summarization (step 4).
+//!
+//! Two builders produce the same [`QuadTree`] structure over the same
+//! power-of-2 subdivision of the bounding square, differing exactly the way
+//! daal4py and Acc-t-SNE differ in the paper:
+//!
+//! - [`builder_baseline`] — daal4py-style: level-by-level BFS; every split
+//!   re-partitions the points of the cell, so each point is touched once per
+//!   level of its leaf depth; sequential.
+//! - [`builder_morton`] — Acc-t-SNE: morton-encode (Alg. 1), parallel radix
+//!   sort, then each point is touched once; top levels built sequentially
+//!   until there are ≥ 8×threads nodes, whole subtrees then built in parallel
+//!   with dynamic scheduling, each stored contiguously; point coordinates are
+//!   gathered into Z-order so leaf ranges are contiguous memory.
+//!
+//! [`summarize`] computes centers-of-mass bottom-up, sequential (daal4py) or
+//! parallel (Acc-t-SNE) — step 4 of the pipeline.
+
+pub mod builder_baseline;
+pub mod builder_morton;
+pub mod morton;
+pub mod summarize;
+
+use crate::common::float::Real;
+
+/// Sentinel for "no child".
+pub const NO_CHILD: i32 = -1;
+
+/// A quadtree node. `children` indexes into `QuadTree::nodes`; a leaf has all
+/// children == [`NO_CHILD`] and owns the gathered point range
+/// `point_start..point_end` (more than one point only when the depth cap hit,
+/// i.e. (near-)duplicate coordinates).
+#[derive(Clone, Debug)]
+pub struct Node<T: Real> {
+    pub children: [i32; 4],
+    /// Points in this subtree.
+    pub count: u32,
+    pub point_start: u32,
+    pub point_end: u32,
+    /// Geometric center of the square cell.
+    pub center: [T; 2],
+    /// Full side length of the cell (the paper's `r_cell` in Eq. 9).
+    pub width: T,
+    /// Center of mass — filled by [`summarize`].
+    pub com: [T; 2],
+}
+
+impl<T: Real> Node<T> {
+    #[inline(always)]
+    pub fn is_leaf(&self) -> bool {
+        self.children == [NO_CHILD; 4]
+    }
+}
+
+/// A built quadtree. `point_pos`/`point_idx` hold the points in the builder's
+/// layout order (Z-order for the morton builder, BFS-discovery order for the
+/// baseline); leaves reference ranges of these arrays.
+#[derive(Clone, Debug)]
+pub struct QuadTree<T: Real> {
+    pub nodes: Vec<Node<T>>,
+    /// Interleaved x,y of the points in layout order.
+    pub point_pos: Vec<T>,
+    /// Original index of each laid-out point.
+    pub point_idx: Vec<u32>,
+    /// Roots of the parallel-built subtrees (morton builder; empty for
+    /// baseline). Disjoint; their subtrees cover everything below the
+    /// sequential top region.
+    pub subtree_roots: Vec<u32>,
+    /// Maximum node depth actually reached.
+    pub depth: usize,
+}
+
+impl<T: Real> QuadTree<T> {
+    #[inline]
+    pub fn n_points(&self) -> usize {
+        self.point_idx.len()
+    }
+
+    #[inline]
+    pub fn root(&self) -> &Node<T> {
+        &self.nodes[0]
+    }
+
+    /// Structural invariants — used heavily by tests/proptests:
+    /// child counts sum to parent count, leaf point ranges partition the
+    /// point array, every original index appears once, cell geometry nests.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.n_points();
+        if self.nodes.is_empty() {
+            return Err("no nodes".into());
+        }
+        if self.root().count as usize != n {
+            return Err(format!("root count {} != n {}", self.root().count, n));
+        }
+        let mut seen = vec![false; n];
+        let mut covered = 0usize;
+        for (ni, node) in self.nodes.iter().enumerate() {
+            if node.is_leaf() {
+                let (s, e) = (node.point_start as usize, node.point_end as usize);
+                if e <= s || e > n {
+                    return Err(format!("leaf {ni} bad range {s}..{e}"));
+                }
+                if (e - s) as u32 != node.count {
+                    return Err(format!("leaf {ni} count {} != range {}", node.count, e - s));
+                }
+                covered += e - s;
+                for p in s..e {
+                    let orig = self.point_idx[p] as usize;
+                    if orig >= n || seen[orig] {
+                        return Err(format!("point {orig} duplicated or out of range"));
+                    }
+                    seen[orig] = true;
+                    // point inside cell (with fp slack)
+                    let half = node.width.to_f64() * 0.5 * (1.0 + 1e-6) + 1e-9;
+                    for d in 0..2 {
+                        let v = self.point_pos[2 * p + d].to_f64();
+                        let c = node.center[d].to_f64();
+                        if (v - c).abs() > half {
+                            return Err(format!(
+                                "leaf {ni}: point {p} dim {d} outside cell ({v} vs {c}±{half})"
+                            ));
+                        }
+                    }
+                }
+            } else {
+                let mut child_count = 0u32;
+                for (q, &c) in node.children.iter().enumerate() {
+                    if c == NO_CHILD {
+                        continue;
+                    }
+                    let child = &self.nodes[c as usize];
+                    child_count += child.count;
+                    let w_ratio = node.width.to_f64() / child.width.to_f64();
+                    if (w_ratio - 2.0).abs() > 1e-6 {
+                        return Err(format!("node {ni} child {q}: width ratio {w_ratio}"));
+                    }
+                    // child center in the right quadrant
+                    let dx = child.center[0].to_f64() - node.center[0].to_f64();
+                    let dy = child.center[1].to_f64() - node.center[1].to_f64();
+                    let want_dx = if q & 1 == 1 { 1.0 } else { -1.0 };
+                    let want_dy = if q & 2 == 2 { 1.0 } else { -1.0 };
+                    if dx.signum() != want_dx || dy.signum() != want_dy {
+                        return Err(format!("node {ni} child {q} in wrong quadrant"));
+                    }
+                }
+                if child_count != node.count {
+                    return Err(format!(
+                        "node {ni}: children sum {child_count} != count {}",
+                        node.count
+                    ));
+                }
+            }
+        }
+        if covered != n {
+            return Err(format!("leaves cover {covered} of {n} points"));
+        }
+        Ok(())
+    }
+
+    /// Worst per-node COM error vs a direct recompute from children
+    /// (post-summarize consistency check).
+    pub fn com_residual(&self) -> f64 {
+        let mut worst: f64 = 0.0;
+        for node in &self.nodes {
+            if node.is_leaf() {
+                continue;
+            }
+            let mut acc = [0.0f64; 2];
+            let mut cnt = 0.0f64;
+            for &c in &node.children {
+                if c == NO_CHILD {
+                    continue;
+                }
+                let ch = &self.nodes[c as usize];
+                for d in 0..2 {
+                    acc[d] += ch.com[d].to_f64() * ch.count as f64;
+                }
+                cnt += ch.count as f64;
+            }
+            for d in 0..2 {
+                let want = acc[d] / cnt;
+                worst = worst.max((node.com[d].to_f64() - want).abs());
+            }
+        }
+        worst
+    }
+}
+
+/// Statistics used by benches/EXPERIMENTS to characterize trees.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TreeStats {
+    pub nodes: usize,
+    pub leaves: usize,
+    pub depth: usize,
+    pub max_leaf_points: usize,
+}
+
+pub fn tree_stats<T: Real>(tree: &QuadTree<T>) -> TreeStats {
+    let mut s = TreeStats {
+        nodes: tree.nodes.len(),
+        depth: tree.depth,
+        ..Default::default()
+    };
+    for n in &tree.nodes {
+        if n.is_leaf() {
+            s.leaves += 1;
+            s.max_leaf_points = s.max_leaf_points.max((n.point_end - n.point_start) as usize);
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::builder_morton::build_morton;
+    use super::*;
+    use crate::common::rng::Rng;
+    use crate::parallel::ThreadPool;
+
+    #[test]
+    fn stats_and_validate_on_small_tree() {
+        let mut rng = Rng::new(1);
+        let pos: Vec<f64> = (0..2 * 500).map(|_| rng.next_gaussian()).collect();
+        let pool = ThreadPool::new(4);
+        let tree = build_morton(&pool, &pos);
+        tree.validate().unwrap();
+        let st = tree_stats(&tree);
+        assert!(st.leaves >= 500 / 4);
+        assert!(st.depth >= 2);
+        assert_eq!(tree.n_points(), 500);
+    }
+}

@@ -1,0 +1,338 @@
+//! Morton (Z-order) codes — paper §3.3, Algorithm 1.
+//!
+//! A 2-D point is mapped to a 64-bit code by scaling each coordinate to a
+//! 32-bit integer grid over the root cell and bit-interleaving the two
+//! dimensions (dim 0 on even bits, dim 1 on odd bits). Sorted codes give the
+//! Z-order: points close in 2-D are close in the sorted order, a quadtree cell
+//! is a contiguous code range, and the level-ℓ quadrant digit is the ℓ-th
+//! 2-bit group from the top.
+//!
+//! Three implementations, all bit-identical:
+//! - [`interleave_bits`] / [`morton2`] — scalar magic-mask cascade (Alg. 1 lines 8–21);
+//! - [`encode_points`] — parallel scalar loop (compiler auto-vectorizes, as the paper notes);
+//! - [`encode_points_simd`] — explicit `std::simd` u64×8 lanes.
+
+use crate::common::float::Real;
+use crate::parallel::{parallel_for, Schedule, SyncSlice, ThreadPool};
+use std::simd::cmp::SimdOrd;
+use std::simd::num::SimdFloat;
+use std::simd::{f64x8, u64x8};
+
+/// Levels resolvable by a 64-bit code with 32 bits per dimension.
+pub const MAX_LEVEL: usize = 32;
+
+/// Spread the low 32 bits of `v` onto the even bit positions (Alg. 1 lines 9–18).
+#[inline(always)]
+pub fn interleave_bits(v: u64) -> u64 {
+    let mut m = v & 0x0000_0000_FFFF_FFFF;
+    m = (m | (m << 16)) & 0x0000_FFFF_0000_FFFF;
+    m = (m | (m << 8)) & 0x00FF_00FF_00FF_00FF;
+    m = (m | (m << 4)) & 0x0F0F_0F0F_0F0F_0F0F;
+    m = (m | (m << 2)) & 0x3333_3333_3333_3333;
+    m = (m | (m << 1)) & 0x5555_5555_5555_5555;
+    m
+}
+
+/// Inverse of [`interleave_bits`] (collect even bits back into the low 32).
+#[inline(always)]
+pub fn deinterleave_bits(v: u64) -> u64 {
+    let mut m = v & 0x5555_5555_5555_5555;
+    m = (m | (m >> 1)) & 0x3333_3333_3333_3333;
+    m = (m | (m >> 2)) & 0x0F0F_0F0F_0F0F_0F0F;
+    m = (m | (m >> 4)) & 0x00FF_00FF_00FF_00FF;
+    m = (m | (m >> 8)) & 0x0000_FFFF_0000_FFFF;
+    m = (m | (m >> 16)) & 0x0000_0000_FFFF_FFFF;
+    m
+}
+
+/// Morton code of integer grid coordinates (x on even bits, y on odd).
+#[inline(always)]
+pub fn morton2(x: u64, y: u64) -> u64 {
+    interleave_bits(x) | (interleave_bits(y) << 1)
+}
+
+/// Grid geometry of the root cell: the square centred at `cent` with
+/// half-extent `r_span` (the "maximum span radius" of Alg. 1).
+#[derive(Clone, Copy, Debug)]
+pub struct RootCell {
+    pub cent: [f64; 2],
+    pub r_span: f64,
+}
+
+impl RootCell {
+    /// Bounding square of a point set (paper: boundaries from min/max of Y).
+    /// Expands the span slightly so the max point stays inside the open cell.
+    pub fn bounding<T: Real>(pool: &ThreadPool, pos: &[T]) -> RootCell {
+        let n = pos.len() / 2;
+        assert!(n > 0, "empty point set");
+        let nt = pool.n_threads();
+        let mut mins = vec![[f64::INFINITY; 2]; nt];
+        let mut maxs = vec![[f64::NEG_INFINITY; 2]; nt];
+        {
+            let ms = SyncSlice::new(&mut mins);
+            let xs = SyncSlice::new(&mut maxs);
+            pool.broadcast(|tid| {
+                let (s, e) = crate::parallel::par_for::static_chunk(n, nt, tid);
+                let mut lo = [f64::INFINITY; 2];
+                let mut hi = [f64::NEG_INFINITY; 2];
+                for i in s..e {
+                    for d in 0..2 {
+                        let v = pos[2 * i + d].to_f64();
+                        lo[d] = lo[d].min(v);
+                        hi[d] = hi[d].max(v);
+                    }
+                }
+                // disjoint: slot tid
+                unsafe {
+                    *ms.get_mut(tid) = lo;
+                    *xs.get_mut(tid) = hi;
+                }
+            });
+        }
+        let mut lo = [f64::INFINITY; 2];
+        let mut hi = [f64::NEG_INFINITY; 2];
+        for t in 0..nt {
+            for d in 0..2 {
+                lo[d] = lo[d].min(mins[t][d]);
+                hi[d] = hi[d].max(maxs[t][d]);
+            }
+        }
+        let cent = [(lo[0] + hi[0]) * 0.5, (lo[1] + hi[1]) * 0.5];
+        let span = ((hi[0] - lo[0]).max(hi[1] - lo[1]) * 0.5).max(f64::MIN_POSITIVE);
+        RootCell {
+            cent,
+            r_span: span * (1.0 + 1e-9),
+        }
+    }
+
+    /// Scale factor of Alg. 1 line 5 (we use 32 significant bits per dim:
+    /// grid coordinate = (y − y_root) · 2³¹ / r_span ∈ [0, 2³²)).
+    #[inline]
+    pub fn scale(&self) -> f64 {
+        (1u64 << 31) as f64 / self.r_span
+    }
+
+    /// Morton code of a single point (scalar reference path).
+    #[inline]
+    pub fn encode(&self, x: f64, y: f64) -> u64 {
+        let scale = self.scale();
+        let gx = clamp_grid((x - (self.cent[0] - self.r_span)) * scale);
+        let gy = clamp_grid((y - (self.cent[1] - self.r_span)) * scale);
+        morton2(gx, gy)
+    }
+}
+
+const GRID_MAX: u64 = u32::MAX as u64;
+
+#[inline(always)]
+fn clamp_grid(v: f64) -> u64 {
+    if v <= 0.0 {
+        0
+    } else if v >= GRID_MAX as f64 {
+        GRID_MAX
+    } else {
+        v as u64
+    }
+}
+
+/// Parallel scalar encoding of all points (`pos` is interleaved x0,y0,x1,y1,…).
+pub fn encode_points<T: Real>(pool: &ThreadPool, pos: &[T], root: &RootCell, out: &mut [u64]) {
+    let n = pos.len() / 2;
+    assert_eq!(out.len(), n);
+    let os = SyncSlice::new(out);
+    parallel_for(pool, n, Schedule::Static, |range| {
+        for i in range {
+            let code = root.encode(pos[2 * i].to_f64(), pos[2 * i + 1].to_f64());
+            // disjoint: slot i
+            unsafe { *os.get_mut(i) = code };
+        }
+    });
+}
+
+/// Explicit-SIMD encoding: 8 points per iteration with `u64x8` lanes
+/// (the paper's "SIMD parallelism … and explicit multithreading").
+pub fn encode_points_simd<T: Real>(pool: &ThreadPool, pos: &[T], root: &RootCell, out: &mut [u64]) {
+    let n = pos.len() / 2;
+    assert_eq!(out.len(), n);
+    let scale = f64x8::splat(root.scale());
+    let x0 = f64x8::splat(root.cent[0] - root.r_span);
+    let y0 = f64x8::splat(root.cent[1] - root.r_span);
+    let zero = f64x8::splat(0.0);
+    let gmax = u64x8::splat(GRID_MAX);
+    let os = SyncSlice::new(out);
+    parallel_for(pool, n / 8, Schedule::Static, |range| {
+        let mut xs = [0.0f64; 8];
+        let mut ys = [0.0f64; 8];
+        for blk in range {
+            let base = blk * 8;
+            for l in 0..8 {
+                xs[l] = pos[2 * (base + l)].to_f64();
+                ys[l] = pos[2 * (base + l) + 1].to_f64();
+            }
+            let gx = ((f64x8::from_array(xs) - x0) * scale)
+                .simd_max(zero)
+                .cast::<u64>()
+                .simd_min(gmax);
+            let gy = ((f64x8::from_array(ys) - y0) * scale)
+                .simd_max(zero)
+                .cast::<u64>()
+                .simd_min(gmax);
+            let code = interleave_simd(gx) | (interleave_simd(gy) << u64x8::splat(1));
+            for l in 0..8 {
+                // disjoint: slots base..base+8 owned by this block
+                unsafe { *os.get_mut(base + l) = code[l] };
+            }
+        }
+    });
+    // Scalar tail.
+    for i in (n / 8) * 8..n {
+        out[i] = root.encode(pos[2 * i].to_f64(), pos[2 * i + 1].to_f64());
+    }
+}
+
+#[inline(always)]
+fn interleave_simd(v: u64x8) -> u64x8 {
+    let mut m = v & u64x8::splat(0x0000_0000_FFFF_FFFF);
+    m = (m | (m << u64x8::splat(16))) & u64x8::splat(0x0000_FFFF_0000_FFFF);
+    m = (m | (m << u64x8::splat(8))) & u64x8::splat(0x00FF_00FF_00FF_00FF);
+    m = (m | (m << u64x8::splat(4))) & u64x8::splat(0x0F0F_0F0F_0F0F_0F0F);
+    m = (m | (m << u64x8::splat(2))) & u64x8::splat(0x3333_3333_3333_3333);
+    m = (m | (m << u64x8::splat(1))) & u64x8::splat(0x5555_5555_5555_5555);
+    m
+}
+
+/// Quadrant digit (0..4) of `code` at tree `level` (level 0 = root split).
+/// Bit 0 of the digit is dim 0 (x), bit 1 is dim 1 (y).
+#[inline(always)]
+pub fn quadrant_at(code: u64, level: usize) -> usize {
+    debug_assert!(level < MAX_LEVEL);
+    ((code >> (2 * (MAX_LEVEL - 1 - level))) & 3) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::rng::Rng;
+
+    #[test]
+    fn paper_example_dim_values() {
+        // Paper: dim0 = 3 (011b), dim1 = 7 (111b) → morton 101111b = 47.
+        assert_eq!(morton2(3, 7), 47);
+    }
+
+    #[test]
+    fn interleave_roundtrip() {
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let v = rng.next_u64() & 0xFFFF_FFFF;
+            assert_eq!(deinterleave_bits(interleave_bits(v)), v);
+        }
+    }
+
+    #[test]
+    fn interleave_only_even_bits() {
+        for v in [0u64, 1, 0xFFFF_FFFF, 0xDEAD_BEEF] {
+            assert_eq!(interleave_bits(v) & 0xAAAA_AAAA_AAAA_AAAA, 0);
+        }
+    }
+
+    #[test]
+    fn z_order_preserves_locality() {
+        // Points in the same quadrant share the top digit.
+        let root = RootCell {
+            cent: [0.0, 0.0],
+            r_span: 1.0,
+        };
+        let q_of = |x: f64, y: f64| quadrant_at(root.encode(x, y), 0);
+        assert_eq!(q_of(-0.5, -0.5), 0); // (low x, low y)
+        assert_eq!(q_of(0.5, -0.5), 1); // (high x, low y)
+        assert_eq!(q_of(-0.5, 0.5), 2);
+        assert_eq!(q_of(0.5, 0.5), 3);
+    }
+
+    #[test]
+    fn codes_monotone_along_diagonal() {
+        let root = RootCell {
+            cent: [0.0, 0.0],
+            r_span: 1.0,
+        };
+        let mut prev = 0u64;
+        for i in 0..100 {
+            let t = -0.99 + 1.98 * i as f64 / 99.0;
+            let c = root.encode(t, t);
+            assert!(c >= prev, "diagonal must be non-decreasing in z-order");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn clamping_handles_out_of_cell_points() {
+        let root = RootCell {
+            cent: [0.0, 0.0],
+            r_span: 1.0,
+        };
+        let lo = root.encode(-100.0, -100.0);
+        let hi = root.encode(100.0, 100.0);
+        assert_eq!(lo, 0);
+        assert_eq!(hi, morton2(GRID_MAX, GRID_MAX));
+    }
+
+    #[test]
+    fn simd_matches_scalar() {
+        let mut rng = Rng::new(42);
+        let n = 1003; // non-multiple of 8 → exercises tail
+        let pos: Vec<f64> = (0..2 * n).map(|_| rng.next_gaussian() * 5.0).collect();
+        let pool = ThreadPool::new(4);
+        let root = RootCell::bounding(&pool, &pos);
+        let mut scalar = vec![0u64; n];
+        let mut simd = vec![0u64; n];
+        encode_points(&pool, &pos, &root, &mut scalar);
+        encode_points_simd(&pool, &pos, &root, &mut simd);
+        assert_eq!(scalar, simd);
+    }
+
+    #[test]
+    fn bounding_cell_contains_all_points() {
+        let mut rng = Rng::new(7);
+        let pos: Vec<f64> = (0..400).map(|_| rng.next_gaussian() * 3.0 + 1.0).collect();
+        let pool = ThreadPool::new(2);
+        let root = RootCell::bounding(&pool, &pos);
+        for i in 0..200 {
+            for d in 0..2 {
+                let v = pos[2 * i + d];
+                assert!(v >= root.cent[d] - root.r_span && v <= root.cent[d] + root.r_span);
+            }
+        }
+    }
+
+    #[test]
+    fn bounding_single_point_degenerate() {
+        let pool = ThreadPool::new(1);
+        let root = RootCell::bounding(&pool, &[1.0f64, 2.0]);
+        assert!(root.r_span > 0.0);
+        let _ = root.encode(1.0, 2.0); // must not panic
+    }
+
+    #[test]
+    fn quadrant_at_all_levels() {
+        // code with alternating quadrants 0,1,2,3,0,1,...
+        let mut code = 0u64;
+        for l in 0..MAX_LEVEL {
+            code |= ((l % 4) as u64) << (2 * (MAX_LEVEL - 1 - l));
+        }
+        for l in 0..MAX_LEVEL {
+            assert_eq!(quadrant_at(code, l), l % 4);
+        }
+    }
+
+    #[test]
+    fn f32_encoding_consistent() {
+        let pool = ThreadPool::new(2);
+        let pos32: Vec<f32> = vec![0.25, 0.75, -0.5, -0.25, 0.0, 0.0];
+        let root = RootCell::bounding(&pool, &pos32);
+        let mut out = vec![0u64; 3];
+        encode_points(&pool, &pos32, &root, &mut out);
+        // sanity: distinct points → distinct codes
+        assert_ne!(out[0], out[1]);
+    }
+}

@@ -1,0 +1,267 @@
+//! Summarization (pipeline step 4, paper §3.4): center-of-mass of every cell,
+//! bottom-up — a parent's COM needs only its children's COMs and counts.
+//!
+//! - [`summarize_sequential`] — daal4py's single-threaded pass (the paper's
+//!   Fig 6a shows it not scaling at all).
+//! - [`summarize_parallel`] — Acc-t-SNE: the morton tree's parallel-built
+//!   subtrees are summarized concurrently with dynamic scheduling (post-order
+//!   within each block, which is contiguous memory), then the small
+//!   sequential top region is folded in reverse BFS order. This is the
+//!   locality-aware equivalent of the paper's level-by-level parallel sweep:
+//!   both process all independent nodes concurrently bottom-up; ours walks
+//!   each contiguous subtree block on one thread instead of striding levels
+//!   across blocks. Falls back to the sequential pass when the tree has no
+//!   parallel blocks (baseline trees).
+
+use super::{Node, QuadTree, NO_CHILD};
+use crate::common::float::Real;
+use crate::parallel::{parallel_for, SyncSlice, Schedule, ThreadPool};
+
+/// Sequential bottom-up summarization (explicit-stack post-order).
+pub fn summarize_sequential<T: Real>(tree: &mut QuadTree<T>) {
+    let point_pos = std::mem::take(&mut tree.point_pos);
+    post_order_summarize(&mut tree.nodes, &point_pos, 0);
+    tree.point_pos = point_pos;
+}
+
+/// Parallel summarization: disjoint subtrees are summarized concurrently
+/// (dynamic scheduling — subtree sizes vary wildly on clustered data, paper
+/// §3.3), then the small top region is folded sequentially, skipping the
+/// already-done subtree roots. Works on any tree layout: uses the morton
+/// builder's recorded `subtree_roots` when present, otherwise derives a
+/// frontier by BFS from the root.
+pub fn summarize_parallel<T: Real>(pool: &ThreadPool, tree: &mut QuadTree<T>) {
+    if pool.n_threads() == 1 || tree.nodes.len() < 512 {
+        summarize_sequential(tree);
+        return;
+    }
+    let roots: Vec<u32> = if tree.subtree_roots.is_empty() {
+        bfs_frontier(&tree.nodes, 4 * pool.n_threads())
+    } else {
+        tree.subtree_roots.clone()
+    };
+    if roots.len() < 2 {
+        summarize_sequential(tree);
+        return;
+    }
+    let point_pos = std::mem::take(&mut tree.point_pos);
+    {
+        let nodes = SyncSlice::new(&mut tree.nodes);
+        let point_pos = &point_pos;
+        let roots = &roots;
+        parallel_for(pool, roots.len(), Schedule::Dynamic { grain: 1 }, |range| {
+            for si in range {
+                // disjoint: the frontier subtrees cover disjoint node sets;
+                // the top region is only touched after this barrier.
+                let nodes_mut = unsafe { nodes.slice_mut(0, nodes.len()) };
+                post_order_summarize_with_stops(nodes_mut, point_pos, roots[si] as usize, None);
+            }
+        });
+    }
+    // Top region: one more post-order from the root that treats the computed
+    // subtree roots as leaves (layout-agnostic — no index-order assumption).
+    let mut done = vec![false; tree.nodes.len()];
+    for &r in &roots {
+        done[r as usize] = true;
+    }
+    post_order_summarize_with_stops(&mut tree.nodes, &point_pos, 0, Some(&done));
+    tree.point_pos = point_pos;
+}
+
+/// BFS from the root until the frontier holds ≥ `target` nodes (or nothing
+/// expands). Returned nodes are roots of disjoint subtrees covering all
+/// descendants below the visited top region.
+fn bfs_frontier<T: Real>(nodes: &[Node<T>], target: usize) -> Vec<u32> {
+    let mut frontier: Vec<u32> = vec![0];
+    while frontier.len() < target {
+        let mut next = Vec::with_capacity(frontier.len() * 4);
+        let mut expanded = false;
+        for &f in &frontier {
+            let node = &nodes[f as usize];
+            if node.is_leaf() {
+                next.push(f);
+            } else {
+                expanded = true;
+                for &c in &node.children {
+                    if c != NO_CHILD {
+                        next.push(c as u32);
+                    }
+                }
+            }
+        }
+        if !expanded {
+            break;
+        }
+        frontier = next;
+    }
+    frontier
+}
+
+#[inline]
+fn leaf_com<T: Real>(node: &Node<T>, point_pos: &[T]) -> [T; 2] {
+    let (s, e) = (node.point_start as usize, node.point_end as usize);
+    let mut acc = [T::ZERO; 2];
+    for p in s..e {
+        acc[0] += point_pos[2 * p];
+        acc[1] += point_pos[2 * p + 1];
+    }
+    let inv = T::ONE / T::from_usize(e - s);
+    [acc[0] * inv, acc[1] * inv]
+}
+
+#[inline]
+fn children_com<T: Real>(nodes: &[Node<T>], node: &Node<T>) -> [T; 2] {
+    let mut acc = [T::ZERO; 2];
+    let mut cnt = T::ZERO;
+    for &c in &node.children {
+        if c == NO_CHILD {
+            continue;
+        }
+        let ch = &nodes[c as usize];
+        let m = T::from_usize(ch.count as usize);
+        acc[0] += ch.com[0] * m;
+        acc[1] += ch.com[1] * m;
+        cnt += m;
+    }
+    let inv = T::ONE / cnt;
+    [acc[0] * inv, acc[1] * inv]
+}
+
+/// Iterative post-order COM computation of the subtree rooted at `root`.
+fn post_order_summarize<T: Real>(nodes: &mut [Node<T>], point_pos: &[T], root: usize) {
+    post_order_summarize_with_stops(nodes, point_pos, root, None);
+}
+
+/// As [`post_order_summarize`], but nodes marked in `stops` are treated as
+/// already summarized (their `com` is read, not recomputed) — used to fold
+/// the top region above the parallel frontier.
+fn post_order_summarize_with_stops<T: Real>(
+    nodes: &mut [Node<T>],
+    point_pos: &[T],
+    root: usize,
+    stops: Option<&[bool]>,
+) {
+    // state: (node, next child slot to visit)
+    let mut stack: Vec<(usize, usize)> = vec![(root, 0)];
+    while let Some(&mut (ni, ref mut slot)) = stack.last_mut() {
+        if *slot == 0 && stops.map(|s| s[ni]).unwrap_or(false) {
+            stack.pop(); // already summarized by the parallel phase
+            continue;
+        }
+        if nodes[ni].is_leaf() {
+            nodes[ni].com = leaf_com(&nodes[ni], point_pos);
+            stack.pop();
+            continue;
+        }
+        // find next existing child
+        let mut advanced = false;
+        while *slot < 4 {
+            let c = nodes[ni].children[*slot];
+            *slot += 1;
+            if c != NO_CHILD {
+                stack.push((c as usize, 0));
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            nodes[ni].com = children_com(nodes, &nodes[ni].clone());
+            stack.pop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::builder_baseline::build_baseline;
+    use super::super::builder_morton::build_morton;
+    use super::*;
+    use crate::common::rng::Rng;
+
+    fn random_pos(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..2 * n).map(|_| rng.next_gaussian() * 2.0).collect()
+    }
+
+    fn global_mean(pos: &[f64]) -> [f64; 2] {
+        let n = pos.len() / 2;
+        let mut m = [0.0; 2];
+        for i in 0..n {
+            m[0] += pos[2 * i];
+            m[1] += pos[2 * i + 1];
+        }
+        [m[0] / n as f64, m[1] / n as f64]
+    }
+
+    #[test]
+    fn sequential_root_com_is_global_mean() {
+        let pos = random_pos(800, 1);
+        let pool = ThreadPool::new(2);
+        let mut tree = build_morton(&pool, &pos);
+        summarize_sequential(&mut tree);
+        let want = global_mean(&pos);
+        for d in 0..2 {
+            assert!((tree.root().com[d] - want[d]).abs() < 1e-9);
+        }
+        assert!(tree.com_residual() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let pos = random_pos(3000, 2);
+        let pool = ThreadPool::new(6);
+        let mut t_seq = build_morton(&pool, &pos);
+        let mut t_par = t_seq.clone();
+        summarize_sequential(&mut t_seq);
+        summarize_parallel(&pool, &mut t_par);
+        for (a, b) in t_seq.nodes.iter().zip(t_par.nodes.iter()) {
+            for d in 0..2 {
+                assert!((a.com[d] - b.com[d]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_on_baseline_tree_falls_back() {
+        let pos = random_pos(500, 3);
+        let pool = ThreadPool::new(4);
+        let mut tree = build_baseline(&pool, &pos);
+        summarize_parallel(&pool, &mut tree);
+        let want = global_mean(&pos);
+        for d in 0..2 {
+            assert!((tree.root().com[d] - want[d]).abs() < 1e-9);
+        }
+        assert!(tree.com_residual() < 1e-12);
+    }
+
+    #[test]
+    fn leaf_com_is_point_mean() {
+        let pos = vec![1.0f64, 2.0, 1.0, 2.0, 4.0, 6.0]; // two dupes + one
+        let pool = ThreadPool::new(1);
+        let mut tree = build_morton(&pool, &pos);
+        summarize_sequential(&mut tree);
+        // root com = mean of all three
+        assert!((tree.root().com[0] - 2.0).abs() < 1e-12);
+        assert!((tree.root().com[1] - (10.0 / 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clustered_subtrees_parallel_correct() {
+        let mut rng = Rng::new(4);
+        let mut pos = Vec::new();
+        for c in 0..5 {
+            for _ in 0..400 {
+                pos.push(c as f64 * 10.0 + 0.01 * rng.next_gaussian());
+                pos.push(c as f64 * -7.0 + 0.01 * rng.next_gaussian());
+            }
+        }
+        let pool = ThreadPool::new(8);
+        let mut tree = build_morton(&pool, &pos);
+        summarize_parallel(&pool, &mut tree);
+        assert!(tree.com_residual() < 1e-12);
+        let want = global_mean(&pos);
+        for d in 0..2 {
+            assert!((tree.root().com[d] - want[d]).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,256 @@
+//! XLA-offloaded engines: the L1/L2 artifacts behind the same traits the
+//! native Rust engines implement — the proof that all three layers compose.
+//!
+//! Shapes here are frozen at AOT time (see python/compile/aot.py and
+//! artifacts/manifest.json); inputs are padded to the artifact tile and
+//! outputs un-padded. All artifacts are f32; the engines accept any
+//! [`Real`]/[`Scalar`] and convert at the boundary (the paper's own f32 mode,
+//! Table S1, runs the whole pipeline in f32).
+
+use super::{literal_f32, literal_i32, Artifact, Runtime};
+use crate::common::float::Real;
+use crate::knn::select::KBest;
+use crate::knn::{KnnEngine, NeighborLists};
+use crate::parallel::ThreadPool;
+use crate::sparse::CsrMatrix;
+use crate::tsne::{AttractiveEngine, Scalar};
+use anyhow::Result;
+
+// Artifact tile shapes — must match python/compile/kernels/* constants
+// (pinned by python/tests/test_aot.py and artifacts/manifest.json).
+pub const SQDIST_BQ: usize = 128;
+pub const SQDIST_BC: usize = 128;
+pub const SQDIST_D: usize = 32;
+pub const ATTR_NSRC: usize = 4096;
+pub const ATTR_B: usize = 256;
+pub const ATTR_K: usize = 96;
+pub const MORTON_N: usize = 1024;
+pub const REP_B: usize = 256;
+pub const REP_C: usize = 2048;
+
+/// KNN with the distance tiles computed by the AOT `knn_sqdist` artifact
+/// (Pallas `sqdist` kernel on the PJRT CPU client).
+pub struct XlaKnn {
+    art: Artifact,
+}
+
+impl XlaKnn {
+    pub fn new(rt: &Runtime) -> Result<Self> {
+        Ok(XlaKnn {
+            art: rt.compile("knn_sqdist")?,
+        })
+    }
+}
+
+impl<T: Real> KnnEngine<T> for XlaKnn {
+    fn name(&self) -> &'static str {
+        "xla-sqdist"
+    }
+
+    fn search(&self, _pool: &ThreadPool, data: &[T], n: usize, d: usize, k: usize) -> NeighborLists<T> {
+        assert!(k < n, "k must be < n");
+        assert!(d <= SQDIST_D, "artifact frozen at d ≤ {SQDIST_D}, got {d}");
+        // Pad feature dim with zeros (distance-invariant).
+        let tile_of = |start: usize| -> Vec<f32> {
+            let mut t = vec![0.0f32; SQDIST_BQ * SQDIST_D];
+            for r in 0..SQDIST_BQ {
+                let i = start + r;
+                if i >= n {
+                    break;
+                }
+                for j in 0..d {
+                    t[r * SQDIST_D + j] = data[i * d + j].to_f64() as f32;
+                }
+            }
+            t
+        };
+        let mut heaps: Vec<KBest<T>> = (0..n).map(|_| KBest::new(k)).collect();
+        let mut q0 = 0;
+        while q0 < n {
+            let q_tile = literal_f32(&tile_of(q0), &[SQDIST_BQ as i64, SQDIST_D as i64])
+                .expect("query literal");
+            let mut c0 = 0;
+            while c0 < n {
+                let c_tile = literal_f32(&tile_of(c0), &[SQDIST_BC as i64, SQDIST_D as i64])
+                    .expect("corpus literal");
+                let out = self
+                    .art
+                    .run(&[&q_tile, &c_tile])
+                    .expect("sqdist artifact execution");
+                let dists: Vec<f32> = out[0].to_vec().expect("sqdist output");
+                for qi in 0..SQDIST_BQ.min(n - q0) {
+                    let i = q0 + qi;
+                    for ci in 0..SQDIST_BC.min(n - c0) {
+                        let j = c0 + ci;
+                        if i == j {
+                            continue;
+                        }
+                        let dsq = dists[qi * SQDIST_BC + ci].max(0.0);
+                        heaps[i].push(T::from_f64(dsq as f64), j as u32);
+                    }
+                }
+                c0 += SQDIST_BC;
+            }
+            q0 += SQDIST_BQ;
+        }
+        let mut indices = vec![0u32; n * k];
+        let mut distances_sq = vec![T::ZERO; n * k];
+        for (i, h) in heaps.into_iter().enumerate() {
+            for (j, (dist, idx)) in h.into_sorted().into_iter().enumerate() {
+                indices[i * k + j] = idx;
+                distances_sq[i * k + j] = dist;
+            }
+        }
+        NeighborLists {
+            n,
+            k,
+            indices,
+            distances_sq,
+        }
+    }
+}
+
+/// Attractive-force engine backed by the AOT `attractive` artifact
+/// (XLA gathers + Pallas VPU tile). Supports n ≤ [`ATTR_NSRC`] (the gather
+/// source is frozen at AOT time) and row nnz ≤ [`ATTR_K`].
+pub struct XlaAttractive {
+    art: Artifact,
+}
+
+impl XlaAttractive {
+    pub fn new(rt: &Runtime) -> Result<Self> {
+        Ok(XlaAttractive {
+            art: rt.compile("attractive")?,
+        })
+    }
+}
+
+impl<T: Scalar> AttractiveEngine<T> for XlaAttractive {
+    fn name(&self) -> &'static str {
+        "xla-attractive"
+    }
+
+    fn compute(&self, _pool: &ThreadPool, p: &CsrMatrix<T>, y: &[T], out: &mut [T]) {
+        let n = p.n;
+        assert!(n <= ATTR_NSRC, "attractive artifact frozen at n ≤ {ATTR_NSRC}");
+        assert_eq!(out.len(), 2 * n);
+        // Gather source: y padded to [ATTR_NSRC, 2] f32.
+        let mut ysrc = vec![0.0f32; ATTR_NSRC * 2];
+        for i in 0..2 * n {
+            ysrc[i] = y[i].to_f64() as f32;
+        }
+        let y_lit = literal_f32(&ysrc, &[ATTR_NSRC as i64, 2]).expect("y literal");
+        let mut b0 = 0;
+        while b0 < n {
+            let bsz = ATTR_B.min(n - b0);
+            let mut rows = vec![0i32; ATTR_B];
+            let mut idx = vec![0i32; ATTR_B * ATTR_K];
+            let mut val = vec![0.0f32; ATTR_B * ATTR_K];
+            for r in 0..bsz {
+                let i = b0 + r;
+                rows[r] = i as i32;
+                let (cols, vals) = p.row(i);
+                assert!(
+                    cols.len() <= ATTR_K,
+                    "row {i} has {} nnz > artifact K {ATTR_K}",
+                    cols.len()
+                );
+                for (t, (c, v)) in cols.iter().zip(vals.iter()).enumerate() {
+                    idx[r * ATTR_K + t] = *c as i32;
+                    val[r * ATTR_K + t] = v.to_f64() as f32;
+                }
+            }
+            let rows_lit = literal_i32(&rows, &[ATTR_B as i64]).unwrap();
+            let idx_lit = literal_i32(&idx, &[ATTR_B as i64, ATTR_K as i64]).unwrap();
+            let val_lit = literal_f32(&val, &[ATTR_B as i64, ATTR_K as i64]).unwrap();
+            let outs = self
+                .art
+                .run(&[&y_lit, &rows_lit, &idx_lit, &val_lit])
+                .expect("attractive artifact execution");
+            let forces: Vec<f32> = outs[0].to_vec().expect("attractive output");
+            for r in 0..bsz {
+                out[2 * (b0 + r)] = T::from_f64(forces[2 * r] as f64);
+                out[2 * (b0 + r) + 1] = T::from_f64(forces[2 * r + 1] as f64);
+            }
+            b0 += bsz;
+        }
+    }
+}
+
+/// Morton codes through the AOT `morton` artifact (batch = [`MORTON_N`]).
+pub struct XlaMorton {
+    art: Artifact,
+}
+
+impl XlaMorton {
+    pub fn new(rt: &Runtime) -> Result<Self> {
+        Ok(XlaMorton {
+            art: rt.compile("morton")?,
+        })
+    }
+
+    /// 32-bit codes (as u32) for up to [`MORTON_N`] points per call.
+    pub fn encode(&self, pos: &[f32], cent: [f32; 2], r_span: f32) -> Result<Vec<u32>> {
+        let n = pos.len() / 2;
+        let mut codes = Vec::with_capacity(n);
+        let mut b0 = 0;
+        while b0 < n {
+            let bsz = MORTON_N.min(n - b0);
+            let mut pts = vec![0.0f32; MORTON_N * 2];
+            pts[..2 * bsz].copy_from_slice(&pos[2 * b0..2 * (b0 + bsz)]);
+            let pts_lit = literal_f32(&pts, &[MORTON_N as i64, 2])?;
+            let cent_lit = literal_f32(&cent, &[2])?;
+            let span_lit = xla::Literal::scalar(r_span);
+            let outs = self.art.run(&[&pts_lit, &cent_lit, &span_lit])?;
+            let got: Vec<i32> = outs[0].to_vec()?;
+            codes.extend(got[..bsz].iter().map(|&c| c as u32));
+            b0 += bsz;
+        }
+        Ok(codes)
+    }
+}
+
+/// Dense repulsion tiles through the AOT `repulsive_dense` artifact.
+pub struct XlaRepulsiveDense {
+    art: Artifact,
+}
+
+impl XlaRepulsiveDense {
+    pub fn new(rt: &Runtime) -> Result<Self> {
+        Ok(XlaRepulsiveDense {
+            art: rt.compile("repulsive_dense")?,
+        })
+    }
+
+    /// Exact repulsion of `y` (n ≤ [`REP_C`]): returns (raw forces, Z) with
+    /// self terms removed — same contract as
+    /// [`crate::gradient::exact::exact_repulsive`].
+    pub fn exact(&self, y: &[f32]) -> Result<(Vec<f32>, f32)> {
+        let n = y.len() / 2;
+        anyhow::ensure!(n <= REP_C, "repulsive_dense artifact frozen at n ≤ {REP_C}");
+        // Corpus: y padded to REP_C with a far-away sentinel so padding
+        // contributes ~0 to both raw and z.
+        let mut corpus = vec![1e30f32; REP_C * 2];
+        corpus[..2 * n].copy_from_slice(y);
+        let c_lit = literal_f32(&corpus, &[REP_C as i64, 2])?;
+        let mut raw = vec![0.0f32; 2 * n];
+        let mut z = 0.0f32;
+        let mut b0 = 0;
+        while b0 < n {
+            let bsz = REP_B.min(n - b0);
+            let mut tile = vec![1e30f32; REP_B * 2];
+            tile[..2 * bsz].copy_from_slice(&y[2 * b0..2 * (b0 + bsz)]);
+            let tile_lit = literal_f32(&tile, &[REP_B as i64, 2])?;
+            let outs = self.art.run(&[&tile_lit, &c_lit])?;
+            let r: Vec<f32> = outs[0].to_vec()?;
+            let zt: Vec<f32> = outs[1].to_vec()?;
+            for i in 0..bsz {
+                raw[2 * (b0 + i)] = r[2 * i];
+                raw[2 * (b0 + i) + 1] = r[2 * i + 1];
+                z += zt[i] - 1.0; // remove the self term (q(i,i) = 1)
+            }
+            b0 += bsz;
+        }
+        Ok((raw, z))
+    }
+}

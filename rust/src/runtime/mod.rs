@@ -1,0 +1,109 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts (L2/L1 output of
+//! `make artifacts`) and execute them from the Rust hot path.
+//!
+//! Python is build-time only — once `artifacts/*.hlo.txt` exist, the binary
+//! is self-contained: [`Runtime::load`] parses the HLO **text** (the
+//! interchange format that survives the jax≥0.5 / xla_extension 0.5.1 proto
+//! id mismatch, see python/compile/aot.py), compiles each module once on the
+//! PJRT CPU client, and [`engines`] wrap the executables behind the same
+//! traits the native engines implement.
+
+pub mod engines;
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One compiled artifact.
+pub struct Artifact {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with the given literals; returns the flattened tuple outputs.
+    /// Takes references so callers can reuse large input literals across calls.
+    pub fn run(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(inputs)
+            .with_context(|| format!("executing artifact '{}'", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of '{}'", self.name))?;
+        // aot.py lowers with return_tuple=True.
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// The PJRT client plus every artifact in an artifacts directory.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Connect the CPU PJRT client and remember the artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        anyhow::ensure!(
+            dir.join("manifest.json").exists(),
+            "no artifacts at {} — run `make artifacts` first",
+            dir.display()
+        );
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, dir })
+    }
+
+    /// Default artifacts location (repo-root relative).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from("artifacts")
+    }
+
+    /// Compile one artifact by name (`knn_sqdist`, `attractive`, `morton`,
+    /// `repulsive_dense`).
+    pub fn compile(&self, name: &str) -> Result<Artifact> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        Ok(Artifact {
+            name: name.to_string(),
+            exe,
+        })
+    }
+}
+
+/// f32 literal from a slice with a shape.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// i32 literal from a slice with a shape.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn missing_artifacts_dir_errors() {
+        let r = Runtime::load("/nonexistent/path");
+        assert!(r.is_err());
+        let msg = format!("{:#}", r.err().unwrap());
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

@@ -1,0 +1,346 @@
+//! Sparse similarity matrix: CSR storage and the t-SNE symmetrization
+//! `p_ij = (p_{j|i} + p_{i|j}) / 2N` over the KNN support (paper Eq. 2).
+//!
+//! The attractive-force step (Algorithm 2) streams rows of this matrix, so
+//! its layout — columns ascending per row, contiguous val/col arrays — is
+//! part of the memory-behaviour story the paper tells.
+
+use crate::common::float::Real;
+use crate::knn::NeighborLists;
+use crate::parallel::{parallel_for, Schedule, SyncSlice, ThreadPool};
+
+/// Compressed-sparse-row matrix.
+#[derive(Clone, Debug)]
+pub struct CsrMatrix<T: Real> {
+    pub n: usize,
+    pub row_ptr: Vec<usize>,
+    pub col: Vec<u32>,
+    pub val: Vec<T>,
+}
+
+impl<T: Real> CsrMatrix<T> {
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.val.len()
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[T]) {
+        let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.col[s..e], &self.val[s..e])
+    }
+
+    /// Sum of all stored values.
+    pub fn sum(&self) -> T {
+        let mut acc = T::ZERO;
+        for &v in &self.val {
+            acc += v;
+        }
+        acc
+    }
+
+    /// Structural validation (used by tests and debug assertions).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.row_ptr.len() != self.n + 1 {
+            return Err("row_ptr length".into());
+        }
+        if self.row_ptr[0] != 0 || *self.row_ptr.last().unwrap() != self.col.len() {
+            return Err("row_ptr bounds".into());
+        }
+        if self.col.len() != self.val.len() {
+            return Err("col/val length mismatch".into());
+        }
+        for i in 0..self.n {
+            if self.row_ptr[i] > self.row_ptr[i + 1] {
+                return Err(format!("row_ptr not monotone at {i}"));
+            }
+            let (cols, _) = self.row(i);
+            if !cols.windows(2).all(|w| w[0] < w[1]) {
+                return Err(format!("row {i} columns not strictly ascending"));
+            }
+            if cols.iter().any(|&c| c as usize >= self.n) {
+                return Err(format!("row {i} column out of range"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Entry lookup by binary search (tests only — O(log nnz_row)).
+    pub fn get(&self, i: usize, j: usize) -> T {
+        let (cols, vals) = self.row(i);
+        match cols.binary_search(&(j as u32)) {
+            Ok(pos) => vals[pos],
+            Err(_) => T::ZERO,
+        }
+    }
+}
+
+/// Symmetrize conditional probabilities `cond_p[i*k + t] = p_{neighbors[i][t] | i}`
+/// into the joint CSR matrix `P` with `p_ij = (p_{j|i} + p_{i|j}) / (2N)`.
+///
+/// Fully parallel: (1) sort each row's (neighbor, p) pairs by neighbor index,
+/// (2) build the reverse adjacency (who lists me?) with atomic counters,
+/// (3) merge forward and reverse lists per row.
+pub fn symmetrize<T: Real>(
+    pool: &ThreadPool,
+    knn: &NeighborLists<T>,
+    cond_p: &[T],
+) -> CsrMatrix<T> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let n = knn.n;
+    let k = knn.k;
+    assert_eq!(cond_p.len(), n * k);
+
+    // (1) Per-row sorted copies of (neighbor, p).
+    let mut fwd: Vec<(u32, T)> = vec![(0, T::ZERO); n * k];
+    {
+        let fs = SyncSlice::new(&mut fwd);
+        parallel_for(pool, n, Schedule::Static, |range| {
+            for i in range {
+                // disjoint: row i
+                let row = unsafe { fs.slice_mut(i * k, k) };
+                for t in 0..k {
+                    row[t] = (knn.indices[i * k + t], cond_p[i * k + t]);
+                }
+                row.sort_unstable_by_key(|&(c, _)| c);
+            }
+        });
+    }
+
+    // (2) Reverse adjacency: rev[j] = list of (i, p_{j|i}) for i listing j.
+    let rev_counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+    parallel_for(pool, n * k, Schedule::Static, |range| {
+        for idx in range {
+            let j = knn.indices[idx] as usize;
+            rev_counts[j].fetch_add(1, Ordering::Relaxed);
+        }
+    });
+    let mut rev_ptr = vec![0usize; n + 1];
+    for j in 0..n {
+        rev_ptr[j + 1] = rev_ptr[j] + rev_counts[j].load(Ordering::Relaxed);
+    }
+    let rev_cursor: Vec<AtomicUsize> = rev_ptr[..n].iter().map(|&p| AtomicUsize::new(p)).collect();
+    let mut rev: Vec<(u32, T)> = vec![(0, T::ZERO); n * k];
+    {
+        let rs = SyncSlice::new(&mut rev);
+        parallel_for(pool, n, Schedule::Static, |range| {
+            for i in range {
+                for t in 0..k {
+                    let j = knn.indices[i * k + t] as usize;
+                    let pos = rev_cursor[j].fetch_add(1, Ordering::Relaxed);
+                    // disjoint: fetch_add hands out unique positions
+                    unsafe { *rs.get_mut(pos) = (i as u32, cond_p[i * k + t]) };
+                }
+            }
+        });
+    }
+    // Sort each reverse row (scatter order is nondeterministic).
+    {
+        let rs = SyncSlice::new(&mut rev);
+        let rev_ptr = &rev_ptr;
+        parallel_for(pool, n, Schedule::Dynamic { grain: 64 }, |range| {
+            for j in range {
+                let (s, e) = (rev_ptr[j], rev_ptr[j + 1]);
+                // disjoint: reverse row j
+                let row = unsafe { rs.slice_mut(s, e - s) };
+                row.sort_unstable_by_key(|&(c, _)| c);
+            }
+        });
+    }
+
+    // (3a) Count union sizes per row.
+    let mut row_len = vec![0usize; n + 1];
+    {
+        let rl = SyncSlice::new(&mut row_len);
+        let fwd = &fwd;
+        let rev = &rev;
+        let rev_ptr = &rev_ptr;
+        parallel_for(pool, n, Schedule::Static, |range| {
+            for i in range {
+                let a = &fwd[i * k..(i + 1) * k];
+                let b = &rev[rev_ptr[i]..rev_ptr[i + 1]];
+                // disjoint: slot i+1
+                unsafe { *rl.get_mut(i + 1) = merge_count(a, b) };
+            }
+        });
+    }
+    for i in 0..n {
+        row_len[i + 1] += row_len[i];
+    }
+    let row_ptr = row_len;
+    let nnz = row_ptr[n];
+
+    // (3b) Fill.
+    let mut col = vec![0u32; nnz];
+    let mut val = vec![T::ZERO; nnz];
+    {
+        let cs = SyncSlice::new(&mut col);
+        let vs = SyncSlice::new(&mut val);
+        let fwd = &fwd;
+        let rev = &rev;
+        let rev_ptr = &rev_ptr;
+        let row_ptr = &row_ptr;
+        let inv_2n = T::ONE / (T::TWO * T::from_usize(n));
+        parallel_for(pool, n, Schedule::Static, |range| {
+            for i in range {
+                let a = &fwd[i * k..(i + 1) * k];
+                let b = &rev[rev_ptr[i]..rev_ptr[i + 1]];
+                let (s, e) = (row_ptr[i], row_ptr[i + 1]);
+                // disjoint: output row i
+                let (ocol, oval) = unsafe { (cs.slice_mut(s, e - s), vs.slice_mut(s, e - s)) };
+                merge_fill(a, b, inv_2n, ocol, oval);
+            }
+        });
+    }
+
+    let m = CsrMatrix { n, row_ptr, col, val };
+    debug_assert!(m.validate().is_ok());
+    m
+}
+
+/// Count the size of the sorted-merge union of two (col, val) lists.
+fn merge_count<T: Copy>(a: &[(u32, T)], b: &[(u32, T)]) -> usize {
+    let (mut ia, mut ib, mut cnt) = (0, 0, 0);
+    while ia < a.len() && ib < b.len() {
+        match a[ia].0.cmp(&b[ib].0) {
+            std::cmp::Ordering::Less => ia += 1,
+            std::cmp::Ordering::Greater => ib += 1,
+            std::cmp::Ordering::Equal => {
+                ia += 1;
+                ib += 1;
+            }
+        }
+        cnt += 1;
+    }
+    cnt + (a.len() - ia) + (b.len() - ib)
+}
+
+/// Merge two sorted (col, val) lists into `(p_a + p_b) * inv_2n` union rows.
+fn merge_fill<T: Real>(a: &[(u32, T)], b: &[(u32, T)], inv_2n: T, ocol: &mut [u32], oval: &mut [T]) {
+    let (mut ia, mut ib, mut o) = (0, 0, 0);
+    while ia < a.len() && ib < b.len() {
+        let (ca, va) = a[ia];
+        let (cb, vb) = b[ib];
+        match ca.cmp(&cb) {
+            std::cmp::Ordering::Less => {
+                ocol[o] = ca;
+                oval[o] = va * inv_2n;
+                ia += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                ocol[o] = cb;
+                oval[o] = vb * inv_2n;
+                ib += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                ocol[o] = ca;
+                oval[o] = (va + vb) * inv_2n;
+                ia += 1;
+                ib += 1;
+            }
+        }
+        o += 1;
+    }
+    while ia < a.len() {
+        ocol[o] = a[ia].0;
+        oval[o] = a[ia].1 * inv_2n;
+        ia += 1;
+        o += 1;
+    }
+    while ib < b.len() {
+        ocol[o] = b[ib].0;
+        oval[o] = b[ib].1 * inv_2n;
+        ib += 1;
+        o += 1;
+    }
+    debug_assert_eq!(o, ocol.len());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::rng::Rng;
+    use crate::knn::{BruteForceKnn, KnnEngine};
+
+    fn make_knn_and_p(n: usize, d: usize, k: usize, seed: u64) -> (NeighborLists<f64>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f64> = (0..n * d).map(|_| rng.next_gaussian()).collect();
+        let pool = ThreadPool::new(2);
+        let knn = BruteForceKnn::default().search(&pool, &data, n, d, k);
+        // Arbitrary positive row-normalized conditional probabilities.
+        let mut p = vec![0.0f64; n * k];
+        for i in 0..n {
+            let mut s = 0.0;
+            for t in 0..k {
+                p[i * k + t] = 0.1 + rng.next_f64();
+                s += p[i * k + t];
+            }
+            for t in 0..k {
+                p[i * k + t] /= s;
+            }
+        }
+        (knn, p)
+    }
+
+    #[test]
+    fn symmetric_and_normalized() {
+        let (knn, p) = make_knn_and_p(120, 5, 8, 1);
+        let pool = ThreadPool::new(4);
+        let m = symmetrize(&pool, &knn, &p);
+        m.validate().unwrap();
+        // symmetry
+        for i in 0..m.n {
+            let (cols, _) = m.row(i);
+            for &j in cols {
+                let a = m.get(i, j as usize);
+                let b = m.get(j as usize, i);
+                assert!((a - b).abs() < 1e-15, "P[{i}][{j}]={a} vs P[{j}][{i}]={b}");
+            }
+        }
+        // total mass: Σ p_ij = Σ_i Σ_t (p_cond)/2N * 2 (each pair counted from
+        // both sides) = Σ rows (=n) / N = 1.
+        assert!((m.sum() - 1.0).abs() < 1e-9, "sum = {}", m.sum());
+    }
+
+    #[test]
+    fn matches_dense_reference() {
+        let (knn, p) = make_knn_and_p(60, 4, 6, 2);
+        let n = knn.n;
+        let k = knn.k;
+        // dense conditional
+        let mut dense = vec![0.0f64; n * n];
+        for i in 0..n {
+            for t in 0..k {
+                dense[i * n + knn.indices[i * k + t] as usize] = p[i * k + t];
+            }
+        }
+        let pool = ThreadPool::new(3);
+        let m = symmetrize(&pool, &knn, &p);
+        for i in 0..n {
+            for j in 0..n {
+                let want = (dense[i * n + j] + dense[j * n + i]) / (2.0 * n as f64);
+                let got = m.get(i, j);
+                assert!((want - got).abs() < 1e-15, "({i},{j}): {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let (knn, p) = make_knn_and_p(200, 6, 10, 3);
+        let m1 = symmetrize(&ThreadPool::new(1), &knn, &p);
+        let m8 = symmetrize(&ThreadPool::new(8), &knn, &p);
+        assert_eq!(m1.row_ptr, m8.row_ptr);
+        assert_eq!(m1.col, m8.col);
+        assert_eq!(m1.val, m8.val);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let (knn, p) = make_knn_and_p(30, 3, 4, 4);
+        let pool = ThreadPool::new(2);
+        let mut m = symmetrize(&pool, &knn, &p);
+        m.col[0] = m.n as u32 + 5; // out of range
+        assert!(m.validate().is_err());
+    }
+}

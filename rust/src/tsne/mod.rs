@@ -1,0 +1,140 @@
+//! The BH t-SNE pipeline and the five implementations the paper evaluates.
+//!
+//! [`run_tsne`] executes Figure 1a's step sequence — KNN → BSP (+symmetrize) →
+//! per-iteration {tree build, summarization, attractive, repulsive, update} —
+//! with every step instrumented into a [`StepTimes`] (the paper's Tables 5/6
+//! and Figures 1b/6 are per-step timings).
+//!
+//! [`Implementation`] selects the architecture being modeled; see
+//! DESIGN.md §Substitutions for the fidelity argument of each:
+//!
+//! | flavor         | KNN            | BSP | tree          | summarize | attractive       | repulsive |
+//! |----------------|----------------|-----|---------------|-----------|------------------|-----------|
+//! | `SklearnLike`  | blocked, par   | seq | baseline, seq | seq       | scalar, seq      | BH, seq   |
+//! | `MulticoreLike`| VP-tree, par   | seq | baseline, seq | seq       | scalar, par      | BH, par   |
+//! | `Daal4pyLike`  | blocked, par   | seq | baseline, seq | seq       | scalar, par      | BH, par   |
+//! | `AccTsne`      | blocked, par   | par | morton, par   | par       | SIMD+prefetch, par| BH, par  |
+//! | `FitSne`       | blocked, par   | seq | —             | —         | scalar, par      | FFT interp|
+
+pub mod pipeline;
+
+pub use pipeline::{run_tsne, run_tsne_custom, run_tsne_with_p, AttractiveEngine, NativeAttractive};
+
+use crate::common::timer::StepTimes;
+use crate::common::float::Real;
+use crate::gradient::attractive::AttractiveSimd;
+use crate::gradient::update::UpdateParams;
+
+/// Crate-wide scalar bound: a [`Real`] with a SIMD attractive kernel
+/// (`f32` and `f64`).
+pub trait Scalar: Real + AttractiveSimd {}
+impl<T: Real + AttractiveSimd> Scalar for T {}
+
+/// Which published implementation's architecture a run models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Implementation {
+    /// scikit-learn `TSNE(method="barnes_hut")`: sequential gradient loop.
+    SklearnLike,
+    /// Ulyanov's Multicore-TSNE: parallel forces, sequential tree path,
+    /// row-at-a-time (VP-tree-ish) KNN.
+    MulticoreLike,
+    /// daal4py v2021.6 BH t-SNE — the paper's baseline.
+    Daal4pyLike,
+    /// This paper's contribution.
+    AccTsne,
+    /// Linderman et al. FIt-SNE (FFT interpolation repulsion).
+    FitSne,
+}
+
+impl Implementation {
+    pub const ALL: [Implementation; 5] = [
+        Implementation::SklearnLike,
+        Implementation::MulticoreLike,
+        Implementation::Daal4pyLike,
+        Implementation::AccTsne,
+        Implementation::FitSne,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Implementation::SklearnLike => "sklearn",
+            Implementation::MulticoreLike => "multicore",
+            Implementation::Daal4pyLike => "daal4py",
+            Implementation::AccTsne => "acc-t-sne",
+            Implementation::FitSne => "fit-sne",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        Self::ALL.iter().copied().find(|i| i.name() == s)
+    }
+}
+
+/// Pipeline configuration (defaults = the paper's experimental setup:
+/// sklearn defaults, 1000 iterations, θ = 0.5, perplexity 30).
+#[derive(Clone, Copy, Debug)]
+pub struct TsneConfig {
+    pub perplexity: f64,
+    pub theta: f64,
+    pub n_iter: usize,
+    pub seed: u64,
+    /// 0 ⇒ all available cores.
+    pub n_threads: usize,
+    pub update: UpdateParams,
+    /// Record per-step times every iteration (tiny overhead; on by default).
+    pub collect_step_times: bool,
+    /// Initialize the embedding from the data's top-2 principal components
+    /// (sklearn `init="pca"`) instead of N(0, 1e-4) random.
+    pub init_pca: bool,
+}
+
+impl Default for TsneConfig {
+    fn default() -> Self {
+        TsneConfig {
+            perplexity: 30.0,
+            theta: 0.5,
+            n_iter: 1000,
+            seed: 42,
+            n_threads: 0,
+            update: UpdateParams::default(),
+            collect_step_times: true,
+            init_pca: false,
+        }
+    }
+}
+
+/// Output of a run.
+#[derive(Clone, Debug)]
+pub struct TsneResult<T: Real> {
+    /// Final embedding, interleaved x,y per point (original order).
+    pub embedding: Vec<T>,
+    /// KL divergence over the sparse-P support with the final BH/FFT Z
+    /// (the value sklearn/daal4py report; paper Table 3).
+    pub kl_divergence: f64,
+    pub step_times: StepTimes,
+    pub n_iter: usize,
+    pub implementation: Implementation,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn implementation_names_roundtrip() {
+        for imp in Implementation::ALL {
+            assert_eq!(Implementation::from_name(imp.name()), Some(imp));
+        }
+        assert_eq!(Implementation::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn default_config_matches_paper() {
+        let c = TsneConfig::default();
+        assert_eq!(c.perplexity, 30.0);
+        assert_eq!(c.theta, 0.5);
+        assert_eq!(c.n_iter, 1000);
+        assert_eq!(c.update.early_exaggeration, 12.0);
+        assert_eq!(c.update.exaggeration_iters, 250);
+    }
+}

@@ -1,0 +1,400 @@
+//! Pipeline assembly: wires the step modules together per implementation
+//! flavor and times every step.
+
+use super::{Implementation, Scalar, TsneConfig, TsneResult};
+use crate::common::timer::{Step, StepTimes};
+use crate::fitsne::{fitsne_repulsive, FitsneParams};
+use crate::gradient::attractive::{attractive_forces, Variant};
+use crate::gradient::exact::kl_with_z;
+use crate::gradient::repulsive::{repulsive_forces, Repulsion};
+use crate::gradient::update::{random_init, Optimizer};
+use crate::gradient::combine_gradient;
+use crate::knn::{BruteForceKnn, KnnEngine, NeighborLists};
+use crate::parallel::{pool::available_cores, ThreadPool};
+use crate::perplexity::{binary_search_perplexity, ParMode};
+use crate::quadtree::builder_baseline::build_baseline;
+use crate::quadtree::builder_morton::build_morton;
+use crate::quadtree::summarize::{summarize_parallel, summarize_sequential};
+use crate::sparse::{symmetrize, CsrMatrix};
+
+/// Pluggable attractive-force engine: native SIMD/scalar variants or the
+/// AOT-compiled XLA artifact ([`crate::runtime::engines::XlaAttractive`]) —
+/// the hook that lets the L1/L2 layers run inside the L3 hot path.
+///
+/// `compute` is always invoked from the coordinator thread (engines fan out
+/// through the `pool` argument themselves if they want parallelism), so no
+/// `Sync` bound: the PJRT executable handle is deliberately single-threaded.
+pub trait AttractiveEngine<T: Scalar> {
+    fn name(&self) -> &'static str;
+    fn compute(&self, pool: &ThreadPool, p: &CsrMatrix<T>, y: &[T], out: &mut [T]);
+}
+
+/// Default engine: the in-crate kernels of [`crate::gradient::attractive`].
+pub struct NativeAttractive(pub Variant);
+
+impl<T: Scalar> AttractiveEngine<T> for NativeAttractive {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+    fn compute(&self, pool: &ThreadPool, p: &CsrMatrix<T>, y: &[T], out: &mut [T]) {
+        attractive_forces(pool, p, y, self.0, out);
+    }
+}
+
+/// Per-flavor knobs (resolved from [`Implementation`]).
+struct Flavor {
+    knn_blocked: bool,
+    bsp_parallel: bool,
+    morton_tree: bool,
+    tree_parallel: bool,
+    summarize_parallel: bool,
+    attractive_variant: Variant,
+    forces_parallel: bool,
+    fft_repulsion: bool,
+}
+
+fn flavor(imp: Implementation) -> Flavor {
+    match imp {
+        Implementation::SklearnLike => Flavor {
+            knn_blocked: true,
+            bsp_parallel: false,
+            morton_tree: false,
+            tree_parallel: false,
+            summarize_parallel: false,
+            attractive_variant: Variant::Scalar,
+            forces_parallel: false,
+            fft_repulsion: false,
+        },
+        Implementation::MulticoreLike => Flavor {
+            knn_blocked: false, // row-at-a-time distance sweep (VP-tree-ish locality)
+            bsp_parallel: false,
+            morton_tree: false,
+            tree_parallel: false,
+            summarize_parallel: false,
+            attractive_variant: Variant::Scalar,
+            forces_parallel: true,
+            fft_repulsion: false,
+        },
+        Implementation::Daal4pyLike => Flavor {
+            knn_blocked: true,
+            bsp_parallel: false,
+            morton_tree: false,
+            tree_parallel: false,
+            summarize_parallel: false,
+            attractive_variant: Variant::Scalar,
+            forces_parallel: true,
+            fft_repulsion: false,
+        },
+        Implementation::AccTsne => Flavor {
+            knn_blocked: true,
+            bsp_parallel: true,
+            morton_tree: true,
+            tree_parallel: true,
+            summarize_parallel: true,
+            attractive_variant: Variant::Simd,
+            forces_parallel: true,
+            fft_repulsion: false,
+        },
+        Implementation::FitSne => Flavor {
+            knn_blocked: true,
+            bsp_parallel: false,
+            morton_tree: false,
+            tree_parallel: false,
+            summarize_parallel: false,
+            attractive_variant: Variant::Scalar,
+            forces_parallel: true,
+            fft_repulsion: true,
+        },
+    }
+}
+
+/// Run t-SNE on `points` (n × d, row-major) with the given implementation.
+pub fn run_tsne<T: Scalar>(
+    points: &[T],
+    n: usize,
+    d: usize,
+    cfg: &TsneConfig,
+    imp: Implementation,
+) -> TsneResult<T> {
+    run_tsne_custom(points, n, d, cfg, imp, None)
+}
+
+/// As [`run_tsne`] but with an optional attractive-engine override (the
+/// XLA-offload integration path).
+pub fn run_tsne_custom<T: Scalar>(
+    points: &[T],
+    n: usize,
+    d: usize,
+    cfg: &TsneConfig,
+    imp: Implementation,
+    attractive_override: Option<&dyn AttractiveEngine<T>>,
+) -> TsneResult<T> {
+    assert_eq!(points.len(), n * d, "points must be n*d");
+    assert!(n >= 8, "need at least 8 points");
+    let fl = flavor(imp);
+    let nt = if cfg.n_threads == 0 { available_cores() } else { cfg.n_threads };
+    let pool = ThreadPool::new(nt);
+    let mut times = StepTimes::new();
+
+    // --- Step 1: KNN over ⌊3u⌋ neighbors (Eq. 2). The blocked engine models
+    // daal4py's; the VP-tree models Multicore-TSNE's (vdMaaten's code).
+    let k = ((3.0 * cfg.perplexity).floor() as usize).clamp(1, n - 1);
+    let knn: NeighborLists<T> = times.time(Step::Knn, || {
+        if fl.knn_blocked {
+            BruteForceKnn::default().search(&pool, points, n, d, k)
+        } else {
+            crate::knn::vptree::VpTreeKnn::default().search(&pool, points, n, d, k)
+        }
+    });
+
+    // --- Step 2: BSP (+ symmetrization, charged to BSP as daal4py does).
+    let p = times.time(Step::Bsp, || {
+        let mode = if fl.bsp_parallel { ParMode::Parallel } else { ParMode::Sequential };
+        let cond = binary_search_perplexity(&pool, &knn, cfg.perplexity, mode);
+        symmetrize(&pool, &knn, &cond.p)
+    });
+    drop(knn);
+
+    // Optional PCA initialization (sklearn init="pca": top-2 PCs scaled so
+    // the largest component has std 1e-4, then descent as usual).
+    let init = if cfg.init_pca {
+        let (proj, _) = crate::data::pca::pca(&pool, points, n, d, 2, 30, cfg.seed ^ 0x9CA);
+        Some(scale_init(proj, n))
+    } else {
+        None
+    };
+
+    let (embedding, kl, iters, grad_times) =
+        gradient_loop(&pool, &p, n, cfg, &fl, attractive_override, init);
+    times.merge(&grad_times);
+
+    TsneResult {
+        embedding,
+        kl_divergence: kl,
+        step_times: times,
+        n_iter: iters,
+        implementation: imp,
+    }
+}
+
+/// Run only the gradient phase on a precomputed P (benches isolate steps with
+/// this; also lets Table 5/6 harnesses share one KNN across implementations).
+pub fn run_tsne_with_p<T: Scalar>(
+    pool: &ThreadPool,
+    p: &CsrMatrix<T>,
+    cfg: &TsneConfig,
+    imp: Implementation,
+) -> TsneResult<T> {
+    let fl = flavor(imp);
+    let (embedding, kl, iters, times) = gradient_loop(pool, p, p.n, cfg, &fl, None, None);
+    TsneResult {
+        embedding,
+        kl_divergence: kl,
+        step_times: times,
+        n_iter: iters,
+        implementation: imp,
+    }
+}
+
+/// PCA projection → init scaling: sklearn scales PC1 to std 1e-4.
+fn scale_init<T: Scalar>(mut proj: Vec<T>, n: usize) -> Vec<T> {
+    let mut var = 0.0f64;
+    for i in 0..n {
+        var += proj[2 * i].to_f64().powi(2);
+    }
+    let std = (var / n as f64).sqrt().max(f64::MIN_POSITIVE);
+    let s = T::from_f64(1e-4 / std);
+    for v in proj.iter_mut() {
+        *v *= s;
+    }
+    proj
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gradient_loop<T: Scalar>(
+    pool: &ThreadPool,
+    p: &CsrMatrix<T>,
+    n: usize,
+    cfg: &TsneConfig,
+    fl: &Flavor,
+    attractive_override: Option<&dyn AttractiveEngine<T>>,
+    init: Option<Vec<T>>,
+) -> (Vec<T>, f64, usize, StepTimes) {
+    let mut times = StepTimes::new();
+    let seq_pool = ThreadPool::new(1);
+    let force_pool: &ThreadPool = if fl.forces_parallel { pool } else { &seq_pool };
+    let tree_pool: &ThreadPool = if fl.tree_parallel { pool } else { &seq_pool };
+
+    let native_engine = NativeAttractive(fl.attractive_variant);
+    let attractive: &dyn AttractiveEngine<T> = match attractive_override {
+        Some(e) => e,
+        None => &native_engine,
+    };
+
+    let mut y = init.unwrap_or_else(|| random_init::<T>(n, cfg.seed));
+    let mut opt = Optimizer::<T>::new(n, cfg.update);
+    let mut attr = vec![T::ZERO; 2 * n];
+    let mut grad = vec![T::ZERO; 2 * n];
+    let fit_params = FitsneParams::default();
+    let mut last_z = T::ONE;
+
+    for iter in 0..cfg.n_iter {
+        let rep: Repulsion<T> = if fl.fft_repulsion {
+            // FIt-SNE path: no tree; the FFT pipeline is the repulsive step.
+            times.time(Step::Repulsive, || fitsne_repulsive(force_pool, &y, &fit_params))
+        } else {
+            // Steps 3–4: quadtree + summarization.
+            let mut tree = times.time(Step::TreeBuild, || {
+                if fl.morton_tree {
+                    build_morton(tree_pool, &y)
+                } else {
+                    build_baseline(tree_pool, &y)
+                }
+            });
+            times.time(Step::Summarize, || {
+                if fl.summarize_parallel {
+                    summarize_parallel(pool, &mut tree)
+                } else {
+                    summarize_sequential(&mut tree)
+                }
+            });
+            // Step 6: repulsive.
+            times.time(Step::Repulsive, || repulsive_forces(force_pool, &tree, cfg.theta))
+        };
+        last_z = rep.z;
+
+        // Step 5: attractive.
+        times.time(Step::Attractive, || attractive.compute(force_pool, p, &y, &mut attr));
+
+        // Update.
+        times.time(Step::Update, || {
+            let exag = opt.exaggeration(iter);
+            combine_gradient(pool, &attr, &rep.raw, rep.z, exag, &mut grad);
+            opt.step(pool, iter, &grad, &mut y);
+        });
+    }
+
+    let kl = kl_with_z(p, &y, last_z.to_f64());
+    (y, kl, cfg.n_iter, times)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::gaussian_mixture;
+
+    fn quick_cfg(n_iter: usize) -> TsneConfig {
+        TsneConfig {
+            perplexity: 10.0,
+            n_iter,
+            n_threads: 4,
+            seed: 7,
+            ..TsneConfig::default()
+        }
+    }
+
+    #[test]
+    fn all_implementations_produce_finite_embeddings() {
+        let ds = gaussian_mixture::<f64>(400, 8, 5, 6.0, 1);
+        for imp in Implementation::ALL {
+            let r = run_tsne(&ds.points, ds.n, ds.d, &quick_cfg(60), imp);
+            assert_eq!(r.embedding.len(), 2 * ds.n);
+            assert!(
+                r.embedding.iter().all(|v| v.is_finite()),
+                "{} produced non-finite embedding",
+                imp.name()
+            );
+            assert!(r.kl_divergence.is_finite(), "{}", imp.name());
+            assert!(r.step_times.total() > 0.0);
+        }
+    }
+
+    #[test]
+    fn kl_decreases_with_more_iterations() {
+        let ds = gaussian_mixture::<f64>(500, 10, 5, 8.0, 2);
+        let short = run_tsne(&ds.points, ds.n, ds.d, &quick_cfg(30), Implementation::AccTsne);
+        let long = run_tsne(&ds.points, ds.n, ds.d, &quick_cfg(300), Implementation::AccTsne);
+        assert!(
+            long.kl_divergence < short.kl_divergence,
+            "KL: {} !< {}",
+            long.kl_divergence,
+            short.kl_divergence
+        );
+    }
+
+    #[test]
+    fn implementations_converge_to_similar_kl() {
+        // Table 3's claim: same accuracy across implementations.
+        let ds = gaussian_mixture::<f64>(400, 8, 4, 8.0, 3);
+        let cfg = quick_cfg(250);
+        let accs: Vec<f64> = [Implementation::Daal4pyLike, Implementation::AccTsne]
+            .iter()
+            .map(|&imp| run_tsne(&ds.points, ds.n, ds.d, &cfg, imp).kl_divergence)
+            .collect();
+        let rel = (accs[0] - accs[1]).abs() / accs[0].max(accs[1]);
+        assert!(rel < 0.25, "daal4py-like {} vs acc {}", accs[0], accs[1]);
+    }
+
+    #[test]
+    fn separated_clusters_stay_separated_in_embedding() {
+        let ds = gaussian_mixture::<f64>(300, 6, 3, 12.0, 4);
+        let r = run_tsne(&ds.points, ds.n, ds.d, &quick_cfg(250), Implementation::AccTsne);
+        // mean within-cluster distance < mean between-cluster distance
+        let mut within = (0.0, 0usize);
+        let mut between = (0.0, 0usize);
+        for i in 0..ds.n {
+            for j in (i + 1)..ds.n {
+                let dx = r.embedding[2 * i] - r.embedding[2 * j];
+                let dy = r.embedding[2 * i + 1] - r.embedding[2 * j + 1];
+                let dist = (dx * dx + dy * dy).sqrt();
+                if ds.labels[i] == ds.labels[j] {
+                    within = (within.0 + dist, within.1 + 1);
+                } else {
+                    between = (between.0 + dist, between.1 + 1);
+                }
+            }
+        }
+        let w = within.0 / within.1 as f64;
+        let b = between.0 / between.1 as f64;
+        assert!(b > 1.5 * w, "between {b} vs within {w}");
+    }
+
+    #[test]
+    fn f32_run_close_to_f64() {
+        let ds = gaussian_mixture::<f64>(300, 8, 4, 8.0, 5);
+        let ds32 = ds.cast::<f32>();
+        let cfg = quick_cfg(150);
+        let r64 = run_tsne(&ds.points, ds.n, ds.d, &cfg, Implementation::AccTsne);
+        let r32 = run_tsne(&ds32.points, ds.n, ds.d, &cfg, Implementation::AccTsne);
+        let rel = (r64.kl_divergence - r32.kl_divergence as f64).abs() / r64.kl_divergence;
+        assert!(rel < 0.15, "f64 {} vs f32 {}", r64.kl_divergence, r32.kl_divergence);
+    }
+
+    #[test]
+    fn pca_init_converges_and_differs_from_random() {
+        let ds = gaussian_mixture::<f64>(300, 8, 4, 8.0, 9);
+        let mut c = quick_cfg(80);
+        c.init_pca = true;
+        let r_pca = run_tsne(&ds.points, ds.n, ds.d, &c, Implementation::AccTsne);
+        c.init_pca = false;
+        let r_rand = run_tsne(&ds.points, ds.n, ds.d, &c, Implementation::AccTsne);
+        assert!(r_pca.kl_divergence.is_finite());
+        assert_ne!(r_pca.embedding, r_rand.embedding);
+        // both converge to comparable quality
+        let rel = (r_pca.kl_divergence - r_rand.kl_divergence).abs()
+            / r_rand.kl_divergence.max(r_pca.kl_divergence);
+        assert!(rel < 0.5, "pca {} vs random {}", r_pca.kl_divergence, r_rand.kl_divergence);
+    }
+
+    #[test]
+    fn run_with_precomputed_p_matches_steps() {
+        let ds = gaussian_mixture::<f64>(200, 6, 3, 6.0, 6);
+        let pool = ThreadPool::new(4);
+        let knn = BruteForceKnn::default().search(&pool, &ds.points, ds.n, ds.d, 30);
+        let cond = binary_search_perplexity(&pool, &knn, 10.0, ParMode::Parallel);
+        let p = symmetrize(&pool, &knn, &cond.p);
+        let r = run_tsne_with_p(&pool, &p, &quick_cfg(50), Implementation::AccTsne);
+        assert!(r.kl_divergence.is_finite());
+        assert_eq!(r.step_times.get(Step::Knn), 0.0);
+    }
+}

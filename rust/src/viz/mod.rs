@@ -1,0 +1,179 @@
+//! Embedding scatter-plot renderer (paper Figures S1–S6).
+//!
+//! Renders an n×2 embedding colored by class label to a binary PPM (P6) or an
+//! SVG. No image crates offline, and PPM is sufficient for eyeballing and
+//! diffable in tests.
+
+use crate::common::float::Real;
+use std::io::Write;
+use std::path::Path;
+
+/// Distinct colors for up to 30 classes (HSV wheel, precomputed).
+pub fn label_color(label: u16) -> [u8; 3] {
+    let h = (label as f64 * 360.0 / 10.0) % 360.0; // 10-hue wheel, cycles
+    let v = if (label / 10) % 2 == 0 { 0.95 } else { 0.6 }; // darker every cycle
+    hsv_to_rgb(h, 0.85, v)
+}
+
+fn hsv_to_rgb(h: f64, s: f64, v: f64) -> [u8; 3] {
+    let c = v * s;
+    let hp = h / 60.0;
+    let x = c * (1.0 - ((hp % 2.0) - 1.0).abs());
+    let (r, g, b) = match hp as u32 {
+        0 => (c, x, 0.0),
+        1 => (x, c, 0.0),
+        2 => (0.0, c, x),
+        3 => (0.0, x, c),
+        4 => (x, 0.0, c),
+        _ => (c, 0.0, x),
+    };
+    let m = v - c;
+    [
+        ((r + m) * 255.0) as u8,
+        ((g + m) * 255.0) as u8,
+        ((b + m) * 255.0) as u8,
+    ]
+}
+
+/// Rasterize the embedding into an RGB buffer (white background, one 2×2 dot
+/// per point). Returns (buffer, width, height).
+pub fn rasterize<T: Real>(y: &[T], labels: &[u16], size: usize) -> (Vec<u8>, usize, usize) {
+    let n = labels.len();
+    assert_eq!(y.len(), 2 * n);
+    let mut img = vec![255u8; size * size * 3];
+    if n == 0 {
+        return (img, size, size);
+    }
+    let (mut lo, mut hi) = ([f64::INFINITY; 2], [f64::NEG_INFINITY; 2]);
+    for i in 0..n {
+        for d in 0..2 {
+            let v = y[2 * i + d].to_f64();
+            lo[d] = lo[d].min(v);
+            hi[d] = hi[d].max(v);
+        }
+    }
+    let span = [
+        (hi[0] - lo[0]).max(f64::MIN_POSITIVE),
+        (hi[1] - lo[1]).max(f64::MIN_POSITIVE),
+    ];
+    let margin = 0.03;
+    let usable = size as f64 * (1.0 - 2.0 * margin);
+    for i in 0..n {
+        let px = ((y[2 * i].to_f64() - lo[0]) / span[0] * usable + size as f64 * margin) as usize;
+        let py = ((y[2 * i + 1].to_f64() - lo[1]) / span[1] * usable + size as f64 * margin) as usize;
+        let color = label_color(labels[i]);
+        for dx in 0..2 {
+            for dy in 0..2 {
+                let (x, yy) = ((px + dx).min(size - 1), (py + dy).min(size - 1));
+                let o = (yy * size + x) * 3;
+                img[o..o + 3].copy_from_slice(&color);
+            }
+        }
+    }
+    (img, size, size)
+}
+
+/// Write a binary PPM (P6) scatter plot.
+pub fn write_ppm<T: Real>(path: impl AsRef<Path>, y: &[T], labels: &[u16], size: usize) -> std::io::Result<()> {
+    let (img, w, h) = rasterize(y, labels, size);
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write!(f, "P6\n{w} {h}\n255\n")?;
+    f.write_all(&img)?;
+    f.flush()
+}
+
+/// Write an SVG scatter plot (for the docs; vector, label-colored circles).
+pub fn write_svg<T: Real>(path: impl AsRef<Path>, y: &[T], labels: &[u16], size: usize) -> std::io::Result<()> {
+    let n = labels.len();
+    assert_eq!(y.len(), 2 * n);
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(
+        f,
+        "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{size}\" height=\"{size}\" viewBox=\"0 0 {size} {size}\">"
+    )?;
+    writeln!(f, "<rect width=\"100%\" height=\"100%\" fill=\"white\"/>")?;
+    if n > 0 {
+        let (mut lo, mut hi) = ([f64::INFINITY; 2], [f64::NEG_INFINITY; 2]);
+        for i in 0..n {
+            for d in 0..2 {
+                let v = y[2 * i + d].to_f64();
+                lo[d] = lo[d].min(v);
+                hi[d] = hi[d].max(v);
+            }
+        }
+        let span = [
+            (hi[0] - lo[0]).max(f64::MIN_POSITIVE),
+            (hi[1] - lo[1]).max(f64::MIN_POSITIVE),
+        ];
+        let usable = size as f64 * 0.94;
+        for i in 0..n {
+            let px = (y[2 * i].to_f64() - lo[0]) / span[0] * usable + size as f64 * 0.03;
+            let py = (y[2 * i + 1].to_f64() - lo[1]) / span[1] * usable + size as f64 * 0.03;
+            let [r, g, b] = label_color(labels[i]);
+            writeln!(
+                f,
+                "<circle cx=\"{px:.1}\" cy=\"{py:.1}\" r=\"1.5\" fill=\"rgb({r},{g},{b})\" fill-opacity=\"0.7\"/>"
+            )?;
+        }
+    }
+    writeln!(f, "</svg>")?;
+    f.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("acc_tsne_viz_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn colors_distinct_for_first_ten_labels() {
+        let colors: Vec<[u8; 3]> = (0..10).map(label_color).collect();
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                assert_ne!(colors[i], colors[j], "labels {i} and {j} share a color");
+            }
+        }
+    }
+
+    #[test]
+    fn rasterize_marks_points() {
+        let y = vec![0.0f64, 0.0, 1.0, 1.0, -1.0, 0.5];
+        let (img, w, h) = rasterize(&y, &[0, 1, 2], 64);
+        assert_eq!((w, h), (64, 64));
+        let colored = img.chunks(3).filter(|c| c != &[255, 255, 255]).count();
+        assert!(colored >= 3, "at least the three dots must be colored");
+    }
+
+    #[test]
+    fn ppm_header_and_size() {
+        let p = tmp("plot.ppm");
+        let y = vec![0.0f64, 0.0, 1.0, 1.0];
+        write_ppm(&p, &y, &[0, 1], 32).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(bytes.starts_with(b"P6\n32 32\n255\n"));
+        assert_eq!(bytes.len(), 13 + 32 * 32 * 3);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn svg_contains_circles() {
+        let p = tmp("plot.svg");
+        let y = vec![0.0f64, 0.0, 2.0, 3.0];
+        write_svg(&p, &y, &[0, 5], 100).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.contains("<svg"));
+        assert_eq!(s.matches("<circle").count(), 2);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn degenerate_single_point() {
+        let (img, _, _) = rasterize(&[5.0f64, 5.0], &[3], 16);
+        assert!(img.chunks(3).any(|c| c != [255, 255, 255]));
+    }
+}

@@ -1,0 +1,130 @@
+//! Integration: full pipeline across implementations, datasets, precisions,
+//! and thread counts — the cross-module behaviour the unit tests can't see.
+
+use acc_tsne::common::timer::Step;
+use acc_tsne::data::datasets::PaperDataset;
+use acc_tsne::data::synthetic::{gaussian_mixture, scrna_like};
+use acc_tsne::data::pca::pca;
+use acc_tsne::knn::KnnEngine;
+use acc_tsne::metrics::neighbor_preservation;
+use acc_tsne::parallel::ThreadPool;
+use acc_tsne::tsne::{run_tsne, Implementation, TsneConfig};
+
+fn cfg(n_iter: usize, threads: usize) -> TsneConfig {
+    TsneConfig {
+        perplexity: 10.0,
+        n_iter,
+        n_threads: threads,
+        seed: 3,
+        ..TsneConfig::default()
+    }
+}
+
+#[test]
+fn every_paper_dataset_analog_runs_end_to_end() {
+    let pool = ThreadPool::new(4);
+    for d in PaperDataset::ALL {
+        let ds = d.generate::<f64>(0.002, 1, &pool);
+        let r = run_tsne(&ds.points, ds.n, ds.d, &cfg(15, 4), Implementation::AccTsne);
+        assert!(
+            r.embedding.iter().all(|v| v.is_finite()),
+            "{}: non-finite embedding",
+            d.name()
+        );
+        assert!(r.kl_divergence.is_finite() && r.kl_divergence > 0.0, "{}", d.name());
+    }
+}
+
+/// Fraction of embedding k-NN that share the query's class label — the
+/// cluster-cohesion property Figures S1–S6 show visually.
+fn knn_label_purity(embedding: &[f64], labels: &[u16], k: usize) -> f64 {
+    let pool = ThreadPool::new(4);
+    let n = labels.len();
+    let nl = acc_tsne::knn::BruteForceKnn::default().search(&pool, embedding, n, 2, k);
+    let mut same = 0usize;
+    for i in 0..n {
+        same += nl.neighbors(i).iter().filter(|&&j| labels[j as usize] == labels[i]).count();
+    }
+    same as f64 / (n * k) as f64
+}
+
+#[test]
+fn acc_tsne_preserves_local_structure() {
+    let ds = gaussian_mixture::<f64>(600, 10, 6, 10.0, 5);
+    let r = run_tsne(&ds.points, ds.n, ds.d, &cfg(300, 0), Implementation::AccTsne);
+    let pool = ThreadPool::new(4);
+    // exact-identity neighbor preservation (weak signal at 300 iters)...
+    let np = neighbor_preservation(&pool, &ds.points, ds.n, ds.d, &r.embedding, 10);
+    assert!(np > 0.2, "neighbor preservation too low: {np}");
+    // ...and the strong signal: embedding neighborhoods stay class-pure.
+    let purity = knn_label_purity(&r.embedding, &ds.labels, 10);
+    assert!(purity > 0.8, "kNN label purity too low: {purity}");
+}
+
+#[test]
+fn thread_count_does_not_change_convergence_quality() {
+    // Not bit-identical (fp reduction order differs per thread count via the
+    // BH Z sum), but the converged KL must be equivalent.
+    let ds = gaussian_mixture::<f64>(400, 8, 4, 8.0, 6);
+    let r1 = run_tsne(&ds.points, ds.n, ds.d, &cfg(150, 1), Implementation::AccTsne);
+    let r8 = run_tsne(&ds.points, ds.n, ds.d, &cfg(150, 8), Implementation::AccTsne);
+    let rel = (r1.kl_divergence - r8.kl_divergence).abs() / r1.kl_divergence;
+    assert!(rel < 0.05, "1-thread KL {} vs 8-thread KL {}", r1.kl_divergence, r8.kl_divergence);
+}
+
+#[test]
+fn step_times_are_recorded_for_all_pipeline_steps() {
+    let ds = gaussian_mixture::<f64>(500, 8, 4, 6.0, 7);
+    let r = run_tsne(&ds.points, ds.n, ds.d, &cfg(20, 4), Implementation::AccTsne);
+    for step in [Step::Knn, Step::Bsp, Step::TreeBuild, Step::Summarize, Step::Attractive, Step::Repulsive, Step::Update] {
+        assert!(
+            r.step_times.get(step) > 0.0,
+            "step {} recorded no time",
+            step.name()
+        );
+    }
+    // FIt-SNE flavor: no tree/summarize, repulsive carries the FFT work.
+    let rf = run_tsne(&ds.points, ds.n, ds.d, &cfg(20, 4), Implementation::FitSne);
+    assert_eq!(rf.step_times.get(Step::TreeBuild), 0.0);
+    assert_eq!(rf.step_times.get(Step::Summarize), 0.0);
+    assert!(rf.step_times.get(Step::Repulsive) > 0.0);
+}
+
+#[test]
+fn scrna_pca_pipeline_composes() {
+    // The mouse-brain preprocessing path: counts → PCA → t-SNE.
+    let pool = ThreadPool::new(4);
+    let raw = scrna_like::<f64>(800, 60, 8, 0.5, 9);
+    let (pcs, eig) = pca(&pool, &raw.points, raw.n, 60, 20, 20, 1);
+    assert!(eig[0] >= eig[1] && eig[1] >= eig[2], "eigenvalues must be sorted: {eig:?}");
+    let r = run_tsne(&pcs, raw.n, 20, &cfg(250, 4), Implementation::AccTsne);
+    assert!(r.kl_divergence.is_finite());
+    // scRNA clusters overlap (dropout noise) — label purity is the robust
+    // signal; exact kNN-identity preservation is weak on noisy count data.
+    let purity = knn_label_purity(&r.embedding, &raw.labels, 10);
+    assert!(purity > 0.5, "pipeline kNN label purity {purity}");
+}
+
+#[test]
+fn same_seed_same_thread_count_is_deterministic() {
+    let ds = gaussian_mixture::<f64>(300, 6, 3, 6.0, 8);
+    let a = run_tsne(&ds.points, ds.n, ds.d, &cfg(40, 4), Implementation::AccTsne);
+    let b = run_tsne(&ds.points, ds.n, ds.d, &cfg(40, 4), Implementation::AccTsne);
+    assert_eq!(a.embedding, b.embedding, "same seed+threads must be bit-identical");
+}
+
+#[test]
+fn perplexity_and_theta_knobs_respected() {
+    let ds = gaussian_mixture::<f64>(300, 6, 3, 6.0, 10);
+    let mut c = cfg(30, 4);
+    c.perplexity = 5.0;
+    c.theta = 0.2; // more exact
+    let r_tight = run_tsne(&ds.points, ds.n, ds.d, &c, Implementation::AccTsne);
+    c.theta = 0.9; // more approximate
+    let r_loose = run_tsne(&ds.points, ds.n, ds.d, &c, Implementation::AccTsne);
+    assert!(r_tight.kl_divergence.is_finite() && r_loose.kl_divergence.is_finite());
+    // looser theta must not be slower (it prunes more)
+    assert!(
+        r_loose.step_times.get(Step::Repulsive) <= r_tight.step_times.get(Step::Repulsive) * 1.5
+    );
+}

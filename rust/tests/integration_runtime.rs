@@ -1,0 +1,163 @@
+//! Integration: the AOT artifacts (L1 Pallas kernels lowered through L2 JAX
+//! graphs) executed from Rust via PJRT, validated against the native Rust
+//! implementations — the three-layer composition proof.
+//!
+//! Requires `make artifacts` (skips with a message otherwise, so `cargo test`
+//! works on a fresh checkout).
+
+use acc_tsne::common::rng::Rng;
+use acc_tsne::gradient::attractive::{attractive_forces, Variant};
+use acc_tsne::gradient::exact::exact_repulsive;
+use acc_tsne::knn::{knn_reference, KnnEngine};
+use acc_tsne::parallel::ThreadPool;
+use acc_tsne::perplexity::{binary_search_perplexity, ParMode};
+use acc_tsne::quadtree::morton::RootCell;
+use acc_tsne::runtime::engines::{XlaAttractive, XlaKnn, XlaMorton, XlaRepulsiveDense};
+use acc_tsne::runtime::Runtime;
+use acc_tsne::sparse::symmetrize;
+use acc_tsne::tsne::{run_tsne_custom, AttractiveEngine, Implementation, TsneConfig};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::load("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP runtime integration: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn xla_knn_matches_reference() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let eng = XlaKnn::new(&rt).expect("compile knn artifact");
+    let mut rng = Rng::new(1);
+    let (n, d, k) = (300, 20, 10);
+    let data: Vec<f32> = (0..n * d).map(|_| rng.next_gaussian() as f32).collect();
+    let pool = ThreadPool::new(2);
+    let got: acc_tsne::knn::NeighborLists<f32> = eng.search(&pool, &data, n, d, k);
+    let want = knn_reference(&data, n, d, k);
+    let mut mismatches = 0;
+    for i in 0..n {
+        for j in 0..k {
+            // f32 distance ties can reorder neighbors; compare distances.
+            let g = got.distances_sq[i * k + j];
+            let w = want.distances_sq[i * k + j];
+            if (g - w).abs() > 1e-3 * (1.0 + w.abs()) {
+                mismatches += 1;
+            }
+        }
+    }
+    assert!(
+        mismatches <= n * k / 200,
+        "xla knn disagrees with reference on {mismatches}/{} entries",
+        n * k
+    );
+}
+
+#[test]
+fn xla_attractive_matches_native() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let eng = XlaAttractive::new(&rt).expect("compile attractive artifact");
+    let mut rng = Rng::new(2);
+    let (n, d) = (500, 6);
+    let data: Vec<f64> = (0..n * d).map(|_| rng.next_gaussian()).collect();
+    let pool = ThreadPool::new(4);
+    let knn = acc_tsne::knn::BruteForceKnn::default().search(&pool, &data, n, d, 30);
+    let cond = binary_search_perplexity(&pool, &knn, 10.0, ParMode::Parallel);
+    let p = symmetrize(&pool, &knn, &cond.p);
+    let y: Vec<f64> = (0..2 * n).map(|_| rng.next_gaussian()).collect();
+
+    let mut native = vec![0.0f64; 2 * n];
+    attractive_forces(&pool, &p, &y, Variant::Scalar, &mut native);
+    let mut xla_out = vec![0.0f64; 2 * n];
+    AttractiveEngine::<f64>::compute(&eng, &pool, &p, &y, &mut xla_out);
+
+    for i in 0..2 * n {
+        assert!(
+            (native[i] - xla_out[i]).abs() < 1e-4 * (1.0 + native[i].abs()),
+            "idx {i}: native {} vs xla {}",
+            native[i],
+            xla_out[i]
+        );
+    }
+}
+
+#[test]
+fn xla_morton_matches_native_prefix() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let eng = XlaMorton::new(&rt).expect("compile morton artifact");
+    let mut rng = Rng::new(3);
+    let n = 1500; // crosses the 1024 batch boundary
+    let pos: Vec<f32> = (0..2 * n).map(|_| rng.next_gaussian() as f32 * 3.0).collect();
+    let pos64: Vec<f64> = pos.iter().map(|&v| v as f64).collect();
+    let pool = ThreadPool::new(2);
+    let root = RootCell::bounding(&pool, &pos64);
+    let codes = eng
+        .encode(&pos, [root.cent[0] as f32, root.cent[1] as f32], root.r_span as f32)
+        .expect("morton artifact execution");
+    assert_eq!(codes.len(), n);
+    // The 32-bit artifact code must equal the top 32 bits of the 64-bit
+    // native code (16 vs 32 bits per dim → shift by 32), modulo f32 grid
+    // rounding at cell boundaries: allow a small mismatch budget.
+    let mut native = vec![0u64; n];
+    acc_tsne::quadtree::morton::encode_points(&pool, &pos64, &root, &mut native);
+    let mismatches = (0..n)
+        .filter(|&i| codes[i] != (native[i] >> 32) as u32)
+        .count();
+    assert!(
+        mismatches < n / 20,
+        "morton artifact disagrees on {mismatches}/{n} points"
+    );
+}
+
+#[test]
+fn xla_repulsive_dense_matches_exact() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let eng = XlaRepulsiveDense::new(&rt).expect("compile repulsive artifact");
+    let mut rng = Rng::new(4);
+    let n = 700;
+    let y: Vec<f32> = (0..2 * n).map(|_| rng.next_gaussian() as f32 * 2.0).collect();
+    let y64: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+    let pool = ThreadPool::new(4);
+    let (raw, z) = eng.exact(&y).expect("repulsive artifact execution");
+    let (want_raw, want_z) = exact_repulsive(&pool, &y64);
+    assert!(
+        ((z as f64) - want_z).abs() < 1e-3 * want_z,
+        "Z {z} vs {want_z}"
+    );
+    for i in 0..2 * n {
+        assert!(
+            ((raw[i] as f64) - want_raw[i]).abs() < 1e-3 * (1.0 + want_raw[i].abs()),
+            "idx {i}: {} vs {}",
+            raw[i],
+            want_raw[i]
+        );
+    }
+}
+
+#[test]
+fn end_to_end_tsne_with_xla_attractive_engine() {
+    // The full L3 pipeline with the L1/L2 attractive artifact on the hot path.
+    let Some(rt) = runtime_or_skip() else { return };
+    let eng = XlaAttractive::new(&rt).expect("compile attractive artifact");
+    let ds = acc_tsne::data::synthetic::gaussian_mixture::<f64>(350, 8, 4, 8.0, 7);
+    let cfg = TsneConfig {
+        perplexity: 10.0,
+        n_iter: 60,
+        n_threads: 4,
+        ..TsneConfig::default()
+    };
+    let r_xla = run_tsne_custom(&ds.points, ds.n, ds.d, &cfg, Implementation::AccTsne, Some(&eng));
+    let r_native = run_tsne_custom(&ds.points, ds.n, ds.d, &cfg, Implementation::AccTsne, None);
+    assert!(r_xla.embedding.iter().all(|v| v.is_finite()));
+    // Same seed, same schedule; only the attractive arithmetic differs (f32
+    // round-trip) → KLs must land close.
+    let rel = (r_xla.kl_divergence - r_native.kl_divergence).abs() / r_native.kl_divergence;
+    assert!(
+        rel < 0.05,
+        "xla-engine KL {} vs native {}",
+        r_xla.kl_divergence,
+        r_native.kl_divergence
+    );
+}

@@ -1,0 +1,255 @@
+//! Property-based tests over the pipeline invariants, using the in-crate
+//! mini-framework (`common::proptest`). Each property runs across dozens of
+//! random seeds with edge-case-biased generators (duplicates, degenerate
+//! geometry, tiny/odd sizes).
+
+use acc_tsne::common::proptest::{check, gen_len, gen_points, Config};
+use acc_tsne::common::rng::Rng;
+use acc_tsne::gradient::exact::exact_repulsive;
+use acc_tsne::gradient::repulsive::repulsive_forces;
+use acc_tsne::knn::{knn_reference, BruteForceKnn, KnnEngine};
+use acc_tsne::parallel::sort::radix_sort_pairs;
+use acc_tsne::parallel::ThreadPool;
+use acc_tsne::perplexity::bsp_row;
+use acc_tsne::quadtree::builder_baseline::build_baseline;
+use acc_tsne::quadtree::builder_morton::build_morton;
+use acc_tsne::quadtree::morton::{quadrant_at, RootCell};
+use acc_tsne::quadtree::summarize::{summarize_parallel, summarize_sequential};
+use acc_tsne::quadtree::tree_stats;
+
+fn pool() -> ThreadPool {
+    ThreadPool::new(4)
+}
+
+#[test]
+fn prop_morton_tree_always_valid() {
+    let pool = pool();
+    check("morton tree valid", Config { cases: 40, ..Config::default() }, |rng| {
+        let n = gen_len(rng, 1, 800);
+        let pos = gen_points(rng, 2 * n, 10.0);
+        let tree = build_morton(&pool, &pos);
+        tree.validate()
+    });
+}
+
+#[test]
+fn prop_baseline_tree_always_valid() {
+    let pool = pool();
+    check("baseline tree valid", Config { cases: 30, ..Config::default() }, |rng| {
+        let n = gen_len(rng, 1, 500);
+        let pos = gen_points(rng, 2 * n, 10.0);
+        let tree = build_baseline(&pool, &pos);
+        tree.validate()
+    });
+}
+
+#[test]
+fn prop_builders_agree_on_leaf_count_and_mass() {
+    let pool = pool();
+    check("builders agree", Config { cases: 25, ..Config::default() }, |rng| {
+        let n = gen_len(rng, 2, 600);
+        let pos = gen_points(rng, 2 * n, 5.0);
+        let a = build_morton(&pool, &pos);
+        let b = build_baseline(&pool, &pos);
+        // identical subdivision rule ⇒ same root mass; leaf sets may differ
+        // only at duplicate chains (documented) — compare total counts.
+        if a.root().count != b.root().count {
+            return Err(format!("mass {} vs {}", a.root().count, b.root().count));
+        }
+        let (sa, sb) = (tree_stats(&a), tree_stats(&b));
+        // depth can differ only when duplicate chains exist (baseline chains
+        // to the cap); if no multi-point leaves, depths must match.
+        if sa.max_leaf_points == 1 && sb.max_leaf_points == 1 && sa.depth != sb.depth {
+            return Err(format!("depth {} vs {} without duplicates", sa.depth, sb.depth));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_summarize_parallel_equals_sequential() {
+    let pool = pool();
+    check("summarize par == seq", Config { cases: 30, ..Config::default() }, |rng| {
+        let n = gen_len(rng, 1, 700);
+        let pos = gen_points(rng, 2 * n, 8.0);
+        let mut a = build_morton(&pool, &pos);
+        let mut b = a.clone();
+        summarize_sequential(&mut a);
+        summarize_parallel(&pool, &mut b);
+        for (x, y) in a.nodes.iter().zip(b.nodes.iter()) {
+            for d in 0..2 {
+                if (x.com[d] - y.com[d]).abs() > 1e-10 {
+                    return Err(format!("com mismatch {} vs {}", x.com[d], y.com[d]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bh_z_bounded_by_pair_count() {
+    // Z = Σ_{i≠j} (1+d²)⁻¹ ∈ (0, n(n-1)] for any geometry, any θ.
+    let pool = pool();
+    check("Z bounds", Config { cases: 30, ..Config::default() }, |rng| {
+        let n = gen_len(rng, 2, 400);
+        let pos = gen_points(rng, 2 * n, 3.0);
+        let theta = rng.next_f64();
+        let mut tree = build_morton(&pool, &pos);
+        summarize_parallel(&pool, &mut tree);
+        let rep = repulsive_forces(&pool, &tree, theta);
+        let bound = (n * (n - 1)) as f64;
+        if !(rep.z > 0.0 && rep.z <= bound * 1.000001) {
+            return Err(format!("Z {} out of (0, {bound}]", rep.z));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bh_converges_to_exact_as_theta_shrinks() {
+    let pool = pool();
+    check("θ→0 convergence", Config { cases: 10, ..Config::default() }, |rng| {
+        let n = 150 + rng.next_below(150);
+        let pos = gen_points(rng, 2 * n, 4.0);
+        let mut tree = build_morton(&pool, &pos);
+        summarize_parallel(&pool, &mut tree);
+        let (want, _) = exact_repulsive(&pool, &pos);
+        let err_at = |theta: f64| {
+            let rep = repulsive_forces(&pool, &tree, theta);
+            let mut num = 0.0;
+            let mut den = 0.0;
+            for i in 0..2 * n {
+                num += (rep.raw[i] - want[i]) * (rep.raw[i] - want[i]);
+                den += want[i] * want[i] + 1e-30;
+            }
+            (num / den).sqrt()
+        };
+        let (e_high, e_low) = (err_at(0.9), err_at(0.1));
+        if e_low > e_high + 1e-12 {
+            return Err(format!("error grew as θ shrank: θ=0.9→{e_high}, θ=0.1→{e_low}"));
+        }
+        if e_low > 0.01 {
+            return Err(format!("θ=0.1 error too large: {e_low}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_knn_blocked_equals_reference() {
+    let pool = pool();
+    check("knn == reference", Config { cases: 15, ..Config::default() }, |rng| {
+        let n = gen_len(rng, 10, 250);
+        let d = gen_len(rng, 1, 12);
+        let k = 1 + rng.next_below((n - 1).min(20));
+        let data = gen_points(rng, n * d, 5.0);
+        let eng = BruteForceKnn {
+            block_q: 1 + rng.next_below(80),
+            block_c: 1 + rng.next_below(300),
+        };
+        let got = eng.search(&pool, &data, n, d, k);
+        let want = knn_reference(&data, n, d, k);
+        for i in 0..n {
+            for j in 0..k {
+                let (g, w) = (got.distances_sq[i * k + j], want.distances_sq[i * k + j]);
+                if (g - w).abs() > 1e-9 * (1.0 + w.abs()) {
+                    return Err(format!("row {i} pos {j}: {g} vs {w}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bsp_row_normalized_and_on_target() {
+    check("bsp row", Config { cases: 60, ..Config::default() }, |rng| {
+        let k = gen_len(rng, 3, 60);
+        let u = 1.5 + rng.next_f64() * (k as f64 * 0.8 - 1.5);
+        let dists: Vec<f64> = (0..k).map(|_| rng.next_f64() * 20.0 + 1e-3).collect();
+        let mut out = vec![0.0; k];
+        bsp_row(&dists, u, &mut out);
+        let sum: f64 = out.iter().sum();
+        if (sum - 1.0).abs() > 1e-9 {
+            return Err(format!("row not normalized: {sum}"));
+        }
+        let h: f64 = out.iter().filter(|&&p| p > 0.0).map(|&p| -p * p.ln()).sum();
+        let perp = h.exp();
+        if (perp - u).abs() > 0.05 * u {
+            return Err(format!("perplexity {perp} vs target {u}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_radix_sort_equals_std_sort() {
+    let pool = pool();
+    check("radix == std", Config { cases: 20, ..Config::default() }, |rng| {
+        let n = gen_len(rng, 0, 30_000);
+        let mask = if rng.next_below(2) == 0 { u64::MAX } else { 0xFFFF };
+        let keys: Vec<u64> = (0..n).map(|_| rng.next_u64() & mask).collect();
+        let mut k = keys.clone();
+        let mut p: Vec<u32> = (0..n as u32).collect();
+        radix_sort_pairs(&pool, &mut k, &mut p);
+        let mut want = keys.clone();
+        want.sort_unstable();
+        if k != want {
+            return Err("keys not sorted".into());
+        }
+        for i in 0..n {
+            if keys[p[i] as usize] != k[i] {
+                return Err(format!("payload broken at {i}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_morton_codes_respect_quadrant_geometry() {
+    let pool = pool();
+    check("morton quadrants", Config { cases: 40, ..Config::default() }, |rng| {
+        let n = gen_len(rng, 1, 200);
+        let pos = gen_points(rng, 2 * n, 6.0);
+        let root = RootCell::bounding(&pool, &pos);
+        for i in 0..n {
+            let (x, y) = (pos[2 * i], pos[2 * i + 1]);
+            let code = root.encode(x, y);
+            let q = quadrant_at(code, 0);
+            let want = usize::from(x >= root.cent[0]) | (usize::from(y >= root.cent[1]) << 1);
+            // boundary points may land either side of the integer grid line
+            let on_boundary = (x - root.cent[0]).abs() < 1e-9 || (y - root.cent[1]).abs() < 1e-9;
+            if q != want && !on_boundary {
+                return Err(format!("point ({x},{y}): quadrant {q} vs {want}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_forces_antisymmetric_for_two_points() {
+    // Newton's third law at the BH level for the 2-point system.
+    let pool = pool();
+    check("pairwise antisymmetry", Config { cases: 50, ..Config::default() }, |rng| {
+        let mut rng2 = Rng::new(rng.next_u64());
+        let pos = vec![
+            rng2.next_gaussian(),
+            rng2.next_gaussian(),
+            rng2.next_gaussian(),
+            rng2.next_gaussian(),
+        ];
+        let mut tree = build_morton(&pool, &pos);
+        summarize_sequential(&mut tree);
+        let rep = repulsive_forces(&pool, &tree, 0.5);
+        for d in 0..2 {
+            let (a, b) = (rep.raw[d], rep.raw[2 + d]);
+            if (a + b).abs() > 1e-12 * (1.0 + a.abs()) {
+                return Err(format!("dim {d}: {a} + {b} != 0"));
+            }
+        }
+        Ok(())
+    });
+}
