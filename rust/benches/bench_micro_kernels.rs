@@ -5,12 +5,16 @@
 //!   summarize: sequential vs parallel;
 //!   attractive: scalar vs +prefetch vs +SIMD;
 //!   repulsive: baseline-tree layout vs morton (Z-order) layout;
+//!   repulsive: scalar vs SIMD-tiled (SoA traversal view, masked Eq. 9) —
+//!     also snapshotted to BENCH_repulsive.json for the perf trajectory;
 //!   BSP: sequential vs parallel.
 
 use acc_tsne::common::bench::Bencher;
 use acc_tsne::common::rng::Rng;
 use acc_tsne::gradient::attractive::{attractive_forces, Variant};
-use acc_tsne::gradient::repulsive::repulsive_forces;
+use acc_tsne::gradient::repulsive::{
+    repulsive_forces, repulsive_forces_scalar_into, repulsive_forces_tiled_into,
+};
 use acc_tsne::knn::{BruteForceKnn, KnnEngine};
 use acc_tsne::parallel::sort::radix_sort_pairs;
 use acc_tsne::parallel::ThreadPool;
@@ -19,6 +23,7 @@ use acc_tsne::quadtree::builder_baseline::build_baseline;
 use acc_tsne::quadtree::builder_morton::build_morton;
 use acc_tsne::quadtree::morton::{encode_points, encode_points_simd, RootCell};
 use acc_tsne::quadtree::summarize::{summarize_parallel, summarize_sequential};
+use acc_tsne::quadtree::view::TraversalView;
 use acc_tsne::sparse::symmetrize;
 
 fn env_n() -> usize {
@@ -97,6 +102,55 @@ fn main() {
     b.bench("baseline_tree_bfs_layout", || repulsive_forces(&pool, &tb, 0.5).z);
     b.bench("morton_tree_zorder_layout", || repulsive_forces(&pool, &tm, 0.5).z);
     b.report();
+
+    // --- repulsive kernel: scalar DFS vs SIMD-tiled over the SoA view
+    // (the paper's §3.5 headline kernel; snapshot goes to BENCH_repulsive.json
+    // so later PRs have a perf trajectory).
+    let mut rep_out = vec![0.0f64; 2 * n];
+    let mut view = TraversalView::new();
+    view.rebuild_parallel(&pool, &tm);
+    let mut b = Bencher::new("repulsive_kernel").sampling(1, 8, 8.0);
+    let s_scalar = b.bench("scalar", || {
+        repulsive_forces_scalar_into(&pool, &tm, 0.5, &mut rep_out)
+    });
+    let s_tiled = b.bench("simd_tiled", || {
+        repulsive_forces_tiled_into(&pool, &tm, &view, 0.5, &mut rep_out)
+    });
+    let s_tiled_build = b.bench("simd_tiled+view_rebuild", || {
+        view.rebuild_parallel(&pool, &tm);
+        repulsive_forces_tiled_into(&pool, &tm, &view, 0.5, &mut rep_out)
+    });
+    b.bench("scalar-1t", || {
+        repulsive_forces_scalar_into(&seq_pool, &tm, 0.5, &mut rep_out)
+    });
+    b.bench("simd_tiled-1t", || {
+        repulsive_forces_tiled_into(&seq_pool, &tm, &view, 0.5, &mut rep_out)
+    });
+    b.report();
+    let mut snapshot = String::from("{\n");
+    snapshot.push_str("  \"bench\": \"repulsive_kernel\",\n");
+    snapshot.push_str(&format!("  \"n\": {n},\n"));
+    snapshot.push_str(&format!("  \"threads\": {},\n", pool.n_threads()));
+    snapshot.push_str("  \"theta\": 0.5,\n");
+    snapshot.push_str(&format!("  \"scalar_mean_s\": {:.6e},\n", s_scalar.mean));
+    snapshot.push_str(&format!("  \"simd_tiled_mean_s\": {:.6e},\n", s_tiled.mean));
+    snapshot.push_str(&format!(
+        "  \"simd_tiled_with_view_rebuild_mean_s\": {:.6e},\n",
+        s_tiled_build.mean
+    ));
+    snapshot.push_str(&format!(
+        "  \"speedup_kernel\": {:.3},\n",
+        s_scalar.mean / s_tiled.mean.max(1e-12)
+    ));
+    snapshot.push_str(&format!(
+        "  \"speedup_incl_view\": {:.3}\n}}\n",
+        s_scalar.mean / s_tiled_build.mean.max(1e-12)
+    ));
+    if let Err(e) = std::fs::write("BENCH_repulsive.json", &snapshot) {
+        eprintln!("warning: could not write BENCH_repulsive.json: {e}");
+    } else {
+        println!("[json] BENCH_repulsive.json");
+    }
 
     // --- attractive variants (needs a real sparse P)
     let an = n.min(50_000);

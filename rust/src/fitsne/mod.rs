@@ -49,9 +49,28 @@ const N_TERMS: usize = 3; // (1, x, y)
 /// Compute FIt-SNE repulsive accumulations (same contract as the BH
 /// [`crate::gradient::repulsive::repulsive_forces`]): raw forces per point in
 /// original order plus the ordered-pair normalization Z.
-pub fn fitsne_repulsive<T: Real>(pool: &ThreadPool, y: &[T], params: &FitsneParams) -> Repulsion<T> {
+pub fn fitsne_repulsive<T: Real>(
+    pool: &ThreadPool,
+    y: &[T],
+    params: &FitsneParams,
+) -> Repulsion<T> {
+    let mut raw = vec![T::ZERO; y.len()];
+    let z = fitsne_repulsive_into(pool, y, params, &mut raw);
+    Repulsion { raw, z }
+}
+
+/// As [`fitsne_repulsive`] but writing into a caller-owned `raw` buffer
+/// (`2n`, original order); returns Z. The pipeline's hot loop reuses one
+/// buffer across iterations instead of allocating `2n` floats per step.
+pub fn fitsne_repulsive_into<T: Real>(
+    pool: &ThreadPool,
+    y: &[T],
+    params: &FitsneParams,
+    raw: &mut [T],
+) -> T {
     let n = y.len() / 2;
     assert!(n > 0);
+    assert_eq!(raw.len(), 2 * n, "raw buffer must be 2n");
     // Bounding box (shared helper from the quadtree's RootCell).
     let root = crate::quadtree::morton::RootCell::bounding(pool, y);
     let span = 2.0 * root.r_span;
@@ -156,10 +175,9 @@ pub fn fitsne_repulsive<T: Real>(pool: &ThreadPool, y: &[T], params: &FitsnePara
     }
 
     // --- Gather potentials back to points and assemble forces + Z.
-    let mut raw = vec![T::ZERO; 2 * n];
     let mut z_parts = vec![0.0f64; nt];
     {
-        let rs = SyncSlice::new(&mut raw);
+        let rs = SyncSlice::new(raw);
         let zs = SyncSlice::new(&mut z_parts);
         let potentials = &potentials;
         pool.broadcast(|tid| {
@@ -199,10 +217,7 @@ pub fn fitsne_repulsive<T: Real>(pool: &ThreadPool, y: &[T], params: &FitsnePara
         });
     }
     let z: f64 = z_parts.iter().sum();
-    Repulsion {
-        raw,
-        z: T::from_f64(z.max(f64::MIN_POSITIVE)),
-    }
+    T::from_f64(z.max(f64::MIN_POSITIVE))
 }
 
 /// Interval index and relative position of coordinate `v`.

@@ -40,6 +40,10 @@ pub mod metrics;
 pub mod parallel;
 pub mod perplexity;
 pub mod quadtree;
+/// PJRT/XLA execution of the AOT artifacts. Requires the `xla` cargo feature
+/// (and vendored `xla-rs` + `anyhow` crates, unavailable on the offline
+/// mirror) — the native pipeline never needs it.
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod sparse;
 pub mod tsne;

@@ -16,7 +16,7 @@ use acc_tsne::data::datasets::PaperDataset;
 use acc_tsne::eval::{experiments, ExpConfig};
 use acc_tsne::parallel::pool::available_cores;
 use acc_tsne::parallel::ThreadPool;
-use acc_tsne::tsne::{run_tsne, Implementation, TsneConfig};
+use acc_tsne::tsne::{run_tsne, Implementation, RepulsiveVariant, TsneConfig};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -31,7 +31,7 @@ fn main() {
 
 const COMMON_FLAGS: &[&str] = &[
     "dataset", "impl", "scale", "iters", "threads", "seed", "out", "plot", "f32", "sweep",
-    "perplexity", "theta",
+    "perplexity", "theta", "repulsive",
 ];
 
 fn exp_config(args: &Args) -> Result<ExpConfig, String> {
@@ -99,12 +99,25 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let imp = Implementation::from_name(args.get("impl").unwrap_or("acc-t-sne"))
         .ok_or_else(|| "unknown --impl (sklearn|multicore|daal4py|acc-t-sne|fit-sne)".to_string())?;
     let exp = exp_config(args)?;
+    let repulsive = match args.get("repulsive") {
+        None => None,
+        Some(s) => Some(RepulsiveVariant::from_name(s).ok_or_else(|| {
+            format!("unknown --repulsive '{s}' (scalar|simd-tiled)")
+        })?),
+    };
+    if repulsive.is_some() && imp == Implementation::FitSne {
+        return Err(
+            "--repulsive has no effect with --impl fit-sne (FFT replaces the BH kernel)"
+                .to_string(),
+        );
+    }
     let cfg = TsneConfig {
         n_iter: exp.n_iter,
         seed: exp.seed,
         n_threads: exp.max_threads,
         perplexity: args.get_parse("perplexity", 30.0)?,
         theta: args.get_parse("theta", 0.5)?,
+        repulsive,
         ..TsneConfig::default()
     };
     let pool = ThreadPool::new(exp.resolved_threads());
@@ -172,7 +185,8 @@ fn cmd_info() -> Result<(), String> {
 
 const HELP: &str = "\
 acc-tsne <subcommand> [flags]
-  run        one t-SNE run  (--dataset --impl --scale --iters --threads --out --plot --f32)
+  run        one t-SNE run  (--dataset --impl --scale --iters --threads --out --plot --f32
+             --repulsive scalar|simd-tiled)
   compare    Fig 4 + Table 3 across datasets and implementations
   scaling    Fig 5 end-to-end multicore scaling
   steps      Tables 5/6 per-step comparison (--sweep adds Fig 6)

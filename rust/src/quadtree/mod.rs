@@ -15,11 +15,19 @@
 //!
 //! [`summarize`] computes centers-of-mass bottom-up, sequential (daal4py) or
 //! parallel (Acc-t-SNE) — step 4 of the pipeline.
+//!
+//! [`view`] flattens a summarized tree into the SoA [`view::TraversalView`]
+//! (`com_x[] / com_y[] / width_sq[] / count[]` plus dense `u32` child and
+//! leaf-range arrays): the layout the tile-batched SIMD repulsive kernel
+//! ([`crate::gradient::repulsive`]) traverses. The AoS [`Node`] stays the
+//! build/summarize representation; the view is materialized once per
+//! iteration after summarize and its buffers are reused.
 
 pub mod builder_baseline;
 pub mod builder_morton;
 pub mod morton;
 pub mod summarize;
+pub mod view;
 
 use crate::common::float::Real;
 

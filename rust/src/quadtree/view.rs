@@ -1,0 +1,237 @@
+//! Flat SoA "traversal view" of a summarized [`QuadTree`] — the layout the
+//! tile-batched repulsive kernel consumes.
+//!
+//! The AoS [`Node`](super::Node) struct is convenient to build but hostile to
+//! a vectorized traversal: every Eq. 9 test touches a 70+-byte struct to read
+//! four scalars. The view scatters exactly the traversal-hot fields into
+//! dense parallel arrays indexed by node id:
+//!
+//! - `com_x` / `com_y` — center of mass (needs [`summarize`](super::summarize)
+//!   to have run);
+//! - `width_sq` — precomputed `r_cell²`, the left side of Eq. 9 (the scalar
+//!   kernel recomputes `w·w` at every visit);
+//! - `count` — subtree mass, pre-converted to the float type so the kernel
+//!   multiplies without a per-visit int→float cast;
+//! - `children` — 4 dense `u32` slots per node ([`NO_NODE`] = absent);
+//! - `leaf_start` / `leaf_end` — gathered-point range of a leaf (empty range
+//!   for internal nodes, so `is_leaf` is one comparison).
+//!
+//! One node's view data spans ≤ 48 bytes across six arrays instead of one
+//! scattered struct read, and the splat loads of the tile kernel hit at most
+//! three cache lines per visited node. The view is materialized once per
+//! iteration (after summarize) and the buffers are reused across iterations
+//! via [`TraversalView::rebuild`].
+
+use super::{QuadTree, NO_CHILD};
+use crate::common::float::Real;
+use crate::parallel::{parallel_for, Schedule, SyncSlice, ThreadPool};
+
+/// Dense-array sentinel for "no child" (the SoA analog of [`NO_CHILD`]).
+pub const NO_NODE: u32 = u32::MAX;
+
+/// SoA mirror of the traversal-hot node fields. See the module docs.
+#[derive(Clone, Debug)]
+pub struct TraversalView<T: Real> {
+    pub com_x: Vec<T>,
+    pub com_y: Vec<T>,
+    pub width_sq: Vec<T>,
+    /// Subtree point count as the kernel's float type.
+    pub count: Vec<T>,
+    /// `children[4*i..4*i+4]`, [`NO_NODE`] where absent.
+    pub children: Vec<u32>,
+    /// Leaf point range into `QuadTree::point_pos`; `start == end` ⇔ internal.
+    pub leaf_start: Vec<u32>,
+    pub leaf_end: Vec<u32>,
+}
+
+impl<T: Real> Default for TraversalView<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Real> TraversalView<T> {
+    /// Empty view; fill with [`rebuild`](Self::rebuild) before use.
+    pub fn new() -> Self {
+        TraversalView {
+            com_x: Vec::new(),
+            com_y: Vec::new(),
+            width_sq: Vec::new(),
+            count: Vec::new(),
+            children: Vec::new(),
+            leaf_start: Vec::new(),
+            leaf_end: Vec::new(),
+        }
+    }
+
+    /// One-shot construction from a summarized tree.
+    pub fn of(tree: &QuadTree<T>) -> Self {
+        let mut v = Self::new();
+        v.rebuild(tree);
+        v
+    }
+
+    #[inline(always)]
+    pub fn n_nodes(&self) -> usize {
+        self.width_sq.len()
+    }
+
+    #[inline(always)]
+    pub fn is_leaf(&self, ni: usize) -> bool {
+        self.leaf_start[ni] != self.leaf_end[ni]
+    }
+
+    /// Re-materialize from `tree` (sequential), reusing buffer capacity.
+    /// `tree` must already be summarized — `com` is read as-is.
+    pub fn rebuild(&mut self, tree: &QuadTree<T>) {
+        self.resize_for(tree.nodes.len());
+        for ni in 0..tree.nodes.len() {
+            self.fill_node(ni, tree);
+        }
+    }
+
+    /// Parallel re-materialization (the per-iteration path: the view is
+    /// rebuilt after every tree build + summarize).
+    pub fn rebuild_parallel(&mut self, pool: &ThreadPool, tree: &QuadTree<T>) {
+        let n_nodes = tree.nodes.len();
+        if pool.n_threads() == 1 || n_nodes < 4096 {
+            self.rebuild(tree);
+            return;
+        }
+        self.resize_for(n_nodes);
+        // Split borrows field-by-field so threads can scatter disjoint slots.
+        let cx = SyncSlice::new(&mut self.com_x);
+        let cy = SyncSlice::new(&mut self.com_y);
+        let wsq = SyncSlice::new(&mut self.width_sq);
+        let cnt = SyncSlice::new(&mut self.count);
+        let ch = SyncSlice::new(&mut self.children);
+        let ls = SyncSlice::new(&mut self.leaf_start);
+        let le = SyncSlice::new(&mut self.leaf_end);
+        parallel_for(pool, n_nodes, Schedule::Static, |range| {
+            for ni in range {
+                let node = &tree.nodes[ni];
+                // disjoint: slot ni (and 4ni..4ni+4) per node
+                unsafe {
+                    *cx.get_mut(ni) = node.com[0];
+                    *cy.get_mut(ni) = node.com[1];
+                    *wsq.get_mut(ni) = node.width * node.width;
+                    *cnt.get_mut(ni) = T::from_usize(node.count as usize);
+                    for (q, &c) in node.children.iter().enumerate() {
+                        *ch.get_mut(4 * ni + q) = if c == NO_CHILD { NO_NODE } else { c as u32 };
+                    }
+                    let leaf = node.is_leaf();
+                    *ls.get_mut(ni) = if leaf { node.point_start } else { 0 };
+                    *le.get_mut(ni) = if leaf { node.point_end } else { 0 };
+                }
+            }
+        });
+    }
+
+    fn resize_for(&mut self, n_nodes: usize) {
+        // Every slot is overwritten; resize only adjusts lengths (capacity is
+        // retained across iterations, so steady-state rebuilds never allocate).
+        self.com_x.resize(n_nodes, T::ZERO);
+        self.com_y.resize(n_nodes, T::ZERO);
+        self.width_sq.resize(n_nodes, T::ZERO);
+        self.count.resize(n_nodes, T::ZERO);
+        self.children.resize(4 * n_nodes, NO_NODE);
+        self.leaf_start.resize(n_nodes, 0);
+        self.leaf_end.resize(n_nodes, 0);
+    }
+
+    #[inline]
+    fn fill_node(&mut self, ni: usize, tree: &QuadTree<T>) {
+        let node = &tree.nodes[ni];
+        self.com_x[ni] = node.com[0];
+        self.com_y[ni] = node.com[1];
+        self.width_sq[ni] = node.width * node.width;
+        self.count[ni] = T::from_usize(node.count as usize);
+        for (q, &c) in node.children.iter().enumerate() {
+            self.children[4 * ni + q] = if c == NO_CHILD { NO_NODE } else { c as u32 };
+        }
+        let leaf = node.is_leaf();
+        self.leaf_start[ni] = if leaf { node.point_start } else { 0 };
+        self.leaf_end[ni] = if leaf { node.point_end } else { 0 };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::builder_morton::build_morton;
+    use super::super::summarize::summarize_parallel;
+    use super::*;
+    use crate::common::rng::Rng;
+    use crate::parallel::ThreadPool;
+
+    fn summarized_tree(n: usize, seed: u64, threads: usize) -> (ThreadPool, QuadTree<f64>) {
+        let mut rng = Rng::new(seed);
+        let pos: Vec<f64> = (0..2 * n).map(|_| rng.next_gaussian() * 4.0).collect();
+        let pool = ThreadPool::new(threads);
+        let mut tree = build_morton(&pool, &pos);
+        summarize_parallel(&pool, &mut tree);
+        (pool, tree)
+    }
+
+    fn assert_view_matches(view: &TraversalView<f64>, tree: &QuadTree<f64>) {
+        assert_eq!(view.n_nodes(), tree.nodes.len());
+        for (ni, node) in tree.nodes.iter().enumerate() {
+            assert_eq!(view.com_x[ni], node.com[0], "node {ni} com_x");
+            assert_eq!(view.com_y[ni], node.com[1], "node {ni} com_y");
+            assert_eq!(view.width_sq[ni], node.width * node.width, "node {ni}");
+            assert_eq!(view.count[ni], node.count as f64, "node {ni} count");
+            assert_eq!(view.is_leaf(ni), node.is_leaf(), "node {ni} leafness");
+            for q in 0..4 {
+                let want = if node.children[q] == NO_CHILD {
+                    NO_NODE
+                } else {
+                    node.children[q] as u32
+                };
+                assert_eq!(view.children[4 * ni + q], want, "node {ni} child {q}");
+            }
+            if node.is_leaf() {
+                assert_eq!(view.leaf_start[ni], node.point_start);
+                assert_eq!(view.leaf_end[ni], node.point_end);
+            }
+        }
+    }
+
+    #[test]
+    fn view_mirrors_tree_fields() {
+        let (_, tree) = summarized_tree(700, 1, 4);
+        let view = TraversalView::of(&tree);
+        assert_view_matches(&view, &tree);
+    }
+
+    #[test]
+    fn parallel_rebuild_matches_sequential() {
+        let (pool, tree) = summarized_tree(5000, 2, 8);
+        let seq = TraversalView::of(&tree);
+        let mut par = TraversalView::new();
+        par.rebuild_parallel(&pool, &tree);
+        assert_view_matches(&par, &tree);
+        assert_eq!(seq.com_x, par.com_x);
+        assert_eq!(seq.children, par.children);
+    }
+
+    #[test]
+    fn rebuild_reuses_buffers_across_shrink_and_grow() {
+        let (_, big) = summarized_tree(3000, 3, 2);
+        let (_, small) = summarized_tree(50, 4, 2);
+        let mut view = TraversalView::of(&big);
+        view.rebuild(&small);
+        assert_view_matches(&view, &small);
+        view.rebuild(&big);
+        assert_view_matches(&view, &big);
+    }
+
+    #[test]
+    fn single_point_tree_is_one_leaf() {
+        let pool = ThreadPool::new(1);
+        let mut tree = build_morton(&pool, &[0.5f64, -0.5]);
+        summarize_parallel(&pool, &mut tree);
+        let view = TraversalView::of(&tree);
+        assert_eq!(view.n_nodes(), 1);
+        assert!(view.is_leaf(0));
+        assert_eq!((view.leaf_start[0], view.leaf_end[0]), (0, 1));
+    }
+}

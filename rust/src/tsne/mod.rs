@@ -23,12 +23,15 @@ pub use pipeline::{run_tsne, run_tsne_custom, run_tsne_with_p, AttractiveEngine,
 use crate::common::timer::StepTimes;
 use crate::common::float::Real;
 use crate::gradient::attractive::AttractiveSimd;
+use crate::gradient::repulsive::RepulsiveSimd;
 use crate::gradient::update::UpdateParams;
 
-/// Crate-wide scalar bound: a [`Real`] with a SIMD attractive kernel
-/// (`f32` and `f64`).
-pub trait Scalar: Real + AttractiveSimd {}
-impl<T: Real + AttractiveSimd> Scalar for T {}
+pub use crate::gradient::repulsive::RepulsiveVariant;
+
+/// Crate-wide scalar bound: a [`Real`] with SIMD attractive and tile-batched
+/// repulsive kernels (`f32` and `f64`).
+pub trait Scalar: Real + AttractiveSimd + RepulsiveSimd {}
+impl<T: Real + AttractiveSimd + RepulsiveSimd> Scalar for T {}
 
 /// Which published implementation's architecture a run models.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -86,6 +89,11 @@ pub struct TsneConfig {
     /// Initialize the embedding from the data's top-2 principal components
     /// (sklearn `init="pca"`) instead of N(0, 1e-4) random.
     pub init_pca: bool,
+    /// Repulsive kernel override; `None` uses the implementation flavor's
+    /// default (SIMD-tiled for [`Implementation::AccTsne`], scalar elsewhere).
+    /// Ignored by [`Implementation::FitSne`], whose FFT pipeline replaces the
+    /// BH traversal entirely (the CLI rejects the combination).
+    pub repulsive: Option<RepulsiveVariant>,
 }
 
 impl Default for TsneConfig {
@@ -99,6 +107,7 @@ impl Default for TsneConfig {
             update: UpdateParams::default(),
             collect_step_times: true,
             init_pca: false,
+            repulsive: None,
         }
     }
 }
@@ -136,5 +145,14 @@ mod tests {
         assert_eq!(c.n_iter, 1000);
         assert_eq!(c.update.early_exaggeration, 12.0);
         assert_eq!(c.update.exaggeration_iters, 250);
+        assert_eq!(c.repulsive, None);
+    }
+
+    #[test]
+    fn repulsive_variant_names_roundtrip() {
+        for v in [RepulsiveVariant::Scalar, RepulsiveVariant::SimdTiled] {
+            assert_eq!(RepulsiveVariant::from_name(v.name()), Some(v));
+        }
+        assert_eq!(RepulsiveVariant::from_name("bogus"), None);
     }
 }

@@ -3,10 +3,10 @@
 
 use super::{Implementation, Scalar, TsneConfig, TsneResult};
 use crate::common::timer::{Step, StepTimes};
-use crate::fitsne::{fitsne_repulsive, FitsneParams};
+use crate::fitsne::{fitsne_repulsive_into, FitsneParams};
 use crate::gradient::attractive::{attractive_forces, Variant};
 use crate::gradient::exact::kl_with_z;
-use crate::gradient::repulsive::{repulsive_forces, Repulsion};
+use crate::gradient::repulsive::{repulsive_forces_into, RepulsiveVariant};
 use crate::gradient::update::{random_init, Optimizer};
 use crate::gradient::combine_gradient;
 use crate::knn::{BruteForceKnn, KnnEngine, NeighborLists};
@@ -15,6 +15,7 @@ use crate::perplexity::{binary_search_perplexity, ParMode};
 use crate::quadtree::builder_baseline::build_baseline;
 use crate::quadtree::builder_morton::build_morton;
 use crate::quadtree::summarize::{summarize_parallel, summarize_sequential};
+use crate::quadtree::view::TraversalView;
 use crate::sparse::{symmetrize, CsrMatrix};
 
 /// Pluggable attractive-force engine: native SIMD/scalar variants or the
@@ -49,6 +50,7 @@ struct Flavor {
     tree_parallel: bool,
     summarize_parallel: bool,
     attractive_variant: Variant,
+    repulsive_variant: RepulsiveVariant,
     forces_parallel: bool,
     fft_repulsion: bool,
 }
@@ -62,6 +64,7 @@ fn flavor(imp: Implementation) -> Flavor {
             tree_parallel: false,
             summarize_parallel: false,
             attractive_variant: Variant::Scalar,
+            repulsive_variant: RepulsiveVariant::Scalar,
             forces_parallel: false,
             fft_repulsion: false,
         },
@@ -72,6 +75,7 @@ fn flavor(imp: Implementation) -> Flavor {
             tree_parallel: false,
             summarize_parallel: false,
             attractive_variant: Variant::Scalar,
+            repulsive_variant: RepulsiveVariant::Scalar,
             forces_parallel: true,
             fft_repulsion: false,
         },
@@ -82,6 +86,7 @@ fn flavor(imp: Implementation) -> Flavor {
             tree_parallel: false,
             summarize_parallel: false,
             attractive_variant: Variant::Scalar,
+            repulsive_variant: RepulsiveVariant::Scalar,
             forces_parallel: true,
             fft_repulsion: false,
         },
@@ -92,6 +97,7 @@ fn flavor(imp: Implementation) -> Flavor {
             tree_parallel: true,
             summarize_parallel: true,
             attractive_variant: Variant::Simd,
+            repulsive_variant: RepulsiveVariant::SimdTiled,
             forces_parallel: true,
             fft_repulsion: false,
         },
@@ -102,6 +108,7 @@ fn flavor(imp: Implementation) -> Flavor {
             tree_parallel: false,
             summarize_parallel: false,
             attractive_variant: Variant::Scalar,
+            repulsive_variant: RepulsiveVariant::Scalar,
             forces_parallel: true,
             fft_repulsion: true,
         },
@@ -231,17 +238,25 @@ fn gradient_loop<T: Scalar>(
         None => &native_engine,
     };
 
+    let rep_variant = cfg.repulsive.unwrap_or(fl.repulsive_variant);
     let mut y = init.unwrap_or_else(|| random_init::<T>(n, cfg.seed));
     let mut opt = Optimizer::<T>::new(n, cfg.update);
     let mut attr = vec![T::ZERO; 2 * n];
     let mut grad = vec![T::ZERO; 2 * n];
+    // Caller-owned repulsive buffer + SoA view: the hot loop allocates
+    // nothing per iteration for the repulsive step (the buffers and the
+    // view's arrays are reused; only the tree itself is rebuilt).
+    let mut rep_raw = vec![T::ZERO; 2 * n];
+    let mut view: TraversalView<T> = TraversalView::new();
     let fit_params = FitsneParams::default();
     let mut last_z = T::ONE;
 
     for iter in 0..cfg.n_iter {
-        let rep: Repulsion<T> = if fl.fft_repulsion {
+        let z: T = if fl.fft_repulsion {
             // FIt-SNE path: no tree; the FFT pipeline is the repulsive step.
-            times.time(Step::Repulsive, || fitsne_repulsive(force_pool, &y, &fit_params))
+            times.time(Step::Repulsive, || {
+                fitsne_repulsive_into(force_pool, &y, &fit_params, &mut rep_raw)
+            })
         } else {
             // Steps 3–4: quadtree + summarization.
             let mut tree = times.time(Step::TreeBuild, || {
@@ -258,10 +273,20 @@ fn gradient_loop<T: Scalar>(
                     summarize_sequential(&mut tree)
                 }
             });
-            // Step 6: repulsive.
-            times.time(Step::Repulsive, || repulsive_forces(force_pool, &tree, cfg.theta))
+            // Step 6: repulsive (view materialization charged to this step —
+            // it exists only to feed the tiled kernel).
+            times.time(Step::Repulsive, || {
+                let v = match rep_variant {
+                    RepulsiveVariant::Scalar => None,
+                    RepulsiveVariant::SimdTiled => {
+                        view.rebuild_parallel(force_pool, &tree);
+                        Some(&view)
+                    }
+                };
+                repulsive_forces_into(force_pool, &tree, v, cfg.theta, rep_variant, &mut rep_raw)
+            })
         };
-        last_z = rep.z;
+        last_z = z;
 
         // Step 5: attractive.
         times.time(Step::Attractive, || attractive.compute(force_pool, p, &y, &mut attr));
@@ -269,7 +294,7 @@ fn gradient_loop<T: Scalar>(
         // Update.
         times.time(Step::Update, || {
             let exag = opt.exaggeration(iter);
-            combine_gradient(pool, &attr, &rep.raw, rep.z, exag, &mut grad);
+            combine_gradient(pool, &attr, &rep_raw, z, exag, &mut grad);
             opt.step(pool, iter, &grad, &mut y);
         });
     }
@@ -384,6 +409,30 @@ mod tests {
         let rel = (r_pca.kl_divergence - r_rand.kl_divergence).abs()
             / r_rand.kl_divergence.max(r_pca.kl_divergence);
         assert!(rel < 0.5, "pca {} vs random {}", r_pca.kl_divergence, r_rand.kl_divergence);
+    }
+
+    #[test]
+    fn repulsive_variants_agree_through_pipeline() {
+        // Full-pipeline parity over a short horizon: the kernels agree to FP
+        // noise per iteration, so 10 descent steps cannot meaningfully
+        // diverge (a long horizon would — descent is chaotic — which is why
+        // this is NOT a convergence comparison). Also exercises the tiled
+        // path's view/buffer reuse across iterations inside run_tsne.
+        let ds = gaussian_mixture::<f64>(400, 8, 4, 8.0, 11);
+        let mut cfg = quick_cfg(10);
+        cfg.repulsive = Some(RepulsiveVariant::Scalar);
+        let a = run_tsne(&ds.points, ds.n, ds.d, &cfg, Implementation::AccTsne);
+        cfg.repulsive = Some(RepulsiveVariant::SimdTiled);
+        let b = run_tsne(&ds.points, ds.n, ds.d, &cfg, Implementation::AccTsne);
+        assert!(a.embedding.iter().all(|v| v.is_finite()));
+        for i in 0..a.embedding.len() {
+            assert!(
+                (a.embedding[i] - b.embedding[i]).abs() < 1e-6 * (1.0 + a.embedding[i].abs()),
+                "idx {i}: scalar {} vs tiled {}",
+                a.embedding[i],
+                b.embedding[i]
+            );
+        }
     }
 
     #[test]

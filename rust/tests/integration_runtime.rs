@@ -3,7 +3,9 @@
 //! implementations — the three-layer composition proof.
 //!
 //! Requires `make artifacts` (skips with a message otherwise, so `cargo test`
-//! works on a fresh checkout).
+//! works on a fresh checkout) and the `xla` cargo feature (off by default —
+//! the xla-rs / anyhow crates are not on the offline mirror).
+#![cfg(feature = "xla")]
 
 use acc_tsne::common::rng::Rng;
 use acc_tsne::gradient::attractive::{attractive_forces, Variant};

@@ -6,7 +6,9 @@
 use acc_tsne::common::proptest::{check, gen_len, gen_points, Config};
 use acc_tsne::common::rng::Rng;
 use acc_tsne::gradient::exact::exact_repulsive;
-use acc_tsne::gradient::repulsive::repulsive_forces;
+use acc_tsne::gradient::repulsive::{
+    repulsive_forces, repulsive_forces_scalar_into, repulsive_forces_tiled_into,
+};
 use acc_tsne::knn::{knn_reference, BruteForceKnn, KnnEngine};
 use acc_tsne::parallel::sort::radix_sort_pairs;
 use acc_tsne::parallel::ThreadPool;
@@ -16,6 +18,7 @@ use acc_tsne::quadtree::builder_morton::build_morton;
 use acc_tsne::quadtree::morton::{quadrant_at, RootCell};
 use acc_tsne::quadtree::summarize::{summarize_parallel, summarize_sequential};
 use acc_tsne::quadtree::tree_stats;
+use acc_tsne::quadtree::view::TraversalView;
 
 fn pool() -> ThreadPool {
     ThreadPool::new(4)
@@ -227,6 +230,79 @@ fn prop_morton_codes_respect_quadrant_geometry() {
         }
         Ok(())
     });
+}
+
+/// Compare the SIMD-tiled repulsive kernel against the scalar DFS on one
+/// configuration. Per lane the tiled kernel's accept set and accumulation
+/// order are identical to the scalar traversal, so parity is FP-noise-tight.
+fn tiled_scalar_parity(pos: &[f64], theta: f64, threads: usize) -> Result<(), String> {
+    let n = pos.len() / 2;
+    let pool = ThreadPool::new(threads);
+    let mut tree = build_morton(&pool, pos);
+    summarize_parallel(&pool, &mut tree);
+    let mut want = vec![0.0f64; 2 * n];
+    let mut got = vec![0.0f64; 2 * n];
+    let z_scalar = repulsive_forces_scalar_into(&pool, &tree, theta, &mut want);
+    let mut view = TraversalView::new();
+    view.rebuild_parallel(&pool, &tree);
+    let z_tiled = repulsive_forces_tiled_into(&pool, &tree, &view, theta, &mut got);
+    if (z_scalar - z_tiled).abs() > 1e-10 * z_scalar.abs().max(1.0) {
+        return Err(format!(
+            "n={n} θ={theta} t={threads}: Z {z_scalar} vs {z_tiled}"
+        ));
+    }
+    for i in 0..2 * n {
+        if (want[i] - got[i]).abs() > 1e-10 * (1.0 + want[i].abs()) {
+            return Err(format!(
+                "n={n} θ={theta} t={threads} idx {i}: scalar {} vs tiled {}",
+                want[i], got[i]
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_tiled_repulsive_matches_scalar() {
+    // Random point sets across sizes straddling the 8-lane tile boundary,
+    // exact (θ=0) and production (θ=0.5) traversals, 1/4/8-thread pools.
+    check(
+        "tiled == scalar",
+        Config { cases: 24, ..Config::default() },
+        |rng| {
+            let n = gen_len(rng, 1, 900);
+            let pos = gen_points(rng, 2 * n, 8.0);
+            let theta = if rng.next_below(2) == 0 { 0.0 } else { 0.5 };
+            let threads = [1, 4, 8][rng.next_below(3)];
+            tiled_scalar_parity(&pos, theta, threads)
+        },
+    );
+}
+
+#[test]
+fn prop_tiled_repulsive_matches_scalar_duplicate_heavy() {
+    // Duplicate-heavy sets: multi-point leaves exercise the own-leaf
+    // (exact, self-skipping) and foreign-leaf (count·COM) lane paths.
+    check(
+        "tiled == scalar (duplicates)",
+        Config { cases: 16, ..Config::default() },
+        |rng| {
+            let n = gen_len(rng, 8, 400);
+            let mut pos = gen_points(rng, 2 * n, 5.0);
+            // collapse a random fraction of points onto a few shared sites
+            let sites = 1 + rng.next_below(4);
+            for i in 0..n {
+                if rng.next_below(3) == 0 {
+                    let s = rng.next_below(sites);
+                    pos[2 * i] = s as f64 * 0.25 - 1.0;
+                    pos[2 * i + 1] = s as f64 * -0.5 + 2.0;
+                }
+            }
+            let theta = if rng.next_below(2) == 0 { 0.0 } else { 0.5 };
+            let threads = [1, 4, 8][rng.next_below(3)];
+            tiled_scalar_parity(&pos, theta, threads)
+        },
+    );
 }
 
 #[test]
