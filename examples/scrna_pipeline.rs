@@ -17,9 +17,8 @@ use acc_tsne::common::timer::Timer;
 use acc_tsne::data::pca::pca;
 use acc_tsne::data::synthetic::scrna_like;
 use acc_tsne::gradient::attractive::{attractive_forces, Variant};
-use acc_tsne::gradient::combine_gradient;
 use acc_tsne::gradient::exact::kl_with_z;
-use acc_tsne::gradient::repulsive::repulsive_forces;
+use acc_tsne::gradient::repulsive::repulsive_forces_scalar_into;
 use acc_tsne::gradient::update::{random_init, Optimizer, UpdateParams};
 use acc_tsne::knn::{BruteForceKnn, KnnEngine};
 use acc_tsne::metrics::neighbor_preservation;
@@ -66,18 +65,19 @@ fn main() {
     let mut y = random_init::<f64>(raw.n, 42);
     let mut opt = Optimizer::new(raw.n, UpdateParams::default());
     let mut attr = vec![0.0f64; 2 * raw.n];
-    let mut grad = vec![0.0f64; 2 * raw.n];
+    let mut rep_raw = vec![0.0f64; 2 * raw.n];
     let theta = 0.5;
     let t = Timer::start();
     for iter in 0..n_iter {
         let mut tree = build_morton(&pool, &y);
         summarize_parallel(&pool, &mut tree);
-        let rep = repulsive_forces(&pool, &tree, theta);
+        // allocation-free repulsive pass + the fused combine+update sweep
+        // (one pass over 2n instead of separate combine and step passes)
+        let z = repulsive_forces_scalar_into(&pool, &tree, theta, &mut rep_raw);
         attractive_forces(&pool, &p, &y, Variant::Simd, &mut attr);
-        combine_gradient(&pool, &attr, &rep.raw, rep.z, opt.exaggeration(iter), &mut grad);
-        opt.step(&pool, iter, &grad, &mut y);
+        opt.fused_combine_step(&pool, iter, &attr, &rep_raw, z, &mut y);
         if iter % (n_iter / 10).max(1) == 0 || iter + 1 == n_iter {
-            let kl = kl_with_z(&p, &y, rep.z);
+            let kl = kl_with_z(&p, &y, z);
             println!("      iter {iter:>5}  KL = {kl:.4}");
         }
     }

@@ -14,7 +14,7 @@ use acc_tsne::knn::{BruteForceKnn, KnnEngine};
 use acc_tsne::parallel::ThreadPool;
 use acc_tsne::runtime::engines::{XlaAttractive, XlaKnn, XlaRepulsiveDense};
 use acc_tsne::runtime::Runtime;
-use acc_tsne::tsne::{run_tsne_custom, Implementation, TsneConfig};
+use acc_tsne::tsne::{run_tsne_custom, Implementation, Layout, TsneConfig};
 
 fn main() {
     let rt = match Runtime::load("artifacts") {
@@ -66,6 +66,9 @@ fn main() {
     let cfg = TsneConfig {
         perplexity: 10.0,
         n_iter: 100,
+        // The AOT artifact bakes the original sparsity pattern; keep the
+        // gradient state in original order rather than the Z-order default.
+        layout: Some(Layout::Original),
         ..TsneConfig::default()
     };
     let eng = XlaAttractive::new(&rt).expect("compile attractive artifact");

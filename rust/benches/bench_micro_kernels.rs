@@ -7,14 +7,15 @@
 //!   repulsive: baseline-tree layout vs morton (Z-order) layout;
 //!   repulsive: scalar vs SIMD-tiled (SoA traversal view, masked Eq. 9) —
 //!     also snapshotted to BENCH_repulsive.json for the perf trajectory;
-//!   BSP: sequential vs parallel.
+//!   BSP: sequential vs parallel;
+//!   gradient loop: original vs Z-order-persistent layout (per-step times
+//!     from the pipeline itself) — snapshotted to BENCH_gradient_loop.json.
 
 use acc_tsne::common::bench::Bencher;
 use acc_tsne::common::rng::Rng;
+use acc_tsne::common::timer::Step;
 use acc_tsne::gradient::attractive::{attractive_forces, Variant};
-use acc_tsne::gradient::repulsive::{
-    repulsive_forces, repulsive_forces_scalar_into, repulsive_forces_tiled_into,
-};
+use acc_tsne::gradient::repulsive::{repulsive_forces_scalar_into, repulsive_forces_tiled_into};
 use acc_tsne::knn::{BruteForceKnn, KnnEngine};
 use acc_tsne::parallel::sort::radix_sort_pairs;
 use acc_tsne::parallel::ThreadPool;
@@ -24,13 +25,21 @@ use acc_tsne::quadtree::builder_morton::build_morton;
 use acc_tsne::quadtree::morton::{encode_points, encode_points_simd, RootCell};
 use acc_tsne::quadtree::summarize::{summarize_parallel, summarize_sequential};
 use acc_tsne::quadtree::view::TraversalView;
-use acc_tsne::sparse::symmetrize;
+use acc_tsne::sparse::{symmetrize, CsrMatrix};
+use acc_tsne::tsne::{run_tsne_with_p, Implementation, Layout, TsneConfig};
 
 fn env_n() -> usize {
     std::env::var("ACC_TSNE_MICRO_N")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(200_000)
+}
+
+fn env_loop_iters() -> usize {
+    std::env::var("ACC_TSNE_LOOP_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60)
 }
 
 fn main() {
@@ -98,15 +107,19 @@ fn main() {
     summarize_parallel(&pool, &mut tm);
     let mut tb = build_baseline(&pool, &pos);
     summarize_sequential(&mut tb);
+    let mut rep_out = vec![0.0f64; 2 * n];
     let mut b = Bencher::new("repulsive_layout").sampling(1, 8, 5.0);
-    b.bench("baseline_tree_bfs_layout", || repulsive_forces(&pool, &tb, 0.5).z);
-    b.bench("morton_tree_zorder_layout", || repulsive_forces(&pool, &tm, 0.5).z);
+    b.bench("baseline_tree_bfs_layout", || {
+        repulsive_forces_scalar_into(&pool, &tb, 0.5, &mut rep_out)
+    });
+    b.bench("morton_tree_zorder_layout", || {
+        repulsive_forces_scalar_into(&pool, &tm, 0.5, &mut rep_out)
+    });
     b.report();
 
     // --- repulsive kernel: scalar DFS vs SIMD-tiled over the SoA view
     // (the paper's §3.5 headline kernel; snapshot goes to BENCH_repulsive.json
     // so later PRs have a perf trajectory).
-    let mut rep_out = vec![0.0f64; 2 * n];
     let mut view = TraversalView::new();
     view.rebuild_parallel(&pool, &tm);
     let mut b = Bencher::new("repulsive_kernel").sampling(1, 8, 8.0);
@@ -176,14 +189,17 @@ fn main() {
     let mut t2 = build_morton(&pool, &y2);
     summarize_parallel(&pool, &mut t2);
     let (exact_raw, _) = acc_tsne::gradient::exact::exact_repulsive(&pool, &y2);
+    let mut rep2 = vec![0.0f64; 2 * an2];
     let mut b = Bencher::new(&format!("theta_ablation (n={an2})")).sampling(1, 8, 3.0);
     for theta in [0.2, 0.5, 0.8] {
-        let s = b.bench(&format!("theta={theta}"), || repulsive_forces(&pool, &t2, theta).z);
-        let rep = repulsive_forces(&pool, &t2, theta);
+        let s = b.bench(&format!("theta={theta}"), || {
+            repulsive_forces_scalar_into(&pool, &t2, theta, &mut rep2)
+        });
+        repulsive_forces_scalar_into(&pool, &t2, theta, &mut rep2);
         let mut num = 0.0;
         let mut den = 0.0;
         for i in 0..2 * an2 {
-            num += (rep.raw[i] - exact_raw[i]).powi(2);
+            num += (rep2[i] - exact_raw[i]).powi(2);
             den += exact_raw[i] * exact_raw[i];
         }
         println!(
@@ -203,4 +219,80 @@ fn main() {
         binary_search_perplexity(&pool, &knn, 30.0, ParMode::Parallel).betas.len()
     });
     b.report();
+
+    // --- gradient loop: original vs Z-order-persistent layout. A synthetic
+    // uniform-random sparse P (k=32) stands in for the KNN graph (building a
+    // real one at bench scale would dwarf the loop being measured) and models
+    // the early-phase neighbor scatter; as descent clusters P-neighbors the
+    // Z-order layout's CSR re-index localizes the y-gathers. Per-step times
+    // come from the pipeline's own StepTimes; the attractive + update sweeps
+    // are the ones expected to win in Z-order at n >= 65k.
+    let iters = env_loop_iters();
+    let k = 32usize;
+    let mut row_ptr = Vec::with_capacity(n + 1);
+    let mut col = Vec::with_capacity(n * k);
+    row_ptr.push(0usize);
+    for _ in 0..n {
+        for _ in 0..k {
+            col.push(rng.next_below(n) as u32);
+        }
+        row_ptr.push(col.len());
+    }
+    let p_loop = CsrMatrix::<f64> {
+        n,
+        row_ptr,
+        col,
+        val: vec![1.0 / (n * k) as f64; n * k],
+    };
+    let base_cfg = TsneConfig {
+        n_iter: iters,
+        seed: 42,
+        n_threads: pool.n_threads(),
+        ..TsneConfig::default()
+    };
+    let mut cfg_o = base_cfg;
+    cfg_o.layout = Some(Layout::Original);
+    let r_orig = run_tsne_with_p(&pool, &p_loop, &cfg_o, Implementation::AccTsne);
+    let mut cfg_z = base_cfg;
+    cfg_z.layout = Some(Layout::Zorder);
+    let r_z = run_tsne_with_p(&pool, &p_loop, &cfg_z, Implementation::AccTsne);
+    let steps = [
+        (Step::TreeBuild, "tree_build"),
+        (Step::Summarize, "summarize"),
+        (Step::Attractive, "attractive"),
+        (Step::Repulsive, "repulsive"),
+        (Step::Update, "update"),
+    ];
+    println!("\n== gradient loop layout (n={n}, iters={iters}, k={k}) ==");
+    println!("{:<12} {:>12} {:>12} {:>8}", "step", "original(s)", "zorder(s)", "speedup");
+    for (step, name) in steps {
+        let (a, b) = (r_orig.step_times.get(step), r_z.step_times.get(step));
+        println!("{name:<12} {a:>12.4} {b:>12.4} {:>7.2}x", a / b.max(1e-12));
+    }
+    let (ta, tz) = (r_orig.step_times.gradient_total(), r_z.step_times.gradient_total());
+    println!("{:<12} {ta:>12.4} {tz:>12.4} {:>7.2}x", "TOTAL", ta / tz.max(1e-12));
+    let mut js = String::from("{\n  \"bench\": \"gradient_loop\",\n");
+    js.push_str(&format!("  \"n\": {n},\n  \"threads\": {},\n  \"iters\": {iters},\n", pool.n_threads()));
+    for (label, r) in [("original", &r_orig), ("zorder", &r_z)] {
+        js.push_str(&format!("  \"{label}\": {{\n"));
+        for (i, (step, name)) in steps.iter().enumerate() {
+            let sep = if i + 1 < steps.len() { "," } else { "" };
+            js.push_str(&format!("    \"{name}_s\": {:.6e}{sep}\n", r.step_times.get(*step)));
+        }
+        js.push_str("  },\n");
+    }
+    js.push_str(&format!(
+        "  \"speedup_attractive\": {:.3},\n",
+        r_orig.step_times.get(Step::Attractive) / r_z.step_times.get(Step::Attractive).max(1e-12)
+    ));
+    js.push_str(&format!(
+        "  \"speedup_update\": {:.3},\n",
+        r_orig.step_times.get(Step::Update) / r_z.step_times.get(Step::Update).max(1e-12)
+    ));
+    js.push_str(&format!("  \"speedup_gradient_total\": {:.3}\n}}\n", ta / tz.max(1e-12)));
+    if let Err(e) = std::fs::write("BENCH_gradient_loop.json", &js) {
+        eprintln!("warning: could not write BENCH_gradient_loop.json: {e}");
+    } else {
+        println!("[json] BENCH_gradient_loop.json");
+    }
 }

@@ -1,5 +1,6 @@
 //! Regenerates paper Table S1: Acc-t-SNE in f32 vs f64 (time + KL) across
-//! the six datasets.
+//! the six datasets, plus the f32 end-to-end sweep of the repulsive kernel
+//! (scalar DFS vs SIMD-tiled at 16 lanes).
 
 use acc_tsne::data::datasets::PaperDataset;
 use acc_tsne::eval::{experiments, ExpConfig};
@@ -8,4 +9,5 @@ fn main() {
     let cfg = ExpConfig::default();
     println!("# Table S1 bench: scale={} iters={}", cfg.scale, cfg.n_iter);
     experiments::table_s1_precision(&cfg, &PaperDataset::ALL);
+    experiments::table_s1_f32_repulsive_sweep(&cfg, &PaperDataset::ALL);
 }

@@ -6,7 +6,7 @@ use crate::common::timer::Step;
 use crate::data::datasets::PaperDataset;
 use crate::data::Dataset;
 use crate::parallel::ThreadPool;
-use crate::tsne::{run_tsne, Implementation, TsneConfig, TsneResult};
+use crate::tsne::{run_tsne, Implementation, RepulsiveVariant, TsneConfig, TsneResult};
 use crate::viz;
 
 fn gen(ds: PaperDataset, cfg: &ExpConfig) -> Dataset<f64> {
@@ -295,6 +295,41 @@ pub fn table_s1_precision(cfg: &ExpConfig, datasets: &[PaperDataset]) -> Vec<Vec
     rows
 }
 
+/// Table S1 extension — f32 *end-to-end* sweep of the repulsive kernel:
+/// Acc-t-SNE in single precision with the scalar DFS vs the SIMD-tiled
+/// kernel (16 lanes in f32, where the tile batching pays the most). The
+/// micro-benches isolate the kernel; this shows its whole-pipeline payoff
+/// with the per-run KL confirming the accept-set parity.
+pub fn table_s1_f32_repulsive_sweep(cfg: &ExpConfig, datasets: &[PaperDataset]) -> Vec<Vec<String>> {
+    let threads = cfg.resolved_threads();
+    let mut rows = Vec::new();
+    for &d in datasets {
+        let ds32 = gen(d, cfg).cast::<f32>();
+        let mut scalar_rep_time = None;
+        for variant in [RepulsiveVariant::Scalar, RepulsiveVariant::SimdTiled] {
+            let mut tc = tsne_cfg(cfg, threads);
+            tc.repulsive = Some(variant);
+            let r = run_tsne(&ds32.points, ds32.n, ds32.d, &tc, Implementation::AccTsne);
+            let rep_s = r.step_times.get(Step::Repulsive);
+            if variant == RepulsiveVariant::Scalar {
+                scalar_rep_time = Some(rep_s);
+            }
+            rows.push(vec![
+                d.name().to_string(),
+                variant.name().to_string(),
+                format!("{:.2}", r.step_times.total()),
+                format!("{rep_s:.3}"),
+                format!("{:.1}x", scalar_rep_time.map(|b| b / rep_s.max(1e-12)).unwrap_or(1.0)),
+                format!("{:.3}", r.kl_divergence),
+            ]);
+        }
+    }
+    let headers = ["dataset", "repulsive", "total (s)", "repulsive (s)", "rep speedup", "kl"];
+    print_table("Table S1 (ext): f32 end-to-end, repulsive kernel sweep", &headers, &rows);
+    save_csv(cfg, "tableS1_f32_repulsive_sweep", &headers, &rows);
+    rows
+}
+
 /// Figures S1–S6 — embedding scatter plots per dataset (PPM + SVG + CSV).
 pub fn figs_s_plots(cfg: &ExpConfig, datasets: &[PaperDataset]) -> Vec<Vec<String>> {
     let threads = cfg.resolved_threads();
@@ -344,6 +379,14 @@ mod tests {
     fn table56_has_total_row() {
         let rows = table56_steps(&tiny_cfg(), 2);
         assert_eq!(rows.last().unwrap()[0], "TOTAL(excl. KNN)");
+    }
+
+    #[test]
+    fn s1_f32_sweep_has_both_variants_per_dataset() {
+        let rows = table_s1_f32_repulsive_sweep(&tiny_cfg(), &[PaperDataset::Digits]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0][1], "scalar");
+        assert_eq!(rows[1][1], "simd-tiled");
     }
 
     #[test]

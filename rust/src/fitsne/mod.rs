@@ -17,7 +17,6 @@ pub mod fft;
 pub mod interp;
 
 use crate::common::float::Real;
-use crate::gradient::repulsive::Repulsion;
 use crate::parallel::{parallel_for, Schedule, SyncSlice, ThreadPool};
 use fft::{fft2_inplace, Cpx};
 use interp::{lagrange_weights, P_NODES};
@@ -47,21 +46,11 @@ impl Default for FitsneParams {
 const N_TERMS: usize = 3; // (1, x, y)
 
 /// Compute FIt-SNE repulsive accumulations (same contract as the BH
-/// [`crate::gradient::repulsive::repulsive_forces`]): raw forces per point in
-/// original order plus the ordered-pair normalization Z.
-pub fn fitsne_repulsive<T: Real>(
-    pool: &ThreadPool,
-    y: &[T],
-    params: &FitsneParams,
-) -> Repulsion<T> {
-    let mut raw = vec![T::ZERO; y.len()];
-    let z = fitsne_repulsive_into(pool, y, params, &mut raw);
-    Repulsion { raw, z }
-}
-
-/// As [`fitsne_repulsive`] but writing into a caller-owned `raw` buffer
-/// (`2n`, original order); returns Z. The pipeline's hot loop reuses one
-/// buffer across iterations instead of allocating `2n` floats per step.
+/// kernels in [`crate::gradient::repulsive`]) into a caller-owned `raw`
+/// buffer (`2n`, original order); returns the ordered-pair normalization Z.
+/// The pipeline's hot loop reuses one buffer across iterations instead of
+/// allocating `2n` floats per step (the allocating wrapper is gone with the
+/// rest of the compatibility wrappers).
 pub fn fitsne_repulsive_into<T: Real>(
     pool: &ThreadPool,
     y: &[T],
@@ -277,11 +266,23 @@ mod tests {
         (0..2 * n).map(|_| rng.next_gaussian() * scale).collect()
     }
 
+    /// (raw, z) bundle over a locally-owned buffer (`_into` API).
+    struct Rep<T: Real> {
+        raw: Vec<T>,
+        z: T,
+    }
+
+    fn fitsne_rep<T: Real>(pool: &ThreadPool, y: &[T], params: &FitsneParams) -> Rep<T> {
+        let mut raw = vec![T::ZERO; y.len()];
+        let z = fitsne_repulsive_into(pool, y, params, &mut raw);
+        Rep { raw, z }
+    }
+
     #[test]
     fn z_close_to_exact() {
         let y = random_y(800, 5.0, 1);
         let pool = ThreadPool::new(4);
-        let fit = fitsne_repulsive(&pool, &y, &FitsneParams::default());
+        let fit = fitsne_rep(&pool, &y, &FitsneParams::default());
         let (_, z) = exact_repulsive(&pool, &y);
         let rel = (fit.z - z).abs() / z;
         assert!(rel < 0.01, "Z rel error {rel}: {} vs {z}", fit.z);
@@ -291,7 +292,7 @@ mod tests {
     fn forces_close_to_exact() {
         let y = random_y(600, 8.0, 2);
         let pool = ThreadPool::new(4);
-        let fit = fitsne_repulsive(&pool, &y, &FitsneParams::default());
+        let fit = fitsne_rep(&pool, &y, &FitsneParams::default());
         let (want, _) = exact_repulsive(&pool, &y);
         let mut num = 0.0;
         let mut den = 0.0;
@@ -311,7 +312,7 @@ mod tests {
         // Early iterations: all points within 1e-4 of origin → single interval.
         let y = random_y(300, 1e-4, 3);
         let pool = ThreadPool::new(2);
-        let fit = fitsne_repulsive(&pool, &y, &FitsneParams::default());
+        let fit = fitsne_rep(&pool, &y, &FitsneParams::default());
         assert!(fit.raw.iter().all(|v| v.is_finite()));
         assert!(fit.z > 0.0 && fit.z.is_finite());
     }
@@ -319,8 +320,8 @@ mod tests {
     #[test]
     fn deterministic_across_thread_counts() {
         let y = random_y(400, 4.0, 4);
-        let a = fitsne_repulsive(&ThreadPool::new(1), &y, &FitsneParams::default());
-        let b = fitsne_repulsive(&ThreadPool::new(8), &y, &FitsneParams::default());
+        let a = fitsne_rep(&ThreadPool::new(1), &y, &FitsneParams::default());
+        let b = fitsne_rep(&ThreadPool::new(8), &y, &FitsneParams::default());
         for i in 0..y.len() {
             assert!(
                 (a.raw[i] - b.raw[i]).abs() < 1e-9 * (1.0 + a.raw[i].abs()),
@@ -334,7 +335,7 @@ mod tests {
         let y64 = random_y(200, 3.0, 5);
         let y32: Vec<f32> = y64.iter().map(|&v| v as f32).collect();
         let pool = ThreadPool::new(2);
-        let fit = fitsne_repulsive(&pool, &y32, &FitsneParams::default());
+        let fit = fitsne_rep(&pool, &y32, &FitsneParams::default());
         let (want, z) = exact_repulsive(&pool, &y64);
         assert!(((fit.z as f64) - z).abs() / z < 0.02);
         let mut num = 0.0;

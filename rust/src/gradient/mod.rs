@@ -25,6 +25,12 @@ use crate::parallel::{parallel_for, Schedule, SyncSlice, ThreadPool};
 /// Combine attractive and repulsive accumulations into the KL gradient
 /// (in-place into `grad`). `exaggeration` scales the attractive term (the
 /// early-exaggeration trick multiplies P).
+///
+/// The pipeline's hot loop no longer calls this: it runs the fused
+/// combine+update sweep ([`update::Optimizer::fused_combine_step`], one pass
+/// over `2n` instead of three, arithmetically identical per element). This
+/// standalone combine remains for the exact-gradient oracle tests and
+/// callers that need the gradient vector itself.
 pub fn combine_gradient<T: Real>(
     pool: &ThreadPool,
     attr: &[T],

@@ -64,29 +64,11 @@ impl RepulsiveVariant {
     }
 }
 
-/// Result of the repulsive step: raw (un-normalized) forces per point in
-/// ORIGINAL index order, and the accumulated normalization Z.
-pub struct Repulsion<T: Real> {
-    pub raw: Vec<T>,
-    pub z: T,
-}
-
-/// Compute BH-approximate repulsive accumulations for all points with the
-/// scalar kernel, allocating the output (compatibility wrapper — the
-/// pipeline's hot loop uses [`repulsive_forces_into`] with a reused buffer).
-///
+/// Variant dispatcher writing into a caller-owned buffer; returns Z. All
+/// repulsive entry points are allocation-free `_into` APIs (the old
+/// `repulsive_forces` compatibility wrapper that allocated per call is gone;
+/// benches and tests own their buffers like the pipeline does).
 /// `theta` is the paper's θ accuracy knob (0.5 default; 0 = exact traversal).
-pub fn repulsive_forces<T: Real>(
-    pool: &ThreadPool,
-    tree: &QuadTree<T>,
-    theta: f64,
-) -> Repulsion<T> {
-    let mut raw = vec![T::ZERO; 2 * tree.n_points()];
-    let z = repulsive_forces_scalar_into(pool, tree, theta, &mut raw);
-    Repulsion { raw, z }
-}
-
-/// Variant dispatcher writing into a caller-owned buffer; returns Z.
 /// `view` is required for [`RepulsiveVariant::SimdTiled`] (built once per
 /// iteration after summarize); passing `None` there materializes a throwaway
 /// view — correct, but the per-iteration callers should reuse one.
@@ -288,6 +270,35 @@ fn point_repulsion<T: Real>(
     (fx, fy, z)
 }
 
+/// Software prefetch of a node's traversal-hot SoA rows (the PR-1 follow-up).
+///
+/// Children are pushed onto the shared-frontier stack up to three pops before
+/// they are visited (LIFO: the last child pushed is visited immediately, its
+/// siblings after that subtree drains), so issuing the loads at push time
+/// hides most of the five-SoA-row visit cost (com_x/com_y/width_sq/count +
+/// the children block) once the view outgrows L2
+/// (≥ ~100k-node trees, i.e. n ≳ 65k). Measured on the BENCH_repulsive.json
+/// trend (`repulsive_kernel` group, CI snapshot): neutral at the 20k-node
+/// CI size where the view is L2-resident, low-single-digit-% wins on the
+/// 200k default where it is not; kept because the descend is bound by the
+/// dependent child-row loads, not by instruction issue.
+#[inline(always)]
+fn prefetch_view_node<T: Real>(view: &TraversalView<T>, ni: usize) {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        _mm_prefetch(view.com_x.as_ptr().add(ni) as *const i8, _MM_HINT_T0);
+        _mm_prefetch(view.com_y.as_ptr().add(ni) as *const i8, _MM_HINT_T0);
+        _mm_prefetch(view.width_sq.as_ptr().add(ni) as *const i8, _MM_HINT_T0);
+        _mm_prefetch(view.count.as_ptr().add(ni) as *const i8, _MM_HINT_T0);
+        _mm_prefetch(view.children.as_ptr().add(4 * ni) as *const i8, _MM_HINT_T0);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (view, ni);
+    }
+}
+
 /// Per-type tile kernel: one tile of ≤ LANES layout-adjacent points against
 /// the whole tree. Writes per-lane forces into `fx_out`/`fy_out[..tile_len]`
 /// and returns the tile's Z contribution.
@@ -403,6 +414,7 @@ macro_rules! impl_rep_simd {
                         if descend != 0 {
                             for &c in &view.children[4 * ni..4 * ni + 4] {
                                 if c != NO_NODE {
+                                    prefetch_view_node(view, c as usize);
                                     stack.push((c, descend));
                                 }
                             }
@@ -436,11 +448,24 @@ mod tests {
         (0..2 * n).map(|_| rng.next_gaussian() * 3.0).collect()
     }
 
-    fn tiled(pool: &ThreadPool, tree: &QuadTree<f64>, theta: f64) -> Repulsion<f64> {
+    /// Local (raw forces, Z) bundle — the tests own their buffers and call
+    /// the `_into` APIs directly, like every production caller.
+    struct Rep<T: Real> {
+        raw: Vec<T>,
+        z: T,
+    }
+
+    fn scalar<T: Real>(pool: &ThreadPool, tree: &QuadTree<T>, theta: f64) -> Rep<T> {
+        let mut raw = vec![T::ZERO; 2 * tree.n_points()];
+        let z = repulsive_forces_scalar_into(pool, tree, theta, &mut raw);
+        Rep { raw, z }
+    }
+
+    fn tiled<T: RepulsiveSimd>(pool: &ThreadPool, tree: &QuadTree<T>, theta: f64) -> Rep<T> {
         let view = TraversalView::of(tree);
-        let mut raw = vec![0.0; 2 * tree.n_points()];
+        let mut raw = vec![T::ZERO; 2 * tree.n_points()];
         let z = repulsive_forces_tiled_into(pool, tree, &view, theta, &mut raw);
-        Repulsion { raw, z }
+        Rep { raw, z }
     }
 
     #[test]
@@ -453,7 +478,7 @@ mod tests {
         let (want, want_z) = exact_repulsive(&pool, &y);
         for variant in [RepulsiveVariant::Scalar, RepulsiveVariant::SimdTiled] {
             let got = match variant {
-                RepulsiveVariant::Scalar => repulsive_forces(&pool, &tree, 0.0),
+                RepulsiveVariant::Scalar => scalar(&pool, &tree, 0.0),
                 RepulsiveVariant::SimdTiled => tiled(&pool, &tree, 0.0),
             };
             assert!(
@@ -482,7 +507,7 @@ mod tests {
         let pool = ThreadPool::new(4);
         let mut tree = build_morton(&pool, &y);
         summarize_parallel(&pool, &mut tree);
-        let got = repulsive_forces(&pool, &tree, 0.5);
+        let got = scalar(&pool, &tree, 0.5);
         let (want, want_z) = exact_repulsive(&pool, &y);
         // Z within 1%
         assert!((got.z - want_z).abs() < 0.01 * want_z, "Z {} vs {want_z}", got.z);
@@ -507,7 +532,7 @@ mod tests {
             let mut tree = build_morton(&pool, &y);
             summarize_parallel(&pool, &mut tree);
             for theta in [0.0, 0.5] {
-                let a = repulsive_forces(&pool, &tree, theta);
+                let a = scalar(&pool, &tree, theta);
                 let b = tiled(&pool, &tree, theta);
                 assert!(
                     (a.z - b.z).abs() <= 1e-10 * a.z.abs().max(1.0),
@@ -535,7 +560,7 @@ mod tests {
         let pool = ThreadPool::new(4);
         let mut tree = build_morton(&pool, &y);
         summarize_parallel(&pool, &mut tree);
-        let a = repulsive_forces(&pool, &tree, 0.5);
+        let a = scalar(&pool, &tree, 0.5);
         let view = TraversalView::of(&tree);
         let mut raw = vec![0.0f32; 2 * n];
         let z = repulsive_forces_tiled_into(&pool, &tree, &view, 0.5, &mut raw);
@@ -583,8 +608,8 @@ mod tests {
         summarize_parallel(&pool, &mut tm);
         let mut tb = build_baseline(&pool, &y);
         summarize_sequential(&mut tb);
-        let a = repulsive_forces(&pool, &tm, 0.5);
-        let b = repulsive_forces(&pool, &tb, 0.5);
+        let a = scalar(&pool, &tm, 0.5);
+        let b = scalar(&pool, &tb, 0.5);
         assert!((a.z - b.z).abs() < 1e-6 * a.z);
         for i in 0..2 * n {
             assert!(
@@ -612,7 +637,7 @@ mod tests {
         let pool = ThreadPool::new(2);
         let mut tree = build_morton(&pool, &y);
         summarize_parallel(&pool, &mut tree);
-        for rep in [repulsive_forces(&pool, &tree, 0.5), tiled(&pool, &tree, 0.5)] {
+        for rep in [scalar(&pool, &tree, 0.5), tiled(&pool, &tree, 0.5)] {
             assert!(rep.raw.iter().all(|v| v.is_finite()));
             assert!(rep.z.is_finite() && rep.z > 0.0);
             // Z counts ordered pairs: must be < n(n-1)
@@ -626,7 +651,7 @@ mod tests {
         let pool = ThreadPool::new(1);
         let mut tree = build_morton(&pool, &y);
         summarize_sequential(&mut tree);
-        for rep in [repulsive_forces(&pool, &tree, 0.5), tiled(&pool, &tree, 0.5)] {
+        for rep in [scalar(&pool, &tree, 0.5), tiled(&pool, &tree, 0.5)] {
             // raw_0 = (1+1)⁻² * (0-1) = -0.25 on x
             assert!((rep.raw[0] - (-0.25)).abs() < 1e-12);
             assert!((rep.raw[2] - 0.25).abs() < 1e-12);
@@ -656,8 +681,8 @@ mod tests {
         let mut t8 = build_morton(&pool8, &y);
         summarize_parallel(&pool8, &mut t8);
         // structures may be stitched differently; forces must agree to fp noise
-        let a = repulsive_forces(&pool1, &t1, 0.5);
-        let b = repulsive_forces(&pool8, &t8, 0.5);
+        let a = scalar(&pool1, &t1, 0.5);
+        let b = scalar(&pool8, &t8, 0.5);
         for i in 0..y.len() {
             assert!((a.raw[i] - b.raw[i]).abs() < 1e-10 * (1.0 + a.raw[i].abs()));
         }

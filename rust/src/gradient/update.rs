@@ -58,19 +58,27 @@ impl<T: Real> Optimizer<T> {
         }
     }
 
+    #[inline]
+    fn schedule(&self, iter: usize) -> (T, T, T) {
+        let momentum = T::from_f64(if iter < self.params.exaggeration_iters {
+            self.params.momentum_early
+        } else {
+            self.params.momentum_late
+        });
+        (
+            momentum,
+            T::from_f64(self.params.learning_rate),
+            T::from_f64(self.params.min_gain),
+        )
+    }
+
     /// One descent step: gains update (0.2/0.8 rule), momentum, position
     /// update, then recentring (paper/sklearn keep the embedding zero-mean).
     pub fn step(&mut self, pool: &ThreadPool, iter: usize, grad: &[T], y: &mut [T]) {
         let n2 = y.len();
         assert_eq!(grad.len(), n2);
         assert_eq!(self.velocity.len(), n2);
-        let momentum = T::from_f64(if iter < self.params.exaggeration_iters {
-            self.params.momentum_early
-        } else {
-            self.params.momentum_late
-        });
-        let eta = T::from_f64(self.params.learning_rate);
-        let min_gain = T::from_f64(self.params.min_gain);
+        let (momentum, eta, min_gain) = self.schedule(iter);
         {
             let vs = SyncSlice::new(&mut self.velocity);
             let gs = SyncSlice::new(&mut self.gains);
@@ -79,25 +87,88 @@ impl<T: Real> Optimizer<T> {
                 for i in range {
                     // disjoint: slot i
                     unsafe {
-                        let v = vs.get_mut(i);
-                        let g = gs.get_mut(i);
-                        let yy = ys.get_mut(i);
-                        let grad_i = grad[i];
-                        // sign disagreement → growing step; agreement → shrink
-                        let same_sign = (grad_i > T::ZERO) == (*v > T::ZERO);
-                        *g = if same_sign {
-                            (*g * T::from_f64(0.8)).max_r(min_gain)
-                        } else {
-                            *g + T::from_f64(0.2)
-                        };
-                        *v = momentum * *v - eta * *g * grad_i;
-                        *yy += *v;
+                        descent_update(
+                            grad[i],
+                            vs.get_mut(i),
+                            gs.get_mut(i),
+                            ys.get_mut(i),
+                            momentum,
+                            eta,
+                            min_gain,
+                        );
                     }
                 }
             });
         }
         recenter(pool, y);
     }
+
+    /// Fused combine + descent step — the gradient hot loop's single
+    /// per-iteration sweep: computes the KL-gradient element
+    /// `g_i = 4·(exag·attr_i − rep_raw_i / Z)` inline and immediately applies
+    /// the gains/momentum/position update to it, one parallel pass over the
+    /// `2n` coordinates instead of the three passes of
+    /// [`combine_gradient`](crate::gradient::combine_gradient) + [`Self::step`]
+    /// (write grad, read grad, write y). Per element the arithmetic — and
+    /// therefore the FP result — is identical to the two-pass path
+    /// (asserted bitwise by `fused_step_equals_combine_then_step`).
+    pub fn fused_combine_step(
+        &mut self,
+        pool: &ThreadPool,
+        iter: usize,
+        attr: &[T],
+        rep_raw: &[T],
+        z: T,
+        y: &mut [T],
+    ) {
+        let n2 = y.len();
+        assert_eq!(attr.len(), n2);
+        assert_eq!(rep_raw.len(), n2);
+        assert_eq!(self.velocity.len(), n2);
+        let exaggeration = self.exaggeration(iter);
+        let inv_z = T::ONE / z.max_r(T::TINY);
+        let four = T::TWO * T::TWO;
+        let (momentum, eta, min_gain) = self.schedule(iter);
+        {
+            let vs = SyncSlice::new(&mut self.velocity);
+            let gs = SyncSlice::new(&mut self.gains);
+            let ys = SyncSlice::new(y);
+            parallel_for(pool, n2, Schedule::Static, |range| {
+                for i in range {
+                    let grad_i = four * (exaggeration * attr[i] - rep_raw[i] * inv_z);
+                    // disjoint: slot i
+                    unsafe {
+                        descent_update(
+                            grad_i,
+                            vs.get_mut(i),
+                            gs.get_mut(i),
+                            ys.get_mut(i),
+                            momentum,
+                            eta,
+                            min_gain,
+                        );
+                    }
+                }
+            });
+        }
+        recenter(pool, y);
+    }
+}
+
+/// Gains (0.2/0.8 rule) + momentum + position update for one coordinate —
+/// shared by [`Optimizer::step`] and [`Optimizer::fused_combine_step`] so the
+/// two paths stay arithmetically identical.
+#[inline(always)]
+fn descent_update<T: Real>(grad_i: T, v: &mut T, g: &mut T, yy: &mut T, momentum: T, eta: T, min_gain: T) {
+    // sign disagreement → growing step; agreement → shrink
+    let same_sign = (grad_i > T::ZERO) == (*v > T::ZERO);
+    *g = if same_sign {
+        (*g * T::from_f64(0.8)).max_r(min_gain)
+    } else {
+        *g + T::from_f64(0.2)
+    };
+    *v = momentum * *v - eta * *g * grad_i;
+    *yy += *v;
 }
 
 /// Subtract the mean so the embedding stays centered.
@@ -203,6 +274,33 @@ mod tests {
         }
         let v_late = opt.velocity[0].abs();
         assert!(v_late > v_early, "higher momentum accumulates more velocity");
+    }
+
+    #[test]
+    fn fused_step_equals_combine_then_step() {
+        use crate::common::rng::Rng;
+        use crate::gradient::combine_gradient;
+        let pool = ThreadPool::new(3);
+        let n = 37;
+        let mut rng = Rng::new(11);
+        let attr: Vec<f64> = (0..2 * n).map(|_| rng.next_gaussian()).collect();
+        let rep: Vec<f64> = (0..2 * n).map(|_| rng.next_gaussian() * 4.0).collect();
+        let z = 3.7;
+        let mut opt_a = Optimizer::<f64>::new(n, UpdateParams::default());
+        let mut ya: Vec<f64> = (0..2 * n).map(|_| rng.next_gaussian() * 1e-2).collect();
+        let mut opt_b = opt_a.clone();
+        let mut yb = ya.clone();
+        let mut grad = vec![0.0f64; 2 * n];
+        // spans the exaggeration/momentum switch at iter 250
+        for iter in [0usize, 1, 5, 249, 250, 400] {
+            combine_gradient(&pool, &attr, &rep, z, opt_a.exaggeration(iter), &mut grad);
+            opt_a.step(&pool, iter, &grad, &mut ya);
+            opt_b.fused_combine_step(&pool, iter, &attr, &rep, z, &mut yb);
+            // bitwise: the fused sweep must be arithmetically identical
+            assert_eq!(ya, yb, "iter {iter}");
+            assert_eq!(opt_a.velocity, opt_b.velocity, "iter {iter}");
+            assert_eq!(opt_a.gains, opt_b.gains, "iter {iter}");
+        }
     }
 
     #[test]

@@ -16,7 +16,7 @@ use acc_tsne::data::datasets::PaperDataset;
 use acc_tsne::eval::{experiments, ExpConfig};
 use acc_tsne::parallel::pool::available_cores;
 use acc_tsne::parallel::ThreadPool;
-use acc_tsne::tsne::{run_tsne, Implementation, RepulsiveVariant, TsneConfig};
+use acc_tsne::tsne::{run_tsne, Implementation, Layout, RepulsiveVariant, TsneConfig};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -31,7 +31,7 @@ fn main() {
 
 const COMMON_FLAGS: &[&str] = &[
     "dataset", "impl", "scale", "iters", "threads", "seed", "out", "plot", "f32", "sweep",
-    "perplexity", "theta", "repulsive",
+    "perplexity", "theta", "repulsive", "layout",
 ];
 
 fn exp_config(args: &Args) -> Result<ExpConfig, String> {
@@ -111,6 +111,18 @@ fn cmd_run(args: &Args) -> Result<(), String> {
                 .to_string(),
         );
     }
+    let layout = match args.get("layout") {
+        None => None,
+        Some(s) => Some(Layout::from_name(s).ok_or_else(|| {
+            format!("unknown --layout '{s}' (original|zorder)")
+        })?),
+    };
+    if layout == Some(Layout::Zorder) && imp == Implementation::FitSne {
+        return Err(
+            "--layout zorder has no effect with --impl fit-sne (no quadtree, no Z-order)"
+                .to_string(),
+        );
+    }
     let cfg = TsneConfig {
         n_iter: exp.n_iter,
         seed: exp.seed,
@@ -118,6 +130,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         perplexity: args.get_parse("perplexity", 30.0)?,
         theta: args.get_parse("theta", 0.5)?,
         repulsive,
+        layout,
         ..TsneConfig::default()
     };
     let pool = ThreadPool::new(exp.resolved_threads());
@@ -186,7 +199,7 @@ fn cmd_info() -> Result<(), String> {
 const HELP: &str = "\
 acc-tsne <subcommand> [flags]
   run        one t-SNE run  (--dataset --impl --scale --iters --threads --out --plot --f32
-             --repulsive scalar|simd-tiled)
+             --repulsive scalar|simd-tiled  --layout original|zorder)
   compare    Fig 4 + Table 3 across datasets and implementations
   scaling    Fig 5 end-to-end multicore scaling
   steps      Tables 5/6 per-step comparison (--sweep adds Fig 6)

@@ -13,6 +13,16 @@
 //! than the 2⁻³² grid) becomes a multi-point leaf immediately; the baseline
 //! builder instead chains single-child nodes to the depth cap — both give the
 //! same mass distribution, which is what the force computation consumes.
+//!
+//! Z-order persistence contract: the permutation the sort produces is not an
+//! internal detail — it is published as [`QuadTree::layout_order`] and the
+//! Z-order-persistent gradient loop ([`crate::tsne::workspace`]) feeds each
+//! adopted layout back as the next build's input. That makes the input
+//! *nearly sorted* every iteration (points move little per descent step), so
+//! the build detects an already-sorted code sequence with one O(n) pass and
+//! skips the radix sort entirely (late optimization, where per-step motion
+//! drops below the 2⁻³² grid resolution); the small-n path's `sort_unstable`
+//! (pdqsort) is O(n) on nearly-sorted input by construction.
 
 use super::morton::{encode_points_simd, quadrant_at, RootCell, MAX_LEVEL};
 use super::{Node, QuadTree, NO_CHILD};
@@ -53,9 +63,14 @@ pub fn build_morton<T: Real>(pool: &ThreadPool, pos: &[T]) -> QuadTree<T> {
     let mut codes = vec![0u64; n];
     encode_points_simd(pool, pos, &root_cell, &mut codes);
 
-    // (2) Parallel radix sort of (code, original index).
+    // (2) Parallel radix sort of (code, original index). When the caller
+    // feeds back the previous iteration's Z-order (the persistent-layout
+    // gradient loop), the codes often arrive already sorted — one O(n) check
+    // then skips all 8 radix passes and `order` stays the identity.
     let mut order: Vec<u32> = (0..n as u32).collect();
-    radix_sort_pairs(pool, &mut codes, &mut order);
+    if !codes_sorted(pool, &codes) {
+        radix_sort_pairs(pool, &mut codes, &mut order);
+    }
 
     // (3) Gather coordinates into Z-order (contiguous leaf ranges).
     let mut point_pos = vec![T::ZERO; 2 * n];
@@ -247,6 +262,27 @@ fn build_morton_small<T: Real>(pos: &[T]) -> QuadTree<T> {
         subtree_roots: Vec::new(),
         depth,
     }
+}
+
+/// Parallel "already sorted?" check: each thread scans its chunk plus the
+/// boundary pair and flips a shared flag on the first inversion. One read
+/// pass vs the radix sort's 8 read+write passes — cheap enough to run every
+/// build, and it turns the persistent-layout steady state into a no-op sort.
+fn codes_sorted(pool: &ThreadPool, codes: &[u64]) -> bool {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    let sorted = AtomicBool::new(true);
+    parallel_for(pool, codes.len().saturating_sub(1), Schedule::Static, |range| {
+        if !sorted.load(Ordering::Relaxed) {
+            return;
+        }
+        for i in range {
+            if codes[i] > codes[i + 1] {
+                sorted.store(false, Ordering::Relaxed);
+                return;
+            }
+        }
+    });
+    sorted.load(Ordering::Relaxed)
 }
 
 fn new_node<T: Real>(count: u32, center: [f64; 2], width: f64) -> Node<T> {
@@ -448,6 +484,24 @@ mod tests {
             let c = root.encode(tree.point_pos[2 * i].to_f64(), tree.point_pos[2 * i + 1].to_f64());
             assert!(c >= prev, "gathered points must be in Z-order");
             prev = c;
+        }
+    }
+
+    #[test]
+    fn rebuild_from_zorder_is_identity_permutation() {
+        // The persistent-layout loop's steady state: building from a point
+        // array that is already in Z-order must return the identity layout
+        // (and, on the parallel path, skip the radix sort — same observable).
+        // 70_000 points crosses SMALL_N to exercise the sorted-skip branch.
+        for (n, threads) in [(3000usize, 4usize), (70_000, 4)] {
+            let pos = random_pos(n, n as u64 ^ 0x5EED);
+            let pool = ThreadPool::new(threads);
+            let t1 = build_morton(&pool, &pos);
+            assert!(t1.layout_drift() > 0, "random input should not be pre-sorted");
+            let t2 = build_morton(&pool, &t1.point_pos);
+            assert_eq!(t2.layout_drift(), 0, "n={n}: Z-order input must be a fixed point");
+            assert_eq!(t2.point_pos, t1.point_pos);
+            t2.validate().unwrap();
         }
     }
 

@@ -89,6 +89,27 @@ impl<T: Real> QuadTree<T> {
         &self.nodes[0]
     }
 
+    /// The build's layout permutation: `layout_order()[slot]` is the index —
+    /// in the coordinate slice the builder was given — of the point stored at
+    /// `slot` of `point_pos` (Z-order for the morton builder, BFS-discovery
+    /// order for the baseline). The Z-order-persistent gradient loop composes
+    /// this into its global permutation instead of re-deriving it.
+    #[inline]
+    pub fn layout_order(&self) -> &[u32] {
+        &self.point_idx
+    }
+
+    /// Number of points stored at a different slot than in the input order —
+    /// 0 ⇔ the input was already in this tree's layout order. The gradient
+    /// loop compares this against its re-permutation (adoption) threshold.
+    pub fn layout_drift(&self) -> usize {
+        self.point_idx
+            .iter()
+            .enumerate()
+            .filter(|&(slot, &src)| src as usize != slot)
+            .count()
+    }
+
     /// Structural invariants — used heavily by tests/proptests:
     /// child counts sum to parent count, leaf point ranges partition the
     /// point array, every original index appears once, cell geometry nests.

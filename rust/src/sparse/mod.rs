@@ -198,6 +198,65 @@ pub fn symmetrize<T: Real>(
     m
 }
 
+/// Re-index a (symmetric) CSR matrix into a new point ordering, writing into
+/// a caller-owned `dst` whose buffers are reused across calls (the Z-order-
+/// persistent gradient loop re-permutes `P` only when the embedding layout
+/// drifts, so steady-state adoptions allocate nothing).
+///
+/// `new_to_old[t]` is the source index of the point now stored at slot `t`;
+/// `old_to_new` is its inverse. The result is the symmetric permutation
+/// `dst[t][u] = src[new_to_old[t]][new_to_old[u]]`.
+///
+/// Entries within a row are relocated, NOT re-sorted: dst row `t` keeps the
+/// entry order of src row `new_to_old[t]`. Two consequences the pipeline
+/// relies on: (1) a row sum over the permuted matrix is bit-identical to the
+/// same row's sum over the source (exact FP parity for the attractive sweep),
+/// and (2) permuting by a permutation and then by its inverse reproduces the
+/// source exactly. The price: the result does not satisfy the
+/// ascending-columns invariant of [`CsrMatrix::validate`] — it is a
+/// traversal layout, not a canonical matrix.
+pub fn permute_symmetric_into<T: Real>(
+    pool: &ThreadPool,
+    src: &CsrMatrix<T>,
+    new_to_old: &[u32],
+    old_to_new: &[u32],
+    dst: &mut CsrMatrix<T>,
+) {
+    let n = src.n;
+    assert_eq!(new_to_old.len(), n, "new_to_old must have n entries");
+    assert_eq!(old_to_new.len(), n, "old_to_new must have n entries");
+    let nnz = src.nnz();
+    dst.n = n;
+    dst.row_ptr.resize(n + 1, 0);
+    dst.row_ptr[0] = 0;
+    for t in 0..n {
+        let o = new_to_old[t] as usize;
+        dst.row_ptr[t + 1] = dst.row_ptr[t] + (src.row_ptr[o + 1] - src.row_ptr[o]);
+    }
+    debug_assert_eq!(dst.row_ptr[n], nnz);
+    dst.col.resize(nnz, 0);
+    dst.val.resize(nnz, T::ZERO);
+    {
+        let cs = SyncSlice::new(&mut dst.col);
+        let vs = SyncSlice::new(&mut dst.val);
+        let row_ptr = &dst.row_ptr;
+        parallel_for(pool, n, Schedule::Static, |range| {
+            for t in range {
+                let o = new_to_old[t] as usize;
+                let (s, e) = (src.row_ptr[o], src.row_ptr[o + 1]);
+                let d = row_ptr[t];
+                for (k, idx) in (s..e).enumerate() {
+                    // disjoint: output row t
+                    unsafe {
+                        *cs.get_mut(d + k) = old_to_new[src.col[idx] as usize];
+                        *vs.get_mut(d + k) = src.val[idx];
+                    }
+                }
+            }
+        });
+    }
+}
+
 /// Count the size of the sorted-merge union of two (col, val) lists.
 fn merge_count<T: Copy>(a: &[(u32, T)], b: &[(u32, T)]) -> usize {
     let (mut ia, mut ib, mut cnt) = (0, 0, 0);
@@ -333,6 +392,71 @@ mod tests {
         assert_eq!(m1.row_ptr, m8.row_ptr);
         assert_eq!(m1.col, m8.col);
         assert_eq!(m1.val, m8.val);
+    }
+
+    fn random_permutation(n: usize, rng: &mut Rng) -> (Vec<u32>, Vec<u32>) {
+        let mut perm: Vec<u32> = (0..n as u32).collect();
+        // Fisher-Yates
+        for i in (1..n).rev() {
+            let j = rng.next_below(i + 1);
+            perm.swap(i, j);
+        }
+        let mut inv = vec![0u32; n];
+        for (slot, &orig) in perm.iter().enumerate() {
+            inv[orig as usize] = slot as u32;
+        }
+        (perm, inv)
+    }
+
+    #[test]
+    fn permute_symmetric_matches_dense_reindex() {
+        let (knn, p) = make_knn_and_p(80, 4, 7, 5);
+        let pool = ThreadPool::new(4);
+        let m = symmetrize(&pool, &knn, &p);
+        let n = m.n;
+        let mut rng = Rng::new(99);
+        let (perm, inv) = random_permutation(n, &mut rng);
+        let mut a = CsrMatrix::<f64> { n: 0, row_ptr: Vec::new(), col: Vec::new(), val: Vec::new() };
+        permute_symmetric_into(&pool, &m, &perm, &inv, &mut a);
+        // dense check: a[t][u] == m[perm[t]][perm[u]]
+        let mut dense_a = vec![0.0f64; n * n];
+        for t in 0..n {
+            let (s, e) = (a.row_ptr[t], a.row_ptr[t + 1]);
+            for idx in s..e {
+                dense_a[t * n + a.col[idx] as usize] += a.val[idx];
+            }
+        }
+        for t in 0..n {
+            for u in 0..n {
+                let want = m.get(perm[t] as usize, perm[u] as usize);
+                let got = dense_a[t * n + u];
+                assert!((want - got).abs() < 1e-15, "({t},{u}): {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn permute_symmetric_round_trips_exactly() {
+        // permute ∘ unpermute = id, bit-for-bit (entry order is preserved,
+        // the contract the Z-order pipeline's FP-parity argument rests on).
+        let (knn, p) = make_knn_and_p(150, 5, 9, 6);
+        let pool = ThreadPool::new(4);
+        let m = symmetrize(&pool, &knn, &p);
+        let mut rng = Rng::new(7);
+        let (perm, inv) = random_permutation(m.n, &mut rng);
+        let mut fwd = CsrMatrix::<f64> { n: 0, row_ptr: Vec::new(), col: Vec::new(), val: Vec::new() };
+        let mut back = CsrMatrix::<f64> { n: 0, row_ptr: Vec::new(), col: Vec::new(), val: Vec::new() };
+        permute_symmetric_into(&pool, &m, &perm, &inv, &mut fwd);
+        permute_symmetric_into(&pool, &fwd, &inv, &perm, &mut back);
+        assert_eq!(back.n, m.n);
+        assert_eq!(back.row_ptr, m.row_ptr);
+        assert_eq!(back.col, m.col);
+        assert_eq!(back.val, m.val);
+        // identity permutation is a no-op copy
+        let ident: Vec<u32> = (0..m.n as u32).collect();
+        permute_symmetric_into(&pool, &m, &ident, &ident, &mut fwd);
+        assert_eq!(fwd.col, m.col);
+        assert_eq!(fwd.val, m.val);
     }
 
     #[test]

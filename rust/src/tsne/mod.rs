@@ -17,8 +17,10 @@
 //! | `FitSne`       | blocked, par   | seq | —             | —         | scalar, par      | FFT interp|
 
 pub mod pipeline;
+pub mod workspace;
 
 pub use pipeline::{run_tsne, run_tsne_custom, run_tsne_with_p, AttractiveEngine, NativeAttractive};
+pub use workspace::IterationWorkspace;
 
 use crate::common::timer::StepTimes;
 use crate::common::float::Real;
@@ -73,6 +75,44 @@ impl Implementation {
     }
 }
 
+/// Memory layout of the per-iteration gradient state (embedding, forces,
+/// optimizer state, and the CSR `P` the attractive sweep reads).
+///
+/// [`Layout::Zorder`] is the paper's cache story taken to its conclusion:
+/// `build_morton` already sorts the embedding into Z-order every iteration —
+/// the Z-order-persistent loop ([`workspace::IterationWorkspace`]) keeps ALL
+/// per-point state in that order, re-adopting the fresh order only when it
+/// drifts, so the attractive CSR sweep, the repulsive scatter, and the fused
+/// combine+update pass all walk memory in spatial order. Exact-parity
+/// contract: both layouts produce the same embedding to FP noise (asserted
+/// by the layout-parity proptests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    /// Gradient state stays in the caller's point order (the pre-refactor
+    /// behaviour): every kernel gathers/scatters through the permutation.
+    Original,
+    /// Gradient state lives in the quadtree's Z-order; the embedding is
+    /// un-permuted once at the end of the run.
+    Zorder,
+}
+
+impl Layout {
+    pub fn name(self) -> &'static str {
+        match self {
+            Layout::Original => "original",
+            Layout::Zorder => "zorder",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "original" => Some(Layout::Original),
+            "zorder" | "z-order" => Some(Layout::Zorder),
+            _ => None,
+        }
+    }
+}
+
 /// Pipeline configuration (defaults = the paper's experimental setup:
 /// sklearn defaults, 1000 iterations, θ = 0.5, perplexity 30).
 #[derive(Clone, Copy, Debug)]
@@ -94,6 +134,12 @@ pub struct TsneConfig {
     /// Ignored by [`Implementation::FitSne`], whose FFT pipeline replaces the
     /// BH traversal entirely (the CLI rejects the combination).
     pub repulsive: Option<RepulsiveVariant>,
+    /// Gradient-state layout override; `None` uses the implementation
+    /// flavor's default (Z-order-persistent for [`Implementation::AccTsne`],
+    /// original elsewhere — the A/B knob behind the layout-parity tests and
+    /// `BENCH_gradient_loop.json`). [`Implementation::FitSne`] builds no tree
+    /// and always runs the original layout (the CLI rejects the combination).
+    pub layout: Option<Layout>,
 }
 
 impl Default for TsneConfig {
@@ -108,6 +154,7 @@ impl Default for TsneConfig {
             collect_step_times: true,
             init_pca: false,
             repulsive: None,
+            layout: None,
         }
     }
 }
@@ -146,6 +193,16 @@ mod tests {
         assert_eq!(c.update.early_exaggeration, 12.0);
         assert_eq!(c.update.exaggeration_iters, 250);
         assert_eq!(c.repulsive, None);
+        assert_eq!(c.layout, None);
+    }
+
+    #[test]
+    fn layout_names_roundtrip() {
+        for l in [Layout::Original, Layout::Zorder] {
+            assert_eq!(Layout::from_name(l.name()), Some(l));
+        }
+        assert_eq!(Layout::from_name("z-order"), Some(Layout::Zorder));
+        assert_eq!(Layout::from_name("bogus"), None);
     }
 
     #[test]

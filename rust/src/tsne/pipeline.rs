@@ -1,21 +1,45 @@
 //! Pipeline assembly: wires the step modules together per implementation
 //! flavor and times every step.
+//!
+//! ## The Z-order-persistent gradient loop
+//!
+//! [`gradient_loop`] is structured around an [`IterationWorkspace`]
+//! (see [`super::workspace`]) that owns the embedding, force buffers, and
+//! optimizer state in the current *layout order*. With [`Layout::Zorder`]
+//! (the [`Implementation::AccTsne`] default) the workspace adopts each tree
+//! build's Z-order whenever it drifts beyond the adoption threshold: the
+//! embedding, velocity, gains, and a re-indexed copy of the CSR `P` all move
+//! into Z-order, so every per-iteration sweep — repulsive scatter,
+//! attractive CSR gather, and the **fused combine+update pass**
+//! ([`Optimizer::fused_combine_step`](crate::gradient::update::Optimizer::fused_combine_step),
+//! exactly one pass over the `2n` coordinates per iteration; there is no
+//! separate `combine_gradient` sweep in the loop) — walks memory in spatial
+//! order. The embedding is un-permuted once, after the last iteration.
+//! [`Layout::Original`] keeps the caller's order throughout (the A/B
+//! baseline for `BENCH_gradient_loop.json` and the parity proptests; both
+//! layouts agree to FP noise). FIt-SNE builds no tree and always runs the
+//! original layout.
+//!
+//! Note for [`AttractiveEngine`] overrides: with the Z-order layout the
+//! engine is handed the workspace's re-indexed `P` and Z-ordered `y` — the
+//! interface contract (`out[2i..] = F_attr` of row `i` of the given `P`) is
+//! unchanged, but an engine that baked the original sparsity pattern into an
+//! AOT artifact should be run with `layout: Some(Layout::Original)`.
 
-use super::{Implementation, Scalar, TsneConfig, TsneResult};
+use super::{Implementation, Layout, Scalar, TsneConfig, TsneResult};
+use super::workspace::IterationWorkspace;
 use crate::common::timer::{Step, StepTimes};
 use crate::fitsne::{fitsne_repulsive_into, FitsneParams};
 use crate::gradient::attractive::{attractive_forces, Variant};
 use crate::gradient::exact::kl_with_z;
 use crate::gradient::repulsive::{repulsive_forces_into, RepulsiveVariant};
-use crate::gradient::update::{random_init, Optimizer};
-use crate::gradient::combine_gradient;
+use crate::gradient::update::random_init;
 use crate::knn::{BruteForceKnn, KnnEngine, NeighborLists};
 use crate::parallel::{pool::available_cores, ThreadPool};
 use crate::perplexity::{binary_search_perplexity, ParMode};
 use crate::quadtree::builder_baseline::build_baseline;
 use crate::quadtree::builder_morton::build_morton;
 use crate::quadtree::summarize::{summarize_parallel, summarize_sequential};
-use crate::quadtree::view::TraversalView;
 use crate::sparse::{symmetrize, CsrMatrix};
 
 /// Pluggable attractive-force engine: native SIMD/scalar variants or the
@@ -53,6 +77,7 @@ struct Flavor {
     repulsive_variant: RepulsiveVariant,
     forces_parallel: bool,
     fft_repulsion: bool,
+    layout: Layout,
 }
 
 fn flavor(imp: Implementation) -> Flavor {
@@ -67,6 +92,7 @@ fn flavor(imp: Implementation) -> Flavor {
             repulsive_variant: RepulsiveVariant::Scalar,
             forces_parallel: false,
             fft_repulsion: false,
+            layout: Layout::Original,
         },
         Implementation::MulticoreLike => Flavor {
             knn_blocked: false, // row-at-a-time distance sweep (VP-tree-ish locality)
@@ -78,6 +104,7 @@ fn flavor(imp: Implementation) -> Flavor {
             repulsive_variant: RepulsiveVariant::Scalar,
             forces_parallel: true,
             fft_repulsion: false,
+            layout: Layout::Original,
         },
         Implementation::Daal4pyLike => Flavor {
             knn_blocked: true,
@@ -89,6 +116,7 @@ fn flavor(imp: Implementation) -> Flavor {
             repulsive_variant: RepulsiveVariant::Scalar,
             forces_parallel: true,
             fft_repulsion: false,
+            layout: Layout::Original,
         },
         Implementation::AccTsne => Flavor {
             knn_blocked: true,
@@ -100,6 +128,7 @@ fn flavor(imp: Implementation) -> Flavor {
             repulsive_variant: RepulsiveVariant::SimdTiled,
             forces_parallel: true,
             fft_repulsion: false,
+            layout: Layout::Zorder,
         },
         Implementation::FitSne => Flavor {
             knn_blocked: true,
@@ -111,6 +140,7 @@ fn flavor(imp: Implementation) -> Flavor {
             repulsive_variant: RepulsiveVariant::Scalar,
             forces_parallel: true,
             fft_repulsion: true,
+            layout: Layout::Original,
         },
     }
 }
@@ -239,15 +269,14 @@ fn gradient_loop<T: Scalar>(
     };
 
     let rep_variant = cfg.repulsive.unwrap_or(fl.repulsive_variant);
-    let mut y = init.unwrap_or_else(|| random_init::<T>(n, cfg.seed));
-    let mut opt = Optimizer::<T>::new(n, cfg.update);
-    let mut attr = vec![T::ZERO; 2 * n];
-    let mut grad = vec![T::ZERO; 2 * n];
-    // Caller-owned repulsive buffer + SoA view: the hot loop allocates
-    // nothing per iteration for the repulsive step (the buffers and the
-    // view's arrays are reused; only the tree itself is rebuilt).
-    let mut rep_raw = vec![T::ZERO; 2 * n];
-    let mut view: TraversalView<T> = TraversalView::new();
+    // FIt-SNE builds no tree, hence has no Z-order to persist: force Original.
+    let layout = if fl.fft_repulsion { Layout::Original } else { cfg.layout.unwrap_or(fl.layout) };
+    // The workspace owns embedding, force buffers, optimizer state, and (in
+    // the Z-order layout) the permutation + re-indexed P. Steady state
+    // allocates nothing per iteration: force/view/scratch buffers are reused
+    // and only the tree itself is rebuilt.
+    let y0 = init.unwrap_or_else(|| random_init::<T>(n, cfg.seed));
+    let mut ws = IterationWorkspace::new(y0, cfg.update, layout == Layout::Zorder);
     let fit_params = FitsneParams::default();
     let mut last_z = T::ONE;
 
@@ -255,17 +284,21 @@ fn gradient_loop<T: Scalar>(
         let z: T = if fl.fft_repulsion {
             // FIt-SNE path: no tree; the FFT pipeline is the repulsive step.
             times.time(Step::Repulsive, || {
-                fitsne_repulsive_into(force_pool, &y, &fit_params, &mut rep_raw)
+                fitsne_repulsive_into(force_pool, &ws.y, &fit_params, &mut ws.rep_raw)
             })
         } else {
             // Steps 3–4: quadtree + summarization.
             let mut tree = times.time(Step::TreeBuild, || {
                 if fl.morton_tree {
-                    build_morton(tree_pool, &y)
+                    build_morton(tree_pool, &ws.y)
                 } else {
-                    build_baseline(tree_pool, &y)
+                    build_baseline(tree_pool, &ws.y)
                 }
             });
+            // Layout maintenance (Z-order path only): adopt the fresh
+            // Z-order when it drifted past the threshold. Charged to
+            // TreeBuild — it is the build's permutation being applied.
+            times.time(Step::TreeBuild, || ws.maybe_adopt(pool, &mut tree, p));
             times.time(Step::Summarize, || {
                 if fl.summarize_parallel {
                     summarize_parallel(pool, &mut tree)
@@ -274,31 +307,39 @@ fn gradient_loop<T: Scalar>(
                 }
             });
             // Step 6: repulsive (view materialization charged to this step —
-            // it exists only to feed the tiled kernel).
+            // it exists only to feed the tiled kernel). In the adopted
+            // Z-order layout the scatter through `point_idx` is the identity.
             times.time(Step::Repulsive, || {
                 let v = match rep_variant {
                     RepulsiveVariant::Scalar => None,
                     RepulsiveVariant::SimdTiled => {
-                        view.rebuild_parallel(force_pool, &tree);
-                        Some(&view)
+                        ws.view.rebuild_parallel(force_pool, &tree);
+                        Some(&ws.view)
                     }
                 };
-                repulsive_forces_into(force_pool, &tree, v, cfg.theta, rep_variant, &mut rep_raw)
+                repulsive_forces_into(force_pool, &tree, v, cfg.theta, rep_variant, &mut ws.rep_raw)
             })
         };
         last_z = z;
 
-        // Step 5: attractive.
-        times.time(Step::Attractive, || attractive.compute(force_pool, p, &y, &mut attr));
+        // Step 5: attractive — over the layout-order P once adopted, so the
+        // y-gathers walk Z-order neighborhoods instead of random slots.
+        let p_iter: &CsrMatrix<T> = match &ws.p_z {
+            Some(m) => m,
+            None => p,
+        };
+        times.time(Step::Attractive, || {
+            attractive.compute(force_pool, p_iter, &ws.y, &mut ws.attr)
+        });
 
-        // Update.
+        // Update: ONE fused combine+update sweep (no separate combine pass).
         times.time(Step::Update, || {
-            let exag = opt.exaggeration(iter);
-            combine_gradient(pool, &attr, &rep_raw, z, exag, &mut grad);
-            opt.step(pool, iter, &grad, &mut y);
+            ws.opt.fused_combine_step(pool, iter, &ws.attr, &ws.rep_raw, z, &mut ws.y)
         });
     }
 
+    // The run's single un-permute back to the caller's point order.
+    let y = ws.into_original_order();
     let kl = kl_with_z(p, &y, last_z.to_f64());
     (y, kl, cfg.n_iter, times)
 }
@@ -433,6 +474,54 @@ mod tests {
                 b.embedding[i]
             );
         }
+    }
+
+    #[test]
+    fn zorder_layout_matches_original_layout_through_pipeline() {
+        // The layout refactor's exact-parity contract over a short horizon
+        // (same argument as repulsive_variants_agree_through_pipeline: per
+        // iteration the two layouts differ only by FP summation order, so 10
+        // descent steps cannot meaningfully diverge).
+        let ds = gaussian_mixture::<f64>(400, 8, 4, 8.0, 17);
+        let mut cfg = quick_cfg(10);
+        cfg.layout = Some(crate::tsne::Layout::Original);
+        let a = run_tsne(&ds.points, ds.n, ds.d, &cfg, Implementation::AccTsne);
+        cfg.layout = Some(crate::tsne::Layout::Zorder);
+        let b = run_tsne(&ds.points, ds.n, ds.d, &cfg, Implementation::AccTsne);
+        assert!(a.embedding.iter().all(|v| v.is_finite()));
+        for i in 0..a.embedding.len() {
+            assert!(
+                (a.embedding[i] - b.embedding[i]).abs() < 1e-6 * (1.0 + a.embedding[i].abs()),
+                "idx {i}: original {} vs zorder {}",
+                a.embedding[i],
+                b.embedding[i]
+            );
+        }
+    }
+
+    #[test]
+    fn zorder_is_the_acc_tsne_default() {
+        // No layout override must be bit-identical to an explicit Zorder.
+        let ds = gaussian_mixture::<f64>(300, 6, 3, 6.0, 18);
+        let cfg = quick_cfg(8);
+        let default_run = run_tsne(&ds.points, ds.n, ds.d, &cfg, Implementation::AccTsne);
+        let mut cfg_z = cfg;
+        cfg_z.layout = Some(crate::tsne::Layout::Zorder);
+        let explicit = run_tsne(&ds.points, ds.n, ds.d, &cfg_z, Implementation::AccTsne);
+        assert_eq!(default_run.embedding, explicit.embedding);
+    }
+
+    #[test]
+    fn fitsne_forces_original_layout() {
+        // No tree ⇒ no Z-order: a zorder request must be a bit-identical
+        // no-op, not a crash.
+        let ds = gaussian_mixture::<f64>(300, 6, 3, 6.0, 19);
+        let mut cfg = quick_cfg(8);
+        cfg.layout = Some(crate::tsne::Layout::Zorder);
+        let a = run_tsne(&ds.points, ds.n, ds.d, &cfg, Implementation::FitSne);
+        cfg.layout = Some(crate::tsne::Layout::Original);
+        let b = run_tsne(&ds.points, ds.n, ds.d, &cfg, Implementation::FitSne);
+        assert_eq!(a.embedding, b.embedding);
     }
 
     #[test]

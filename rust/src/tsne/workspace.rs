@@ -1,0 +1,379 @@
+//! Z-order-persistent gradient-loop state — the [`IterationWorkspace`].
+//!
+//! `build_morton` sorts the embedding into Z-order every iteration; the
+//! pre-refactor loop threw that permutation away, so the attractive CSR
+//! sweep, the gradient combine, and the optimizer step all walked `y`,
+//! `attr`, and `grad` in original order with scattered gathers. The
+//! workspace makes Z-order the *native* layout of the whole loop instead:
+//!
+//! - it owns the embedding, force buffers, and optimizer state **in layout
+//!   order**, plus the global `slot → original` permutation;
+//! - after each tree build it compares the tree's fresh Z-order against the
+//!   current layout ([`QuadTree::layout_drift`]) and **adopts** the new order
+//!   only when more than [`ADOPT_DRIFT_PCT`]% of points moved slots —
+//!   re-permuting `y` (a memcpy of the tree's already-gathered positions),
+//!   velocity, gains, the composed permutation, and the CSR `P`
+//!   ([`permute_symmetric_into`], amortized O(nnz)) in one go, then marking
+//!   the tree's `point_idx` as identity so the repulsive kernels scatter
+//!   sequentially;
+//! - between adoptions the tree's `point_idx` is a near-identity map and the
+//!   existing kernels need no changes at all;
+//! - the embedding is un-permuted **once**, at the end of the run
+//!   ([`IterationWorkspace::into_original_order`]).
+//!
+//! Allocation story: `attr`/`rep_raw`/`view` buffers are reused every
+//! iteration; the permutation scratch, optimizer-state scratch, and the
+//! Z-order `P` copy are allocated on the *first* adoption and reused by all
+//! later ones. The per-iteration hot path allocates nothing beyond the tree
+//! build itself.
+//!
+//! Parity contract: every value is merely *relocated*, never recomputed, and
+//! `P`'s per-row entry order is preserved by [`permute_symmetric_into`], so
+//! the Z-order loop matches the original-layout loop to FP noise (the only
+//! divergence is summation order inside `recenter`'s mean and the BH Z
+//! reduction). The layout-parity proptests assert ≤ 1e-6 relative.
+
+use crate::common::float::Real;
+use crate::gradient::update::{Optimizer, UpdateParams};
+use crate::parallel::{parallel_for, Schedule, SyncSlice, ThreadPool};
+use crate::quadtree::view::TraversalView;
+use crate::quadtree::QuadTree;
+use crate::sparse::{permute_symmetric_into, CsrMatrix};
+
+/// Re-permute (adopt) only when more than this percentage of points changed
+/// slots since the last adopted layout. Below it the repulsive scatter
+/// through `point_idx` is ~identity and re-indexing `P` (O(nnz)) would cost
+/// more than the locality it restores; above it the scattered CSR gathers
+/// start missing again. Points move a lot early (adopt almost every
+/// iteration) and barely at all late (adopt rarely, and the builder's
+/// sorted-skip makes the re-sort itself a no-op).
+pub const ADOPT_DRIFT_PCT: usize = 5;
+
+/// Persistent per-iteration state of the gradient loop, stored in the
+/// current layout order (original until the first adoption, Z-order after).
+pub struct IterationWorkspace<T: Real> {
+    zorder: bool,
+    adopted: bool,
+    /// Embedding, interleaved x,y per point, in layout order.
+    pub y: Vec<T>,
+    /// Attractive accumulation buffer (layout order, overwritten per iter).
+    pub attr: Vec<T>,
+    /// Raw repulsive accumulation buffer (layout order, overwritten per iter).
+    pub rep_raw: Vec<T>,
+    /// Optimizer state (velocity/gains live in layout order too).
+    pub opt: Optimizer<T>,
+    /// SoA traversal view for the tiled repulsive kernel (buffers reused).
+    pub view: TraversalView<T>,
+    /// Z-order copy of `P` (rows and columns in slot space); `None` until the
+    /// first adoption — the pipeline reads the caller's `P` until then.
+    pub(crate) p_z: Option<CsrMatrix<T>>,
+    /// `perm[slot] = original index` of the adopted layout.
+    perm: Vec<u32>,
+    /// `inv_perm[original] = slot`.
+    inv_perm: Vec<u32>,
+    perm_scratch: Vec<u32>,
+    state_scratch: Vec<T>,
+}
+
+impl<T: Real> IterationWorkspace<T> {
+    /// Wrap an initial embedding (in the caller's original point order).
+    /// `zorder` selects the persistent-layout mode; with it off the
+    /// workspace is a plain buffer bundle and [`Self::maybe_adopt`] no-ops.
+    pub fn new(y: Vec<T>, update: UpdateParams, zorder: bool) -> Self {
+        let n = y.len() / 2;
+        assert_eq!(y.len(), 2 * n, "embedding must be interleaved x,y");
+        let (perm, inv_perm) = if zorder {
+            ((0..n as u32).collect(), (0..n as u32).collect())
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        IterationWorkspace {
+            zorder,
+            adopted: false,
+            y,
+            attr: vec![T::ZERO; 2 * n],
+            rep_raw: vec![T::ZERO; 2 * n],
+            opt: Optimizer::new(n, update),
+            view: TraversalView::new(),
+            p_z: None,
+            perm,
+            inv_perm,
+            perm_scratch: Vec::new(),
+            state_scratch: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.y.len() / 2
+    }
+
+    /// `slot → original` map of the adopted layout (`None` while the state
+    /// is still in original order).
+    pub fn permutation(&self) -> Option<&[u32]> {
+        if self.adopted {
+            Some(&self.perm)
+        } else {
+            None
+        }
+    }
+
+    /// Adopt `tree`'s layout as the workspace layout if it drifted beyond
+    /// [`ADOPT_DRIFT_PCT`] from the current one. `tree` must have been built
+    /// from `self.y` this iteration, and `p` must be the run's CSR `P` in
+    /// ORIGINAL index space (the re-index always starts from it, so
+    /// permutation error cannot compound across adoptions). On adoption the
+    /// tree's `point_idx` is rewritten to the identity: tree slots ARE layout
+    /// slots from here on, so the repulsive kernels scatter sequentially.
+    ///
+    /// Returns whether the layout changed.
+    pub fn maybe_adopt(
+        &mut self,
+        pool: &ThreadPool,
+        tree: &mut QuadTree<T>,
+        p: &CsrMatrix<T>,
+    ) -> bool {
+        if !self.zorder {
+            return false;
+        }
+        let n = self.n();
+        debug_assert_eq!(tree.n_points(), n, "tree must be built from the workspace embedding");
+        let drift = tree.layout_drift();
+        if drift * 100 <= n * ADOPT_DRIFT_PCT {
+            return false;
+        }
+
+        // First adoption allocates the scratch; later ones reuse it.
+        self.perm_scratch.resize(n, 0);
+        self.state_scratch.resize(2 * n, T::ZERO);
+
+        // Compose the global permutation: the point now at slot t came from
+        // layout slot tree.point_idx[t], which held original perm[...].
+        {
+            let new_to_old = tree.layout_order();
+            let perm = &self.perm;
+            let ps = SyncSlice::new(&mut self.perm_scratch);
+            parallel_for(pool, n, Schedule::Static, |range| {
+                for t in range {
+                    // disjoint: slot t
+                    unsafe { *ps.get_mut(t) = perm[new_to_old[t] as usize] };
+                }
+            });
+        }
+        std::mem::swap(&mut self.perm, &mut self.perm_scratch);
+        {
+            let perm = &self.perm;
+            let inv = SyncSlice::new(&mut self.inv_perm);
+            parallel_for(pool, n, Schedule::Static, |range| {
+                for t in range {
+                    // disjoint: perm is a bijection
+                    unsafe { *inv.get_mut(perm[t] as usize) = t as u32 };
+                }
+            });
+        }
+
+        // Embedding: the builder already gathered y into the new order.
+        self.y.copy_from_slice(&tree.point_pos);
+
+        // Optimizer state rides along (values relocated, never recomputed).
+        permute_pairs(pool, tree.layout_order(), &self.opt.velocity, &mut self.state_scratch);
+        std::mem::swap(&mut self.opt.velocity, &mut self.state_scratch);
+        permute_pairs(pool, tree.layout_order(), &self.opt.gains, &mut self.state_scratch);
+        std::mem::swap(&mut self.opt.gains, &mut self.state_scratch);
+
+        // P re-indexed into slot space, always from the original matrix.
+        let p_z = self.p_z.get_or_insert_with(|| CsrMatrix {
+            n,
+            row_ptr: Vec::new(),
+            col: Vec::new(),
+            val: Vec::new(),
+        });
+        permute_symmetric_into(pool, p, &self.perm, &self.inv_perm, p_z);
+
+        // The tree is now IN layout order: make its scatter map say so.
+        {
+            let ids = SyncSlice::new(&mut tree.point_idx);
+            parallel_for(pool, n, Schedule::Static, |range| {
+                for t in range {
+                    // disjoint: slot t
+                    unsafe { *ids.get_mut(t) = t as u32 };
+                }
+            });
+        }
+        self.adopted = true;
+        true
+    }
+
+    /// Consume the workspace, returning the embedding un-permuted to the
+    /// caller's original point order (the run's single un-permute).
+    pub fn into_original_order(mut self) -> Vec<T> {
+        if !self.adopted {
+            return self.y;
+        }
+        for (slot, &orig) in self.perm.iter().enumerate() {
+            self.state_scratch[2 * orig as usize] = self.y[2 * slot];
+            self.state_scratch[2 * orig as usize + 1] = self.y[2 * slot + 1];
+        }
+        self.state_scratch
+    }
+}
+
+/// `dst[2t..2t+2] = src[2·new_to_old[t] ..]` — relocate interleaved per-point
+/// pairs into a new layout (parallel; dst fully overwritten).
+fn permute_pairs<T: Real>(pool: &ThreadPool, new_to_old: &[u32], src: &[T], dst: &mut [T]) {
+    debug_assert_eq!(src.len(), dst.len());
+    debug_assert_eq!(src.len(), 2 * new_to_old.len());
+    let ds = SyncSlice::new(dst);
+    parallel_for(pool, new_to_old.len(), Schedule::Static, |range| {
+        for t in range {
+            let s = new_to_old[t] as usize;
+            // disjoint: slots 2t, 2t+1
+            unsafe {
+                *ds.get_mut(2 * t) = src[2 * s];
+                *ds.get_mut(2 * t + 1) = src[2 * s + 1];
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::rng::Rng;
+    use crate::quadtree::builder_morton::build_morton;
+
+    fn random_y(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..2 * n).map(|_| rng.next_gaussian() * 3.0).collect()
+    }
+
+    /// Small ring-structured CSR (columns in original index space).
+    fn ring_p(n: usize) -> CsrMatrix<f64> {
+        let mut row_ptr = vec![0usize];
+        let mut col = Vec::new();
+        let mut val = Vec::new();
+        for i in 0..n {
+            col.push(((i + 1) % n) as u32);
+            col.push(((i + 3) % n) as u32);
+            val.push(0.25 + i as f64 * 1e-3);
+            val.push(0.75 - i as f64 * 1e-3);
+            row_ptr.push(col.len());
+        }
+        CsrMatrix { n, row_ptr, col, val }
+    }
+
+    #[test]
+    fn adoption_relocates_all_state_consistently() {
+        let n = 500;
+        let y0 = random_y(n, 1);
+        let pool = ThreadPool::new(4);
+        let p = ring_p(n);
+        let mut ws = IterationWorkspace::new(y0.clone(), UpdateParams::default(), true);
+        // distinct optimizer state so relocation is observable
+        for i in 0..2 * n {
+            ws.opt.velocity[i] = i as f64 * 0.5;
+            ws.opt.gains[i] = 1.0 + i as f64 * 0.25;
+        }
+        let vel0 = ws.opt.velocity.clone();
+        let gains0 = ws.opt.gains.clone();
+        let mut tree = build_morton(&pool, &ws.y);
+        assert!(ws.maybe_adopt(&pool, &mut tree, &p), "random order must adopt");
+        let perm = ws.permutation().unwrap().to_vec();
+        // point_idx rewritten to identity
+        assert!(tree.point_idx.iter().enumerate().all(|(t, &s)| s as usize == t));
+        for (slot, &orig) in perm.iter().enumerate() {
+            let o = orig as usize;
+            assert_eq!(ws.y[2 * slot], y0[2 * o], "y slot {slot}");
+            assert_eq!(ws.y[2 * slot + 1], y0[2 * o + 1]);
+            assert_eq!(ws.opt.velocity[2 * slot], vel0[2 * o]);
+            assert_eq!(ws.opt.velocity[2 * slot + 1], vel0[2 * o + 1]);
+            assert_eq!(ws.opt.gains[2 * slot], gains0[2 * o]);
+            assert_eq!(ws.opt.gains[2 * slot + 1], gains0[2 * o + 1]);
+        }
+        // P rows/cols in slot space: p_z[t] = p.row(perm[t]) with mapped cols
+        let p_z = ws.p_z.as_ref().unwrap();
+        let mut inv = vec![0u32; n];
+        for (slot, &orig) in perm.iter().enumerate() {
+            inv[orig as usize] = slot as u32;
+        }
+        for t in 0..n {
+            let (zc, zv) = p_z.row(t);
+            let (oc, ov) = p.row(perm[t] as usize);
+            assert_eq!(zv, ov, "row {t} values must relocate in order");
+            let want: Vec<u32> = oc.iter().map(|&c| inv[c as usize]).collect();
+            assert_eq!(zc, &want[..], "row {t} columns must map to slot space");
+        }
+    }
+
+    #[test]
+    fn no_adoption_below_drift_threshold() {
+        let n = 400;
+        let y0 = random_y(n, 2);
+        let pool = ThreadPool::new(4);
+        let p = ring_p(n);
+        let mut ws = IterationWorkspace::new(y0, UpdateParams::default(), true);
+        let mut t1 = build_morton(&pool, &ws.y);
+        assert!(ws.maybe_adopt(&pool, &mut t1, &p));
+        // rebuild from the adopted layout: zero drift → no re-adoption
+        let mut t2 = build_morton(&pool, &ws.y);
+        assert_eq!(t2.layout_drift(), 0);
+        assert!(!ws.maybe_adopt(&pool, &mut t2, &p));
+        // original-layout workspaces never adopt
+        let mut ws_orig = IterationWorkspace::new(random_y(n, 3), UpdateParams::default(), false);
+        let mut t3 = build_morton(&pool, &ws_orig.y);
+        assert!(!ws_orig.maybe_adopt(&pool, &mut t3, &p));
+        assert!(ws_orig.p_z.is_none());
+    }
+
+    #[test]
+    fn into_original_order_round_trips() {
+        let n = 300;
+        let y0 = random_y(n, 4);
+        let pool = ThreadPool::new(2);
+        let p = ring_p(n);
+        let mut ws = IterationWorkspace::new(y0.clone(), UpdateParams::default(), true);
+        let mut tree = build_morton(&pool, &ws.y);
+        assert!(ws.maybe_adopt(&pool, &mut tree, &p));
+        assert_ne!(ws.y, y0, "layout must actually differ");
+        assert_eq!(ws.into_original_order(), y0);
+    }
+
+    #[test]
+    fn repeated_adoption_composes_against_original() {
+        // Two adoptions in sequence: the composed permutation must still map
+        // slots straight back to ORIGINAL indices (no compounding error).
+        let n = 350;
+        let y0 = random_y(n, 5);
+        let pool = ThreadPool::new(4);
+        let p = ring_p(n);
+        let mut ws = IterationWorkspace::new(y0.clone(), UpdateParams::default(), true);
+        let mut t1 = build_morton(&pool, &ws.y);
+        assert!(ws.maybe_adopt(&pool, &mut t1, &p));
+        let perm0 = ws.permutation().unwrap().to_vec();
+        // Perturb the embedding enough to reshuffle the Z-order.
+        let mut rng = Rng::new(6);
+        for v in ws.y.iter_mut() {
+            *v += rng.next_gaussian() * 2.0;
+        }
+        let y_mid = ws.y.clone();
+        let mut t2 = build_morton(&pool, &ws.y);
+        assert!(ws.maybe_adopt(&pool, &mut t2, &p), "perturbed order must re-adopt");
+        let perm1 = ws.permutation().unwrap();
+        // p_z row t must equal p row perm1[t] (re-indexed from ORIGINAL, so
+        // two adoptions cannot compound permutation error)
+        let p_z = ws.p_z.as_ref().unwrap();
+        for t in 0..n {
+            let (_, zv) = p_z.row(t);
+            let (_, ov) = p.row(perm1[t] as usize);
+            assert_eq!(zv, ov, "row {t}");
+        }
+        // Unwinding maps each mid-state slot s back to original owner
+        // perm0[s]: back[2·perm0[s]] == y_mid[2s].
+        let back = ws.into_original_order();
+        for s in 0..n {
+            let o = perm0[s] as usize;
+            assert_eq!(back[2 * o], y_mid[2 * s], "slot {s}");
+            assert_eq!(back[2 * o + 1], y_mid[2 * s + 1]);
+        }
+    }
+}

@@ -6,7 +6,7 @@ use acc_tsne::data::synthetic::gaussian_mixture;
 use acc_tsne::gradient::attractive::{attractive_forces, Variant};
 use acc_tsne::gradient::combine_gradient;
 use acc_tsne::gradient::exact::{exact_gradient, exact_kl};
-use acc_tsne::gradient::repulsive::repulsive_forces;
+use acc_tsne::gradient::repulsive::repulsive_forces_scalar_into;
 use acc_tsne::gradient::update::random_init;
 use acc_tsne::knn::{BruteForceKnn, KnnEngine};
 use acc_tsne::parallel::ThreadPool;
@@ -32,12 +32,13 @@ fn bh_gradient_tracks_exact_gradient_through_descent() {
     // Walk a few real descent steps, comparing BH vs exact gradient each time.
     let mut attr = vec![0.0; 2 * n];
     let mut grad = vec![0.0; 2 * n];
+    let mut rep_raw = vec![0.0; 2 * n];
     for it in 0..5 {
         let mut tree = build_morton(&pool, &y);
         summarize_parallel(&pool, &mut tree);
-        let rep = repulsive_forces(&pool, &tree, 0.5);
+        let z = repulsive_forces_scalar_into(&pool, &tree, 0.5, &mut rep_raw);
         attractive_forces(&pool, &p, &y, Variant::Simd, &mut attr);
-        combine_gradient(&pool, &attr, &rep.raw, rep.z, 1.0, &mut grad);
+        combine_gradient(&pool, &attr, &rep_raw, z, 1.0, &mut grad);
         let exact = exact_gradient(&pool, &p, &y);
         let mut num = 0.0;
         let mut den = 0.0;

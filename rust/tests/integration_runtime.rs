@@ -148,6 +148,9 @@ fn end_to_end_tsne_with_xla_attractive_engine() {
         perplexity: 10.0,
         n_iter: 60,
         n_threads: 4,
+        // The AOT artifact bakes the original sparsity pattern; don't hand it
+        // the Z-order-permuted P the AccTsne default layout would produce.
+        layout: Some(acc_tsne::tsne::Layout::Original),
         ..TsneConfig::default()
     };
     let r_xla = run_tsne_custom(&ds.points, ds.n, ds.d, &cfg, Implementation::AccTsne, Some(&eng));

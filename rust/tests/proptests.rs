@@ -6,9 +6,7 @@
 use acc_tsne::common::proptest::{check, gen_len, gen_points, Config};
 use acc_tsne::common::rng::Rng;
 use acc_tsne::gradient::exact::exact_repulsive;
-use acc_tsne::gradient::repulsive::{
-    repulsive_forces, repulsive_forces_scalar_into, repulsive_forces_tiled_into,
-};
+use acc_tsne::gradient::repulsive::{repulsive_forces_scalar_into, repulsive_forces_tiled_into};
 use acc_tsne::knn::{knn_reference, BruteForceKnn, KnnEngine};
 use acc_tsne::parallel::sort::radix_sort_pairs;
 use acc_tsne::parallel::ThreadPool;
@@ -19,9 +17,19 @@ use acc_tsne::quadtree::morton::{quadrant_at, RootCell};
 use acc_tsne::quadtree::summarize::{summarize_parallel, summarize_sequential};
 use acc_tsne::quadtree::tree_stats;
 use acc_tsne::quadtree::view::TraversalView;
+use acc_tsne::quadtree::QuadTree;
+use acc_tsne::tsne::{run_tsne, Implementation, Layout, TsneConfig};
 
 fn pool() -> ThreadPool {
     ThreadPool::new(4)
+}
+
+/// Scalar repulsive pass with a locally-owned buffer (the `_into` API the
+/// pipeline uses; the allocating wrapper is gone).
+fn scalar_rep(pool: &ThreadPool, tree: &QuadTree<f64>, theta: f64) -> (Vec<f64>, f64) {
+    let mut raw = vec![0.0f64; 2 * tree.n_points()];
+    let z = repulsive_forces_scalar_into(pool, tree, theta, &mut raw);
+    (raw, z)
 }
 
 #[test]
@@ -100,10 +108,10 @@ fn prop_bh_z_bounded_by_pair_count() {
         let theta = rng.next_f64();
         let mut tree = build_morton(&pool, &pos);
         summarize_parallel(&pool, &mut tree);
-        let rep = repulsive_forces(&pool, &tree, theta);
+        let (_, z) = scalar_rep(&pool, &tree, theta);
         let bound = (n * (n - 1)) as f64;
-        if !(rep.z > 0.0 && rep.z <= bound * 1.000001) {
-            return Err(format!("Z {} out of (0, {bound}]", rep.z));
+        if !(z > 0.0 && z <= bound * 1.000001) {
+            return Err(format!("Z {z} out of (0, {bound}]"));
         }
         Ok(())
     });
@@ -119,11 +127,11 @@ fn prop_bh_converges_to_exact_as_theta_shrinks() {
         summarize_parallel(&pool, &mut tree);
         let (want, _) = exact_repulsive(&pool, &pos);
         let err_at = |theta: f64| {
-            let rep = repulsive_forces(&pool, &tree, theta);
+            let (raw, _) = scalar_rep(&pool, &tree, theta);
             let mut num = 0.0;
             let mut den = 0.0;
             for i in 0..2 * n {
-                num += (rep.raw[i] - want[i]) * (rep.raw[i] - want[i]);
+                num += (raw[i] - want[i]) * (raw[i] - want[i]);
                 den += want[i] * want[i] + 1e-30;
             }
             (num / den).sqrt()
@@ -319,13 +327,87 @@ fn prop_forces_antisymmetric_for_two_points() {
         ];
         let mut tree = build_morton(&pool, &pos);
         summarize_sequential(&mut tree);
-        let rep = repulsive_forces(&pool, &tree, 0.5);
+        let (raw, _) = scalar_rep(&pool, &tree, 0.5);
         for d in 0..2 {
-            let (a, b) = (rep.raw[d], rep.raw[2 + d]);
+            let (a, b) = (raw[d], raw[2 + d]);
             if (a + b).abs() > 1e-12 * (1.0 + a.abs()) {
                 return Err(format!("dim {d}: {a} + {b} != 0"));
             }
         }
         Ok(())
     });
+}
+
+/// Full-pipeline parity between the original and Z-order-persistent layouts
+/// (the ISSUE-2 acceptance bar): same data, same config, only
+/// `TsneConfig::layout` differs. Every value in the Z-order path is relocated
+/// rather than recomputed and the CSR re-index preserves per-row entry order,
+/// so over a short horizon the embeddings agree to FP noise. Sweeps
+/// theta in {0, 0.5}, 1/4/8-thread pools, and duplicate-heavy inputs.
+fn layout_parity(data: &[f64], n: usize, d: usize, theta: f64, threads: usize) -> Result<(), String> {
+    let mut cfg = TsneConfig {
+        perplexity: 5.0,
+        theta,
+        n_iter: 10,
+        n_threads: threads,
+        seed: 0xACC,
+        layout: Some(Layout::Original),
+        ..TsneConfig::default()
+    };
+    let a = run_tsne(data, n, d, &cfg, Implementation::AccTsne);
+    cfg.layout = Some(Layout::Zorder);
+    let b = run_tsne(data, n, d, &cfg, Implementation::AccTsne);
+    for i in 0..2 * n {
+        let (x, y) = (a.embedding[i], b.embedding[i]);
+        if !x.is_finite() || (x - y).abs() > 1e-6 * (1.0 + x.abs()) {
+            return Err(format!(
+                "theta={theta} threads={threads} n={n} idx {i}: original {x} vs zorder {y}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_zorder_pipeline_matches_original_layout() {
+    check(
+        "zorder pipeline == original",
+        Config { cases: 8, ..Config::default() },
+        |rng| {
+            let n = 40 + gen_len(rng, 0, 260);
+            let d = 4;
+            let data = gen_points(rng, n * d, 5.0);
+            let theta = if rng.next_below(2) == 0 { 0.0 } else { 0.5 };
+            let threads = [1, 4, 8][rng.next_below(3)];
+            layout_parity(&data, n, d, theta, threads)
+        },
+    );
+}
+
+#[test]
+fn prop_zorder_pipeline_matches_original_layout_duplicate_heavy() {
+    // Duplicated input rows produce coincident embeddings-in-spirit: equal
+    // morton codes, multi-point leaves, and radix-sort tie-breaking — the
+    // layouts must still agree.
+    check(
+        "zorder == original (duplicates)",
+        Config { cases: 6, ..Config::default() },
+        |rng| {
+            let n = 60 + gen_len(rng, 0, 140);
+            let d = 4;
+            let mut data = gen_points(rng, n * d, 5.0);
+            let sites = 1 + rng.next_below(3);
+            for i in 0..n {
+                if rng.next_below(4) == 0 {
+                    let site = rng.next_below(sites) as f64;
+                    for dd in 0..d {
+                        data[i * d + dd] = site * 0.5 - 1.0 + dd as f64 * 0.1;
+                    }
+                }
+            }
+            let theta = if rng.next_below(2) == 0 { 0.0 } else { 0.5 };
+            let threads = [1, 4, 8][rng.next_below(3)];
+            layout_parity(&data, n, d, theta, threads)
+        },
+    );
 }

@@ -1,0 +1,67 @@
+#!/usr/bin/env python3
+"""Fails-soft bench trend check.
+
+Compares BENCH_*.json snapshots (written by `cargo bench --bench
+bench_micro_kernels`) against committed baselines in bench_baselines/.
+A timing field (any numeric key ending in `_s`, nested objects included)
+that is more than REGRESSION_THRESHOLD above its baseline emits a GitHub
+`::warning::` annotation. The script never fails the build: CI runners are
+noisy and the trend is advisory (see ROADMAP "wire it into a trend check").
+
+Refresh a baseline by copying the snapshot from a trusted run:
+    cp rust/BENCH_repulsive.json bench_baselines/
+"""
+import json
+import os
+import sys
+
+REGRESSION_THRESHOLD = 1.20  # warn if >20% slower than baseline
+BASELINE_DIR = "bench_baselines"
+
+
+def flatten(d, prefix=""):
+    out = {}
+    for k, v in d.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(flatten(v, key + "."))
+        elif isinstance(v, (int, float)) and not isinstance(v, bool):
+            out[key] = float(v)
+    return out
+
+
+def main(paths):
+    warned = 0
+    for path in paths:
+        if not os.path.exists(path):
+            print(f"::warning::{path} missing (bench did not produce it)")
+            warned += 1
+            continue
+        with open(path) as f:
+            cur = flatten(json.load(f))
+        base_path = os.path.join(BASELINE_DIR, os.path.basename(path))
+        if not os.path.exists(base_path):
+            print(f"{path}: no baseline at {base_path} — current values (commit one to start the trend):")
+            for k, v in sorted(cur.items()):
+                print(f"  {k} = {v:.6g}")
+            continue
+        with open(base_path) as f:
+            base = flatten(json.load(f))
+        for k in sorted(base):
+            if not k.endswith("_s") or k not in cur or base[k] <= 0:
+                continue
+            ratio = cur[k] / base[k]
+            if ratio > REGRESSION_THRESHOLD:
+                print(
+                    f"::warning title=bench regression::{path}:{k} is "
+                    f"{ratio:.2f}x baseline ({cur[k]:.4g}s vs {base[k]:.4g}s)"
+                )
+                warned += 1
+            else:
+                print(f"ok {path}:{k} {ratio:.2f}x baseline")
+    print(f"bench trend check done (fails-soft, {warned} warning(s))")
+    return 0  # advisory: never fail the build
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
