@@ -1,12 +1,17 @@
-//! Quickstart: embed a small Gaussian-mixture dataset with Acc-t-SNE and
-//! write the scatter plot.
+//! Quickstart: embed a small Gaussian-mixture dataset through the session
+//! API — fit the affinities once, run a convergence-controlled descent with
+//! streaming snapshots, then reuse the same affinities for a second seed —
+//! and write the scatter plot.
 //!
 //! ```sh
 //! cargo run --release --offline --example quickstart
 //! ```
 
 use acc_tsne::data::synthetic::gaussian_mixture;
-use acc_tsne::tsne::{run_tsne, Implementation, TsneConfig};
+use acc_tsne::parallel::ThreadPool;
+use acc_tsne::tsne::{
+    Affinities, Convergence, ObserverControl, StagePlan, TsneConfig, TsneSession,
+};
 use acc_tsne::viz;
 
 fn main() {
@@ -19,10 +24,40 @@ fn main() {
         n_iter: 500,
         ..TsneConfig::default()
     };
-    let result = run_tsne(&ds.points, ds.n, ds.d, &cfg, Implementation::AccTsne);
+
+    // Phase 1 — the affinity fit (KNN → BSP → symmetrize), computed ONCE.
+    let plan = StagePlan::acc_tsne();
+    let pool = ThreadPool::with_all_cores();
+    let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, cfg.perplexity, &plan);
+    println!(
+        "affinities: nnz={} fit in {:.2}s",
+        aff.p().nnz(),
+        aff.step_times().total()
+    );
+
+    // Phase 2 — a session with convergence control and streaming snapshots.
+    let mut session = TsneSession::new(&aff, plan, cfg).expect("preset plans validate");
+    session.set_observer(100, |snap| {
+        println!(
+            "  iter {:>4}: KL = {:.4}  |grad| = {:.3e}",
+            snap.iter, snap.kl, snap.grad_norm
+        );
+        ObserverControl::Continue
+    });
+    // Convergence is checked after the early-exaggeration phase (250 iters
+    // by default) and the first check always registers progress, so the
+    // no-progress window must fit strictly inside the remaining budget:
+    // 250 + 100 < 500.
+    let outcome = session.run_until(Convergence {
+        max_iter: cfg.n_iter,
+        min_grad_norm: 1e-7,
+        n_iter_without_progress: 100,
+    });
+    let result = session.finish();
 
     println!("KL divergence: {:.4}", result.kl_divergence);
-    println!("total time   : {:.2}s", result.step_times.total());
+    println!("iterations   : {} ({:?})", outcome.n_iter, outcome.reason);
+    println!("gradient time: {:.2}s", result.step_times.total());
     for (step, pct) in result.step_times.percentages() {
         println!(
             "  {:<11} {:>8.3}s  {:>5.1}%",
@@ -31,6 +66,18 @@ fn main() {
             pct
         );
     }
+
+    // The fit is reusable: a second descent from another seed costs zero
+    // KNN/BSP time.
+    let mut cfg_b = cfg;
+    cfg_b.seed = 1234;
+    let mut session_b = TsneSession::new(&aff, plan, cfg_b).expect("preset plans validate");
+    session_b.run(cfg_b.n_iter);
+    let result_b = session_b.finish();
+    println!(
+        "second seed  : KL = {:.4} (same affinities, no KNN/BSP recompute)",
+        result_b.kl_divergence
+    );
 
     std::fs::create_dir_all("results").ok();
     viz::write_svg("results/quickstart.svg", &result.embedding, &ds.labels, 768)

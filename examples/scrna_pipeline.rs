@@ -75,10 +75,12 @@ fn main() {
         // (one pass over 2n instead of separate combine and step passes)
         let z = repulsive_forces_scalar_into(&pool, &tree, theta, &mut rep_raw);
         attractive_forces(&pool, &p, &y, Variant::Simd, &mut attr);
-        opt.fused_combine_step(&pool, iter, &attr, &rep_raw, z, &mut y);
+        // the fused sweep returns the squared gradient norm for free — the
+        // same signal TsneSession::run_until uses for convergence stopping
+        let grad_norm_sq = opt.fused_combine_step(&pool, iter, &attr, &rep_raw, z, &mut y);
         if iter % (n_iter / 10).max(1) == 0 || iter + 1 == n_iter {
             let kl = kl_with_z(&p, &y, z);
-            println!("      iter {iter:>5}  KL = {kl:.4}");
+            println!("      iter {iter:>5}  KL = {kl:.4}  |grad| = {:.3e}", grad_norm_sq.sqrt());
         }
     }
     println!("      gradient phase: {:.2}s", t.elapsed());

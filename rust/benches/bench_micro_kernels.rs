@@ -26,7 +26,7 @@ use acc_tsne::quadtree::morton::{encode_points, encode_points_simd, RootCell};
 use acc_tsne::quadtree::summarize::{summarize_parallel, summarize_sequential};
 use acc_tsne::quadtree::view::TraversalView;
 use acc_tsne::sparse::{symmetrize, CsrMatrix};
-use acc_tsne::tsne::{run_tsne_with_p, Implementation, Layout, TsneConfig};
+use acc_tsne::tsne::{Affinities, Layout, StagePlan, TsneConfig, TsneSession};
 
 fn env_n() -> usize {
     std::env::var("ACC_TSNE_MICRO_N")
@@ -232,30 +232,45 @@ fn main() {
     let mut row_ptr = Vec::with_capacity(n + 1);
     let mut col = Vec::with_capacity(n * k);
     row_ptr.push(0usize);
+    let mut row_buf: Vec<u32> = Vec::with_capacity(k);
     for _ in 0..n {
+        // Strictly-ascending unique columns per row (the CSR invariant
+        // Affinities::from_csr debug-asserts; duplicates from the raw draw
+        // are dropped, so rows hold up to k entries).
+        row_buf.clear();
         for _ in 0..k {
-            col.push(rng.next_below(n) as u32);
+            row_buf.push(rng.next_below(n) as u32);
         }
+        row_buf.sort_unstable();
+        row_buf.dedup();
+        col.extend_from_slice(&row_buf);
         row_ptr.push(col.len());
     }
+    let nnz = col.len();
     let p_loop = CsrMatrix::<f64> {
         n,
         row_ptr,
         col,
-        val: vec![1.0 / (n * k) as f64; n * k],
+        val: vec![1.0 / nnz as f64; nnz],
     };
+    debug_assert!(p_loop.validate().is_ok());
     let base_cfg = TsneConfig {
         n_iter: iters,
         seed: 42,
         n_threads: pool.n_threads(),
         ..TsneConfig::default()
     };
-    let mut cfg_o = base_cfg;
-    cfg_o.layout = Some(Layout::Original);
-    let r_orig = run_tsne_with_p(&pool, &p_loop, &cfg_o, Implementation::AccTsne);
-    let mut cfg_z = base_cfg;
-    cfg_z.layout = Some(Layout::Zorder);
-    let r_z = run_tsne_with_p(&pool, &p_loop, &cfg_z, Implementation::AccTsne);
+    // One Affinities instance drives the layout A/B *and* the adoption sweep
+    // below — the session API's fit-once/descend-many contract, with no
+    // per-run copy of P.
+    let aff_loop = Affinities::from_csr(p_loop, 30.0);
+    let run_plan = |plan: StagePlan| {
+        let mut sess = TsneSession::new(&aff_loop, plan, base_cfg).expect("valid plan");
+        sess.run(iters);
+        sess.finish()
+    };
+    let r_orig = run_plan(StagePlan::acc_tsne().with_layout(Layout::Original).expect("valid"));
+    let r_z = run_plan(StagePlan::acc_tsne().with_layout(Layout::Zorder).expect("valid"));
     let steps = [
         (Step::TreeBuild, "tree_build"),
         (Step::Summarize, "summarize"),
@@ -271,6 +286,40 @@ fn main() {
     }
     let (ta, tz) = (r_orig.step_times.gradient_total(), r_z.step_times.gradient_total());
     println!("{:<12} {ta:>12.4} {tz:>12.4} {:>7.2}x", "TOTAL", ta / tz.max(1e-12));
+
+    // --- Z-order adoption-threshold sweep (closes the ROADMAP follow-up:
+    // the 5% default was picked, not measured). Only the plan's
+    // adopt_drift_pct varies — 0% re-adopts on any drift (max locality, max
+    // re-index cost), 100% would never adopt at all.
+    let adopt_pcts = [0usize, 2, 5, 10, 20];
+    let mut adopt_results = Vec::new();
+    for &pct in &adopt_pcts {
+        let plan = StagePlan::acc_tsne().with_adopt_drift_pct(pct).expect("pct in range");
+        if plan == StagePlan::acc_tsne() {
+            // pct 5 is the preset default: plan-identical to the zorder A/B
+            // run above, so reuse its measurement instead of re-running.
+            adopt_results.push((pct, r_z.step_times.clone()));
+            continue;
+        }
+        let mut sess = TsneSession::new(&aff_loop, plan, base_cfg).expect("valid plan");
+        sess.run(iters);
+        adopt_results.push((pct, sess.finish().step_times));
+    }
+    println!("\n== adoption-threshold sweep (n={n}, iters={iters}, zorder layout) ==");
+    println!(
+        "{:<10} {:>14} {:>14} {:>12} {:>12}",
+        "adopt_pct", "tree+adopt(s)", "attractive(s)", "update(s)", "gradient(s)"
+    );
+    for (pct, st) in &adopt_results {
+        println!(
+            "{pct:<10} {:>14.4} {:>14.4} {:>12.4} {:>12.4}",
+            st.get(Step::TreeBuild),
+            st.get(Step::Attractive),
+            st.get(Step::Update),
+            st.gradient_total()
+        );
+    }
+
     let mut js = String::from("{\n  \"bench\": \"gradient_loop\",\n");
     js.push_str(&format!("  \"n\": {n},\n  \"threads\": {},\n  \"iters\": {iters},\n", pool.n_threads()));
     for (label, r) in [("original", &r_orig), ("zorder", &r_z)] {
@@ -281,6 +330,19 @@ fn main() {
         }
         js.push_str("  },\n");
     }
+    js.push_str("  \"adopt_sweep\": {\n");
+    for (i, (pct, st)) in adopt_results.iter().enumerate() {
+        let sep = if i + 1 < adopt_results.len() { "," } else { "" };
+        js.push_str(&format!(
+            "    \"pct{pct}\": {{ \"tree_build_s\": {:.6e}, \"attractive_s\": {:.6e}, \
+             \"update_s\": {:.6e}, \"gradient_total_s\": {:.6e} }}{sep}\n",
+            st.get(Step::TreeBuild),
+            st.get(Step::Attractive),
+            st.get(Step::Update),
+            st.gradient_total()
+        ));
+    }
+    js.push_str("  },\n");
     js.push_str(&format!(
         "  \"speedup_attractive\": {:.3},\n",
         r_orig.step_times.get(Step::Attractive) / r_z.step_times.get(Step::Attractive).max(1e-12)

@@ -49,13 +49,17 @@ impl Args {
         self.flags.get(name).map(|s| s.as_str())
     }
 
-    /// Typed flag with default; errors on unparseable values.
-    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+    /// Typed flag with default; errors on unparseable values, forwarding the
+    /// `FromStr` error (which for the crate's enums lists the valid choices).
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
         match self.flags.get(name) {
             None => Ok(default),
             Some(v) => v
                 .parse()
-                .map_err(|_| format!("--{name}: cannot parse '{v}'")),
+                .map_err(|e| format!("--{name}: cannot parse '{v}': {e}")),
         }
     }
 

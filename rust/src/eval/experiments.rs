@@ -6,7 +6,10 @@ use crate::common::timer::Step;
 use crate::data::datasets::PaperDataset;
 use crate::data::Dataset;
 use crate::parallel::ThreadPool;
-use crate::tsne::{run_tsne, Implementation, RepulsiveVariant, TsneConfig, TsneResult};
+use crate::tsne::{
+    run_tsne, Affinities, Implementation, RepulsiveVariant, StagePlan, TsneConfig, TsneResult,
+    TsneSession,
+};
 use crate::viz;
 
 fn gen(ds: PaperDataset, cfg: &ExpConfig) -> Dataset<f64> {
@@ -89,29 +92,40 @@ pub fn fig4_end_to_end(cfg: &ExpConfig, datasets: &[PaperDataset]) -> Vec<Vec<St
 }
 
 /// Table 3 — KL divergence of sklearn-like / daal4py-like / Acc-t-SNE across
-/// the datasets.
+/// the datasets, plus an Acc-t-SNE run from a second seed.
+///
+/// All four gradient runs per dataset descend from **one** [`Affinities`]
+/// fit (the session API's fit-once/descend-many contract). That sharing is
+/// legitimate here: the three implementations under comparison use the same
+/// blocked KNN engine, and BSP parallelism changes only wall time, not the
+/// calibrated `P` — Table 3 is an accuracy claim, so only `P` matters.
 pub fn table3_accuracy(cfg: &ExpConfig, datasets: &[PaperDataset]) -> Vec<Vec<String>> {
     let threads = cfg.resolved_threads();
+    let pool = ThreadPool::new(threads);
     let mut rows = Vec::new();
     for &d in datasets {
         let ds = gen(d, cfg);
-        let kls: Vec<f64> = [
-            Implementation::SklearnLike,
-            Implementation::Daal4pyLike,
-            Implementation::AccTsne,
-        ]
-        .iter()
-        .map(|&imp| run(&ds, cfg, imp, threads).kl_divergence)
-        .collect();
+        let tc = tsne_cfg(cfg, threads);
+        let aff =
+            Affinities::fit(&pool, &ds.points, ds.n, ds.d, tc.perplexity, &StagePlan::acc_tsne());
+        let kl_of = |imp: Implementation, seed: u64| -> f64 {
+            let mut c = tc;
+            c.seed = seed;
+            let mut sess = TsneSession::new(&aff, StagePlan::preset(imp), c)
+                .expect("preset plans validate");
+            sess.run(c.n_iter);
+            sess.finish().kl_divergence
+        };
         rows.push(vec![
             d.name().to_string(),
-            format!("{:.3}", kls[0]),
-            format!("{:.3}", kls[1]),
-            format!("{:.3}", kls[2]),
+            format!("{:.3}", kl_of(Implementation::SklearnLike, tc.seed)),
+            format!("{:.3}", kl_of(Implementation::Daal4pyLike, tc.seed)),
+            format!("{:.3}", kl_of(Implementation::AccTsne, tc.seed)),
+            format!("{:.3}", kl_of(Implementation::AccTsne, tc.seed ^ 0xA11CE)),
         ]);
     }
-    let headers = ["dataset", "sklearn", "daal4py", "acc-t-sne(optimized)"];
-    print_table("Table 3: KL divergence", &headers, &rows);
+    let headers = ["dataset", "sklearn", "daal4py", "acc-t-sne(optimized)", "acc-t-sne(seed B)"];
+    print_table("Table 3: KL divergence (one affinity fit per dataset)", &headers, &rows);
     save_csv(cfg, "table3_accuracy", &headers, &rows);
     rows
 }
@@ -387,6 +401,16 @@ mod tests {
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[0][1], "scalar");
         assert_eq!(rows[1][1], "simd-tiled");
+    }
+
+    #[test]
+    fn table3_has_second_seed_column_per_dataset() {
+        let rows = table3_accuracy(&tiny_cfg(), &[PaperDataset::Digits]);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].len(), 5, "dataset + 3 impl KLs + second-seed KL");
+        for cell in &rows[0][1..] {
+            assert!(cell.parse::<f64>().unwrap().is_finite());
+        }
     }
 
     #[test]

@@ -38,7 +38,8 @@ use std::simd::cmp::{SimdPartialEq, SimdPartialOrd};
 use std::simd::num::SimdFloat;
 use std::simd::{f32x16, f64x8, i32x16, i64x8, Mask};
 
-/// Which repulsive kernel runs (threaded through `Flavor` / `TsneConfig`).
+/// Which repulsive kernel runs (a [`StagePlan`](crate::tsne::StagePlan)
+/// knob; the compat wrappers also accept it via `TsneConfig::repulsive`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RepulsiveVariant {
     /// Per-point scalar DFS over AoS nodes.
@@ -55,11 +56,28 @@ impl RepulsiveVariant {
         }
     }
 
+    /// [`FromStr`](std::str::FromStr) without the error payload.
     pub fn from_name(s: &str) -> Option<Self> {
+        s.parse().ok()
+    }
+}
+
+impl std::fmt::Display for RepulsiveVariant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for RepulsiveVariant {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s {
-            "scalar" => Some(RepulsiveVariant::Scalar),
-            "simd-tiled" | "tiled" | "simd" => Some(RepulsiveVariant::SimdTiled),
-            _ => None,
+            "scalar" => Ok(RepulsiveVariant::Scalar),
+            "simd-tiled" | "tiled" | "simd" => Ok(RepulsiveVariant::SimdTiled),
+            _ => Err(format!(
+                "unknown repulsive variant '{s}' (expected: scalar, simd-tiled)"
+            )),
         }
     }
 }

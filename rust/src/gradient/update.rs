@@ -4,6 +4,7 @@
 
 use crate::common::float::Real;
 use crate::common::rng::Rng;
+use crate::parallel::par_for::static_chunk;
 use crate::parallel::{parallel_for, Schedule, SyncSlice, ThreadPool};
 
 /// Descent hyper-parameters (sklearn-2022 defaults, as used by the paper).
@@ -37,6 +38,10 @@ pub struct Optimizer<T: Real> {
     pub velocity: Vec<T>,
     pub gains: Vec<T>,
     pub params: UpdateParams,
+    /// Per-thread partial sums of the squared gradient norm (scratch of
+    /// [`Self::fused_combine_step`]; kept here so the hot loop stays
+    /// allocation-free).
+    norm_partials: Vec<T>,
 }
 
 impl<T: Real> Optimizer<T> {
@@ -45,6 +50,7 @@ impl<T: Real> Optimizer<T> {
             velocity: vec![T::ZERO; 2 * n],
             gains: vec![T::ONE; 2 * n],
             params,
+            norm_partials: Vec::new(),
         }
     }
 
@@ -112,6 +118,14 @@ impl<T: Real> Optimizer<T> {
     /// (write grad, read grad, write y). Per element the arithmetic — and
     /// therefore the FP result — is identical to the two-pass path
     /// (asserted bitwise by `fused_step_equals_combine_then_step`).
+    ///
+    /// Returns the **squared l2 norm of the gradient** (`Σ g_i²`), which the
+    /// sweep materializes for free — the convergence controls of
+    /// [`TsneSession::run_until`](crate::tsne::TsneSession::run_until) read
+    /// it without an extra pass. The norm is accumulated per static chunk and
+    /// the chunk partials are summed in thread-id order, so it is
+    /// deterministic at a fixed thread count; the position/velocity/gains
+    /// update itself is arithmetically untouched by the accumulation.
     pub fn fused_combine_step(
         &mut self,
         pool: &ThreadPool,
@@ -120,7 +134,7 @@ impl<T: Real> Optimizer<T> {
         rep_raw: &[T],
         z: T,
         y: &mut [T],
-    ) {
+    ) -> T {
         let n2 = y.len();
         assert_eq!(attr.len(), n2);
         assert_eq!(rep_raw.len(), n2);
@@ -129,13 +143,22 @@ impl<T: Real> Optimizer<T> {
         let inv_z = T::ONE / z.max_r(T::TINY);
         let four = T::TWO * T::TWO;
         let (momentum, eta, min_gain) = self.schedule(iter);
+        let nt = pool.n_threads();
+        self.norm_partials.clear();
+        self.norm_partials.resize(nt, T::ZERO);
         {
             let vs = SyncSlice::new(&mut self.velocity);
             let gs = SyncSlice::new(&mut self.gains);
+            let ps = SyncSlice::new(&mut self.norm_partials);
             let ys = SyncSlice::new(y);
-            parallel_for(pool, n2, Schedule::Static, |range| {
-                for i in range {
+            // broadcast + static_chunk = parallel_for(Static) with the thread
+            // id exposed, so each thread owns one norm-partial slot.
+            pool.broadcast(|tid| {
+                let (start, end) = static_chunk(n2, nt, tid);
+                let mut acc = T::ZERO;
+                for i in start..end {
                     let grad_i = four * (exaggeration * attr[i] - rep_raw[i] * inv_z);
+                    acc += grad_i * grad_i;
                     // disjoint: slot i
                     unsafe {
                         descent_update(
@@ -149,9 +172,16 @@ impl<T: Real> Optimizer<T> {
                         );
                     }
                 }
+                // disjoint: slot tid
+                unsafe { *ps.get_mut(tid) = acc };
             });
         }
         recenter(pool, y);
+        let mut norm_sq = T::ZERO;
+        for &p in &self.norm_partials {
+            norm_sq += p;
+        }
+        norm_sq
     }
 }
 
@@ -295,12 +325,35 @@ mod tests {
         for iter in [0usize, 1, 5, 249, 250, 400] {
             combine_gradient(&pool, &attr, &rep, z, opt_a.exaggeration(iter), &mut grad);
             opt_a.step(&pool, iter, &grad, &mut ya);
-            opt_b.fused_combine_step(&pool, iter, &attr, &rep, z, &mut yb);
+            let norm_sq = opt_b.fused_combine_step(&pool, iter, &attr, &rep, z, &mut yb);
             // bitwise: the fused sweep must be arithmetically identical
             assert_eq!(ya, yb, "iter {iter}");
             assert_eq!(opt_a.velocity, opt_b.velocity, "iter {iter}");
             assert_eq!(opt_a.gains, opt_b.gains, "iter {iter}");
+            // the returned squared norm matches the gradient vector (up to
+            // chunked-summation FP noise)
+            let want: f64 = grad.iter().map(|g| g * g).sum();
+            assert!(
+                (norm_sq - want).abs() <= 1e-10 * want.max(1.0),
+                "iter {iter}: {norm_sq} vs {want}"
+            );
         }
+    }
+
+    #[test]
+    fn fused_norm_is_deterministic_across_calls() {
+        use crate::common::rng::Rng;
+        let pool = ThreadPool::new(4);
+        let n = 501; // deliberately not a multiple of the thread count
+        let mut rng = Rng::new(3);
+        let attr: Vec<f64> = (0..2 * n).map(|_| rng.next_gaussian()).collect();
+        let rep: Vec<f64> = (0..2 * n).map(|_| rng.next_gaussian()).collect();
+        let run = || {
+            let mut opt = Optimizer::<f64>::new(n, UpdateParams::default());
+            let mut y = vec![0.25f64; 2 * n];
+            opt.fused_combine_step(&pool, 3, &attr, &rep, 1.7, &mut y)
+        };
+        assert_eq!(run(), run(), "chunk-ordered reduction must be bit-stable");
     }
 
     #[test]

@@ -17,8 +17,56 @@
 //!   HLO text in `artifacts/`, executed from [`runtime`] via PJRT.
 //!
 //! ## Quickstart
+//!
+//! The public API is staged around the pipeline's two lifetimes: fit the
+//! affinities **once** ([`tsne::Affinities`]), then drive any number of
+//! gradient descents from them through a [`tsne::TsneSession`] built from a
+//! validated [`tsne::StagePlan`] — with stepwise control, convergence-based
+//! stopping, and an observer streaming un-permuted embedding snapshots:
+//!
 //! ```no_run
-//! use acc_tsne::tsne::{TsneConfig, Implementation, run_tsne};
+//! use acc_tsne::data::synthetic::gaussian_mixture;
+//! use acc_tsne::parallel::ThreadPool;
+//! use acc_tsne::tsne::{
+//!     Affinities, Convergence, ObserverControl, StagePlan, TsneConfig, TsneSession,
+//! };
+//!
+//! let ds = gaussian_mixture::<f64>(2_000, 16, 10, 4.0, 42);
+//! let cfg = TsneConfig::default();
+//!
+//! // Phase 1 — KNN → perplexity search → symmetrize, computed once.
+//! let plan = StagePlan::acc_tsne(); // presets: sklearn_like()/daal4py_like()/fit_sne()/...
+//! let pool = ThreadPool::with_all_cores();
+//! let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, cfg.perplexity, &plan);
+//!
+//! // Phase 2 — a resumable optimizer over the fitted affinities.
+//! let mut session = TsneSession::new(&aff, plan, cfg).expect("preset plans validate");
+//! session.set_observer(100, |snap| {
+//!     println!("iter {:>4}: KL = {:.3}  |grad| = {:.2e}", snap.iter, snap.kl, snap.grad_norm);
+//!     ObserverControl::Continue // or Stop, for observer-driven early exit
+//! });
+//! let outcome = session.run_until(Convergence {
+//!     max_iter: 1000,
+//!     min_grad_norm: 1e-7,          // sklearn-style stopping rules,
+//!     n_iter_without_progress: 300, // evaluated on the free per-iter grad norm
+//! });
+//! let result = session.finish();
+//! println!("KL = {:.3} after {} iterations ({:?})",
+//!          result.kl_divergence, outcome.n_iter, outcome.reason);
+//!
+//! // The same `aff` can now seed more sessions (different seeds/plans) —
+//! // the KNN+BSP phase is never recomputed.
+//! let mut cfg_b = cfg;
+//! cfg_b.seed = 1234;
+//! let mut session_b = TsneSession::new(&aff, plan, cfg_b).unwrap();
+//! session_b.run(500);
+//! ```
+//!
+//! The classic one-shot call is still there, as a thin wrapper that is
+//! bit-identical to fitting affinities and stepping a session manually:
+//!
+//! ```no_run
+//! use acc_tsne::tsne::{run_tsne, Implementation, TsneConfig};
 //! use acc_tsne::data::synthetic::gaussian_mixture;
 //!
 //! let ds = gaussian_mixture::<f64>(2_000, 16, 10, 4.0, 42);

@@ -1,7 +1,8 @@
 //! acc-tsne — CLI launcher for the Acc-t-SNE reproduction.
 //!
 //! ```text
-//! acc-tsne run       --dataset mnist --impl acc-t-sne [--scale F --iters N --threads N --out emb.csv --plot out.svg --f32]
+//! acc-tsne run       --dataset mnist --impl acc-t-sne [--scale F --iters N --threads N --out emb.csv --plot out.svg --f32
+//!                    --min-grad-norm F --n-iter-without-progress N --snapshot-every N --adopt-threshold PCT]
 //! acc-tsne compare   [--scale F --iters N]           # Fig 4 + Table 3
 //! acc-tsne scaling   [--scale F --iters N]           # Fig 5
 //! acc-tsne steps     [--threads N]                   # Tables 5/6 (+ Fig 6 with --sweep)
@@ -10,13 +11,23 @@
 //! acc-tsne viz                                       # Figs S1–S6
 //! acc-tsne info                                      # system + dataset registry
 //! ```
+//!
+//! `run` drives the session API: it fits `Affinities` once, builds a
+//! validated `StagePlan` from `--impl`/`--repulsive`/`--layout`/
+//! `--adopt-threshold` (impossible combinations are typed plan errors), then
+//! either runs the full `--iters` budget or, when `--min-grad-norm` /
+//! `--n-iter-without-progress` are given, stops early on convergence.
+//! `--snapshot-every N` streams un-permuted KL/grad-norm snapshots.
 
 use acc_tsne::cli::Args;
 use acc_tsne::data::datasets::PaperDataset;
 use acc_tsne::eval::{experiments, ExpConfig};
 use acc_tsne::parallel::pool::available_cores;
 use acc_tsne::parallel::ThreadPool;
-use acc_tsne::tsne::{run_tsne, Implementation, Layout, RepulsiveVariant, TsneConfig};
+use acc_tsne::tsne::{
+    Affinities, Convergence, Implementation, Layout, ObserverControl, RepulsiveVariant, Scalar,
+    StagePlan, StopReason, TsneConfig, TsneResult, TsneSession,
+};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -31,7 +42,8 @@ fn main() {
 
 const COMMON_FLAGS: &[&str] = &[
     "dataset", "impl", "scale", "iters", "threads", "seed", "out", "plot", "f32", "sweep",
-    "perplexity", "theta", "repulsive", "layout",
+    "perplexity", "theta", "repulsive", "layout", "adopt-threshold", "min-grad-norm",
+    "n-iter-without-progress", "snapshot-every",
 ];
 
 fn exp_config(args: &Args) -> Result<ExpConfig, String> {
@@ -92,73 +104,139 @@ fn real_main(argv: &[String]) -> Result<(), String> {
     }
 }
 
+/// Fit affinities, run one session (full budget or convergence-controlled),
+/// and fold the fit times into the result — the CLI's generic f32/f64 body.
+fn run_session<T: Scalar>(
+    pool: &ThreadPool,
+    points: &[T],
+    n: usize,
+    d: usize,
+    plan: StagePlan,
+    cfg: &TsneConfig,
+    conv: Option<Convergence>,
+    snapshot_every: usize,
+) -> Result<TsneResult<T>, String> {
+    let aff = Affinities::fit(pool, points, n, d, cfg.perplexity, &plan);
+    let mut sess = TsneSession::new(&aff, plan, *cfg).map_err(|e| e.to_string())?;
+    if snapshot_every > 0 {
+        sess.set_observer(snapshot_every, |snap| {
+            println!(
+                "  [snapshot] iter {:>5}  KL = {:.4}  |grad| = {:.3e}",
+                snap.iter, snap.kl, snap.grad_norm
+            );
+            ObserverControl::Continue
+        });
+    }
+    let outcome = match conv {
+        Some(c) => sess.run_until(c),
+        None => sess.run(cfg.n_iter),
+    };
+    if outcome.reason != StopReason::MaxIter {
+        println!("converged: stopped after {} iterations ({:?})", outcome.n_iter, outcome.reason);
+    }
+    let mut r = sess.finish();
+    r.step_times.merge(aff.step_times());
+    Ok(r)
+}
+
 fn cmd_run(args: &Args) -> Result<(), String> {
     let dataset = args.get("dataset").unwrap_or("digits");
     let ds_kind = PaperDataset::from_name(dataset)
         .ok_or_else(|| format!("unknown dataset '{dataset}' (see `acc-tsne info`)"))?;
-    let imp = Implementation::from_name(args.get("impl").unwrap_or("acc-t-sne"))
-        .ok_or_else(|| "unknown --impl (sklearn|multicore|daal4py|acc-t-sne|fit-sne)".to_string())?;
+    let imp: Implementation = args.get_parse("impl", Implementation::AccTsne)?;
     let exp = exp_config(args)?;
-    let repulsive = match args.get("repulsive") {
-        None => None,
-        Some(s) => Some(RepulsiveVariant::from_name(s).ok_or_else(|| {
-            format!("unknown --repulsive '{s}' (scalar|simd-tiled)")
-        })?),
-    };
-    if repulsive.is_some() && imp == Implementation::FitSne {
-        return Err(
-            "--repulsive has no effect with --impl fit-sne (FFT replaces the BH kernel)"
-                .to_string(),
-        );
+
+    // Stage plan: preset for --impl, then the checked overrides — impossible
+    // combinations come back as typed plan errors, before any data is built.
+    let mut plan = StagePlan::preset(imp);
+    if let Some(s) = args.get("repulsive") {
+        let v: RepulsiveVariant = s.parse().map_err(|e| format!("--repulsive: {e}"))?;
+        plan = plan.with_repulsive(v).map_err(|e| e.to_string())?;
     }
-    let layout = match args.get("layout") {
-        None => None,
-        Some(s) => Some(Layout::from_name(s).ok_or_else(|| {
-            format!("unknown --layout '{s}' (original|zorder)")
-        })?),
-    };
-    if layout == Some(Layout::Zorder) && imp == Implementation::FitSne {
-        return Err(
-            "--layout zorder has no effect with --impl fit-sne (no quadtree, no Z-order)"
-                .to_string(),
-        );
+    if let Some(s) = args.get("layout") {
+        let l: Layout = s.parse().map_err(|e| format!("--layout: {e}"))?;
+        plan = plan.with_layout(l).map_err(|e| e.to_string())?;
     }
+    if let Some(s) = args.get("adopt-threshold") {
+        let pct: usize = s
+            .parse()
+            .map_err(|e| format!("--adopt-threshold: cannot parse '{s}': {e}"))?;
+        plan = plan.with_adopt_drift_pct(pct).map_err(|e| e.to_string())?;
+    }
+
     let cfg = TsneConfig {
         n_iter: exp.n_iter,
         seed: exp.seed,
         n_threads: exp.max_threads,
         perplexity: args.get_parse("perplexity", 30.0)?,
         theta: args.get_parse("theta", 0.5)?,
-        repulsive,
-        layout,
         ..TsneConfig::default()
     };
+
+    // Convergence control: either flag switches run() → run_until().
+    let min_grad_norm = args.get_parse("min-grad-norm", 0.0f64)?;
+    if min_grad_norm < 0.0 {
+        return Err(format!("--min-grad-norm must be >= 0, got {min_grad_norm}"));
+    }
+    let n_no_progress = args.get_parse("n-iter-without-progress", 0usize)?;
+    let conv = if min_grad_norm > 0.0 || n_no_progress > 0 {
+        // Convergence is only evaluated after early exaggeration, and the
+        // no-progress window additionally needs that many checked iterations
+        // — warn when the budget makes the flags dead instead of silently
+        // running it out.
+        let checks_start = cfg.update.exaggeration_iters;
+        let grad_norm_dead = cfg.n_iter <= checks_start;
+        let window_dead = n_no_progress > 0 && cfg.n_iter <= checks_start + n_no_progress;
+        if grad_norm_dead || window_dead {
+            eprintln!(
+                "warning: convergence checks start after the early-exaggeration phase \
+                 ({checks_start} iters){} — --iters {} leaves them no room to fire",
+                if window_dead && !grad_norm_dead {
+                    " and the no-progress window needs that many checked iterations"
+                } else {
+                    ""
+                },
+                cfg.n_iter
+            );
+        }
+        Some(Convergence {
+            max_iter: cfg.n_iter,
+            min_grad_norm,
+            n_iter_without_progress: n_no_progress,
+        })
+    } else {
+        None
+    };
+    let snapshot_every = args.get_parse("snapshot-every", 0usize)?;
+
     let pool = ThreadPool::new(exp.resolved_threads());
     println!(
-        "dataset={dataset} scale={} impl={} threads={} iters={}",
+        "dataset={dataset} scale={} impl={imp} threads={} iters={}",
         exp.scale,
-        imp.name(),
         exp.resolved_threads(),
         cfg.n_iter
     );
     let ds = ds_kind.generate::<f64>(exp.scale, exp.seed, &pool);
     println!("n={} d={}", ds.n, ds.d);
 
-    let (kl, times, embedding, labels) = if args.has("f32") {
+    // The gen pool is reused for the affinity fit; the session owns its own
+    // pools (same thread count) for the gradient phase.
+    let (kl, n_iter, times, embedding, labels) = if args.has("f32") {
         let ds32 = ds.cast::<f32>();
-        let r = run_tsne(&ds32.points, ds32.n, ds32.d, &cfg, imp);
+        let r = run_session(&pool, &ds32.points, ds32.n, ds32.d, plan, &cfg, conv, snapshot_every)?;
         (
             r.kl_divergence,
+            r.n_iter,
             r.step_times,
             r.embedding.iter().map(|&v| v as f64).collect::<Vec<f64>>(),
             ds32.labels,
         )
     } else {
-        let r = run_tsne(&ds.points, ds.n, ds.d, &cfg, imp);
-        (r.kl_divergence, r.step_times, r.embedding, ds.labels)
+        let r = run_session(&pool, &ds.points, ds.n, ds.d, plan, &cfg, conv, snapshot_every)?;
+        (r.kl_divergence, r.n_iter, r.step_times, r.embedding, ds.labels)
     };
 
-    println!("KL divergence = {kl:.4}");
+    println!("KL divergence = {kl:.4}  ({n_iter} iterations)");
     println!("total time    = {:.2}s", times.total());
     for (step, pct) in times.percentages() {
         println!("  {:<11} {:>8.3}s  {:>5.1}%", step.name(), times.get(step), pct);
@@ -199,7 +277,9 @@ fn cmd_info() -> Result<(), String> {
 const HELP: &str = "\
 acc-tsne <subcommand> [flags]
   run        one t-SNE run  (--dataset --impl --scale --iters --threads --out --plot --f32
-             --repulsive scalar|simd-tiled  --layout original|zorder)
+             --repulsive scalar|simd-tiled  --layout original|zorder  --adopt-threshold PCT
+             --min-grad-norm F  --n-iter-without-progress N   # convergence-based early stop
+             --snapshot-every N                               # stream KL/grad-norm snapshots)
   compare    Fig 4 + Table 3 across datasets and implementations
   scaling    Fig 5 end-to-end multicore scaling
   steps      Tables 5/6 per-step comparison (--sweep adds Fig 6)
@@ -208,3 +288,62 @@ acc-tsne <subcommand> [flags]
   viz        Figs S1-S6 embedding plots
   info       system + dataset registry
 common flags: --scale F  --iters N  --threads N  --seed N";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    // All of these hit the plan/flag validation layer, which runs before any
+    // dataset is generated — the tests never pay for an actual t-SNE run.
+
+    #[test]
+    fn fit_sne_plus_zorder_layout_is_a_typed_plan_error() {
+        let e = real_main(&argv("run --impl fit-sne --layout zorder")).unwrap_err();
+        assert!(e.contains("invalid stage plan"), "{e}");
+        assert!(e.contains("FIt-SNE"), "{e}");
+        assert!(e.contains("Z-order"), "{e}");
+    }
+
+    #[test]
+    fn fit_sne_plus_bh_repulsive_override_is_a_typed_plan_error() {
+        for v in ["simd-tiled", "scalar"] {
+            let e = real_main(&argv(&format!("run --impl fit-sne --repulsive {v}"))).unwrap_err();
+            assert!(e.contains("invalid stage plan"), "{e}");
+            assert!(e.contains("Barnes-Hut"), "{e}");
+        }
+    }
+
+    #[test]
+    fn unknown_enum_values_list_the_choices() {
+        let e = real_main(&argv("run --impl bogus")).unwrap_err();
+        assert!(e.contains("acc-t-sne"), "{e}");
+        let e = real_main(&argv("run --layout bogus")).unwrap_err();
+        assert!(e.contains("zorder"), "{e}");
+        let e = real_main(&argv("run --repulsive bogus")).unwrap_err();
+        assert!(e.contains("simd-tiled"), "{e}");
+    }
+
+    #[test]
+    fn adopt_threshold_is_range_checked() {
+        let e = real_main(&argv("run --adopt-threshold 150")).unwrap_err();
+        assert!(e.contains("out of range"), "{e}");
+        let e = real_main(&argv("run --adopt-threshold banana")).unwrap_err();
+        assert!(e.contains("adopt-threshold"), "{e}");
+    }
+
+    #[test]
+    fn negative_min_grad_norm_is_rejected() {
+        let e = real_main(&argv("run --min-grad-norm -0.5")).unwrap_err();
+        assert!(e.contains("min-grad-norm"), "{e}");
+    }
+
+    #[test]
+    fn unknown_flags_still_fail_loudly() {
+        let e = real_main(&argv("run --min-grad-nrm 0.1")).unwrap_err();
+        assert!(e.contains("unknown flag"), "{e}");
+    }
+}

@@ -1,25 +1,49 @@
 //! The BH t-SNE pipeline and the five implementations the paper evaluates.
 //!
-//! [`run_tsne`] executes Figure 1a's step sequence — KNN → BSP (+symmetrize) →
-//! per-iteration {tree build, summarization, attractive, repulsive, update} —
-//! with every step instrumented into a [`StepTimes`] (the paper's Tables 5/6
-//! and Figures 1b/6 are per-step timings).
+//! The public API is staged around the pipeline's two lifetimes (Fig. 1a:
+//! KNN+BSP run once, the gradient loop runs ~1000×):
 //!
-//! [`Implementation`] selects the architecture being modeled; see
-//! DESIGN.md §Substitutions for the fidelity argument of each:
+//! - [`Affinities`] (`session`) — the fitted KNN→BSP→symmetrize artifact;
+//!   compute once, reuse across gradient runs;
+//! - [`StagePlan`] (`plan`) — the public, validated stage table (KNN engine,
+//!   BSP/tree/summarize parallelism, kernel variants, layout, adoption
+//!   threshold) with the five [`Implementation`]s as preset constructors and
+//!   impossible combinations rejected as typed [`PlanError`]s;
+//! - [`TsneSession`] (`session`) — a resumable optimizer over
+//!   `Affinities + StagePlan + TsneConfig`: [`step`](TsneSession::step) /
+//!   [`run`](TsneSession::run) / [`run_until`](TsneSession::run_until)
+//!   (sklearn-style `min_grad_norm` / `n_iter_without_progress` over the
+//!   per-iteration gradient norm) plus an observer hook streaming
+//!   un-permuted embedding snapshots with the current KL.
 //!
-//! | flavor         | KNN            | BSP | tree          | summarize | attractive       | repulsive |
-//! |----------------|----------------|-----|---------------|-----------|------------------|-----------|
-//! | `SklearnLike`  | blocked, par   | seq | baseline, seq | seq       | scalar, seq      | BH, seq   |
-//! | `MulticoreLike`| VP-tree, par   | seq | baseline, seq | seq       | scalar, par      | BH, par   |
-//! | `Daal4pyLike`  | blocked, par   | seq | baseline, seq | seq       | scalar, par      | BH, par   |
-//! | `AccTsne`      | blocked, par   | par | morton, par   | par       | SIMD+prefetch, par| BH, par  |
-//! | `FitSne`       | blocked, par   | seq | —             | —         | scalar, par      | FFT interp|
+//! [`run_tsne`] remains the classic one-shot call — a thin, bit-identical
+//! wrapper over fit + session — executing the full step sequence with every
+//! step instrumented into a [`StepTimes`] (the paper's Tables 5/6 and
+//! Figures 1b/6 are per-step timings).
+//!
+//! [`Implementation`] selects the architecture being modeled (see
+//! DESIGN.md §Substitutions for the fidelity argument of each); the
+//! corresponding [`StagePlan`] presets resolve to:
+//!
+//! | preset         | KNN            | BSP | tree          | summarize | attractive       | repulsive | layout   |
+//! |----------------|----------------|-----|---------------|-----------|------------------|-----------|----------|
+//! | `SklearnLike`  | blocked, par   | seq | baseline, seq | seq       | scalar, seq      | BH, seq   | original |
+//! | `MulticoreLike`| VP-tree, par   | seq | baseline, seq | seq       | scalar, par      | BH, par   | original |
+//! | `Daal4pyLike`  | blocked, par   | seq | baseline, seq | seq       | scalar, par      | BH, par   | original |
+//! | `AccTsne`      | blocked, par   | par | morton, par   | par       | SIMD+prefetch, par| BH SIMD-tiled, par | Z-order |
+//! | `FitSne`       | blocked, par   | seq | —             | —         | scalar, par      | FFT interp| original |
 
 pub mod pipeline;
+pub mod plan;
+pub mod session;
 pub mod workspace;
 
 pub use pipeline::{run_tsne, run_tsne_custom, run_tsne_with_p, AttractiveEngine, NativeAttractive};
+pub use plan::{PlanError, StagePlan};
+pub use session::{
+    Affinities, Convergence, ObserverControl, RunOutcome, Snapshot, StepInfo, StopReason,
+    TsneSession,
+};
 pub use workspace::IterationWorkspace;
 
 use crate::common::timer::StepTimes;
@@ -70,8 +94,30 @@ impl Implementation {
         }
     }
 
+    /// [`FromStr`](std::str::FromStr) without the error payload.
     pub fn from_name(s: &str) -> Option<Self> {
-        Self::ALL.iter().copied().find(|i| i.name() == s)
+        s.parse().ok()
+    }
+}
+
+impl std::fmt::Display for Implementation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Implementation {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::ALL
+            .iter()
+            .copied()
+            .find(|i| i.name() == s)
+            .ok_or_else(|| {
+                let names: Vec<&str> = Self::ALL.iter().map(|i| i.name()).collect();
+                format!("unknown implementation '{s}' (expected one of: {})", names.join(", "))
+            })
     }
 }
 
@@ -104,11 +150,26 @@ impl Layout {
         }
     }
 
+    /// [`FromStr`](std::str::FromStr) without the error payload.
     pub fn from_name(s: &str) -> Option<Self> {
+        s.parse().ok()
+    }
+}
+
+impl std::fmt::Display for Layout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Layout {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s {
-            "original" => Some(Layout::Original),
-            "zorder" | "z-order" => Some(Layout::Zorder),
-            _ => None,
+            "original" => Ok(Layout::Original),
+            "zorder" | "z-order" => Ok(Layout::Zorder),
+            _ => Err(format!("unknown layout '{s}' (expected: original, zorder)")),
         }
     }
 }
@@ -129,16 +190,21 @@ pub struct TsneConfig {
     /// Initialize the embedding from the data's top-2 principal components
     /// (sklearn `init="pca"`) instead of N(0, 1e-4) random.
     pub init_pca: bool,
-    /// Repulsive kernel override; `None` uses the implementation flavor's
-    /// default (SIMD-tiled for [`Implementation::AccTsne`], scalar elsewhere).
+    /// Repulsive kernel override **for the compat wrappers** ([`run_tsne`]
+    /// and friends fold it into the plan); `None` uses the preset's default
+    /// (SIMD-tiled for [`Implementation::AccTsne`], scalar elsewhere).
     /// Ignored by [`Implementation::FitSne`], whose FFT pipeline replaces the
-    /// BH traversal entirely (the CLI rejects the combination).
+    /// BH traversal entirely. Sessions built directly read
+    /// [`StagePlan::repulsive_variant`] instead — set it there (the checked
+    /// [`StagePlan::with_repulsive`] rejects impossible combinations).
     pub repulsive: Option<RepulsiveVariant>,
-    /// Gradient-state layout override; `None` uses the implementation
-    /// flavor's default (Z-order-persistent for [`Implementation::AccTsne`],
-    /// original elsewhere — the A/B knob behind the layout-parity tests and
-    /// `BENCH_gradient_loop.json`). [`Implementation::FitSne`] builds no tree
-    /// and always runs the original layout (the CLI rejects the combination).
+    /// Gradient-state layout override **for the compat wrappers**; `None`
+    /// uses the preset's default (Z-order-persistent for
+    /// [`Implementation::AccTsne`], original elsewhere — the A/B knob behind
+    /// the layout-parity tests and `BENCH_gradient_loop.json`).
+    /// [`Implementation::FitSne`] builds no tree and always runs the original
+    /// layout. Sessions built directly read [`StagePlan::layout`] instead
+    /// (checked by [`StagePlan::with_layout`]).
     pub layout: Option<Layout>,
 }
 
@@ -180,8 +246,13 @@ mod tests {
     fn implementation_names_roundtrip() {
         for imp in Implementation::ALL {
             assert_eq!(Implementation::from_name(imp.name()), Some(imp));
+            // FromStr/Display agree with name()/from_name()
+            assert_eq!(imp.to_string(), imp.name());
+            assert_eq!(imp.name().parse::<Implementation>(), Ok(imp));
         }
         assert_eq!(Implementation::from_name("bogus"), None);
+        let err = "bogus".parse::<Implementation>().unwrap_err();
+        assert!(err.contains("acc-t-sne"), "error lists the choices: {err}");
     }
 
     #[test]
@@ -200,16 +271,22 @@ mod tests {
     fn layout_names_roundtrip() {
         for l in [Layout::Original, Layout::Zorder] {
             assert_eq!(Layout::from_name(l.name()), Some(l));
+            assert_eq!(l.to_string(), l.name());
+            assert_eq!(l.name().parse::<Layout>(), Ok(l));
         }
         assert_eq!(Layout::from_name("z-order"), Some(Layout::Zorder));
         assert_eq!(Layout::from_name("bogus"), None);
+        assert!("bogus".parse::<Layout>().unwrap_err().contains("original"));
     }
 
     #[test]
     fn repulsive_variant_names_roundtrip() {
         for v in [RepulsiveVariant::Scalar, RepulsiveVariant::SimdTiled] {
             assert_eq!(RepulsiveVariant::from_name(v.name()), Some(v));
+            assert_eq!(v.to_string(), v.name());
+            assert_eq!(v.name().parse::<RepulsiveVariant>(), Ok(v));
         }
         assert_eq!(RepulsiveVariant::from_name("bogus"), None);
+        assert!("bogus".parse::<RepulsiveVariant>().unwrap_err().contains("simd-tiled"));
     }
 }

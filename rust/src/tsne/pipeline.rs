@@ -1,46 +1,26 @@
-//! Pipeline assembly: wires the step modules together per implementation
-//! flavor and times every step.
+//! One-shot pipeline entry points — thin compat wrappers over the session
+//! API, plus the pluggable attractive-engine trait.
 //!
-//! ## The Z-order-persistent gradient loop
-//!
-//! [`gradient_loop`] is structured around an [`IterationWorkspace`]
-//! (see [`super::workspace`]) that owns the embedding, force buffers, and
-//! optimizer state in the current *layout order*. With [`Layout::Zorder`]
-//! (the [`Implementation::AccTsne`] default) the workspace adopts each tree
-//! build's Z-order whenever it drifts beyond the adoption threshold: the
-//! embedding, velocity, gains, and a re-indexed copy of the CSR `P` all move
-//! into Z-order, so every per-iteration sweep — repulsive scatter,
-//! attractive CSR gather, and the **fused combine+update pass**
-//! ([`Optimizer::fused_combine_step`](crate::gradient::update::Optimizer::fused_combine_step),
-//! exactly one pass over the `2n` coordinates per iteration; there is no
-//! separate `combine_gradient` sweep in the loop) — walks memory in spatial
-//! order. The embedding is un-permuted once, after the last iteration.
-//! [`Layout::Original`] keeps the caller's order throughout (the A/B
-//! baseline for `BENCH_gradient_loop.json` and the parity proptests; both
-//! layouts agree to FP noise). FIt-SNE builds no tree and always runs the
-//! original layout.
-//!
-//! Note for [`AttractiveEngine`] overrides: with the Z-order layout the
-//! engine is handed the workspace's re-indexed `P` and Z-ordered `y` — the
-//! interface contract (`out[2i..] = F_attr` of row `i` of the given `P`) is
-//! unchanged, but an engine that baked the original sparsity pattern into an
-//! AOT artifact should be run with `layout: Some(Layout::Original)`.
+//! The machinery that used to live here moved behind the public staged types:
+//! the private per-flavor knob table became [`StagePlan`](super::StagePlan)
+//! (`tsne::plan`), and the gradient loop became
+//! [`TsneSession`](super::TsneSession) (`tsne::session`), which owns the
+//! Z-order-persistent [`IterationWorkspace`](super::workspace) and exposes
+//! `step`/`run`/`run_until` plus an observer hook. [`run_tsne`] /
+//! [`run_tsne_custom`] / [`run_tsne_with_p`] remain as the classic
+//! fit-and-run calls and are **bit-identical** to fitting [`Affinities`] and
+//! stepping a session manually (asserted by the parity tests): they resolve
+//! the plan with the historical override semantics (`cfg.repulsive` /
+//! `cfg.layout` applied on top of the preset; FIt-SNE silently forced to the
+//! original layout), run `cfg.n_iter` steps, and merge the affinity-fit
+//! KNN/BSP times into the result.
 
-use super::{Implementation, Layout, Scalar, TsneConfig, TsneResult};
-use super::workspace::IterationWorkspace;
-use crate::common::timer::{Step, StepTimes};
-use crate::fitsne::{fitsne_repulsive_into, FitsneParams};
+use super::plan::StagePlan;
+use super::session::{Affinities, TsneSession};
+use super::{Implementation, Scalar, TsneConfig, TsneResult};
 use crate::gradient::attractive::{attractive_forces, Variant};
-use crate::gradient::exact::kl_with_z;
-use crate::gradient::repulsive::{repulsive_forces_into, RepulsiveVariant};
-use crate::gradient::update::random_init;
-use crate::knn::{BruteForceKnn, KnnEngine, NeighborLists};
 use crate::parallel::{pool::available_cores, ThreadPool};
-use crate::perplexity::{binary_search_perplexity, ParMode};
-use crate::quadtree::builder_baseline::build_baseline;
-use crate::quadtree::builder_morton::build_morton;
-use crate::quadtree::summarize::{summarize_parallel, summarize_sequential};
-use crate::sparse::{symmetrize, CsrMatrix};
+use crate::sparse::CsrMatrix;
 
 /// Pluggable attractive-force engine: native SIMD/scalar variants or the
 /// AOT-compiled XLA artifact ([`crate::runtime::engines::XlaAttractive`]) —
@@ -66,85 +46,6 @@ impl<T: Scalar> AttractiveEngine<T> for NativeAttractive {
     }
 }
 
-/// Per-flavor knobs (resolved from [`Implementation`]).
-struct Flavor {
-    knn_blocked: bool,
-    bsp_parallel: bool,
-    morton_tree: bool,
-    tree_parallel: bool,
-    summarize_parallel: bool,
-    attractive_variant: Variant,
-    repulsive_variant: RepulsiveVariant,
-    forces_parallel: bool,
-    fft_repulsion: bool,
-    layout: Layout,
-}
-
-fn flavor(imp: Implementation) -> Flavor {
-    match imp {
-        Implementation::SklearnLike => Flavor {
-            knn_blocked: true,
-            bsp_parallel: false,
-            morton_tree: false,
-            tree_parallel: false,
-            summarize_parallel: false,
-            attractive_variant: Variant::Scalar,
-            repulsive_variant: RepulsiveVariant::Scalar,
-            forces_parallel: false,
-            fft_repulsion: false,
-            layout: Layout::Original,
-        },
-        Implementation::MulticoreLike => Flavor {
-            knn_blocked: false, // row-at-a-time distance sweep (VP-tree-ish locality)
-            bsp_parallel: false,
-            morton_tree: false,
-            tree_parallel: false,
-            summarize_parallel: false,
-            attractive_variant: Variant::Scalar,
-            repulsive_variant: RepulsiveVariant::Scalar,
-            forces_parallel: true,
-            fft_repulsion: false,
-            layout: Layout::Original,
-        },
-        Implementation::Daal4pyLike => Flavor {
-            knn_blocked: true,
-            bsp_parallel: false,
-            morton_tree: false,
-            tree_parallel: false,
-            summarize_parallel: false,
-            attractive_variant: Variant::Scalar,
-            repulsive_variant: RepulsiveVariant::Scalar,
-            forces_parallel: true,
-            fft_repulsion: false,
-            layout: Layout::Original,
-        },
-        Implementation::AccTsne => Flavor {
-            knn_blocked: true,
-            bsp_parallel: true,
-            morton_tree: true,
-            tree_parallel: true,
-            summarize_parallel: true,
-            attractive_variant: Variant::Simd,
-            repulsive_variant: RepulsiveVariant::SimdTiled,
-            forces_parallel: true,
-            fft_repulsion: false,
-            layout: Layout::Zorder,
-        },
-        Implementation::FitSne => Flavor {
-            knn_blocked: true,
-            bsp_parallel: false,
-            morton_tree: false,
-            tree_parallel: false,
-            summarize_parallel: false,
-            attractive_variant: Variant::Scalar,
-            repulsive_variant: RepulsiveVariant::Scalar,
-            forces_parallel: true,
-            fft_repulsion: true,
-            layout: Layout::Original,
-        },
-    }
-}
-
 /// Run t-SNE on `points` (n × d, row-major) with the given implementation.
 pub fn run_tsne<T: Scalar>(
     points: &[T],
@@ -158,6 +59,13 @@ pub fn run_tsne<T: Scalar>(
 
 /// As [`run_tsne`] but with an optional attractive-engine override (the
 /// XLA-offload integration path).
+///
+/// Note for overrides under the `AccTsne` default ([`super::Layout::Zorder`]):
+/// the engine sees the workspace's re-indexed `P` and Z-ordered `y`. The
+/// per-row contract is unchanged, but an engine with a *baked* original
+/// sparsity pattern (an AOT artifact) should be run with
+/// `cfg.layout = Some(Layout::Original)` — see
+/// [`TsneSession::set_attractive_engine`].
 pub fn run_tsne_custom<T: Scalar>(
     points: &[T],
     n: usize,
@@ -166,71 +74,59 @@ pub fn run_tsne_custom<T: Scalar>(
     imp: Implementation,
     attractive_override: Option<&dyn AttractiveEngine<T>>,
 ) -> TsneResult<T> {
-    assert_eq!(points.len(), n * d, "points must be n*d");
-    assert!(n >= 8, "need at least 8 points");
-    let fl = flavor(imp);
+    let plan = StagePlan::compat(imp, cfg);
     let nt = if cfg.n_threads == 0 { available_cores() } else { cfg.n_threads };
-    let pool = ThreadPool::new(nt);
-    let mut times = StepTimes::new();
 
-    // --- Step 1: KNN over ⌊3u⌋ neighbors (Eq. 2). The blocked engine models
-    // daal4py's; the VP-tree models Multicore-TSNE's (vdMaaten's code).
-    let k = ((3.0 * cfg.perplexity).floor() as usize).clamp(1, n - 1);
-    let knn: NeighborLists<T> = times.time(Step::Knn, || {
-        if fl.knn_blocked {
-            BruteForceKnn::default().search(&pool, points, n, d, k)
-        } else {
-            crate::knn::vptree::VpTreeKnn::default().search(&pool, points, n, d, k)
-        }
-    });
-
-    // --- Step 2: BSP (+ symmetrization, charged to BSP as daal4py does).
-    let p = times.time(Step::Bsp, || {
-        let mode = if fl.bsp_parallel { ParMode::Parallel } else { ParMode::Sequential };
-        let cond = binary_search_perplexity(&pool, &knn, cfg.perplexity, mode);
-        symmetrize(&pool, &knn, &cond.p)
-    });
-    drop(knn);
+    // Phase 1: the affinity fit (KNN + BSP + symmetrize), once.
+    let fit_pool = ThreadPool::new(nt);
+    let aff = Affinities::fit(&fit_pool, points, n, d, cfg.perplexity, &plan);
 
     // Optional PCA initialization (sklearn init="pca": top-2 PCs scaled so
     // the largest component has std 1e-4, then descent as usual).
     let init = if cfg.init_pca {
-        let (proj, _) = crate::data::pca::pca(&pool, points, n, d, 2, 30, cfg.seed ^ 0x9CA);
+        let (proj, _) = crate::data::pca::pca(&fit_pool, points, n, d, 2, 30, cfg.seed ^ 0x9CA);
         Some(scale_init(proj, n))
     } else {
         None
     };
+    drop(fit_pool);
 
-    let (embedding, kl, iters, grad_times) =
-        gradient_loop(&pool, &p, n, cfg, &fl, attractive_override, init);
-    times.merge(&grad_times);
-
-    TsneResult {
-        embedding,
-        kl_divergence: kl,
-        step_times: times,
-        n_iter: iters,
-        implementation: imp,
+    // Phase 2: one full-budget session.
+    let mut sess = match init {
+        Some(y0) => TsneSession::with_init(&aff, plan, *cfg, y0),
+        None => TsneSession::new(&aff, plan, *cfg),
     }
+    .expect("compat-resolved preset plans always validate");
+    if let Some(engine) = attractive_override {
+        sess.set_attractive_engine(engine);
+    }
+    sess.run(cfg.n_iter);
+    let mut result = sess.finish();
+    result.step_times.merge(aff.step_times());
+    result
 }
 
 /// Run only the gradient phase on a precomputed P (benches isolate steps with
-/// this; also lets Table 5/6 harnesses share one KNN across implementations).
+/// this; also lets the table harnesses share one KNN across implementations).
+/// `pool` supplies the thread count; the session owns its own pools.
+///
+/// Equivalent to `Affinities::from_csr` + a full-budget session — callers
+/// that reuse the affinities across several runs should do that directly and
+/// skip this wrapper's per-call copy of `P`.
 pub fn run_tsne_with_p<T: Scalar>(
     pool: &ThreadPool,
     p: &CsrMatrix<T>,
     cfg: &TsneConfig,
     imp: Implementation,
 ) -> TsneResult<T> {
-    let fl = flavor(imp);
-    let (embedding, kl, iters, times) = gradient_loop(pool, p, p.n, cfg, &fl, None, None);
-    TsneResult {
-        embedding,
-        kl_divergence: kl,
-        step_times: times,
-        n_iter: iters,
-        implementation: imp,
-    }
+    let plan = StagePlan::compat(imp, cfg);
+    let aff = Affinities::from_csr(p.clone(), cfg.perplexity);
+    let mut cfg = *cfg;
+    cfg.n_threads = pool.n_threads();
+    let mut sess =
+        TsneSession::new(&aff, plan, cfg).expect("compat-resolved preset plans always validate");
+    sess.run(cfg.n_iter);
+    sess.finish()
 }
 
 /// PCA projection → init scaling: sklearn scales PC1 to std 1e-4.
@@ -247,107 +143,15 @@ fn scale_init<T: Scalar>(mut proj: Vec<T>, n: usize) -> Vec<T> {
     proj
 }
 
-#[allow(clippy::too_many_arguments)]
-fn gradient_loop<T: Scalar>(
-    pool: &ThreadPool,
-    p: &CsrMatrix<T>,
-    n: usize,
-    cfg: &TsneConfig,
-    fl: &Flavor,
-    attractive_override: Option<&dyn AttractiveEngine<T>>,
-    init: Option<Vec<T>>,
-) -> (Vec<T>, f64, usize, StepTimes) {
-    let mut times = StepTimes::new();
-    let seq_pool = ThreadPool::new(1);
-    let force_pool: &ThreadPool = if fl.forces_parallel { pool } else { &seq_pool };
-    let tree_pool: &ThreadPool = if fl.tree_parallel { pool } else { &seq_pool };
-
-    let native_engine = NativeAttractive(fl.attractive_variant);
-    let attractive: &dyn AttractiveEngine<T> = match attractive_override {
-        Some(e) => e,
-        None => &native_engine,
-    };
-
-    let rep_variant = cfg.repulsive.unwrap_or(fl.repulsive_variant);
-    // FIt-SNE builds no tree, hence has no Z-order to persist: force Original.
-    let layout = if fl.fft_repulsion { Layout::Original } else { cfg.layout.unwrap_or(fl.layout) };
-    // The workspace owns embedding, force buffers, optimizer state, and (in
-    // the Z-order layout) the permutation + re-indexed P. Steady state
-    // allocates nothing per iteration: force/view/scratch buffers are reused
-    // and only the tree itself is rebuilt.
-    let y0 = init.unwrap_or_else(|| random_init::<T>(n, cfg.seed));
-    let mut ws = IterationWorkspace::new(y0, cfg.update, layout == Layout::Zorder);
-    let fit_params = FitsneParams::default();
-    let mut last_z = T::ONE;
-
-    for iter in 0..cfg.n_iter {
-        let z: T = if fl.fft_repulsion {
-            // FIt-SNE path: no tree; the FFT pipeline is the repulsive step.
-            times.time(Step::Repulsive, || {
-                fitsne_repulsive_into(force_pool, &ws.y, &fit_params, &mut ws.rep_raw)
-            })
-        } else {
-            // Steps 3–4: quadtree + summarization.
-            let mut tree = times.time(Step::TreeBuild, || {
-                if fl.morton_tree {
-                    build_morton(tree_pool, &ws.y)
-                } else {
-                    build_baseline(tree_pool, &ws.y)
-                }
-            });
-            // Layout maintenance (Z-order path only): adopt the fresh
-            // Z-order when it drifted past the threshold. Charged to
-            // TreeBuild — it is the build's permutation being applied.
-            times.time(Step::TreeBuild, || ws.maybe_adopt(pool, &mut tree, p));
-            times.time(Step::Summarize, || {
-                if fl.summarize_parallel {
-                    summarize_parallel(pool, &mut tree)
-                } else {
-                    summarize_sequential(&mut tree)
-                }
-            });
-            // Step 6: repulsive (view materialization charged to this step —
-            // it exists only to feed the tiled kernel). In the adopted
-            // Z-order layout the scatter through `point_idx` is the identity.
-            times.time(Step::Repulsive, || {
-                let v = match rep_variant {
-                    RepulsiveVariant::Scalar => None,
-                    RepulsiveVariant::SimdTiled => {
-                        ws.view.rebuild_parallel(force_pool, &tree);
-                        Some(&ws.view)
-                    }
-                };
-                repulsive_forces_into(force_pool, &tree, v, cfg.theta, rep_variant, &mut ws.rep_raw)
-            })
-        };
-        last_z = z;
-
-        // Step 5: attractive — over the layout-order P once adopted, so the
-        // y-gathers walk Z-order neighborhoods instead of random slots.
-        let p_iter: &CsrMatrix<T> = match &ws.p_z {
-            Some(m) => m,
-            None => p,
-        };
-        times.time(Step::Attractive, || {
-            attractive.compute(force_pool, p_iter, &ws.y, &mut ws.attr)
-        });
-
-        // Update: ONE fused combine+update sweep (no separate combine pass).
-        times.time(Step::Update, || {
-            ws.opt.fused_combine_step(pool, iter, &ws.attr, &ws.rep_raw, z, &mut ws.y)
-        });
-    }
-
-    // The run's single un-permute back to the caller's point order.
-    let y = ws.into_original_order();
-    let kl = kl_with_z(p, &y, last_z.to_f64());
-    (y, kl, cfg.n_iter, times)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::common::timer::Step;
     use crate::data::synthetic::gaussian_mixture;
+    use crate::gradient::repulsive::RepulsiveVariant;
+    use crate::knn::{BruteForceKnn, KnnEngine};
+    use crate::perplexity::{binary_search_perplexity, ParMode};
+    use crate::sparse::symmetrize;
 
     fn quick_cfg(n_iter: usize) -> TsneConfig {
         TsneConfig {
@@ -513,8 +317,9 @@ mod tests {
 
     #[test]
     fn fitsne_forces_original_layout() {
-        // No tree ⇒ no Z-order: a zorder request must be a bit-identical
-        // no-op, not a crash.
+        // No tree ⇒ no Z-order: through the compat wrapper a zorder request
+        // must stay a bit-identical no-op (the strict plan API rejects the
+        // combination with a typed error instead).
         let ds = gaussian_mixture::<f64>(300, 6, 3, 6.0, 19);
         let mut cfg = quick_cfg(8);
         cfg.layout = Some(crate::tsne::Layout::Zorder);
@@ -534,5 +339,43 @@ mod tests {
         let r = run_tsne_with_p(&pool, &p, &quick_cfg(50), Implementation::AccTsne);
         assert!(r.kl_divergence.is_finite());
         assert_eq!(r.step_times.get(Step::Knn), 0.0);
+    }
+
+    #[test]
+    fn compat_wrapper_is_bit_identical_to_a_manually_stepped_session() {
+        // THE compat contract of the API redesign: run_tsne == fit Affinities
+        // + step a TsneSession cfg.n_iter times + finish, bit for bit.
+        let ds = gaussian_mixture::<f64>(400, 8, 5, 6.0, 23);
+        let cfg = quick_cfg(40);
+        let wrapper = run_tsne(&ds.points, ds.n, ds.d, &cfg, Implementation::AccTsne);
+
+        let plan = StagePlan::acc_tsne();
+        let pool = ThreadPool::new(cfg.n_threads);
+        let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, cfg.perplexity, &plan);
+        let mut sess = TsneSession::new(&aff, plan, cfg).unwrap();
+        for _ in 0..cfg.n_iter {
+            sess.step();
+        }
+        let manual = sess.finish();
+
+        assert_eq!(wrapper.embedding, manual.embedding, "embeddings must be bit-identical");
+        assert_eq!(wrapper.kl_divergence, manual.kl_divergence);
+        assert_eq!(wrapper.n_iter, manual.n_iter);
+        assert_eq!(wrapper.implementation, manual.implementation);
+    }
+
+    #[test]
+    fn with_p_wrapper_matches_session_over_shared_affinities() {
+        let ds = gaussian_mixture::<f64>(200, 6, 3, 6.0, 29);
+        let pool = ThreadPool::new(4);
+        let cfg = quick_cfg(30);
+        let plan = StagePlan::acc_tsne();
+        let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, cfg.perplexity, &plan);
+        let wrapper = run_tsne_with_p(&pool, aff.p(), &cfg, Implementation::AccTsne);
+        let mut sess = TsneSession::new(&aff, plan, cfg).unwrap();
+        sess.run(cfg.n_iter);
+        let manual = sess.finish();
+        assert_eq!(wrapper.embedding, manual.embedding);
+        assert_eq!(wrapper.kl_divergence, manual.kl_divergence);
     }
 }

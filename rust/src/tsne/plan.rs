@@ -1,0 +1,321 @@
+//! The public stage plan — which engine runs each pipeline stage.
+//!
+//! [`StagePlan`] is the validated, public successor of the private per-flavor
+//! knob table the pipeline used to hide: one field per stage of Figure 1a
+//! (KNN engine, BSP parallelism, tree builder, summarize mode, attractive and
+//! repulsive kernel variants, gradient-state layout, Z-order adoption
+//! threshold). The five [`Implementation`] values are **preset constructors**
+//! ([`StagePlan::preset`] and the named forms below); a custom plan is a
+//! preset with fields overridden — either through the checked `with_*`
+//! setters or by mutating the public fields and calling
+//! [`StagePlan::validate`].
+//!
+//! Invalid stage combinations are rejected *at plan-build time* with a typed
+//! [`PlanError`] instead of ad-hoc CLI string checks or mid-run panics:
+//! the FIt-SNE FFT pipeline builds no quadtree, so it can neither persist a
+//! Z-order layout nor take a Barnes-Hut repulsive-kernel override.
+
+use super::{Implementation, Layout, TsneConfig};
+use crate::gradient::attractive::Variant;
+use crate::gradient::repulsive::RepulsiveVariant;
+use crate::tsne::workspace::ADOPT_DRIFT_PCT;
+
+/// A stage combination that cannot run. Returned by plan construction and
+/// validation — never panicked mid-pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanError {
+    /// The FIt-SNE FFT pipeline builds no quadtree, so there is no Z-order
+    /// to persist: `layout = Zorder` cannot combine with `fft_repulsion`.
+    FftLayoutZorder,
+    /// The FIt-SNE FFT pipeline replaces the Barnes-Hut traversal entirely,
+    /// so a BH repulsive-kernel override cannot combine with `fft_repulsion`.
+    FftBhRepulsive,
+    /// The Z-order adoption threshold is a percentage; values above 100 are
+    /// meaningless (100 already means "never re-adopt").
+    AdoptThresholdOutOfRange(usize),
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::FftLayoutZorder => write!(
+                f,
+                "invalid stage plan: the FIt-SNE FFT pipeline builds no quadtree, \
+                 so the Z-order layout does not apply (use layout=original)"
+            ),
+            PlanError::FftBhRepulsive => write!(
+                f,
+                "invalid stage plan: the FIt-SNE FFT pipeline replaces the \
+                 Barnes-Hut traversal, so a BH repulsive-kernel override does not apply"
+            ),
+            PlanError::AdoptThresholdOutOfRange(pct) => write!(
+                f,
+                "invalid stage plan: Z-order adoption threshold {pct}% is out of range (0..=100)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// Which engine runs each pipeline stage — the public, validated successor
+/// of the pipeline's former private `Flavor` table. See the module docs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StagePlan {
+    /// The preset this plan was derived from; labels
+    /// [`TsneResult::implementation`](super::TsneResult::implementation).
+    pub preset: Implementation,
+    /// KNN engine: blocked brute force (daal4py's design) vs the
+    /// row-at-a-time VP-tree-ish sweep (Multicore-TSNE's design).
+    pub knn_blocked: bool,
+    /// Binary-search perplexity: parallel over rows vs sequential.
+    pub bsp_parallel: bool,
+    /// Quadtree builder: morton (Z-order sort) vs baseline level-wise.
+    pub morton_tree: bool,
+    /// Tree construction on the full pool vs a single thread.
+    pub tree_parallel: bool,
+    /// Summarization (center-of-mass pass) parallel vs sequential.
+    pub summarize_parallel: bool,
+    /// Attractive-force kernel variant (scalar / +prefetch / +SIMD).
+    pub attractive_variant: Variant,
+    /// Repulsive-force kernel variant (scalar DFS / SIMD-tiled SoA).
+    pub repulsive_variant: RepulsiveVariant,
+    /// Force sweeps on the full pool vs a single thread.
+    pub forces_parallel: bool,
+    /// Replace the BH traversal with the FIt-SNE FFT interpolation pipeline.
+    pub fft_repulsion: bool,
+    /// Gradient-state memory layout (see [`Layout`]).
+    pub layout: Layout,
+    /// Re-adopt the tree's fresh Z-order when more than this percentage of
+    /// points changed slots ([`Layout::Zorder`] only). `0` adopts on any
+    /// drift; `100` never re-adopts (the state stays in the caller's order).
+    pub adopt_drift_pct: usize,
+}
+
+impl Default for StagePlan {
+    /// The paper's contribution ([`StagePlan::acc_tsne`]).
+    fn default() -> Self {
+        Self::acc_tsne()
+    }
+}
+
+impl StagePlan {
+    /// Preset for the given published implementation's architecture.
+    pub fn preset(imp: Implementation) -> StagePlan {
+        match imp {
+            Implementation::SklearnLike => Self::sklearn_like(),
+            Implementation::MulticoreLike => Self::multicore_like(),
+            Implementation::Daal4pyLike => Self::daal4py_like(),
+            Implementation::AccTsne => Self::acc_tsne(),
+            Implementation::FitSne => Self::fit_sne(),
+        }
+    }
+
+    /// scikit-learn `TSNE(method="barnes_hut")`: sequential gradient loop.
+    pub fn sklearn_like() -> StagePlan {
+        StagePlan {
+            preset: Implementation::SklearnLike,
+            knn_blocked: true,
+            bsp_parallel: false,
+            morton_tree: false,
+            tree_parallel: false,
+            summarize_parallel: false,
+            attractive_variant: Variant::Scalar,
+            repulsive_variant: RepulsiveVariant::Scalar,
+            forces_parallel: false,
+            fft_repulsion: false,
+            layout: Layout::Original,
+            adopt_drift_pct: ADOPT_DRIFT_PCT,
+        }
+    }
+
+    /// Ulyanov's Multicore-TSNE: parallel forces, sequential tree path,
+    /// row-at-a-time (VP-tree-ish) KNN.
+    pub fn multicore_like() -> StagePlan {
+        StagePlan {
+            knn_blocked: false, // row-at-a-time distance sweep (VP-tree-ish locality)
+            forces_parallel: true,
+            preset: Implementation::MulticoreLike,
+            ..Self::sklearn_like()
+        }
+    }
+
+    /// daal4py v2021.6 BH t-SNE — the paper's baseline.
+    pub fn daal4py_like() -> StagePlan {
+        StagePlan {
+            forces_parallel: true,
+            preset: Implementation::Daal4pyLike,
+            ..Self::sklearn_like()
+        }
+    }
+
+    /// This paper's contribution: every stage parallel, SIMD kernels,
+    /// Z-order-persistent gradient state.
+    pub fn acc_tsne() -> StagePlan {
+        StagePlan {
+            preset: Implementation::AccTsne,
+            knn_blocked: true,
+            bsp_parallel: true,
+            morton_tree: true,
+            tree_parallel: true,
+            summarize_parallel: true,
+            attractive_variant: Variant::Simd,
+            repulsive_variant: RepulsiveVariant::SimdTiled,
+            forces_parallel: true,
+            fft_repulsion: false,
+            layout: Layout::Zorder,
+            adopt_drift_pct: ADOPT_DRIFT_PCT,
+        }
+    }
+
+    /// Linderman et al. FIt-SNE: FFT interpolation replaces the BH traversal
+    /// (no quadtree, original layout).
+    pub fn fit_sne() -> StagePlan {
+        StagePlan {
+            fft_repulsion: true,
+            preset: Implementation::FitSne,
+            ..Self::daal4py_like()
+        }
+    }
+
+    /// Override the gradient-state layout. Rejected on FFT plans — there is
+    /// no quadtree, hence no Z-order to persist.
+    pub fn with_layout(mut self, layout: Layout) -> Result<StagePlan, PlanError> {
+        self.layout = layout;
+        self.validate()?;
+        Ok(self)
+    }
+
+    /// Override the BH repulsive kernel. Rejected on FFT plans — the FFT
+    /// pipeline replaces the traversal, so *any* override is a contradiction
+    /// (stricter than [`Self::validate`], which only flags non-default
+    /// variants a preset could not have produced).
+    pub fn with_repulsive(mut self, variant: RepulsiveVariant) -> Result<StagePlan, PlanError> {
+        if self.fft_repulsion {
+            return Err(PlanError::FftBhRepulsive);
+        }
+        self.repulsive_variant = variant;
+        self.validate()?;
+        Ok(self)
+    }
+
+    /// Override the Z-order adoption threshold (percentage of drifted points
+    /// above which the workspace re-adopts the tree's fresh order). Only
+    /// consulted when the plan's layout is [`Layout::Zorder`]; on other
+    /// layouts the field is carried but has no effect (deliberately not an
+    /// error, so threshold and layout overrides compose in either order).
+    pub fn with_adopt_drift_pct(mut self, pct: usize) -> Result<StagePlan, PlanError> {
+        self.adopt_drift_pct = pct;
+        self.validate()?;
+        Ok(self)
+    }
+
+    /// Check the stage combination. Called by
+    /// [`TsneSession::new`](super::TsneSession::new); exposed so hand-mutated
+    /// plans can be checked eagerly.
+    pub fn validate(&self) -> Result<(), PlanError> {
+        if self.fft_repulsion && self.layout == Layout::Zorder {
+            return Err(PlanError::FftLayoutZorder);
+        }
+        if self.fft_repulsion && self.repulsive_variant != RepulsiveVariant::Scalar {
+            return Err(PlanError::FftBhRepulsive);
+        }
+        if self.adopt_drift_pct > 100 {
+            return Err(PlanError::AdoptThresholdOutOfRange(self.adopt_drift_pct));
+        }
+        Ok(())
+    }
+
+    /// The historical `run_tsne(cfg, imp)` semantics: apply the config's
+    /// optional overrides on top of the preset, with FIt-SNE *silently*
+    /// ignoring the BH-only knobs (forced original layout, no repulsive
+    /// override) — the compat wrappers must not turn previously-working calls
+    /// into errors. New code should build plans explicitly instead.
+    pub(crate) fn compat(imp: Implementation, cfg: &TsneConfig) -> StagePlan {
+        let mut plan = Self::preset(imp);
+        if plan.fft_repulsion {
+            return plan;
+        }
+        if let Some(v) = cfg.repulsive {
+            plan.repulsive_variant = v;
+        }
+        if let Some(l) = cfg.layout {
+            plan.layout = l;
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_valid_and_labelled() {
+        for imp in Implementation::ALL {
+            let plan = StagePlan::preset(imp);
+            assert_eq!(plan.preset, imp);
+            assert!(plan.validate().is_ok(), "{imp:?}");
+        }
+        assert_eq!(StagePlan::default(), StagePlan::acc_tsne());
+    }
+
+    #[test]
+    fn fft_rejects_zorder_layout_with_typed_error() {
+        let e = StagePlan::fit_sne().with_layout(Layout::Zorder).unwrap_err();
+        assert_eq!(e, PlanError::FftLayoutZorder);
+        assert!(e.to_string().contains("FIt-SNE"), "{e}");
+        // original layout is fine on the FFT plan
+        assert!(StagePlan::fit_sne().with_layout(Layout::Original).is_ok());
+        // and zorder is fine everywhere else
+        assert!(StagePlan::sklearn_like().with_layout(Layout::Zorder).is_ok());
+    }
+
+    #[test]
+    fn fft_rejects_any_repulsive_override_with_typed_error() {
+        for v in [RepulsiveVariant::Scalar, RepulsiveVariant::SimdTiled] {
+            let e = StagePlan::fit_sne().with_repulsive(v).unwrap_err();
+            assert_eq!(e, PlanError::FftBhRepulsive);
+            assert!(e.to_string().contains("Barnes-Hut"), "{e}");
+        }
+        assert!(StagePlan::acc_tsne().with_repulsive(RepulsiveVariant::Scalar).is_ok());
+    }
+
+    #[test]
+    fn adopt_threshold_is_range_checked() {
+        assert!(StagePlan::acc_tsne().with_adopt_drift_pct(0).is_ok());
+        assert!(StagePlan::acc_tsne().with_adopt_drift_pct(100).is_ok());
+        let e = StagePlan::acc_tsne().with_adopt_drift_pct(101).unwrap_err();
+        assert_eq!(e, PlanError::AdoptThresholdOutOfRange(101));
+        assert!(e.to_string().contains("101"), "{e}");
+    }
+
+    #[test]
+    fn validate_catches_hand_mutated_plans() {
+        let mut plan = StagePlan::fit_sne();
+        plan.layout = Layout::Zorder;
+        assert_eq!(plan.validate(), Err(PlanError::FftLayoutZorder));
+        let mut plan = StagePlan::fit_sne();
+        plan.repulsive_variant = RepulsiveVariant::SimdTiled;
+        assert_eq!(plan.validate(), Err(PlanError::FftBhRepulsive));
+    }
+
+    #[test]
+    fn compat_keeps_historical_fitsne_tolerance() {
+        // The old run_tsne silently forced original layout for FIt-SNE; the
+        // compat resolver must preserve that instead of erroring.
+        let cfg = TsneConfig {
+            layout: Some(Layout::Zorder),
+            repulsive: Some(RepulsiveVariant::SimdTiled),
+            ..TsneConfig::default()
+        };
+        let plan = StagePlan::compat(Implementation::FitSne, &cfg);
+        assert_eq!(plan.layout, Layout::Original);
+        assert_eq!(plan.repulsive_variant, RepulsiveVariant::Scalar);
+        assert!(plan.validate().is_ok());
+        // non-FFT presets take the overrides verbatim
+        let plan = StagePlan::compat(Implementation::SklearnLike, &cfg);
+        assert_eq!(plan.layout, Layout::Zorder);
+        assert_eq!(plan.repulsive_variant, RepulsiveVariant::SimdTiled);
+    }
+}

@@ -1,0 +1,724 @@
+//! Session-based t-SNE: reusable affinities + a resumable, observable
+//! optimizer.
+//!
+//! The pipeline (paper Fig. 1a) is two phases with very different lifetimes:
+//! KNN + BSP + symmetrization run **once**, the gradient loop runs ~1000×.
+//! The session API splits them accordingly:
+//!
+//! - [`Affinities`] — the fitted KNN→BSP→symmetrize artifact (the sparse CSR
+//!   `P` plus its fit metadata). Compute it once, then drive any number of
+//!   gradient runs from it with different seeds, layouts, or kernels.
+//! - [`TsneSession`] — a resumable optimizer built from
+//!   `Affinities + StagePlan + TsneConfig`. It owns the per-iteration
+//!   workspace and exposes [`step`](TsneSession::step) (one gradient
+//!   iteration), [`run`](TsneSession::run) (a fixed budget), and
+//!   [`run_until`](TsneSession::run_until) (sklearn-style convergence
+//!   control over the per-iteration gradient norm, which the fused
+//!   combine+step sweep materializes for free). An observer hook fires every
+//!   N iterations with an **un-permuted** embedding snapshot and the current
+//!   KL — for early exit, checkpointing, or streaming visualization.
+//!
+//! The classic one-shot entry points ([`run_tsne`](super::run_tsne) and
+//! friends) are thin compat wrappers over a session and produce bit-identical
+//! output (asserted by the parity tests).
+//!
+//! Knob precedence: a session consumes the *plan's* stage knobs
+//! (`layout`, `repulsive_variant`, …); the optional `TsneConfig::{layout,
+//! repulsive}` override fields exist for the compat wrappers, which fold them
+//! into the plan before the session is built.
+
+use super::pipeline::{AttractiveEngine, NativeAttractive};
+use super::plan::{PlanError, StagePlan};
+use super::workspace::IterationWorkspace;
+use super::{Layout, Scalar, TsneConfig, TsneResult};
+use crate::common::timer::{Step, StepTimes};
+use crate::fitsne::{fitsne_repulsive_into, FitsneParams};
+use crate::gradient::exact::kl_with_z;
+use crate::gradient::repulsive::{repulsive_forces_into, RepulsiveVariant};
+use crate::gradient::update::random_init;
+use crate::knn::{BruteForceKnn, KnnEngine, NeighborLists};
+use crate::parallel::{pool::available_cores, ThreadPool};
+use crate::perplexity::{binary_search_perplexity, ParMode};
+use crate::quadtree::builder_baseline::build_baseline;
+use crate::quadtree::builder_morton::build_morton;
+use crate::quadtree::summarize::{summarize_parallel, summarize_sequential};
+use crate::sparse::{symmetrize, CsrMatrix};
+
+/// The fitted affinity artifact: the symmetrized sparse `P` of paper Eq. 2
+/// plus its fit metadata. Phase 1 of the pipeline (KNN → binary-search
+/// perplexity → symmetrize), computed once and reused across gradient runs.
+#[derive(Clone, Debug)]
+pub struct Affinities<T: Scalar> {
+    p: CsrMatrix<T>,
+    perplexity: f64,
+    k: usize,
+    times: StepTimes,
+}
+
+impl<T: Scalar> Affinities<T> {
+    /// Fit affinities for `points` (n × d, row-major): KNN over ⌊3·perplexity⌋
+    /// neighbors with the plan's KNN engine, binary-search perplexity with the
+    /// plan's BSP mode, then symmetrization. The KNN/BSP wall time is recorded
+    /// in [`step_times`](Self::step_times).
+    pub fn fit(
+        pool: &ThreadPool,
+        points: &[T],
+        n: usize,
+        d: usize,
+        perplexity: f64,
+        plan: &StagePlan,
+    ) -> Affinities<T> {
+        assert_eq!(points.len(), n * d, "points must be n*d");
+        assert!(n >= 8, "need at least 8 points");
+        let mut times = StepTimes::new();
+        // ⌊3u⌋ neighbors (Eq. 2). The blocked engine models daal4py's; the
+        // VP-tree models Multicore-TSNE's (vdMaaten's code).
+        let k = ((3.0 * perplexity).floor() as usize).clamp(1, n - 1);
+        let knn: NeighborLists<T> = times.time(Step::Knn, || {
+            if plan.knn_blocked {
+                BruteForceKnn::default().search(pool, points, n, d, k)
+            } else {
+                crate::knn::vptree::VpTreeKnn::default().search(pool, points, n, d, k)
+            }
+        });
+        // BSP + symmetrization (charged to BSP, as daal4py does).
+        let p = times.time(Step::Bsp, || {
+            let mode = if plan.bsp_parallel { ParMode::Parallel } else { ParMode::Sequential };
+            let cond = binary_search_perplexity(pool, &knn, perplexity, mode);
+            symmetrize(pool, &knn, &cond.p)
+        });
+        Affinities { p, perplexity, k, times }
+    }
+
+    /// Wrap an already-symmetrized CSR `P` (columns in the caller's point
+    /// order). Benches isolating the gradient phase and callers with
+    /// externally-computed affinities enter here; no KNN/BSP time is charged.
+    ///
+    /// Panics if the *structural* CSR invariants the gradient loop relies on
+    /// are violated (row_ptr shape/monotonicity, col/val lengths, columns in
+    /// range) — an O(nnz) check, negligible next to a gradient run, that
+    /// turns a silently corrupted embedding into a loud error. Sorted unique
+    /// columns per row — what [`Self::fit`] produces — are recommended for
+    /// gather locality but not required: the kernels stream row entries in
+    /// storage order.
+    pub fn from_csr(p: CsrMatrix<T>, perplexity: f64) -> Affinities<T> {
+        assert_eq!(p.row_ptr.len(), p.n + 1, "row_ptr must have n+1 entries");
+        assert_eq!(p.col.len(), p.val.len(), "col/val length mismatch");
+        assert!(
+            p.row_ptr.first() == Some(&0)
+                && *p.row_ptr.last().unwrap() == p.col.len()
+                && p.row_ptr.windows(2).all(|w| w[0] <= w[1]),
+            "row_ptr must be monotone over 0..=nnz"
+        );
+        assert!(
+            p.col.iter().all(|&c| (c as usize) < p.n),
+            "column index out of range"
+        );
+        let k = ((3.0 * perplexity).floor() as usize).clamp(1, p.n.saturating_sub(1).max(1));
+        Affinities { p, perplexity, k, times: StepTimes::new() }
+    }
+
+    /// Number of points.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.p.n
+    }
+
+    /// The symmetrized sparse similarity matrix (original point order).
+    #[inline]
+    pub fn p(&self) -> &CsrMatrix<T> {
+        &self.p
+    }
+
+    /// Perplexity the conditionals were calibrated to.
+    #[inline]
+    pub fn perplexity(&self) -> f64 {
+        self.perplexity
+    }
+
+    /// Neighbors per point used by the KNN phase (⌊3·perplexity⌋, clamped).
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// KNN + BSP wall time of the fit (empty for [`Self::from_csr`]).
+    #[inline]
+    pub fn step_times(&self) -> &StepTimes {
+        &self.times
+    }
+}
+
+/// Convergence controls for [`TsneSession::run_until`] — sklearn's stopping
+/// rules evaluated on the per-iteration gradient norm (which the fused
+/// combine+step sweep already computes; no extra pass, no per-iteration KL).
+///
+/// Both criteria are checked only after the early-exaggeration phase
+/// (`UpdateParams::exaggeration_iters`): the exaggerated objective's gradient
+/// says nothing about convergence of the real one.
+#[derive(Clone, Copy, Debug)]
+pub struct Convergence {
+    /// Hard iteration budget (total session iterations, counting any already
+    /// stepped).
+    pub max_iter: usize,
+    /// Stop when the l2 gradient norm falls below this (sklearn
+    /// `min_grad_norm`; `0.0` disables).
+    pub min_grad_norm: f64,
+    /// Stop when the best-seen gradient norm has not improved by at least
+    /// 0.1% for this many consecutive iterations (sklearn
+    /// `n_iter_without_progress`, applied to the gradient norm; `0` disables).
+    pub n_iter_without_progress: usize,
+}
+
+impl Default for Convergence {
+    /// sklearn's defaults: 1000 iterations, `min_grad_norm = 1e-7`,
+    /// `n_iter_without_progress = 300`.
+    fn default() -> Self {
+        Convergence {
+            max_iter: 1000,
+            min_grad_norm: 1e-7,
+            n_iter_without_progress: 300,
+        }
+    }
+}
+
+/// Why a [`TsneSession::run`]/[`TsneSession::run_until`] call returned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// The iteration budget was exhausted.
+    MaxIter,
+    /// The gradient norm fell below `min_grad_norm`.
+    GradNorm,
+    /// No gradient-norm progress for `n_iter_without_progress` iterations.
+    NoProgress,
+    /// The observer returned [`ObserverControl::Stop`].
+    Observer,
+}
+
+/// Outcome of a [`TsneSession::run`]/[`TsneSession::run_until`] call.
+#[derive(Clone, Copy, Debug)]
+pub struct RunOutcome {
+    /// Total iterations the session has performed (across all calls).
+    pub n_iter: usize,
+    pub reason: StopReason,
+}
+
+/// Per-iteration information returned by [`TsneSession::step`].
+#[derive(Clone, Copy, Debug)]
+pub struct StepInfo {
+    /// 0-based index of the iteration that just ran.
+    pub iter: usize,
+    /// l2 norm of the full KL gradient at this iteration.
+    pub grad_norm: f64,
+    /// The BH/FFT normalization term Z of this iteration.
+    pub z: f64,
+}
+
+/// What the observer hook sees: an **un-permuted** embedding snapshot (the
+/// caller's original point order, regardless of the internal Z-order layout)
+/// plus the current KL divergence and gradient norm.
+#[derive(Debug)]
+pub struct Snapshot<'s, T: Scalar> {
+    /// Iterations completed so far.
+    pub iter: usize,
+    /// Embedding in original point order, interleaved x,y (valid for the
+    /// duration of the callback).
+    pub embedding: &'s [T],
+    /// KL divergence over the sparse-P support with the current Z.
+    pub kl: f64,
+    /// l2 gradient norm of the latest iteration.
+    pub grad_norm: f64,
+}
+
+/// Observer verdict: keep optimizing or stop after this snapshot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ObserverControl {
+    Continue,
+    Stop,
+}
+
+type Observer<'a, T> = Box<dyn FnMut(&Snapshot<T>) -> ObserverControl + 'a>;
+
+/// Relative improvement of the best-seen gradient norm below which an
+/// iteration does not count as progress (guards `n_iter_without_progress`
+/// against FP-noise "improvements" at the plateau).
+const PROGRESS_REL_TOL: f64 = 1e-3;
+
+/// A resumable t-SNE optimizer over fitted [`Affinities`].
+///
+/// Owns the iteration workspace (embedding, force buffers, optimizer state,
+/// and — in the Z-order layout — the permutation and re-indexed `P`) plus its
+/// thread pools; borrows the affinities, so one [`Affinities`] instance can
+/// drive many sessions. Construction validates the [`StagePlan`] and returns
+/// a typed [`PlanError`] for impossible stage combinations.
+pub struct TsneSession<'a, T: Scalar> {
+    aff: &'a Affinities<T>,
+    plan: StagePlan,
+    cfg: TsneConfig,
+    pool: ThreadPool,
+    seq_pool: ThreadPool,
+    ws: IterationWorkspace<T>,
+    times: StepTimes,
+    fit_params: FitsneParams,
+    iter: usize,
+    last_z: T,
+    last_grad_norm: f64,
+    attractive_override: Option<&'a dyn AttractiveEngine<T>>,
+    observer: Option<(usize, Observer<'a, T>)>,
+    snapshot_buf: Vec<T>,
+    stop_requested: bool,
+}
+
+impl<'a, T: Scalar> TsneSession<'a, T> {
+    /// Build a session with the standard N(0, 1e-4) random initialization
+    /// from `cfg.seed`.
+    pub fn new(
+        aff: &'a Affinities<T>,
+        plan: StagePlan,
+        cfg: TsneConfig,
+    ) -> Result<TsneSession<'a, T>, PlanError> {
+        let y0 = random_init::<T>(aff.n(), cfg.seed);
+        Self::with_init(aff, plan, cfg, y0)
+    }
+
+    /// Build a session from an explicit initial embedding (interleaved x,y in
+    /// the caller's point order; e.g. a scaled PCA projection).
+    pub fn with_init(
+        aff: &'a Affinities<T>,
+        plan: StagePlan,
+        cfg: TsneConfig,
+        y0: Vec<T>,
+    ) -> Result<TsneSession<'a, T>, PlanError> {
+        plan.validate()?;
+        assert_eq!(y0.len(), 2 * aff.n(), "initial embedding must be 2n interleaved x,y");
+        let nt = if cfg.n_threads == 0 { available_cores() } else { cfg.n_threads };
+        // validate() already rejects Zorder+FFT, so layout alone decides.
+        let zorder = plan.layout == Layout::Zorder;
+        Ok(TsneSession {
+            aff,
+            plan,
+            cfg,
+            pool: ThreadPool::new(nt),
+            seq_pool: ThreadPool::new(1),
+            ws: IterationWorkspace::new(y0, cfg.update, zorder, plan.adopt_drift_pct),
+            times: StepTimes::new(),
+            fit_params: FitsneParams::default(),
+            iter: 0,
+            last_z: T::ONE,
+            last_grad_norm: f64::INFINITY,
+            attractive_override: None,
+            observer: None,
+            snapshot_buf: Vec::new(),
+            stop_requested: false,
+        })
+    }
+
+    /// Replace the native attractive kernel with a custom engine (the
+    /// XLA-offload integration path).
+    ///
+    /// Layout contract: with [`Layout::Zorder`] the engine is handed the
+    /// workspace's **re-indexed** `P` and Z-ordered `y` — the interface
+    /// contract (`out[2i..] = F_attr` of row `i` of the given `P`) is
+    /// unchanged, but an engine that baked the *original* sparsity pattern
+    /// into an AOT artifact must run on a plan with
+    /// [`StagePlan::layout`]` = Layout::Original`.
+    pub fn set_attractive_engine(&mut self, engine: &'a dyn AttractiveEngine<T>) {
+        self.attractive_override = Some(engine);
+    }
+
+    /// Install an observer invoked every `every` iterations (clamped to ≥ 1)
+    /// with an un-permuted embedding snapshot, the current KL, and the latest
+    /// gradient norm. Returning [`ObserverControl::Stop`] makes the next
+    /// [`run`](Self::run)/[`run_until`](Self::run_until) call return with
+    /// [`StopReason::Observer`].
+    pub fn set_observer<F>(&mut self, every: usize, f: F)
+    where
+        F: FnMut(&Snapshot<T>) -> ObserverControl + 'a,
+    {
+        self.observer = Some((every.max(1), Box::new(f)));
+    }
+
+    /// Iterations performed so far.
+    #[inline]
+    pub fn iterations(&self) -> usize {
+        self.iter
+    }
+
+    /// l2 gradient norm of the latest iteration (`inf` before the first).
+    #[inline]
+    pub fn last_grad_norm(&self) -> f64 {
+        self.last_grad_norm
+    }
+
+    /// Whether the observer requested a stop ([`ObserverControl::Stop`])
+    /// since the last [`run`](Self::run)/[`run_until`](Self::run_until) call.
+    /// Callers driving the session with bare [`step`](Self::step) should
+    /// check this to honor observer stops; `run`/`run_until` clear it on
+    /// entry and honor it internally.
+    #[inline]
+    pub fn stop_requested(&self) -> bool {
+        self.stop_requested
+    }
+
+    /// The plan this session runs.
+    #[inline]
+    pub fn plan(&self) -> &StagePlan {
+        &self.plan
+    }
+
+    /// Current embedding, un-permuted to the caller's original point order
+    /// (a copy; the live state may be in Z-order).
+    pub fn embedding(&self) -> Vec<T> {
+        let mut out = Vec::new();
+        self.ws.copy_original_order_into(&mut out);
+        out
+    }
+
+    /// KL divergence of the current embedding over the sparse-P support,
+    /// using the latest iteration's Z (meaningful after ≥ 1 step).
+    pub fn kl(&mut self) -> f64 {
+        self.ws.copy_original_order_into(&mut self.snapshot_buf);
+        kl_with_z(&self.aff.p, &self.snapshot_buf, self.last_z.to_f64())
+    }
+
+    /// Run one gradient iteration: (tree build + summarize + BH repulsive) or
+    /// FFT repulsive, attractive over the layout-order `P`, then the fused
+    /// combine+descent sweep. Returns the iteration's gradient norm and Z.
+    pub fn step(&mut self) -> StepInfo {
+        let iter = self.iter;
+        let native_engine = NativeAttractive(self.plan.attractive_variant);
+        let Self {
+            aff,
+            ref plan,
+            ref cfg,
+            ref pool,
+            ref seq_pool,
+            ref mut ws,
+            ref mut times,
+            ref fit_params,
+            attractive_override,
+            ..
+        } = *self;
+        let force_pool: &ThreadPool = if plan.forces_parallel { pool } else { seq_pool };
+        let tree_pool: &ThreadPool = if plan.tree_parallel { pool } else { seq_pool };
+        let attractive: &dyn AttractiveEngine<T> = match attractive_override {
+            Some(e) => e,
+            None => &native_engine,
+        };
+        let p = &aff.p;
+
+        let z: T = if plan.fft_repulsion {
+            // FIt-SNE path: no tree; the FFT pipeline is the repulsive step.
+            times.time(Step::Repulsive, || {
+                fitsne_repulsive_into(force_pool, &ws.y, fit_params, &mut ws.rep_raw)
+            })
+        } else {
+            // Steps 3–4: quadtree + summarization.
+            let mut tree = times.time(Step::TreeBuild, || {
+                if plan.morton_tree {
+                    build_morton(tree_pool, &ws.y)
+                } else {
+                    build_baseline(tree_pool, &ws.y)
+                }
+            });
+            // Layout maintenance (Z-order path only): adopt the fresh
+            // Z-order when it drifted past the plan's threshold. Charged to
+            // TreeBuild — it is the build's permutation being applied.
+            times.time(Step::TreeBuild, || ws.maybe_adopt(pool, &mut tree, p));
+            times.time(Step::Summarize, || {
+                if plan.summarize_parallel {
+                    summarize_parallel(pool, &mut tree)
+                } else {
+                    summarize_sequential(&mut tree)
+                }
+            });
+            // Step 6: repulsive (view materialization charged to this step —
+            // it exists only to feed the tiled kernel). In the adopted
+            // Z-order layout the scatter through `point_idx` is the identity.
+            times.time(Step::Repulsive, || {
+                let v = match plan.repulsive_variant {
+                    RepulsiveVariant::Scalar => None,
+                    RepulsiveVariant::SimdTiled => {
+                        ws.view.rebuild_parallel(force_pool, &tree);
+                        Some(&ws.view)
+                    }
+                };
+                repulsive_forces_into(
+                    force_pool,
+                    &tree,
+                    v,
+                    cfg.theta,
+                    plan.repulsive_variant,
+                    &mut ws.rep_raw,
+                )
+            })
+        };
+
+        // Step 5: attractive — over the layout-order P once adopted, so the
+        // y-gathers walk Z-order neighborhoods instead of random slots.
+        let p_iter: &CsrMatrix<T> = match &ws.p_z {
+            Some(m) => m,
+            None => p,
+        };
+        times.time(Step::Attractive, || {
+            attractive.compute(force_pool, p_iter, &ws.y, &mut ws.attr)
+        });
+
+        // Update: ONE fused combine+update sweep (no separate combine pass);
+        // the sweep also materializes the squared gradient norm for free.
+        let norm_sq = times.time(Step::Update, || {
+            ws.opt.fused_combine_step(pool, iter, &ws.attr, &ws.rep_raw, z, &mut ws.y)
+        });
+
+        self.last_z = z;
+        self.last_grad_norm = norm_sq.to_f64().sqrt();
+        self.iter += 1;
+        let snapshot_due = matches!(&self.observer, Some((every, _)) if self.iter % *every == 0);
+        if snapshot_due {
+            self.emit_snapshot();
+        }
+        StepInfo { iter, grad_norm: self.last_grad_norm, z: z.to_f64() }
+    }
+
+    /// Run `iters` more iterations (or until the observer requests a stop).
+    /// A previous observer stop does not stick: each call starts fresh.
+    pub fn run(&mut self, iters: usize) -> RunOutcome {
+        self.stop_requested = false;
+        for _ in 0..iters {
+            self.step();
+            if self.stop_requested {
+                return RunOutcome { n_iter: self.iter, reason: StopReason::Observer };
+            }
+        }
+        RunOutcome { n_iter: self.iter, reason: StopReason::MaxIter }
+    }
+
+    /// Run until a convergence criterion fires or `conv.max_iter` total
+    /// iterations are reached. Criteria are evaluated on the per-iteration
+    /// gradient norm, only after the early-exaggeration phase; see
+    /// [`Convergence`].
+    ///
+    /// The progress bookkeeping (best-seen norm, no-progress streak) is
+    /// **per call**: resuming after an early return restarts the
+    /// `n_iter_without_progress` window from scratch, while `max_iter` keeps
+    /// counting total session iterations.
+    pub fn run_until(&mut self, conv: Convergence) -> RunOutcome {
+        self.stop_requested = false;
+        let mut best = f64::INFINITY;
+        let mut since_progress = 0usize;
+        while self.iter < conv.max_iter {
+            let info = self.step();
+            if self.stop_requested {
+                return RunOutcome { n_iter: self.iter, reason: StopReason::Observer };
+            }
+            // The exaggerated objective's gradient says nothing about
+            // convergence of the real one: start checking only after the
+            // early-exaggeration phase.
+            if self.iter <= self.cfg.update.exaggeration_iters {
+                continue;
+            }
+            if conv.min_grad_norm > 0.0 && info.grad_norm < conv.min_grad_norm {
+                return RunOutcome { n_iter: self.iter, reason: StopReason::GradNorm };
+            }
+            if conv.n_iter_without_progress > 0 {
+                if info.grad_norm < best * (1.0 - PROGRESS_REL_TOL) {
+                    best = info.grad_norm;
+                    since_progress = 0;
+                } else {
+                    since_progress += 1;
+                    if since_progress >= conv.n_iter_without_progress {
+                        return RunOutcome { n_iter: self.iter, reason: StopReason::NoProgress };
+                    }
+                }
+            }
+        }
+        RunOutcome { n_iter: self.iter, reason: StopReason::MaxIter }
+    }
+
+    /// Consume the session: un-permute the embedding back to the caller's
+    /// point order (the run's single un-permute) and compute the final KL.
+    /// `step_times` covers the gradient phase only — the compat wrappers
+    /// merge the affinity fit's KNN/BSP times on top.
+    pub fn finish(self) -> TsneResult<T> {
+        let TsneSession { aff, plan, ws, times, iter, last_z, .. } = self;
+        let y = ws.into_original_order();
+        let kl = kl_with_z(&aff.p, &y, last_z.to_f64());
+        TsneResult {
+            embedding: y,
+            kl_divergence: kl,
+            step_times: times,
+            n_iter: iter,
+            implementation: plan.preset,
+        }
+    }
+
+    fn emit_snapshot(&mut self) {
+        if let Some((every, mut f)) = self.observer.take() {
+            self.ws.copy_original_order_into(&mut self.snapshot_buf);
+            let kl = kl_with_z(&self.aff.p, &self.snapshot_buf, self.last_z.to_f64());
+            let snap = Snapshot {
+                iter: self.iter,
+                embedding: &self.snapshot_buf,
+                kl,
+                grad_norm: self.last_grad_norm,
+            };
+            if f(&snap) == ObserverControl::Stop {
+                self.stop_requested = true;
+            }
+            self.observer = Some((every, f));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::gaussian_mixture;
+    use crate::tsne::Implementation;
+
+    fn quick_cfg(n_iter: usize) -> TsneConfig {
+        TsneConfig {
+            perplexity: 10.0,
+            n_iter,
+            n_threads: 4,
+            seed: 7,
+            ..TsneConfig::default()
+        }
+    }
+
+    fn fitted(n: usize, seed: u64) -> (crate::data::Dataset<f64>, Affinities<f64>) {
+        let ds = gaussian_mixture::<f64>(n, 8, 4, 8.0, seed);
+        let pool = ThreadPool::new(4);
+        let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, 10.0, &StagePlan::acc_tsne());
+        (ds, aff)
+    }
+
+    #[test]
+    fn affinities_record_fit_metadata() {
+        let (ds, aff) = fitted(300, 1);
+        assert_eq!(aff.n(), ds.n);
+        assert_eq!(aff.perplexity(), 10.0);
+        assert_eq!(aff.k(), 30);
+        assert!(aff.p().validate().is_ok());
+        assert!(aff.step_times().get(Step::Knn) > 0.0);
+        assert!(aff.step_times().get(Step::Bsp) > 0.0);
+    }
+
+    #[test]
+    fn one_affinities_instance_drives_runs_with_different_seeds() {
+        let (_ds, aff) = fitted(300, 2);
+        let mut kls = Vec::new();
+        let mut embeddings = Vec::new();
+        for seed in [7u64, 1234] {
+            let mut cfg = quick_cfg(80);
+            cfg.seed = seed;
+            let mut sess = TsneSession::new(&aff, StagePlan::acc_tsne(), cfg).unwrap();
+            sess.run(cfg.n_iter);
+            let r = sess.finish();
+            assert!(r.embedding.iter().all(|v| v.is_finite()), "seed {seed}");
+            assert!(r.kl_divergence.is_finite() && r.kl_divergence > 0.0);
+            kls.push(r.kl_divergence);
+            embeddings.push(r.embedding);
+        }
+        // different seeds ⇒ genuinely different descents off the same P
+        assert_ne!(embeddings[0], embeddings[1]);
+        // ... converging to comparable quality
+        let rel = (kls[0] - kls[1]).abs() / kls[0].max(kls[1]);
+        assert!(rel < 0.5, "seed A {} vs seed B {}", kls[0], kls[1]);
+    }
+
+    #[test]
+    fn session_is_resumable_and_counts_iterations() {
+        let (_ds, aff) = fitted(200, 3);
+        let cfg = quick_cfg(30);
+        let mut a = TsneSession::new(&aff, StagePlan::acc_tsne(), cfg).unwrap();
+        a.run(30);
+        let ra = a.finish();
+        let mut b = TsneSession::new(&aff, StagePlan::acc_tsne(), cfg).unwrap();
+        b.run(10);
+        assert_eq!(b.iterations(), 10);
+        for _ in 0..5 {
+            b.step();
+        }
+        let out = b.run(15);
+        assert_eq!(out.n_iter, 30);
+        assert_eq!(out.reason, StopReason::MaxIter);
+        let rb = b.finish();
+        // chunked stepping is the same trajectory as one run() call
+        assert_eq!(ra.embedding, rb.embedding);
+        assert_eq!(ra.kl_divergence, rb.kl_divergence);
+    }
+
+    #[test]
+    fn invalid_plan_is_a_typed_err_not_a_panic() {
+        let (_ds, aff) = fitted(200, 4);
+        let mut plan = StagePlan::fit_sne();
+        plan.layout = Layout::Zorder;
+        match TsneSession::new(&aff, plan, quick_cfg(5)) {
+            Err(PlanError::FftLayoutZorder) => {}
+            other => panic!("expected FftLayoutZorder, got {:?}", other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn observer_sees_unpermuted_snapshots_and_can_stop() {
+        let (_ds, aff) = fitted(300, 5);
+        let cfg = quick_cfg(100);
+        // Reference trajectory without an observer.
+        let mut plain = TsneSession::new(&aff, StagePlan::acc_tsne(), cfg).unwrap();
+        for _ in 0..20 {
+            plain.step();
+        }
+        let y20 = plain.embedding();
+        let n = aff.n();
+        let seen = std::cell::RefCell::new(Vec::<(usize, f64, Vec<f64>)>::new());
+        let mut sess = TsneSession::new(&aff, StagePlan::acc_tsne(), cfg).unwrap();
+        sess.set_observer(10, |snap| {
+            assert_eq!(snap.embedding.len(), 2 * n);
+            assert!(snap.kl.is_finite() && snap.kl > 0.0);
+            assert!(snap.grad_norm.is_finite());
+            seen.borrow_mut().push((snap.iter, snap.kl, snap.embedding.to_vec()));
+            if snap.iter >= 20 { ObserverControl::Stop } else { ObserverControl::Continue }
+        });
+        let out = sess.run(100);
+        assert_eq!(out.reason, StopReason::Observer);
+        assert_eq!(out.n_iter, 20, "stop honored at the snapshot iteration");
+        // a later run() is not poisoned by the previous Stop: the flag is
+        // cleared on entry and the session resumes where it paused
+        let out2 = sess.run(5);
+        assert_eq!(out2.reason, StopReason::MaxIter);
+        assert_eq!(out2.n_iter, 25);
+        drop(sess); // release the observer's borrow of `seen`
+        let seen = seen.into_inner();
+        assert_eq!(seen.iter().map(|s| s.0).collect::<Vec<_>>(), vec![10, 20]);
+        // the iter-20 snapshot matches the observer-free trajectory: the
+        // observer gets the real (un-permuted) embedding and does not perturb
+        // the optimization
+        assert_eq!(seen[1].2, y20);
+    }
+
+    #[test]
+    fn run_until_respects_the_budget_when_nothing_converges() {
+        let (_ds, aff) = fitted(200, 6);
+        let mut sess = TsneSession::new(&aff, StagePlan::acc_tsne(), quick_cfg(0)).unwrap();
+        let out = sess.run_until(Convergence {
+            max_iter: 25,
+            min_grad_norm: 0.0,
+            n_iter_without_progress: 0,
+        });
+        assert_eq!(out.reason, StopReason::MaxIter);
+        assert_eq!(out.n_iter, 25);
+        assert_eq!(sess.finish().n_iter, 25);
+    }
+
+    #[test]
+    fn fft_plan_runs_through_the_session() {
+        let (_ds, aff) = fitted(200, 8);
+        let mut sess = TsneSession::new(&aff, StagePlan::fit_sne(), quick_cfg(0)).unwrap();
+        sess.run(10);
+        let r = sess.finish();
+        assert!(r.embedding.iter().all(|v| v.is_finite()));
+        assert_eq!(r.implementation, Implementation::FitSne);
+        assert_eq!(r.step_times.get(Step::TreeBuild), 0.0, "FFT path builds no tree");
+    }
+}

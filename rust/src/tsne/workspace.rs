@@ -40,13 +40,15 @@ use crate::quadtree::view::TraversalView;
 use crate::quadtree::QuadTree;
 use crate::sparse::{permute_symmetric_into, CsrMatrix};
 
-/// Re-permute (adopt) only when more than this percentage of points changed
-/// slots since the last adopted layout. Below it the repulsive scatter
-/// through `point_idx` is ~identity and re-indexing `P` (O(nnz)) would cost
-/// more than the locality it restores; above it the scattered CSR gathers
-/// start missing again. Points move a lot early (adopt almost every
-/// iteration) and barely at all late (adopt rarely, and the builder's
-/// sorted-skip makes the re-sort itself a no-op).
+/// Default adoption threshold: re-permute (adopt) only when more than this
+/// percentage of points changed slots since the last adopted layout. Below
+/// it the repulsive scatter through `point_idx` is ~identity and re-indexing
+/// `P` (O(nnz)) would cost more than the locality it restores; above it the
+/// scattered CSR gathers start missing again. Points move a lot early (adopt
+/// almost every iteration) and barely at all late (adopt rarely, and the
+/// builder's sorted-skip makes the re-sort itself a no-op). Tunable per run
+/// via [`StagePlan::adopt_drift_pct`](crate::tsne::StagePlan::adopt_drift_pct)
+/// (`bench_micro_kernels` carries the measuring sweep).
 pub const ADOPT_DRIFT_PCT: usize = 5;
 
 /// Persistent per-iteration state of the gradient loop, stored in the
@@ -54,6 +56,9 @@ pub const ADOPT_DRIFT_PCT: usize = 5;
 pub struct IterationWorkspace<T: Real> {
     zorder: bool,
     adopted: bool,
+    /// Adoption threshold in percent of drifted points (0 ⇒ adopt on any
+    /// drift, 100 ⇒ never adopt).
+    adopt_drift_pct: usize,
     /// Embedding, interleaved x,y per point, in layout order.
     pub y: Vec<T>,
     /// Attractive accumulation buffer (layout order, overwritten per iter).
@@ -79,7 +84,10 @@ impl<T: Real> IterationWorkspace<T> {
     /// Wrap an initial embedding (in the caller's original point order).
     /// `zorder` selects the persistent-layout mode; with it off the
     /// workspace is a plain buffer bundle and [`Self::maybe_adopt`] no-ops.
-    pub fn new(y: Vec<T>, update: UpdateParams, zorder: bool) -> Self {
+    /// `adopt_drift_pct` is the adoption threshold ([`ADOPT_DRIFT_PCT`] is
+    /// the default — picked, not yet measured; `bench_micro_kernels`'
+    /// adoption sweep exists to replace it with a measured value).
+    pub fn new(y: Vec<T>, update: UpdateParams, zorder: bool, adopt_drift_pct: usize) -> Self {
         let n = y.len() / 2;
         assert_eq!(y.len(), 2 * n, "embedding must be interleaved x,y");
         let (perm, inv_perm) = if zorder {
@@ -90,6 +98,7 @@ impl<T: Real> IterationWorkspace<T> {
         IterationWorkspace {
             zorder,
             adopted: false,
+            adopt_drift_pct,
             y,
             attr: vec![T::ZERO; 2 * n],
             rep_raw: vec![T::ZERO; 2 * n],
@@ -119,7 +128,7 @@ impl<T: Real> IterationWorkspace<T> {
     }
 
     /// Adopt `tree`'s layout as the workspace layout if it drifted beyond
-    /// [`ADOPT_DRIFT_PCT`] from the current one. `tree` must have been built
+    /// the configured `adopt_drift_pct` from the current one. `tree` must have been built
     /// from `self.y` this iteration, and `p` must be the run's CSR `P` in
     /// ORIGINAL index space (the re-index always starts from it, so
     /// permutation error cannot compound across adoptions). On adoption the
@@ -139,7 +148,7 @@ impl<T: Real> IterationWorkspace<T> {
         let n = self.n();
         debug_assert_eq!(tree.n_points(), n, "tree must be built from the workspace embedding");
         let drift = tree.layout_drift();
-        if drift * 100 <= n * ADOPT_DRIFT_PCT {
+        if drift * 100 <= n * self.adopt_drift_pct {
             return false;
         }
 
@@ -202,6 +211,22 @@ impl<T: Real> IterationWorkspace<T> {
         }
         self.adopted = true;
         true
+    }
+
+    /// Write the embedding, un-permuted to the caller's original point
+    /// order, into `out` (resized to `2n`). The non-consuming sibling of
+    /// [`Self::into_original_order`] — observer snapshots and mid-run KL
+    /// evaluation use it without disturbing the layout-order state.
+    pub fn copy_original_order_into(&self, out: &mut Vec<T>) {
+        out.resize(self.y.len(), T::ZERO);
+        if !self.adopted {
+            out.copy_from_slice(&self.y);
+            return;
+        }
+        for (slot, &orig) in self.perm.iter().enumerate() {
+            out[2 * orig as usize] = self.y[2 * slot];
+            out[2 * orig as usize + 1] = self.y[2 * slot + 1];
+        }
     }
 
     /// Consume the workspace, returning the embedding un-permuted to the
@@ -268,7 +293,7 @@ mod tests {
         let y0 = random_y(n, 1);
         let pool = ThreadPool::new(4);
         let p = ring_p(n);
-        let mut ws = IterationWorkspace::new(y0.clone(), UpdateParams::default(), true);
+        let mut ws = IterationWorkspace::new(y0.clone(), UpdateParams::default(), true, ADOPT_DRIFT_PCT);
         // distinct optimizer state so relocation is observable
         for i in 0..2 * n {
             ws.opt.velocity[i] = i as f64 * 0.5;
@@ -311,7 +336,7 @@ mod tests {
         let y0 = random_y(n, 2);
         let pool = ThreadPool::new(4);
         let p = ring_p(n);
-        let mut ws = IterationWorkspace::new(y0, UpdateParams::default(), true);
+        let mut ws = IterationWorkspace::new(y0, UpdateParams::default(), true, ADOPT_DRIFT_PCT);
         let mut t1 = build_morton(&pool, &ws.y);
         assert!(ws.maybe_adopt(&pool, &mut t1, &p));
         // rebuild from the adopted layout: zero drift → no re-adoption
@@ -319,7 +344,7 @@ mod tests {
         assert_eq!(t2.layout_drift(), 0);
         assert!(!ws.maybe_adopt(&pool, &mut t2, &p));
         // original-layout workspaces never adopt
-        let mut ws_orig = IterationWorkspace::new(random_y(n, 3), UpdateParams::default(), false);
+        let mut ws_orig = IterationWorkspace::new(random_y(n, 3), UpdateParams::default(), false, ADOPT_DRIFT_PCT);
         let mut t3 = build_morton(&pool, &ws_orig.y);
         assert!(!ws_orig.maybe_adopt(&pool, &mut t3, &p));
         assert!(ws_orig.p_z.is_none());
@@ -331,11 +356,46 @@ mod tests {
         let y0 = random_y(n, 4);
         let pool = ThreadPool::new(2);
         let p = ring_p(n);
-        let mut ws = IterationWorkspace::new(y0.clone(), UpdateParams::default(), true);
+        let mut ws = IterationWorkspace::new(y0.clone(), UpdateParams::default(), true, ADOPT_DRIFT_PCT);
         let mut tree = build_morton(&pool, &ws.y);
         assert!(ws.maybe_adopt(&pool, &mut tree, &p));
         assert_ne!(ws.y, y0, "layout must actually differ");
         assert_eq!(ws.into_original_order(), y0);
+    }
+
+    #[test]
+    fn adopt_threshold_zero_and_hundred_are_the_extremes() {
+        let n = 400;
+        let pool = ThreadPool::new(4);
+        let p = ring_p(n);
+        // pct=100: drift can never exceed n, so the layout is never adopted
+        let mut ws100 = IterationWorkspace::new(random_y(n, 7), UpdateParams::default(), true, 100);
+        let mut t100 = build_morton(&pool, &ws100.y);
+        assert!(!ws100.maybe_adopt(&pool, &mut t100, &p));
+        assert!(ws100.permutation().is_none());
+        // pct=0: any nonzero drift triggers adoption
+        let mut ws0 = IterationWorkspace::new(random_y(n, 8), UpdateParams::default(), true, 0);
+        let mut t0 = build_morton(&pool, &ws0.y);
+        assert!(t0.layout_drift() > 0, "random order must drift");
+        assert!(ws0.maybe_adopt(&pool, &mut t0, &p));
+    }
+
+    #[test]
+    fn copy_original_order_matches_into_original_order() {
+        let n = 300;
+        let y0 = random_y(n, 9);
+        let pool = ThreadPool::new(4);
+        let p = ring_p(n);
+        let mut ws =
+            IterationWorkspace::new(y0.clone(), UpdateParams::default(), true, ADOPT_DRIFT_PCT);
+        let mut out = Vec::new();
+        ws.copy_original_order_into(&mut out);
+        assert_eq!(out, y0, "identity before adoption");
+        let mut tree = build_morton(&pool, &ws.y);
+        assert!(ws.maybe_adopt(&pool, &mut tree, &p));
+        ws.copy_original_order_into(&mut out);
+        assert_ne!(out, ws.y, "snapshot is un-permuted, state stays in layout order");
+        assert_eq!(out, ws.into_original_order());
     }
 
     #[test]
@@ -346,7 +406,7 @@ mod tests {
         let y0 = random_y(n, 5);
         let pool = ThreadPool::new(4);
         let p = ring_p(n);
-        let mut ws = IterationWorkspace::new(y0.clone(), UpdateParams::default(), true);
+        let mut ws = IterationWorkspace::new(y0.clone(), UpdateParams::default(), true, ADOPT_DRIFT_PCT);
         let mut t1 = build_morton(&pool, &ws.y);
         assert!(ws.maybe_adopt(&pool, &mut t1, &p));
         let perm0 = ws.permutation().unwrap().to_vec();

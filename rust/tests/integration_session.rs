@@ -1,0 +1,168 @@
+//! Integration: the session API's cross-module contracts — compat parity
+//! with `run_tsne`, affinity reuse across seeds, and convergence-based
+//! stopping on an easy dataset.
+//!
+//! The convergence tests are *calibrated*, not statistical: a reference
+//! session records the (deterministic, fixed-thread-count) gradient-norm
+//! trajectory, the stopping threshold is derived from it, and a fresh
+//! session on the same seed must stop where the trajectory says. No
+//! tolerance on iteration counts, no flake.
+
+use acc_tsne::data::synthetic::gaussian_mixture;
+use acc_tsne::parallel::ThreadPool;
+use acc_tsne::tsne::{
+    run_tsne, Affinities, Convergence, Implementation, StagePlan, StopReason, TsneConfig,
+    TsneSession,
+};
+
+fn cfg(n_iter: usize) -> TsneConfig {
+    TsneConfig {
+        perplexity: 10.0,
+        n_iter,
+        n_threads: 4,
+        seed: 7,
+        ..TsneConfig::default()
+    }
+}
+
+/// An easy, well-separated mixture: 300 points, 3 far-apart clusters.
+fn easy_fit() -> Affinities<f64> {
+    let ds = gaussian_mixture::<f64>(300, 8, 3, 12.0, 31);
+    let pool = ThreadPool::new(4);
+    Affinities::fit(&pool, &ds.points, ds.n, ds.d, 10.0, &StagePlan::acc_tsne())
+}
+
+#[test]
+fn run_until_early_exits_under_min_grad_norm_on_an_easy_mixture() {
+    let aff = easy_fit();
+    let mut c = cfg(0);
+    c.update.exaggeration_iters = 100; // keep the calibration window cheap
+    let budget = 700;
+
+    // Reference: full budget, recording the grad-norm trajectory and KL.
+    let plan = StagePlan::acc_tsne();
+    let mut reference = TsneSession::new(&aff, plan, c).unwrap();
+    let norms: Vec<f64> = (0..budget).map(|_| reference.step().grad_norm).collect();
+    let kl_full = reference.finish().kl_divergence;
+
+    // Threshold slightly above the smallest norm seen in the late window
+    // [200, 650): the same-seed trajectory must cross it at that minimum's
+    // iteration at the latest — strictly inside the budget.
+    let window_min = norms[200..650].iter().cloned().fold(f64::INFINITY, f64::min);
+    let conv = Convergence {
+        max_iter: budget,
+        min_grad_norm: window_min * (1.0 + 1e-9),
+        n_iter_without_progress: 0,
+    };
+    let mut sess = TsneSession::new(&aff, plan, c).unwrap();
+    let out = sess.run_until(conv);
+    assert_eq!(out.reason, StopReason::GradNorm, "stopped by min_grad_norm");
+    assert!(out.n_iter < budget, "early exit: {} !< {budget}", out.n_iter);
+    assert!(out.n_iter > c.update.exaggeration_iters, "never stops during exaggeration");
+    let r = sess.finish();
+    assert_eq!(r.n_iter, out.n_iter, "result records the actual iteration count");
+    // An easy mixture is essentially converged at the stopping point: the KL
+    // must be no worse than the full-budget run (small tolerance for the
+    // marginal tail-iteration polish the early exit skips).
+    assert!(
+        r.kl_divergence <= kl_full * 1.2 + 1e-9,
+        "early-exit KL {} vs full-budget KL {}",
+        r.kl_divergence,
+        kl_full
+    );
+}
+
+#[test]
+fn run_until_no_progress_rule_fires_exactly_where_the_trajectory_says() {
+    let aff = easy_fit();
+    let mut c = cfg(0);
+    c.update.exaggeration_iters = 80;
+    let budget = 500;
+    let window = 40;
+
+    let plan = StagePlan::acc_tsne();
+    let mut reference = TsneSession::new(&aff, plan, c).unwrap();
+    let norms: Vec<f64> = (0..budget).map(|_| reference.step().grad_norm).collect();
+
+    // Independent simulation of the documented rule: progress = beating the
+    // best-seen norm by >0.1%, checked only after exaggeration.
+    let mut best = f64::INFINITY;
+    let mut since = 0usize;
+    let mut predicted = budget;
+    let mut predicted_reason = StopReason::MaxIter;
+    for (i, &g) in norms.iter().enumerate() {
+        if i + 1 <= c.update.exaggeration_iters {
+            continue;
+        }
+        if g < best * (1.0 - 1e-3) {
+            best = g;
+            since = 0;
+        } else {
+            since += 1;
+            if since >= window {
+                predicted = i + 1;
+                predicted_reason = StopReason::NoProgress;
+                break;
+            }
+        }
+    }
+
+    let mut sess = TsneSession::new(&aff, plan, c).unwrap();
+    let out = sess.run_until(Convergence {
+        max_iter: budget,
+        min_grad_norm: 0.0,
+        n_iter_without_progress: window,
+    });
+    assert_eq!(out.n_iter, predicted);
+    assert_eq!(out.reason, predicted_reason);
+}
+
+#[test]
+fn compat_wrapper_matches_session_for_every_implementation() {
+    // Bit-identical parity of the one-shot wrapper against fit + run for all
+    // five presets (the per-step parity test lives in tsne::pipeline; this
+    // one covers the preset matrix end to end).
+    let ds = gaussian_mixture::<f64>(250, 8, 4, 6.0, 37);
+    let c = cfg(15);
+    let pool = ThreadPool::new(c.n_threads);
+    for imp in Implementation::ALL {
+        let wrapper = run_tsne(&ds.points, ds.n, ds.d, &c, imp);
+        let plan = StagePlan::preset(imp);
+        let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, c.perplexity, &plan);
+        let mut sess = TsneSession::new(&aff, plan, c).unwrap();
+        sess.run(c.n_iter);
+        let manual = sess.finish();
+        assert_eq!(wrapper.embedding, manual.embedding, "{}", imp.name());
+        assert_eq!(wrapper.kl_divergence, manual.kl_divergence, "{}", imp.name());
+    }
+}
+
+#[test]
+fn one_affinity_fit_supports_heterogeneous_descents() {
+    // The fit-once/descend-many contract across *plans*, not just seeds:
+    // the same Affinities instance drives the Z-order and original layouts
+    // and both repulsive kernels, agreeing to FP noise over a short horizon.
+    let aff = easy_fit();
+    let c = cfg(10);
+    let run_with = |plan: StagePlan| -> Vec<f64> {
+        let mut sess = TsneSession::new(&aff, plan, c).unwrap();
+        sess.run(c.n_iter);
+        sess.finish().embedding
+    };
+    let base = run_with(StagePlan::acc_tsne());
+    let variants = [
+        StagePlan::acc_tsne().with_layout(acc_tsne::tsne::Layout::Original).unwrap(),
+        StagePlan::acc_tsne()
+            .with_repulsive(acc_tsne::gradient::repulsive::RepulsiveVariant::Scalar)
+            .unwrap(),
+    ];
+    for plan in variants {
+        let other = run_with(plan);
+        for i in 0..base.len() {
+            assert!(
+                (base[i] - other[i]).abs() < 1e-6 * (1.0 + base[i].abs()),
+                "idx {i} for {plan:?}"
+            );
+        }
+    }
+}

@@ -47,6 +47,15 @@ def main(paths):
             continue
         with open(base_path) as f:
             base = flatten(json.load(f))
+        # Keys present in the current snapshot but not in the baseline are
+        # tolerated, not flagged: new sweeps (e.g. the adopt_sweep.* keys of
+        # BENCH_gradient_loop.json) appear before any baseline records them.
+        new_keys = [k for k in sorted(cur) if k.endswith("_s") and k not in base]
+        if new_keys:
+            print(
+                f"{path}: {len(new_keys)} key(s) without a baseline yet "
+                f"(refresh {base_path} to start their trend): " + ", ".join(new_keys)
+            )
         for k in sorted(base):
             if not k.endswith("_s") or k not in cur or base[k] <= 0:
                 continue
