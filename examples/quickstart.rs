@@ -79,7 +79,35 @@ fn main() {
         result_b.kl_divergence
     );
 
+    // Persistence — the fit outlives the process, and a session survives a
+    // restart. The affinities artifact is a versioned, checksummed binary;
+    // the checkpoint stores un-permuted optimizer state, and resuming is
+    // bit-identical to never having stopped (fixed thread count).
     std::fs::create_dir_all("results").ok();
+    aff.save("results/quickstart.affinities").expect("save affinities");
+    let aff_loaded =
+        Affinities::<f64>::load("results/quickstart.affinities").expect("load affinities");
+    println!(
+        "persisted fit: results/quickstart.affinities (nnz={}, reload bit-exact: {})",
+        aff_loaded.p().nnz(),
+        aff_loaded.p().val == aff.p().val
+    );
+
+    let mut cfg_c = cfg;
+    cfg_c.seed = 7;
+    let mut session_c = TsneSession::new(&aff_loaded, plan, cfg_c).expect("preset plans validate");
+    session_c.run(100);
+    session_c.checkpoint("results/quickstart.ckpt").expect("write checkpoint");
+    drop(session_c); // simulate a restart: only the file carries the state
+    let mut resumed = TsneSession::restore(&aff_loaded, plan, cfg_c, "results/quickstart.ckpt")
+        .expect("restore checkpoint");
+    resumed.run(100);
+    println!(
+        "checkpoint/resume: KL = {:.4} after {} iterations (100 before + 100 after restart)",
+        resumed.finish().kl_divergence,
+        200
+    );
+
     viz::write_svg("results/quickstart.svg", &result.embedding, &ds.labels, 768)
         .expect("write plot");
     println!("plot: results/quickstart.svg");

@@ -264,6 +264,19 @@ fn main() {
     // below — the session API's fit-once/descend-many contract, with no
     // per-run copy of P.
     let aff_loop = Affinities::from_csr(p_loop, 30.0);
+
+    // --- affinities persistence (the serving layer's cold-start path:
+    // loading a cached fit instead of redoing KNN+BSP). Times a full
+    // checksummed write + read-back of the nnz-heavy artifact.
+    let persist_path =
+        std::env::temp_dir().join(format!("acc_tsne_bench_aff_{}.bin", std::process::id()));
+    let mut b = Bencher::new("affinities_persist").sampling(1, 5, 5.0);
+    let save_s = b.bench("save", || aff_loop.save(&persist_path).expect("bench save")).mean;
+    let load_s = b
+        .bench("load", || Affinities::<f64>::load(&persist_path).expect("bench load").n())
+        .mean;
+    b.report();
+    std::fs::remove_file(&persist_path).ok();
     let run_plan = |plan: StagePlan| {
         let mut sess = TsneSession::new(&aff_loop, plan, base_cfg).expect("valid plan");
         sess.run(iters);
@@ -321,7 +334,10 @@ fn main() {
     }
 
     let mut js = String::from("{\n  \"bench\": \"gradient_loop\",\n");
-    js.push_str(&format!("  \"n\": {n},\n  \"threads\": {},\n  \"iters\": {iters},\n", pool.n_threads()));
+    js.push_str(&format!(
+        "  \"n\": {n},\n  \"threads\": {},\n  \"iters\": {iters},\n",
+        pool.n_threads()
+    ));
     for (label, r) in [("original", &r_orig), ("zorder", &r_z)] {
         js.push_str(&format!("  \"{label}\": {{\n"));
         for (i, (step, name)) in steps.iter().enumerate() {
@@ -343,6 +359,9 @@ fn main() {
         ));
     }
     js.push_str("  },\n");
+    js.push_str(&format!(
+        "  \"persist\": {{ \"save_s\": {save_s:.6e}, \"load_s\": {load_s:.6e} }},\n"
+    ));
     js.push_str(&format!(
         "  \"speedup_attractive\": {:.3},\n",
         r_orig.step_times.get(Step::Attractive) / r_z.step_times.get(Step::Attractive).max(1e-12)

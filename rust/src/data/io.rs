@@ -1,10 +1,84 @@
-//! Result/embedding IO: CSV writers the eval harness and viz use, and a tiny
-//! binary matrix format for caching expensive artifacts between runs.
+//! Result/embedding IO: CSV writers the eval harness and viz use, a tiny
+//! binary matrix format for caching expensive artifacts between runs, and the
+//! dependency-free binary primitives (little-endian field codecs + an FNV-1a
+//! checksum) that [`crate::tsne::persist`] builds its versioned formats on.
 
 use crate::common::float::Real;
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
+
+/// Incremental 64-bit FNV-1a hash — the integrity checksum of the persisted
+/// binary formats. Not cryptographic: it detects truncation and bit flips,
+/// which is all an on-disk artifact cache needs, with zero dependencies.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv1a64(u64);
+
+impl Fnv1a64 {
+    const OFFSET_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    pub fn new() -> Self {
+        Fnv1a64(Self::OFFSET_BASIS)
+    }
+
+    #[inline]
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(Self::PRIME);
+        }
+        self.0 = h;
+    }
+
+    #[inline]
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv1a64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Write a `u32` little-endian.
+pub fn write_u32_le<W: Write>(w: &mut W, v: u32) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+/// Write a `u64` little-endian.
+pub fn write_u64_le<W: Write>(w: &mut W, v: u64) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+/// Write an `f64` little-endian (bit pattern preserved exactly).
+pub fn write_f64_le<W: Write>(w: &mut W, v: f64) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+/// Read a little-endian `u32`.
+pub fn read_u32_le<R: Read>(r: &mut R) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Read a little-endian `u64`.
+pub fn read_u64_le<R: Read>(r: &mut R) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Read a little-endian `f64` (bit pattern preserved exactly).
+pub fn read_f64_le<R: Read>(r: &mut R) -> std::io::Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
 
 /// Write an embedding (n×2) with labels as CSV: `x,y,label`.
 pub fn write_embedding_csv<T: Real>(
@@ -23,7 +97,11 @@ pub fn write_embedding_csv<T: Real>(
 }
 
 /// Write generic CSV rows (used by every bench to dump its table).
-pub fn write_csv(path: impl AsRef<Path>, header: &str, rows: &[Vec<String>]) -> std::io::Result<()> {
+pub fn write_csv(
+    path: impl AsRef<Path>,
+    header: &str,
+    rows: &[Vec<String>],
+) -> std::io::Result<()> {
     let mut w = BufWriter::new(File::create(path)?);
     writeln!(w, "{header}")?;
     for row in rows {
@@ -35,7 +113,12 @@ pub fn write_csv(path: impl AsRef<Path>, header: &str, rows: &[Vec<String>]) -> 
 const MAGIC: &[u8; 8] = b"ACCTSNE1";
 
 /// Binary matrix dump: magic, rows, cols, f64 little-endian data.
-pub fn write_matrix_bin(path: impl AsRef<Path>, data: &[f64], rows: usize, cols: usize) -> std::io::Result<()> {
+pub fn write_matrix_bin(
+    path: impl AsRef<Path>,
+    data: &[f64],
+    rows: usize,
+    cols: usize,
+) -> std::io::Result<()> {
     assert_eq!(data.len(), rows * cols);
     let mut w = BufWriter::new(File::create(path)?);
     w.write_all(MAGIC)?;
@@ -112,6 +195,40 @@ mod tests {
         let mut p = std::env::temp_dir();
         p.push(format!("acc_tsne_test_{}_{name}", std::process::id()));
         p
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // Published FNV-1a test vectors.
+        let empty = Fnv1a64::new();
+        assert_eq!(empty.finish(), 0xcbf2_9ce4_8422_2325);
+        let mut a = Fnv1a64::new();
+        a.update(b"a");
+        assert_eq!(a.finish(), 0xaf63_dc4c_8601_ec8c);
+        let mut foobar = Fnv1a64::new();
+        foobar.update(b"foobar");
+        assert_eq!(foobar.finish(), 0x85944171f73967e8);
+        // incremental updates == one-shot
+        let mut split = Fnv1a64::new();
+        split.update(b"foo");
+        split.update(b"bar");
+        assert_eq!(split.finish(), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn le_field_codecs_round_trip() {
+        let mut buf = Vec::new();
+        write_u32_le(&mut buf, 0xDEAD_BEEF).unwrap();
+        write_u64_le(&mut buf, u64::MAX - 7).unwrap();
+        write_f64_le(&mut buf, -0.1).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_u32_le(&mut r).unwrap(), 0xDEAD_BEEF);
+        assert_eq!(read_u64_le(&mut r).unwrap(), u64::MAX - 7);
+        assert_eq!(read_f64_le(&mut r).unwrap().to_bits(), (-0.1f64).to_bits());
+        assert!(r.is_empty());
+        // short reads error instead of fabricating values
+        let mut short = &buf[..2];
+        assert!(read_u32_le(&mut short).is_err());
     }
 
     #[test]

@@ -26,7 +26,13 @@ pub struct Dataset<T: Real> {
 }
 
 impl<T: Real> Dataset<T> {
-    pub fn new(name: impl Into<String>, points: Vec<T>, labels: Vec<u16>, n: usize, d: usize) -> Self {
+    pub fn new(
+        name: impl Into<String>,
+        points: Vec<T>,
+        labels: Vec<u16>,
+        n: usize,
+        d: usize,
+    ) -> Self {
         assert_eq!(points.len(), n * d, "points length must be n*d");
         assert_eq!(labels.len(), n, "labels length must be n");
         Dataset {

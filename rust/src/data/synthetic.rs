@@ -16,7 +16,13 @@ use crate::common::rng::Rng;
 
 /// `k` Gaussian clusters in `d` dims. `separation` scales the distance between
 /// cluster centers relative to the unit within-cluster spread.
-pub fn gaussian_mixture<T: Real>(n: usize, d: usize, k: usize, separation: f64, seed: u64) -> Dataset<T> {
+pub fn gaussian_mixture<T: Real>(
+    n: usize,
+    d: usize,
+    k: usize,
+    separation: f64,
+    seed: u64,
+) -> Dataset<T> {
     assert!(n > 0 && d > 0 && k > 0);
     let mut rng = Rng::new(seed);
     let centers: Vec<f64> = (0..k * d).map(|_| rng.next_gaussian() * separation).collect();
@@ -35,7 +41,13 @@ pub fn gaussian_mixture<T: Real>(n: usize, d: usize, k: usize, separation: f64, 
 /// scRNA-seq-like generator: `k` clusters with Zipf-ish sizes, per-cluster
 /// anisotropic scales, log-normal expression, and `dropout` probability of
 /// zeroing an entry (the defining sparsity of scRNA counts).
-pub fn scrna_like<T: Real>(n: usize, genes: usize, k: usize, dropout: f64, seed: u64) -> Dataset<T> {
+pub fn scrna_like<T: Real>(
+    n: usize,
+    genes: usize,
+    k: usize,
+    dropout: f64,
+    seed: u64,
+) -> Dataset<T> {
     assert!(n > 0 && genes > 0 && k > 0);
     let mut rng = Rng::new(seed);
     // Zipf-like cluster weights → very unbalanced cluster sizes.

@@ -314,7 +314,10 @@ pub fn table_s1_precision(cfg: &ExpConfig, datasets: &[PaperDataset]) -> Vec<Vec
 /// kernel (16 lanes in f32, where the tile batching pays the most). The
 /// micro-benches isolate the kernel; this shows its whole-pipeline payoff
 /// with the per-run KL confirming the accept-set parity.
-pub fn table_s1_f32_repulsive_sweep(cfg: &ExpConfig, datasets: &[PaperDataset]) -> Vec<Vec<String>> {
+pub fn table_s1_f32_repulsive_sweep(
+    cfg: &ExpConfig,
+    datasets: &[PaperDataset],
+) -> Vec<Vec<String>> {
     let threads = cfg.resolved_threads();
     let mut rows = Vec::new();
     for &d in datasets {
@@ -355,7 +358,8 @@ pub fn figs_s_plots(cfg: &ExpConfig, datasets: &[PaperDataset]) -> Vec<Vec<Strin
         let base = cfg.out_dir.join(format!("figS_{}", d.name()));
         viz::write_ppm(base.with_extension("ppm"), &r.embedding, &ds.labels, 512).ok();
         viz::write_svg(base.with_extension("svg"), &r.embedding, &ds.labels, 512).ok();
-        crate::data::io::write_embedding_csv(base.with_extension("csv"), &r.embedding, &ds.labels).ok();
+        crate::data::io::write_embedding_csv(base.with_extension("csv"), &r.embedding, &ds.labels)
+            .ok();
         rows.push(vec![
             d.name().to_string(),
             format!("{}", ds.n),

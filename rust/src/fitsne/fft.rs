@@ -162,7 +162,8 @@ mod tests {
     fn matches_naive_dft() {
         let mut rng = Rng::new(1);
         for n in [1usize, 2, 8, 64, 256] {
-            let data: Vec<Cpx> = (0..n).map(|_| Cpx::new(rng.next_gaussian(), rng.next_gaussian())).collect();
+            let data: Vec<Cpx> =
+                (0..n).map(|_| Cpx::new(rng.next_gaussian(), rng.next_gaussian())).collect();
             let mut fast = data.clone();
             fft_inplace(&mut fast, false);
             let slow = naive_dft(&data, false);
@@ -235,7 +236,8 @@ mod tests {
     #[test]
     fn parseval_energy_preserved() {
         let mut rng = Rng::new(5);
-        let data: Vec<Cpx> = (0..256).map(|_| Cpx::new(rng.next_gaussian(), rng.next_gaussian())).collect();
+        let data: Vec<Cpx> =
+            (0..256).map(|_| Cpx::new(rng.next_gaussian(), rng.next_gaussian())).collect();
         let time_e: f64 = data.iter().map(|c| c.re * c.re + c.im * c.im).sum();
         let mut f = data.clone();
         fft_inplace(&mut f, false);

@@ -50,7 +50,13 @@ macro_rules! impl_attr_simd {
     ($t:ty, $vec:ty, $lanes:expr) => {
         impl AttractiveSimd for $t {
             #[inline]
-            fn attr_row_simd(y: &[Self], cols: &[u32], vals: &[Self], yix: Self, yiy: Self) -> (Self, Self) {
+            fn attr_row_simd(
+                y: &[Self],
+                cols: &[u32],
+                vals: &[Self],
+                yix: Self,
+                yiy: Self,
+            ) -> (Self, Self) {
                 let n = cols.len();
                 let mut accx = <$vec>::splat(0.0);
                 let mut accy = <$vec>::splat(0.0);
@@ -125,7 +131,15 @@ fn scalar_row<T: Real>(y: &[T], cols: &[u32], vals: &[T], yix: T, yiy: T) -> (T,
 }
 
 #[inline(always)]
-fn prefetch_row<T: Real>(y: &[T], all_cols: &[u32], row_start: usize, row_end: usize, yix: T, yiy: T, vals: &[T]) -> (T, T) {
+fn prefetch_row<T: Real>(
+    y: &[T],
+    all_cols: &[u32],
+    row_start: usize,
+    row_end: usize,
+    yix: T,
+    yiy: T,
+    vals: &[T],
+) -> (T, T) {
     let mut fx = T::ZERO;
     let mut fy = T::ZERO;
     let nnz = all_cols.len();

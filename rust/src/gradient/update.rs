@@ -189,7 +189,15 @@ impl<T: Real> Optimizer<T> {
 /// shared by [`Optimizer::step`] and [`Optimizer::fused_combine_step`] so the
 /// two paths stay arithmetically identical.
 #[inline(always)]
-fn descent_update<T: Real>(grad_i: T, v: &mut T, g: &mut T, yy: &mut T, momentum: T, eta: T, min_gain: T) {
+fn descent_update<T: Real>(
+    grad_i: T,
+    v: &mut T,
+    g: &mut T,
+    yy: &mut T,
+    momentum: T,
+    eta: T,
+    min_gain: T,
+) {
     // sign disagreement → growing step; agreement → shrink
     let same_sign = (grad_i > T::ZERO) == (*v > T::ZERO);
     *g = if same_sign {

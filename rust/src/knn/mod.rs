@@ -46,7 +46,14 @@ pub trait KnnEngine<T: Real> {
     fn name(&self) -> &'static str;
     /// Find the `k` nearest neighbors of every point in `data` (n×d), self
     /// excluded. `k < n` required.
-    fn search(&self, pool: &ThreadPool, data: &[T], n: usize, d: usize, k: usize) -> NeighborLists<T>;
+    fn search(
+        &self,
+        pool: &ThreadPool,
+        data: &[T],
+        n: usize,
+        d: usize,
+        k: usize,
+    ) -> NeighborLists<T>;
 }
 
 /// Cache-blocked brute-force KNN.
@@ -72,7 +79,14 @@ impl<T: Real> KnnEngine<T> for BruteForceKnn {
         "brute-force-native"
     }
 
-    fn search(&self, pool: &ThreadPool, data: &[T], n: usize, d: usize, k: usize) -> NeighborLists<T> {
+    fn search(
+        &self,
+        pool: &ThreadPool,
+        data: &[T],
+        n: usize,
+        d: usize,
+        k: usize,
+    ) -> NeighborLists<T> {
         assert!(k < n, "k ({k}) must be < n ({n})");
         assert_eq!(data.len(), n * d);
         let bq = self.block_q.clamp(1, n);
@@ -154,7 +168,8 @@ impl<T: Real> KnnEngine<T> for BruteForceKnn {
                                 if c == q {
                                     continue; // exclude self
                                 }
-                                let dist = (nq + norms[c] - T::TWO * dots[qi * bc + ci]).max_r(T::ZERO);
+                                let dist = (nq + norms[c] - T::TWO * dots[qi * bc + ci])
+                                    .max_r(T::ZERO);
                                 heap.push(dist, c as u32);
                             }
                         }

@@ -167,7 +167,14 @@ impl<T: Real> KnnEngine<T> for VpTreeKnn {
         "vp-tree"
     }
 
-    fn search(&self, pool: &ThreadPool, data: &[T], n: usize, d: usize, k: usize) -> NeighborLists<T> {
+    fn search(
+        &self,
+        pool: &ThreadPool,
+        data: &[T],
+        n: usize,
+        d: usize,
+        k: usize,
+    ) -> NeighborLists<T> {
         assert!(k < n, "k must be < n");
         let tree = VpTree::build(data, n, d, self.seed);
         let mut indices = vec![0u32; n * k];
@@ -250,8 +257,10 @@ mod tests {
     #[test]
     fn deterministic_across_thread_counts() {
         let data = random_data(300, 5, 4);
-        let a: NeighborLists<f64> = VpTreeKnn::default().search(&ThreadPool::new(1), &data, 300, 5, 8);
-        let b: NeighborLists<f64> = VpTreeKnn::default().search(&ThreadPool::new(8), &data, 300, 5, 8);
+        let a: NeighborLists<f64> =
+            VpTreeKnn::default().search(&ThreadPool::new(1), &data, 300, 5, 8);
+        let b: NeighborLists<f64> =
+            VpTreeKnn::default().search(&ThreadPool::new(8), &data, 300, 5, 8);
         assert_eq!(a.indices, b.indices);
     }
 

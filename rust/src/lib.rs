@@ -62,6 +62,46 @@
 //! session_b.run(500);
 //! ```
 //!
+//! ### Persistence: save/load the fit, checkpoint/resume a session
+//!
+//! Both artifacts survive the process. [`tsne::Affinities::save`] /
+//! [`tsne::Affinities::load`] serialize the fitted `P` (a versioned,
+//! checksummed, dependency-free binary format) so the expensive KNN→BSP
+//! phase is paid once per dataset, ever; [`tsne::TsneSession::checkpoint`] /
+//! [`tsne::TsneSession::restore`] serialize the optimizer state in
+//! un-permuted original order, and a resumed run is **bit-identical** to an
+//! uninterrupted one at a fixed thread count:
+//!
+//! ```no_run
+//! use acc_tsne::data::synthetic::gaussian_mixture;
+//! use acc_tsne::parallel::ThreadPool;
+//! use acc_tsne::tsne::{Affinities, StagePlan, TsneConfig, TsneSession};
+//!
+//! let ds = gaussian_mixture::<f64>(2_000, 16, 10, 4.0, 42);
+//! let plan = StagePlan::acc_tsne();
+//! let cfg = TsneConfig::default();
+//! let pool = ThreadPool::with_all_cores();
+//!
+//! // Fit once, persist, and reuse from any process.
+//! let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, cfg.perplexity, &plan);
+//! aff.save("digits.affinities").expect("write artifact");
+//! let aff = Affinities::<f64>::load("digits.affinities").expect("read artifact");
+//!
+//! // Run half the budget, checkpoint, and stop (crash, deploy, restart...).
+//! let mut session = TsneSession::new(&aff, plan, cfg).expect("preset plans validate");
+//! session.run(500);
+//! session.checkpoint("run.ckpt").expect("write checkpoint");
+//! drop(session);
+//!
+//! // Later / elsewhere: restore and finish — bit-identical to a run that
+//! // never stopped (hostile files come back as typed PersistErrors).
+//! let mut session = TsneSession::restore(&aff, plan, cfg, "run.ckpt").expect("valid checkpoint");
+//! assert_eq!(session.iterations(), 500);
+//! session.run(500);
+//! let result = session.finish();
+//! println!("KL = {:.3}", result.kl_divergence);
+//! ```
+//!
 //! The classic one-shot call is still there, as a thin wrapper that is
 //! bit-identical to fitting affinities and stepping a session manually:
 //!

@@ -12,12 +12,19 @@
 //! acc-tsne info                                      # system + dataset registry
 //! ```
 //!
-//! `run` drives the session API: it fits `Affinities` once, builds a
-//! validated `StagePlan` from `--impl`/`--repulsive`/`--layout`/
-//! `--adopt-threshold` (impossible combinations are typed plan errors), then
-//! either runs the full `--iters` budget or, when `--min-grad-norm` /
-//! `--n-iter-without-progress` are given, stops early on convergence.
-//! `--snapshot-every N` streams un-permuted KL/grad-norm snapshots.
+//! `run` drives the session API: it fits `Affinities` once (or loads a
+//! saved fit via `--affinities`), builds a validated `StagePlan` from
+//! `--impl`/`--repulsive`/`--layout`/`--adopt-threshold` (impossible
+//! combinations are typed plan errors), then either runs the full `--iters`
+//! budget or, when `--min-grad-norm` / `--n-iter-without-progress` are
+//! given, stops early on convergence. `--snapshot-every N` streams
+//! un-permuted KL/grad-norm snapshots.
+//!
+//! Persistence: `--save-affinities FILE` writes the fitted artifact for
+//! cross-process reuse; `--checkpoint FILE` writes a session checkpoint at
+//! the end of the run (every N iterations with `--checkpoint-every N`); and
+//! `--resume FILE` continues a checkpointed session — bit-identical to an
+//! uninterrupted run at a fixed thread count.
 
 use acc_tsne::cli::Args;
 use acc_tsne::data::datasets::PaperDataset;
@@ -26,7 +33,7 @@ use acc_tsne::parallel::pool::available_cores;
 use acc_tsne::parallel::ThreadPool;
 use acc_tsne::tsne::{
     Affinities, Convergence, Implementation, Layout, ObserverControl, RepulsiveVariant, Scalar,
-    StagePlan, StopReason, TsneConfig, TsneResult, TsneSession,
+    SessionCheckpoint, StagePlan, StopReason, TsneConfig, TsneResult, TsneSession,
 };
 
 fn main() {
@@ -43,7 +50,8 @@ fn main() {
 const COMMON_FLAGS: &[&str] = &[
     "dataset", "impl", "scale", "iters", "threads", "seed", "out", "plot", "f32", "sweep",
     "perplexity", "theta", "repulsive", "layout", "adopt-threshold", "min-grad-norm",
-    "n-iter-without-progress", "snapshot-every",
+    "n-iter-without-progress", "snapshot-every", "save-affinities", "affinities", "checkpoint",
+    "checkpoint-every", "resume",
 ];
 
 fn exp_config(args: &Args) -> Result<ExpConfig, String> {
@@ -104,8 +112,25 @@ fn real_main(argv: &[String]) -> Result<(), String> {
     }
 }
 
-/// Fit affinities, run one session (full budget or convergence-controlled),
-/// and fold the fit times into the result — the CLI's generic f32/f64 body.
+/// Persistence knobs of the `run` subcommand (all optional).
+#[derive(Clone, Copy, Debug, Default)]
+struct PersistOpts<'a> {
+    /// Write the fitted affinities here after the fit.
+    save_affinities: Option<&'a str>,
+    /// Load affinities from here instead of fitting (skips KNN/BSP).
+    load_affinities: Option<&'a str>,
+    /// Write session checkpoints here.
+    checkpoint: Option<&'a str>,
+    /// Checkpoint every N iterations (0 ⇒ once, at the end of the run;
+    /// only meaningful with `checkpoint`).
+    checkpoint_every: usize,
+    /// Resume a checkpointed session from here.
+    resume: Option<&'a str>,
+}
+
+/// Fit (or load) affinities, run one session (fresh or resumed; full budget
+/// or convergence-controlled; optionally checkpointing as it goes), and fold
+/// the fit times into the result — the CLI's generic f32/f64 body.
 fn run_session<T: Scalar>(
     pool: &ThreadPool,
     points: &[T],
@@ -115,9 +140,53 @@ fn run_session<T: Scalar>(
     cfg: &TsneConfig,
     conv: Option<Convergence>,
     snapshot_every: usize,
+    persist: PersistOpts<'_>,
 ) -> Result<TsneResult<T>, String> {
-    let aff = Affinities::fit(pool, points, n, d, cfg.perplexity, &plan);
-    let mut sess = TsneSession::new(&aff, plan, *cfg).map_err(|e| e.to_string())?;
+    // The resume checkpoint is read FIRST: a corrupt or mismatched file must
+    // fail before the (possibly minutes-long) affinity fit, not after it.
+    let resume_ck = match persist.resume {
+        Some(path) => Some(
+            SessionCheckpoint::<T>::load(path)
+                .map_err(|e| format!("resuming from {path}: {e}"))?,
+        ),
+        None => None,
+    };
+    let aff = match persist.load_affinities {
+        Some(path) => {
+            let aff =
+                Affinities::load(path).map_err(|e| format!("loading affinities {path}: {e}"))?;
+            if aff.n() != n {
+                return Err(format!(
+                    "affinities {path} hold {} points but the dataset has {n}",
+                    aff.n()
+                ));
+            }
+            if (aff.perplexity() - cfg.perplexity).abs() > 1e-12 {
+                eprintln!(
+                    "warning: {path} was fitted at perplexity {}; it overrides the requested {}",
+                    aff.perplexity(),
+                    cfg.perplexity
+                );
+            }
+            println!("[affinities] loaded {path} (n={}, nnz={})", aff.n(), aff.p().nnz());
+            aff
+        }
+        None => Affinities::fit(pool, points, n, d, cfg.perplexity, &plan),
+    };
+    if let Some(path) = persist.save_affinities {
+        aff.save(path).map_err(|e| format!("saving affinities {path}: {e}"))?;
+        println!("[affinities] saved {path} (nnz={})", aff.p().nnz());
+    }
+    let mut sess = match resume_ck {
+        Some(ck) => {
+            let path = persist.resume.unwrap();
+            let sess = TsneSession::from_checkpoint(&aff, plan, *cfg, ck)
+                .map_err(|e| format!("resuming from {path}: {e}"))?;
+            println!("[resume] {path} @ iteration {}", sess.iterations());
+            sess
+        }
+        None => TsneSession::new(&aff, plan, *cfg).map_err(|e| e.to_string())?,
+    };
     if snapshot_every > 0 {
         sess.set_observer(snapshot_every, |snap| {
             println!(
@@ -127,9 +196,30 @@ fn run_session<T: Scalar>(
             ObserverControl::Continue
         });
     }
-    let outcome = match conv {
-        Some(c) => sess.run_until(c),
-        None => sess.run(cfg.n_iter),
+    let budget = conv.map(|c| c.max_iter).unwrap_or(cfg.n_iter);
+    let outcome = loop {
+        // One chunk per checkpoint interval (or the whole budget at once).
+        // Note for combined --checkpoint-every + --n-iter-without-progress:
+        // run_until's progress window is per call by contract, so it restarts
+        // at each checkpoint boundary.
+        let target = match (persist.checkpoint, persist.checkpoint_every) {
+            (Some(_), every) if every > 0 => (sess.iterations() + every).min(budget),
+            _ => budget,
+        };
+        let out = match conv {
+            Some(c) => sess.run_until(Convergence { max_iter: target, ..c }),
+            None => {
+                let remaining = target.saturating_sub(sess.iterations());
+                sess.run(remaining)
+            }
+        };
+        if let Some(path) = persist.checkpoint {
+            sess.checkpoint(path).map_err(|e| format!("checkpointing to {path}: {e}"))?;
+            println!("[checkpoint] {path} @ iteration {}", sess.iterations());
+        }
+        if out.reason != StopReason::MaxIter || sess.iterations() >= budget {
+            break out;
+        }
     };
     if outcome.reason != StopReason::MaxIter {
         println!("converged: stopped after {} iterations ({:?})", outcome.n_iter, outcome.reason);
@@ -209,6 +299,49 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     };
     let snapshot_every = args.get_parse("snapshot-every", 0usize)?;
 
+    // Persistence flags — validated before any data is built so mistakes
+    // fail in milliseconds, not after the fit.
+    let persist = PersistOpts {
+        save_affinities: args.get("save-affinities"),
+        load_affinities: args.get("affinities"),
+        checkpoint: args.get("checkpoint"),
+        checkpoint_every: args.get_parse("checkpoint-every", 0usize)?,
+        resume: args.get("resume"),
+    };
+    if persist.checkpoint_every > 0 && persist.checkpoint.is_none() {
+        return Err("--checkpoint-every requires --checkpoint FILE (where to write)".into());
+    }
+    // run_until's no-progress window is per call by contract, and the
+    // checkpoint loop calls it once per chunk — a window at least as long as
+    // the chunk restarts before it can ever fire.
+    if persist.checkpoint_every > 0 && n_no_progress >= persist.checkpoint_every {
+        eprintln!(
+            "warning: --n-iter-without-progress {n_no_progress} cannot fire inside a \
+             --checkpoint-every {} chunk (the progress window restarts at each checkpoint); \
+             raise --checkpoint-every above it for the rule to matter",
+            persist.checkpoint_every
+        );
+    }
+    for (flag, path) in [("affinities", persist.load_affinities), ("resume", persist.resume)] {
+        if let Some(path) = path {
+            if !std::path::Path::new(path).is_file() {
+                return Err(format!("--{flag}: no such file '{path}'"));
+            }
+        }
+    }
+    // Output paths: a typo'd directory must fail now, not after the fit.
+    for (flag, path) in [
+        ("save-affinities", persist.save_affinities),
+        ("checkpoint", persist.checkpoint),
+    ] {
+        if let Some(path) = path {
+            let parent = std::path::Path::new(path).parent().unwrap_or(std::path::Path::new(""));
+            if !parent.as_os_str().is_empty() && !parent.is_dir() {
+                return Err(format!("--{flag}: directory of '{path}' does not exist"));
+            }
+        }
+    }
+
     let pool = ThreadPool::new(exp.resolved_threads());
     println!(
         "dataset={dataset} scale={} impl={imp} threads={} iters={}",
@@ -223,7 +356,9 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     // pools (same thread count) for the gradient phase.
     let (kl, n_iter, times, embedding, labels) = if args.has("f32") {
         let ds32 = ds.cast::<f32>();
-        let r = run_session(&pool, &ds32.points, ds32.n, ds32.d, plan, &cfg, conv, snapshot_every)?;
+        let r = run_session(
+            &pool, &ds32.points, ds32.n, ds32.d, plan, &cfg, conv, snapshot_every, persist,
+        )?;
         (
             r.kl_divergence,
             r.n_iter,
@@ -232,7 +367,9 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             ds32.labels,
         )
     } else {
-        let r = run_session(&pool, &ds.points, ds.n, ds.d, plan, &cfg, conv, snapshot_every)?;
+        let r = run_session(
+            &pool, &ds.points, ds.n, ds.d, plan, &cfg, conv, snapshot_every, persist,
+        )?;
         (r.kl_divergence, r.n_iter, r.step_times, r.embedding, ds.labels)
     };
 
@@ -279,7 +416,10 @@ acc-tsne <subcommand> [flags]
   run        one t-SNE run  (--dataset --impl --scale --iters --threads --out --plot --f32
              --repulsive scalar|simd-tiled  --layout original|zorder  --adopt-threshold PCT
              --min-grad-norm F  --n-iter-without-progress N   # convergence-based early stop
-             --snapshot-every N                               # stream KL/grad-norm snapshots)
+             --snapshot-every N                               # stream KL/grad-norm snapshots
+             --save-affinities FILE  --affinities FILE        # persist / reuse the fitted P
+             --checkpoint FILE  --checkpoint-every N          # periodic session checkpoints
+             --resume FILE                                    # continue a checkpointed run)
   compare    Fig 4 + Table 3 across datasets and implementations
   scaling    Fig 5 end-to-end multicore scaling
   steps      Tables 5/6 per-step comparison (--sweep adds Fig 6)
@@ -345,5 +485,51 @@ mod tests {
     fn unknown_flags_still_fail_loudly() {
         let e = real_main(&argv("run --min-grad-nrm 0.1")).unwrap_err();
         assert!(e.contains("unknown flag"), "{e}");
+    }
+
+    #[test]
+    fn checkpoint_every_without_a_checkpoint_path_is_an_error() {
+        let e = real_main(&argv("run --checkpoint-every 50")).unwrap_err();
+        assert!(e.contains("--checkpoint"), "{e}");
+        let e = real_main(&argv("run --checkpoint-every banana")).unwrap_err();
+        assert!(e.contains("checkpoint-every"), "{e}");
+    }
+
+    #[test]
+    fn output_paths_require_existing_directories() {
+        let e = real_main(&argv("run --checkpoint /no/such/dir/run.ckpt")).unwrap_err();
+        assert!(e.contains("does not exist"), "{e}");
+        assert!(e.contains("checkpoint"), "{e}");
+        let e = real_main(&argv("run --save-affinities /no/such/dir/p.aff")).unwrap_err();
+        assert!(e.contains("save-affinities"), "{e}");
+    }
+
+    #[test]
+    fn resume_and_affinities_require_existing_files() {
+        let e = real_main(&argv("run --resume /no/such/checkpoint.bin")).unwrap_err();
+        assert!(e.contains("no such file"), "{e}");
+        assert!(e.contains("resume"), "{e}");
+        let e = real_main(&argv("run --affinities /no/such/affinities.bin")).unwrap_err();
+        assert!(e.contains("no such file"), "{e}");
+        assert!(e.contains("affinities"), "{e}");
+    }
+
+    #[test]
+    fn resuming_from_a_non_checkpoint_file_is_a_typed_persist_error() {
+        // An existing file with garbage content must fail with the persist
+        // layer's typed message (bad magic), not a panic — and it fails
+        // BEFORE the affinity fit (the checkpoint is read first), so this
+        // test only pays for dataset generation.
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("acc_tsne_cli_bad_ckpt_{}.bin", std::process::id()));
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        let e = real_main(&argv(&format!(
+            "run --dataset digits --iters 1 --threads 2 --resume {}",
+            path.display()
+        )))
+        .unwrap_err();
+        std::fs::remove_file(&path).ok();
+        assert!(e.contains("resuming from"), "{e}");
+        assert!(e.contains("magic"), "{e}");
     }
 }

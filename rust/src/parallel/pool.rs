@@ -161,11 +161,32 @@ fn worker_loop(inner: Arc<Inner>, tid: usize) {
     }
 }
 
-/// Number of available hardware threads.
+/// Number of threads to use when the caller does not pin one (config
+/// `n_threads = 0`, [`ThreadPool::with_all_cores`]).
+///
+/// Overridable via the `ACC_TSNE_NUM_THREADS` environment variable (with
+/// `RAYON_NUM_THREADS` honored as the conventional alias) — CI's
+/// thread-count matrix pins the parity/determinism test legs with it.
+/// Unset, empty, unparseable, or zero values fall back to the hardware
+/// thread count.
 pub fn available_cores() -> usize {
+    for var in ["ACC_TSNE_NUM_THREADS", "RAYON_NUM_THREADS"] {
+        if let Some(n) = std::env::var(var).ok().as_deref().and_then(parse_thread_override) {
+            return n;
+        }
+    }
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
+}
+
+/// Parse a thread-count override: positive integers only; everything else
+/// (empty, garbage, `0`) means "no override".
+fn parse_thread_override(v: &str) -> Option<usize> {
+    match v.trim().parse::<usize>() {
+        Ok(n) if n > 0 => Some(n),
+        _ => None,
+    }
 }
 
 #[cfg(test)]
@@ -223,6 +244,19 @@ mod tests {
             hit.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(hit.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn thread_override_accepts_positive_integers_only() {
+        assert_eq!(parse_thread_override("4"), Some(4));
+        assert_eq!(parse_thread_override(" 8 "), Some(8));
+        assert_eq!(parse_thread_override("1"), Some(1));
+        assert_eq!(parse_thread_override("0"), None, "0 means hardware default");
+        assert_eq!(parse_thread_override(""), None);
+        assert_eq!(parse_thread_override("four"), None);
+        assert_eq!(parse_thread_override("-2"), None);
+        // whatever the environment says, the resolved count is usable
+        assert!(available_cores() >= 1);
     }
 
     #[test]

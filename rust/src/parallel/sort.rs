@@ -28,7 +28,8 @@ pub fn radix_sort_pairs(pool: &ThreadPool, keys: &mut Vec<u64>, payload: &mut Ve
     if n < 32_768 || pool.n_threads() == 1 {
         // Sequential fallback: comparison sort on zipped pairs is simpler and
         // fast enough below the parallel break-even point.
-        let mut zipped: Vec<(u64, u32)> = keys.iter().copied().zip(payload.iter().copied()).collect();
+        let mut zipped: Vec<(u64, u32)> =
+            keys.iter().copied().zip(payload.iter().copied()).collect();
         zipped.sort_unstable_by_key(|&(k, _)| k);
         for (i, (k, p)) in zipped.into_iter().enumerate() {
             keys[i] = k;

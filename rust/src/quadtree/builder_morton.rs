@@ -337,7 +337,12 @@ fn child_geometry(center: [f64; 2], width: f64, q: usize) -> ([f64; 2], f64) {
 
 /// Split a top-region node; children are appended to `nodes` (BFS order) and
 /// pushed on the next frontier.
-fn split_node<T: Real>(nodes: &mut Vec<Node<T>>, codes: &[u64], f: &Frontier, next: &mut Vec<Frontier>) {
+fn split_node<T: Real>(
+    nodes: &mut Vec<Node<T>>,
+    codes: &[u64],
+    f: &Frontier,
+    next: &mut Vec<Frontier>,
+) {
     let b = quadrant_bounds(codes, f.start, f.end, f.level);
     for q in 0..4 {
         let (s, e) = (b[q], b[q + 1]);

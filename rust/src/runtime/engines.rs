@@ -47,7 +47,14 @@ impl<T: Real> KnnEngine<T> for XlaKnn {
         "xla-sqdist"
     }
 
-    fn search(&self, _pool: &ThreadPool, data: &[T], n: usize, d: usize, k: usize) -> NeighborLists<T> {
+    fn search(
+        &self,
+        _pool: &ThreadPool,
+        data: &[T],
+        n: usize,
+        d: usize,
+        k: usize,
+    ) -> NeighborLists<T> {
         assert!(k < n, "k must be < n");
         assert!(d <= SQDIST_D, "artifact frozen at d ≤ {SQDIST_D}, got {d}");
         // Pad feature dim with zeros (distance-invariant).

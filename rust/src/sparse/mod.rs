@@ -39,6 +39,36 @@ impl<T: Real> CsrMatrix<T> {
         acc
     }
 
+    /// Weak structural validation: row_ptr shape/bounds/monotonicity, col/val
+    /// length agreement, and column range — the invariants the gradient
+    /// kernels rely on, WITHOUT the ascending-columns canonical-form check of
+    /// [`Self::validate`]. This is the gate for externally-sourced matrices
+    /// ([`Affinities::from_csr`](crate::tsne::Affinities::from_csr) and the
+    /// persisted-affinities loader): entry order within a row is a layout
+    /// choice, not a correctness requirement.
+    pub fn validate_structural(&self) -> Result<(), String> {
+        if self.row_ptr.len() != self.n + 1 {
+            return Err(format!(
+                "row_ptr must have n+1 = {} entries, has {}",
+                self.n + 1,
+                self.row_ptr.len()
+            ));
+        }
+        if self.row_ptr[0] != 0 || *self.row_ptr.last().unwrap() != self.col.len() {
+            return Err("row_ptr must span 0..=nnz".into());
+        }
+        if self.col.len() != self.val.len() {
+            return Err("col/val length mismatch".into());
+        }
+        if self.row_ptr.windows(2).any(|w| w[0] > w[1]) {
+            return Err("row_ptr not monotone".into());
+        }
+        if self.col.iter().any(|&c| c as usize >= self.n) {
+            return Err("column index out of range".into());
+        }
+        Ok(())
+    }
+
     /// Structural validation (used by tests and debug assertions).
     pub fn validate(&self) -> Result<(), String> {
         if self.row_ptr.len() != self.n + 1 {
@@ -275,7 +305,13 @@ fn merge_count<T: Copy>(a: &[(u32, T)], b: &[(u32, T)]) -> usize {
 }
 
 /// Merge two sorted (col, val) lists into `(p_a + p_b) * inv_2n` union rows.
-fn merge_fill<T: Real>(a: &[(u32, T)], b: &[(u32, T)], inv_2n: T, ocol: &mut [u32], oval: &mut [T]) {
+fn merge_fill<T: Real>(
+    a: &[(u32, T)],
+    b: &[(u32, T)],
+    inv_2n: T,
+    ocol: &mut [u32],
+    oval: &mut [T],
+) {
     let (mut ia, mut ib, mut o) = (0, 0, 0);
     while ia < a.len() && ib < b.len() {
         let (ca, va) = a[ia];
@@ -416,7 +452,8 @@ mod tests {
         let n = m.n;
         let mut rng = Rng::new(99);
         let (perm, inv) = random_permutation(n, &mut rng);
-        let mut a = CsrMatrix::<f64> { n: 0, row_ptr: Vec::new(), col: Vec::new(), val: Vec::new() };
+        let mut a =
+            CsrMatrix::<f64> { n: 0, row_ptr: Vec::new(), col: Vec::new(), val: Vec::new() };
         permute_symmetric_into(&pool, &m, &perm, &inv, &mut a);
         // dense check: a[t][u] == m[perm[t]][perm[u]]
         let mut dense_a = vec![0.0f64; n * n];
@@ -444,8 +481,10 @@ mod tests {
         let m = symmetrize(&pool, &knn, &p);
         let mut rng = Rng::new(7);
         let (perm, inv) = random_permutation(m.n, &mut rng);
-        let mut fwd = CsrMatrix::<f64> { n: 0, row_ptr: Vec::new(), col: Vec::new(), val: Vec::new() };
-        let mut back = CsrMatrix::<f64> { n: 0, row_ptr: Vec::new(), col: Vec::new(), val: Vec::new() };
+        let mut fwd =
+            CsrMatrix::<f64> { n: 0, row_ptr: Vec::new(), col: Vec::new(), val: Vec::new() };
+        let mut back =
+            CsrMatrix::<f64> { n: 0, row_ptr: Vec::new(), col: Vec::new(), val: Vec::new() };
         permute_symmetric_into(&pool, &m, &perm, &inv, &mut fwd);
         permute_symmetric_into(&pool, &fwd, &inv, &perm, &mut back);
         assert_eq!(back.n, m.n);
@@ -466,5 +505,36 @@ mod tests {
         let mut m = symmetrize(&pool, &knn, &p);
         m.col[0] = m.n as u32 + 5; // out of range
         assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn structural_validation_allows_any_entry_order_but_catches_shape_corruption() {
+        let (knn, p) = make_knn_and_p(40, 3, 5, 8);
+        let pool = ThreadPool::new(2);
+        let m = symmetrize(&pool, &knn, &p);
+        assert!(m.validate_structural().is_ok());
+        // a descending-column (traversal-layout) row fails canonical validate
+        // but passes the structural check
+        let z = CsrMatrix::<f64> {
+            n: 3,
+            row_ptr: vec![0, 2, 2, 3],
+            col: vec![2, 0, 1],
+            val: vec![0.5, 0.25, 0.25],
+        };
+        assert!(z.validate().is_err(), "descending rows are not canonical");
+        assert!(z.validate_structural().is_ok());
+        // shape corruption is still caught
+        let mut bad = m.clone();
+        bad.col[0] = bad.n as u32;
+        assert!(bad.validate_structural().is_err());
+        let mut bad = m.clone();
+        bad.row_ptr[1] = bad.row_ptr[2] + 1;
+        assert!(bad.validate_structural().is_err());
+        let mut bad = m.clone();
+        bad.val.pop();
+        assert!(bad.validate_structural().is_err());
+        let mut bad = m;
+        bad.row_ptr.pop();
+        assert!(bad.validate_structural().is_err());
     }
 }

@@ -16,6 +16,14 @@
 //!   per-iteration gradient norm) plus an observer hook streaming
 //!   un-permuted embedding snapshots with the current KL.
 //!
+//! Both artifacts persist (`persist`): [`Affinities::save`]/
+//! [`Affinities::load`] serialize the fitted CSR `P` for cross-process
+//! reuse, and [`TsneSession::checkpoint`]/[`TsneSession::restore`] make a
+//! session survive a restart — a resumed run is bit-identical to an
+//! uninterrupted one at a fixed thread count. One `Affinities` is `Sync`
+//! and is borrowed (`&Affinities`) by every session built over it, so N
+//! concurrent sessions share a single fit across threads.
+//!
 //! [`run_tsne`] remains the classic one-shot call — a thin, bit-identical
 //! wrapper over fit + session — executing the full step sequence with every
 //! step instrumented into a [`StepTimes`] (the paper's Tables 5/6 and
@@ -33,11 +41,13 @@
 //! | `AccTsne`      | blocked, par   | par | morton, par   | par       | SIMD+prefetch, par| BH SIMD-tiled, par | Z-order |
 //! | `FitSne`       | blocked, par   | seq | —             | —         | scalar, par      | FFT interp| original |
 
+pub mod persist;
 pub mod pipeline;
 pub mod plan;
 pub mod session;
 pub mod workspace;
 
+pub use persist::{PersistError, SessionCheckpoint};
 pub use pipeline::{run_tsne, run_tsne_custom, run_tsne_with_p, AttractiveEngine, NativeAttractive};
 pub use plan::{PlanError, StagePlan};
 pub use session::{

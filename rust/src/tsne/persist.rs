@@ -1,0 +1,660 @@
+//! Versioned, checksummed, dependency-free persistence for the two
+//! long-lived artifacts of the pipeline (no serde on the offline mirror —
+//! the formats are hand-rolled over the [`crate::data::io`] primitives):
+//!
+//! - the fitted [`Affinities`](super::Affinities) — the symmetrized CSR `P`
+//!   plus its fit metadata. Barnes-Hut-SNE fixes the sparsity pattern of `P`
+//!   at fit time, which is exactly what makes the artifact serializable and
+//!   reusable across processes, seeds, layouts, and kernel variants
+//!   ([`Affinities::save`](super::Affinities::save) /
+//!   [`Affinities::load`](super::Affinities::load));
+//! - a [`SessionCheckpoint`] — the optimizer state of a
+//!   [`TsneSession`](super::TsneSession) (embedding, velocity, gains,
+//!   iteration counter, convergence scalars) in **un-permuted original
+//!   order**, so a checkpoint taken under the Z-order layout restores under
+//!   any layout ([`TsneSession::checkpoint`](super::TsneSession::checkpoint)
+//!   / [`TsneSession::restore`](super::TsneSession::restore)).
+//!
+//! ## File layout
+//!
+//! Both formats share a 28-byte header followed by a format-specific payload:
+//!
+//! ```text
+//! magic[8] | version u32 | endian tag u32 | scalar width u32 | checksum u64
+//! ```
+//!
+//! Every multi-byte field is little-endian on disk regardless of host
+//! byte order; the endian tag exists so a corrupt or foreign header is a
+//! typed error instead of garbage lengths. The checksum is a 64-bit FNV-1a
+//! over the payload bytes exactly as stored (covering `nnz`, `row_ptr`,
+//! `col`, `val`, and every metadata field), patched into the header after
+//! the payload is streamed out. Writes are atomic: the artifact is staged
+//! as a `.tmp` sibling and renamed into place, so a crash mid-save never
+//! destroys the previous good file.
+//!
+//! ## Failure model
+//!
+//! Loading never panics on hostile input: wrong magic, a future format
+//! version, a foreign endian tag, the wrong scalar width (an `f32` file
+//! loaded as `f64`), truncation, trailing bytes, payload lengths that
+//! disagree with the file size, and checksum mismatches each map to their
+//! own [`PersistError`] variant. Payload lengths are validated against the
+//! actual file size *before* any allocation, so a corrupt length field
+//! cannot trigger an absurd allocation.
+
+use super::plan::PlanError;
+use crate::common::float::Real;
+use crate::data::io::{
+    read_f64_le, read_u32_le, read_u64_le, write_f64_le, write_u32_le, write_u64_le, Fnv1a64,
+};
+use crate::sparse::CsrMatrix;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Current on-disk format version (shared by both formats).
+pub const FORMAT_VERSION: u32 = 1;
+
+pub(crate) const AFFINITIES_MAGIC: &[u8; 8] = b"ACTSNEAF";
+pub(crate) const CHECKPOINT_MAGIC: &[u8; 8] = b"ACTSNECK";
+const ENDIAN_TAG: u32 = 0x0A0B_0C0D;
+const HEADER_LEN: u64 = 28;
+const CHECKSUM_OFFSET: u64 = 20;
+
+/// Why a persisted artifact could not be written or read back. Every hostile
+/// input maps to a typed variant — loading never panics.
+#[derive(Debug)]
+pub enum PersistError {
+    /// Underlying filesystem error (open/create/read/write).
+    Io(std::io::Error),
+    /// The file ended before the declared payload did.
+    Truncated,
+    /// The first 8 bytes are not a known acc-tsne persist magic.
+    BadMagic { found: [u8; 8] },
+    /// The file was written by a newer format revision than this build reads.
+    UnsupportedVersion { found: u32, supported: u32 },
+    /// The header's endian tag is not the little-endian marker.
+    EndiannessMismatch { found: u32 },
+    /// The file stores a different scalar width (e.g. an `f32` artifact
+    /// loaded as `Affinities<f64>`).
+    ScalarWidthMismatch { found: u32, expected: u32 },
+    /// The payload bytes do not hash to the stored checksum.
+    ChecksumMismatch { stored: u64, computed: u64 },
+    /// The payload is internally inconsistent (lengths that disagree with
+    /// the file size, trailing bytes, a CSR that fails structural
+    /// validation, a non-bijective layout permutation, …).
+    Corrupt(String),
+    /// The artifact is valid but disagrees with the live objects it is being
+    /// attached to (e.g. a checkpoint whose `n` differs from the affinities).
+    Mismatch(String),
+    /// The stage plan supplied at restore time failed validation.
+    Plan(PlanError),
+}
+
+impl std::fmt::Display for PersistError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PersistError::Io(e) => write!(f, "io error: {e}"),
+            PersistError::Truncated => write!(f, "file is truncated (unexpected end of data)"),
+            PersistError::BadMagic { found } => {
+                write!(f, "bad magic {found:?}: not an acc-tsne persist file")
+            }
+            PersistError::UnsupportedVersion { found, supported } => write!(
+                f,
+                "format version {found} is newer than the supported version {supported}"
+            ),
+            PersistError::EndiannessMismatch { found } => write!(
+                f,
+                "endian tag {found:#010x} is not the little-endian marker {ENDIAN_TAG:#010x}"
+            ),
+            PersistError::ScalarWidthMismatch { found, expected } => write!(
+                f,
+                "scalar width {found} bytes on disk, expected {expected} \
+                 (f32 artifact loaded as f64, or vice versa)"
+            ),
+            PersistError::ChecksumMismatch { stored, computed } => write!(
+                f,
+                "checksum mismatch: stored {stored:#018x}, computed {computed:#018x}"
+            ),
+            PersistError::Corrupt(msg) => write!(f, "corrupt payload: {msg}"),
+            PersistError::Mismatch(msg) => write!(f, "artifact mismatch: {msg}"),
+            PersistError::Plan(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for PersistError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PersistError::Io(e) => Some(e),
+            PersistError::Plan(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for PersistError {
+    fn from(e: std::io::Error) -> Self {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            PersistError::Truncated
+        } else {
+            PersistError::Io(e)
+        }
+    }
+}
+
+impl From<PlanError> for PersistError {
+    fn from(e: PlanError) -> Self {
+        PersistError::Plan(e)
+    }
+}
+
+/// The serializable optimizer state of a [`TsneSession`](super::TsneSession),
+/// captured in **un-permuted original point order** (see
+/// [`TsneSession::to_checkpoint`](super::TsneSession::to_checkpoint)).
+///
+/// `layout_perm` is the adopted Z-order permutation (`slot → original`) at
+/// capture time, if any. It is a *layout hint*, not state: the arrays above
+/// are always original-order, so a checkpoint restores under any layout;
+/// restoring under [`Layout::Zorder`](super::Layout) replays the hint so the
+/// resumed session's in-memory layout — and therefore its FP summation order
+/// — is bit-identical to the uninterrupted run's.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionCheckpoint<T: Real> {
+    /// Iterations completed when the checkpoint was taken.
+    pub iter: usize,
+    /// The BH/FFT normalization term Z of the latest iteration.
+    pub last_z: f64,
+    /// l2 gradient norm of the latest iteration.
+    pub last_grad_norm: f64,
+    /// Consistency fingerprint of the affinities this session descended
+    /// from: `nnz` of `P` and the fit perplexity. Restore refuses a
+    /// same-`n` but different fit (wrong dataset, wrong artifact file,
+    /// re-fit at another perplexity) with a typed
+    /// [`PersistError::Mismatch`] instead of silently continuing the
+    /// optimizer state against the wrong `P`.
+    pub aff_nnz: usize,
+    /// See [`Self::aff_nnz`].
+    pub aff_perplexity: f64,
+    /// Embedding, interleaved x,y, original point order.
+    pub y: Vec<T>,
+    /// Optimizer velocity, interleaved, original point order.
+    pub velocity: Vec<T>,
+    /// Optimizer gains, interleaved, original point order.
+    pub gains: Vec<T>,
+    /// Adopted Z-order layout (`perm[slot] = original`), if any.
+    pub layout_perm: Option<Vec<u32>>,
+}
+
+impl<T: Real> SessionCheckpoint<T> {
+    /// Number of points.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.y.len() / 2
+    }
+
+    /// Write the checkpoint to `path` (format: module docs).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), PersistError> {
+        let n = self.n();
+        if self.y.len() != 2 * n
+            || self.velocity.len() != self.y.len()
+            || self.gains.len() != self.y.len()
+        {
+            return Err(PersistError::Mismatch(format!(
+                "checkpoint arrays disagree: y {}, velocity {}, gains {}",
+                self.y.len(),
+                self.velocity.len(),
+                self.gains.len()
+            )));
+        }
+        if let Some(perm) = &self.layout_perm {
+            if perm.len() != n {
+                return Err(PersistError::Mismatch(format!(
+                    "layout_perm has {} entries for n = {n}",
+                    perm.len()
+                )));
+            }
+        }
+        save_to_path(path.as_ref(), CHECKPOINT_MAGIC, scalar_width::<T>(), |w| {
+            write_u64_le(w, n as u64)?;
+            write_u64_le(w, self.iter as u64)?;
+            write_f64_le(w, self.last_z)?;
+            write_f64_le(w, self.last_grad_norm)?;
+            write_u64_le(w, self.aff_nnz as u64)?;
+            write_f64_le(w, self.aff_perplexity)?;
+            let flags: u64 = if self.layout_perm.is_some() { 1 } else { 0 };
+            write_u64_le(w, flags)?;
+            for arr in [&self.y, &self.velocity, &self.gains] {
+                for &v in arr.iter() {
+                    write_scalar(w, v)?;
+                }
+            }
+            if let Some(perm) = &self.layout_perm {
+                for &s in perm.iter() {
+                    write_u32_le(w, s)?;
+                }
+            }
+            Ok(())
+        })
+    }
+
+    /// Read a checkpoint written by [`Self::save`]. Typed errors for every
+    /// hostile input; see the module docs for the failure model.
+    pub fn load(path: impl AsRef<Path>) -> Result<SessionCheckpoint<T>, PersistError> {
+        let (mut r, stored, file_len) =
+            open_checked(path.as_ref(), CHECKPOINT_MAGIC, scalar_width::<T>())?;
+        let n = read_u64_le(&mut r)? as usize;
+        let iter = read_u64_le(&mut r)? as usize;
+        let last_z = read_f64_le(&mut r)?;
+        let last_grad_norm = read_f64_le(&mut r)?;
+        let aff_nnz = read_u64_le(&mut r)? as usize;
+        let aff_perplexity = read_f64_le(&mut r)?;
+        let flags = read_u64_le(&mut r)?;
+        if flags > 1 {
+            return Err(PersistError::Corrupt(format!("unknown flags {flags:#x}")));
+        }
+        let has_perm = flags & 1 == 1;
+        let w = scalar_width::<T>() as u64;
+        let expected = (|| -> Option<u64> {
+            let pairs = (n as u64).checked_mul(2)?;
+            let state = pairs.checked_mul(w)?.checked_mul(3)?;
+            let perm = if has_perm { (n as u64).checked_mul(4)? } else { 0 };
+            HEADER_LEN
+                .checked_add(56)?
+                .checked_add(state)?
+                .checked_add(perm)
+        })()
+        .ok_or_else(|| PersistError::Corrupt("payload length overflows".into()))?;
+        check_file_len(expected, file_len)?;
+
+        let mut buf = Vec::new();
+        let mut y = Vec::new();
+        let mut velocity = Vec::new();
+        let mut gains = Vec::new();
+        for arr in [&mut y, &mut velocity, &mut gains] {
+            read_bytes(&mut r, 2 * n * w as usize, &mut buf)?;
+            parse_scalars::<T>(&buf, arr);
+        }
+        let layout_perm = if has_perm {
+            read_bytes(&mut r, n * 4, &mut buf)?;
+            let mut perm = Vec::with_capacity(n);
+            for c in buf.chunks_exact(4) {
+                perm.push(u32::from_le_bytes(c.try_into().unwrap()));
+            }
+            Some(perm)
+        } else {
+            None
+        };
+        finish_checked(&r, stored)?;
+        Ok(SessionCheckpoint {
+            iter,
+            last_z,
+            last_grad_norm,
+            aff_nnz,
+            aff_perplexity,
+            y,
+            velocity,
+            gains,
+            layout_perm,
+        })
+    }
+}
+
+/// Write the fitted-affinities artifact: the CSR `P` + fit metadata.
+/// Private plumbing for [`Affinities::save`](super::Affinities::save) (the
+/// struct's fields live in `session.rs`).
+pub(crate) fn write_affinities<T: Real>(
+    path: &Path,
+    p: &CsrMatrix<T>,
+    perplexity: f64,
+    k: usize,
+) -> Result<(), PersistError> {
+    save_to_path(path, AFFINITIES_MAGIC, scalar_width::<T>(), |w| {
+        write_u64_le(w, p.n as u64)?;
+        write_u64_le(w, k as u64)?;
+        write_f64_le(w, perplexity)?;
+        write_u64_le(w, p.nnz() as u64)?;
+        for &rp in &p.row_ptr {
+            write_u64_le(w, rp as u64)?;
+        }
+        for &c in &p.col {
+            write_u32_le(w, c)?;
+        }
+        for &v in &p.val {
+            write_scalar(w, v)?;
+        }
+        Ok(())
+    })
+}
+
+/// Read back an affinities artifact: `(P, perplexity, k)`. Private plumbing
+/// for [`Affinities::load`](super::Affinities::load).
+pub(crate) fn read_affinities<T: Real>(
+    path: &Path,
+) -> Result<(CsrMatrix<T>, f64, usize), PersistError> {
+    let (mut r, stored, file_len) = open_checked(path, AFFINITIES_MAGIC, scalar_width::<T>())?;
+    let n = read_u64_le(&mut r)? as usize;
+    let k = read_u64_le(&mut r)? as usize;
+    let perplexity = read_f64_le(&mut r)?;
+    let nnz = read_u64_le(&mut r)? as usize;
+    let w = scalar_width::<T>() as u64;
+    let expected = (|| -> Option<u64> {
+        let row_ptr = (n as u64).checked_add(1)?.checked_mul(8)?;
+        let col = (nnz as u64).checked_mul(4)?;
+        let val = (nnz as u64).checked_mul(w)?;
+        HEADER_LEN
+            .checked_add(32)?
+            .checked_add(row_ptr)?
+            .checked_add(col)?
+            .checked_add(val)
+    })()
+    .ok_or_else(|| PersistError::Corrupt("payload length overflows".into()))?;
+    check_file_len(expected, file_len)?;
+
+    let mut buf = Vec::new();
+    read_bytes(&mut r, (n + 1) * 8, &mut buf)?;
+    let mut row_ptr = Vec::with_capacity(n + 1);
+    for c in buf.chunks_exact(8) {
+        row_ptr.push(u64::from_le_bytes(c.try_into().unwrap()) as usize);
+    }
+    read_bytes(&mut r, nnz * 4, &mut buf)?;
+    let mut col = Vec::with_capacity(nnz);
+    for c in buf.chunks_exact(4) {
+        col.push(u32::from_le_bytes(c.try_into().unwrap()));
+    }
+    read_bytes(&mut r, nnz * w as usize, &mut buf)?;
+    let mut val = Vec::with_capacity(nnz);
+    parse_scalars::<T>(&buf, &mut val);
+    finish_checked(&r, stored)?;
+
+    let p = CsrMatrix { n, row_ptr, col, val };
+    p.validate_structural().map_err(PersistError::Corrupt)?;
+    Ok((p, perplexity, k))
+}
+
+/// Scalar width in bytes of the on-disk values (4 = f32, 8 = f64).
+#[inline]
+fn scalar_width<T: Real>() -> u32 {
+    std::mem::size_of::<T>() as u32
+}
+
+#[inline]
+fn write_scalar<T: Real, W: Write>(w: &mut W, v: T) -> std::io::Result<()> {
+    if std::mem::size_of::<T>() == 4 {
+        w.write_all(&(v.to_f64() as f32).to_le_bytes())
+    } else {
+        w.write_all(&v.to_f64().to_le_bytes())
+    }
+}
+
+/// Parse a packed little-endian scalar array into `out` (cleared first).
+fn parse_scalars<T: Real>(bytes: &[u8], out: &mut Vec<T>) {
+    out.clear();
+    if std::mem::size_of::<T>() == 4 {
+        out.extend(bytes.chunks_exact(4).map(|c| {
+            T::from_f64(f32::from_le_bytes(c.try_into().unwrap()) as f64)
+        }));
+    } else {
+        out.extend(
+            bytes
+                .chunks_exact(8)
+                .map(|c| T::from_f64(f64::from_le_bytes(c.try_into().unwrap()))),
+        );
+    }
+}
+
+/// `Write` adapter that feeds every byte through the FNV-1a checksum.
+struct HashingWriter<W: Write> {
+    inner: W,
+    hash: Fnv1a64,
+}
+
+impl<W: Write> Write for HashingWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let k = self.inner.write(buf)?;
+        self.hash.update(&buf[..k]);
+        Ok(k)
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// `Read` adapter that feeds every byte through the FNV-1a checksum.
+struct HashingReader<R: Read> {
+    inner: R,
+    hash: Fnv1a64,
+}
+
+impl<R: Read> Read for HashingReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let k = self.inner.read(buf)?;
+        self.hash.update(&buf[..k]);
+        Ok(k)
+    }
+}
+
+/// Write the artifact **atomically**: header + hashed payload go to a `.tmp`
+/// sibling, the checksum is patched into its header, and only then is the
+/// temp file renamed over `path`. A crash (or full disk) mid-save therefore
+/// never destroys the previous good artifact — which is the whole point of
+/// periodic checkpointing. The `.tmp` file is cleaned up on failure.
+fn save_to_path<F>(path: &Path, magic: &[u8; 8], width: u32, payload: F) -> Result<(), PersistError>
+where
+    F: FnOnce(&mut HashingWriter<BufWriter<File>>) -> Result<(), PersistError>,
+{
+    let tmp = tmp_sibling(path);
+    let result = write_file(&tmp, magic, width, payload)
+        .and_then(|()| std::fs::rename(&tmp, path).map_err(PersistError::from));
+    if result.is_err() {
+        std::fs::remove_file(&tmp).ok();
+    }
+    result
+}
+
+/// `<name>.tmp` in the same directory (same filesystem, so the rename in
+/// [`save_to_path`] is atomic).
+fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut name = path
+        .file_name()
+        .map(|s| s.to_os_string())
+        .unwrap_or_else(|| std::ffi::OsString::from("artifact"));
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Write header + hashed payload, then patch the checksum into the header.
+fn write_file<F>(path: &Path, magic: &[u8; 8], width: u32, payload: F) -> Result<(), PersistError>
+where
+    F: FnOnce(&mut HashingWriter<BufWriter<File>>) -> Result<(), PersistError>,
+{
+    let file = File::create(path)?;
+    let mut w = BufWriter::new(file);
+    w.write_all(magic)?;
+    write_u32_le(&mut w, FORMAT_VERSION)?;
+    write_u32_le(&mut w, ENDIAN_TAG)?;
+    write_u32_le(&mut w, width)?;
+    write_u64_le(&mut w, 0)?; // checksum placeholder, patched below
+    let mut hw = HashingWriter { inner: w, hash: Fnv1a64::new() };
+    payload(&mut hw)?;
+    let checksum = hw.hash.finish();
+    let mut w = hw.inner;
+    w.flush()?;
+    let mut file = w.into_inner().map_err(|e| PersistError::Io(e.into_error()))?;
+    file.seek(SeekFrom::Start(CHECKSUM_OFFSET))?;
+    file.write_all(&checksum.to_le_bytes())?;
+    Ok(())
+}
+
+/// Open + validate the shared header; returns the hashing payload reader,
+/// the stored checksum, and the total file length.
+fn open_checked(
+    path: &Path,
+    magic: &[u8; 8],
+    width: u32,
+) -> Result<(HashingReader<BufReader<File>>, u64, u64), PersistError> {
+    let file = File::open(path)?;
+    let file_len = file.metadata()?.len();
+    let mut r = BufReader::new(file);
+    let mut found = [0u8; 8];
+    r.read_exact(&mut found).map_err(PersistError::from)?;
+    if &found != magic {
+        return Err(PersistError::BadMagic { found });
+    }
+    let version = read_u32_le(&mut r)?;
+    if version != FORMAT_VERSION {
+        return Err(PersistError::UnsupportedVersion { found: version, supported: FORMAT_VERSION });
+    }
+    let endian = read_u32_le(&mut r)?;
+    if endian != ENDIAN_TAG {
+        return Err(PersistError::EndiannessMismatch { found: endian });
+    }
+    let found_width = read_u32_le(&mut r)?;
+    if found_width != width {
+        return Err(PersistError::ScalarWidthMismatch { found: found_width, expected: width });
+    }
+    let stored = read_u64_le(&mut r)?;
+    Ok((HashingReader { inner: r, hash: Fnv1a64::new() }, stored, file_len))
+}
+
+/// Reject payload sizes that disagree with the actual file BEFORE allocating.
+fn check_file_len(expected: u64, actual: u64) -> Result<(), PersistError> {
+    if actual < expected {
+        return Err(PersistError::Truncated);
+    }
+    if actual > expected {
+        return Err(PersistError::Corrupt(format!(
+            "{} trailing byte(s) after the payload",
+            actual - expected
+        )));
+    }
+    Ok(())
+}
+
+fn read_bytes<R: Read>(r: &mut R, len: usize, buf: &mut Vec<u8>) -> Result<(), PersistError> {
+    buf.clear();
+    buf.resize(len, 0);
+    r.read_exact(buf).map_err(PersistError::from)
+}
+
+/// Compare the streamed payload hash against the stored checksum.
+fn finish_checked<R: Read>(r: &HashingReader<R>, stored: u64) -> Result<(), PersistError> {
+    let computed = r.hash.finish();
+    if computed != stored {
+        return Err(PersistError::ChecksumMismatch { stored, computed });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("acc_tsne_persist_{}_{name}", std::process::id()));
+        p
+    }
+
+    fn ring_p(n: usize) -> CsrMatrix<f64> {
+        let mut row_ptr = vec![0usize];
+        let mut col = Vec::new();
+        let mut val = Vec::new();
+        for i in 0..n {
+            col.push(((i + 1) % n) as u32);
+            col.push(((i + 2) % n) as u32);
+            val.push(0.25 + i as f64 * 1e-3);
+            val.push(0.75 - i as f64 * 1e-3);
+            row_ptr.push(col.len());
+        }
+        CsrMatrix { n, row_ptr, col, val }
+    }
+
+    #[test]
+    fn affinities_payload_round_trips_exactly() {
+        let path = tmp("aff_rt.bin");
+        let p = ring_p(64);
+        write_affinities(&path, &p, 12.5, 37).unwrap();
+        let (q, perplexity, k) = read_affinities::<f64>(&path).unwrap();
+        assert_eq!(q.n, p.n);
+        assert_eq!(q.row_ptr, p.row_ptr);
+        assert_eq!(q.col, p.col);
+        assert_eq!(q.val, p.val);
+        assert_eq!(perplexity, 12.5);
+        assert_eq!(k, 37);
+        // the atomic-write staging file must not linger
+        assert!(!tmp_sibling(&path).exists(), "tmp sibling left behind");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn checkpoint_payload_round_trips_exactly_with_and_without_perm() {
+        for perm in [None, Some((0..50u32).rev().collect::<Vec<u32>>())] {
+            let path = tmp("ckpt_rt.bin");
+            let ck = SessionCheckpoint::<f32> {
+                iter: 123,
+                last_z: 4.5,
+                last_grad_norm: 1e-3,
+                aff_nnz: 4321,
+                aff_perplexity: 25.0,
+                y: (0..100).map(|i| i as f32 * 0.5).collect(),
+                velocity: (0..100).map(|i| -(i as f32)).collect(),
+                gains: (0..100).map(|i| 1.0 + i as f32 * 0.01).collect(),
+                layout_perm: perm,
+            };
+            ck.save(&path).unwrap();
+            let back = SessionCheckpoint::<f32>::load(&path).unwrap();
+            assert_eq!(back, ck);
+            std::fs::remove_file(path).ok();
+        }
+    }
+
+    #[test]
+    fn inconsistent_checkpoint_is_refused_at_save_time() {
+        let ck = SessionCheckpoint::<f64> {
+            iter: 0,
+            last_z: 1.0,
+            last_grad_norm: 0.0,
+            aff_nnz: 0,
+            aff_perplexity: 10.0,
+            y: vec![0.0; 10],
+            velocity: vec![0.0; 8],
+            gains: vec![1.0; 10],
+            layout_perm: None,
+        };
+        match ck.save(tmp("bad_save.bin")) {
+            Err(PersistError::Mismatch(_)) => {}
+            other => panic!("expected Mismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scalar_codec_is_exact_for_both_widths() {
+        let mut buf = Vec::new();
+        for v in [0.0f64, -1.5, 1e-300, f64::MAX] {
+            write_scalar(&mut buf, v).unwrap();
+        }
+        let mut out = Vec::new();
+        parse_scalars::<f64>(&buf, &mut out);
+        assert_eq!(out, vec![0.0, -1.5, 1e-300, f64::MAX]);
+        let mut buf32 = Vec::new();
+        for v in [0.25f32, -3.5e-30, f32::MIN_POSITIVE] {
+            write_scalar(&mut buf32, v).unwrap();
+        }
+        let mut out32 = Vec::new();
+        parse_scalars::<f32>(&buf32, &mut out32);
+        assert_eq!(out32, vec![0.25, -3.5e-30, f32::MIN_POSITIVE]);
+    }
+
+    #[test]
+    fn loading_the_wrong_artifact_kind_is_bad_magic() {
+        let path = tmp("kind.bin");
+        let p = ring_p(16);
+        write_affinities(&path, &p, 5.0, 3).unwrap();
+        match SessionCheckpoint::<f64>::load(&path) {
+            Err(PersistError::BadMagic { found }) => assert_eq!(&found, AFFINITIES_MAGIC),
+            other => panic!("expected BadMagic, got {other:?}"),
+        }
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -110,9 +110,11 @@ pub fn run_tsne_custom<T: Scalar>(
 /// this; also lets the table harnesses share one KNN across implementations).
 /// `pool` supplies the thread count; the session owns its own pools.
 ///
-/// Equivalent to `Affinities::from_csr` + a full-budget session — callers
-/// that reuse the affinities across several runs should do that directly and
-/// skip this wrapper's per-call copy of `P`.
+/// Equivalent to `Affinities::from_csr_ref` + a full-budget session — the
+/// caller's `P` is **borrowed**, never copied (the `Cow`-backed `Affinities`
+/// closed the old per-call clone); callers that reuse the affinities across
+/// several runs should still build them directly and amortize the structural
+/// validation too.
 pub fn run_tsne_with_p<T: Scalar>(
     pool: &ThreadPool,
     p: &CsrMatrix<T>,
@@ -120,7 +122,7 @@ pub fn run_tsne_with_p<T: Scalar>(
     imp: Implementation,
 ) -> TsneResult<T> {
     let plan = StagePlan::compat(imp, cfg);
-    let aff = Affinities::from_csr(p.clone(), cfg.perplexity);
+    let aff = Affinities::from_csr_ref(p, cfg.perplexity);
     let mut cfg = *cfg;
     cfg.n_threads = pool.n_threads();
     let mut sess =

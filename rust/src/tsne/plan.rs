@@ -14,6 +14,14 @@
 //! [`PlanError`] instead of ad-hoc CLI string checks or mid-run panics:
 //! the FIt-SNE FFT pipeline builds no quadtree, so it can neither persist a
 //! Z-order layout nor take a Barnes-Hut repulsive-kernel override.
+//!
+//! The plan is **not** part of a persisted artifact: a saved
+//! [`Affinities`](super::Affinities) or session checkpoint is pure data, and
+//! the plan is re-supplied at load/restore time (and re-validated — an
+//! impossible plan surfaces as
+//! [`PersistError::Plan`](super::PersistError::Plan)). That is what lets a
+//! checkpoint taken under `layout = Zorder` resume under any layout or
+//! kernel variant.
 
 use super::{Implementation, Layout, TsneConfig};
 use crate::gradient::attractive::Variant;

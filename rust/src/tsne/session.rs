@@ -27,6 +27,7 @@
 //! repulsive}` override fields exist for the compat wrappers, which fold them
 //! into the plan before the session is built.
 
+use super::persist::{self, PersistError, SessionCheckpoint};
 use super::pipeline::{AttractiveEngine, NativeAttractive};
 use super::plan::{PlanError, StagePlan};
 use super::workspace::IterationWorkspace;
@@ -43,19 +44,40 @@ use crate::quadtree::builder_baseline::build_baseline;
 use crate::quadtree::builder_morton::build_morton;
 use crate::quadtree::summarize::{summarize_parallel, summarize_sequential};
 use crate::sparse::{symmetrize, CsrMatrix};
+use std::borrow::Cow;
+use std::path::Path;
 
 /// The fitted affinity artifact: the symmetrized sparse `P` of paper Eq. 2
 /// plus its fit metadata. Phase 1 of the pipeline (KNN → binary-search
-/// perplexity → symmetrize), computed once and reused across gradient runs.
+/// perplexity → symmetrize), computed once and reused across gradient runs —
+/// in-process (N concurrent sessions borrow one instance; `Affinities` is
+/// `Sync`, asserted below), across processes
+/// ([`save`](Self::save)/[`load`](Self::load)), and across owners: the `'p`
+/// parameter is the lifetime of a borrowed `P` ([`Self::from_csr_ref`]);
+/// fitted or owned artifacts are `Affinities<'static, T>`.
 #[derive(Clone, Debug)]
-pub struct Affinities<T: Scalar> {
-    p: CsrMatrix<T>,
+pub struct Affinities<'p, T: Scalar> {
+    p: Cow<'p, CsrMatrix<T>>,
     perplexity: f64,
     k: usize,
     times: StepTimes,
 }
 
-impl<T: Scalar> Affinities<T> {
+// Compile-time half of the serve-many-sessions audit: one fitted artifact is
+// shared by `&Affinities` across session threads, so it must be Send + Sync
+// (the runtime half is the concurrent-sessions bit-identity test).
+const _: () = {
+    const fn assert_send_sync<S: Send + Sync>() {}
+    assert_send_sync::<Affinities<'static, f32>>();
+    assert_send_sync::<Affinities<'static, f64>>();
+};
+
+/// ⌊3·perplexity⌋ neighbors (Eq. 2), clamped to `1..=n-1`.
+fn k_for(perplexity: f64, n: usize) -> usize {
+    ((3.0 * perplexity).floor() as usize).clamp(1, n.saturating_sub(1).max(1))
+}
+
+impl<T: Scalar> Affinities<'static, T> {
     /// Fit affinities for `points` (n × d, row-major): KNN over ⌊3·perplexity⌋
     /// neighbors with the plan's KNN engine, binary-search perplexity with the
     /// plan's BSP mode, then symmetrization. The KNN/BSP wall time is recorded
@@ -67,13 +89,13 @@ impl<T: Scalar> Affinities<T> {
         d: usize,
         perplexity: f64,
         plan: &StagePlan,
-    ) -> Affinities<T> {
+    ) -> Affinities<'static, T> {
         assert_eq!(points.len(), n * d, "points must be n*d");
         assert!(n >= 8, "need at least 8 points");
         let mut times = StepTimes::new();
         // ⌊3u⌋ neighbors (Eq. 2). The blocked engine models daal4py's; the
         // VP-tree models Multicore-TSNE's (vdMaaten's code).
-        let k = ((3.0 * perplexity).floor() as usize).clamp(1, n - 1);
+        let k = k_for(perplexity, n);
         let knn: NeighborLists<T> = times.time(Step::Knn, || {
             if plan.knn_blocked {
                 BruteForceKnn::default().search(pool, points, n, d, k)
@@ -87,35 +109,62 @@ impl<T: Scalar> Affinities<T> {
             let cond = binary_search_perplexity(pool, &knn, perplexity, mode);
             symmetrize(pool, &knn, &cond.p)
         });
-        Affinities { p, perplexity, k, times }
+        Affinities { p: Cow::Owned(p), perplexity, k, times }
     }
 
     /// Wrap an already-symmetrized CSR `P` (columns in the caller's point
-    /// order). Benches isolating the gradient phase and callers with
-    /// externally-computed affinities enter here; no KNN/BSP time is charged.
+    /// order), taking ownership. Benches isolating the gradient phase and
+    /// callers with externally-computed affinities enter here; no KNN/BSP
+    /// time is charged. [`Self::from_csr_ref`] is the borrowing sibling.
     ///
     /// Panics if the *structural* CSR invariants the gradient loop relies on
-    /// are violated (row_ptr shape/monotonicity, col/val lengths, columns in
-    /// range) — an O(nnz) check, negligible next to a gradient run, that
-    /// turns a silently corrupted embedding into a loud error. Sorted unique
-    /// columns per row — what [`Self::fit`] produces — are recommended for
-    /// gather locality but not required: the kernels stream row entries in
-    /// storage order.
-    pub fn from_csr(p: CsrMatrix<T>, perplexity: f64) -> Affinities<T> {
-        assert_eq!(p.row_ptr.len(), p.n + 1, "row_ptr must have n+1 entries");
-        assert_eq!(p.col.len(), p.val.len(), "col/val length mismatch");
-        assert!(
-            p.row_ptr.first() == Some(&0)
-                && *p.row_ptr.last().unwrap() == p.col.len()
-                && p.row_ptr.windows(2).all(|w| w[0] <= w[1]),
-            "row_ptr must be monotone over 0..=nnz"
-        );
-        assert!(
-            p.col.iter().all(|&c| (c as usize) < p.n),
-            "column index out of range"
-        );
-        let k = ((3.0 * perplexity).floor() as usize).clamp(1, p.n.saturating_sub(1).max(1));
-        Affinities { p, perplexity, k, times: StepTimes::new() }
+    /// are violated ([`CsrMatrix::validate_structural`]) — an O(nnz) check,
+    /// negligible next to a gradient run, that turns a silently corrupted
+    /// embedding into a loud error. Sorted unique columns per row — what
+    /// [`Self::fit`] produces — are recommended for gather locality but not
+    /// required: the kernels stream row entries in storage order.
+    pub fn from_csr(p: CsrMatrix<T>, perplexity: f64) -> Affinities<'static, T> {
+        if let Err(e) = p.validate_structural() {
+            panic!("invalid CSR: {e}");
+        }
+        let k = k_for(perplexity, p.n);
+        Affinities { p: Cow::Owned(p), perplexity, k, times: StepTimes::new() }
+    }
+
+    /// Read an artifact written by [`Self::save`]. The loaded instance feeds
+    /// sessions whose output is bit-identical to ones fed by the in-memory
+    /// fit (every field round-trips exactly, including the f64 bit patterns
+    /// of `P`). Hostile inputs — truncation, bit flips, wrong magic, future
+    /// versions, the wrong scalar width — come back as typed
+    /// [`PersistError`]s, never panics.
+    pub fn load(path: impl AsRef<Path>) -> Result<Affinities<'static, T>, PersistError> {
+        let (p, perplexity, k) = persist::read_affinities::<T>(path.as_ref())?;
+        Ok(Affinities { p: Cow::Owned(p), perplexity, k, times: StepTimes::new() })
+    }
+}
+
+impl<'p, T: Scalar> Affinities<'p, T> {
+    /// Wrap a **borrowed** already-symmetrized CSR `P` — the zero-copy
+    /// sibling of [`Affinities::from_csr`] for callers that keep ownership of
+    /// `P` (the compat wrapper `run_tsne_with_p` routes through this, so it
+    /// no longer clones the caller's matrix). Same structural validation,
+    /// same panic contract.
+    pub fn from_csr_ref(p: &'p CsrMatrix<T>, perplexity: f64) -> Affinities<'p, T> {
+        if let Err(e) = p.validate_structural() {
+            panic!("invalid CSR: {e}");
+        }
+        let k = k_for(perplexity, p.n);
+        Affinities { p: Cow::Borrowed(p), perplexity, k, times: StepTimes::new() }
+    }
+
+    /// Write the artifact to `path` in the versioned, checksummed binary
+    /// format of [`crate::tsne::persist`] (magic + version + endianness +
+    /// scalar width + FNV-1a payload checksum). Save → [`Affinities::load`] →
+    /// save is byte-identical. Fit wall times are *not* persisted: a loaded
+    /// artifact starts with empty [`step_times`](Self::step_times), exactly
+    /// like [`Affinities::from_csr`].
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), PersistError> {
+        persist::write_affinities(path.as_ref(), self.p(), self.perplexity, self.k)
     }
 
     /// Number of points.
@@ -142,7 +191,8 @@ impl<T: Scalar> Affinities<T> {
         self.k
     }
 
-    /// KNN + BSP wall time of the fit (empty for [`Self::from_csr`]).
+    /// KNN + BSP wall time of the fit (empty for [`Affinities::from_csr`],
+    /// [`Self::from_csr_ref`], and [`Affinities::load`]).
     #[inline]
     pub fn step_times(&self) -> &StepTimes {
         &self.times
@@ -252,7 +302,7 @@ const PROGRESS_REL_TOL: f64 = 1e-3;
 /// drive many sessions. Construction validates the [`StagePlan`] and returns
 /// a typed [`PlanError`] for impossible stage combinations.
 pub struct TsneSession<'a, T: Scalar> {
-    aff: &'a Affinities<T>,
+    aff: &'a Affinities<'a, T>,
     plan: StagePlan,
     cfg: TsneConfig,
     pool: ThreadPool,
@@ -273,7 +323,7 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
     /// Build a session with the standard N(0, 1e-4) random initialization
     /// from `cfg.seed`.
     pub fn new(
-        aff: &'a Affinities<T>,
+        aff: &'a Affinities<'a, T>,
         plan: StagePlan,
         cfg: TsneConfig,
     ) -> Result<TsneSession<'a, T>, PlanError> {
@@ -284,7 +334,7 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
     /// Build a session from an explicit initial embedding (interleaved x,y in
     /// the caller's point order; e.g. a scaled PCA projection).
     pub fn with_init(
-        aff: &'a Affinities<T>,
+        aff: &'a Affinities<'a, T>,
         plan: StagePlan,
         cfg: TsneConfig,
         y0: Vec<T>,
@@ -378,7 +428,7 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
     /// using the latest iteration's Z (meaningful after ≥ 1 step).
     pub fn kl(&mut self) -> f64 {
         self.ws.copy_original_order_into(&mut self.snapshot_buf);
-        kl_with_z(&self.aff.p, &self.snapshot_buf, self.last_z.to_f64())
+        kl_with_z(self.aff.p(), &self.snapshot_buf, self.last_z.to_f64())
     }
 
     /// Run one gradient iteration: (tree build + summarize + BH repulsive) or
@@ -405,7 +455,7 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
             Some(e) => e,
             None => &native_engine,
         };
-        let p = &aff.p;
+        let p = aff.p();
 
         let z: T = if plan.fft_repulsion {
             // FIt-SNE path: no tree; the FFT pipeline is the repulsive step.
@@ -535,6 +585,132 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
         RunOutcome { n_iter: self.iter, reason: StopReason::MaxIter }
     }
 
+    /// Capture the session's optimizer state as an in-memory
+    /// [`SessionCheckpoint`]: embedding, velocity, and gains in **un-permuted
+    /// original point order**, the iteration counter, and the convergence
+    /// scalars (latest Z and gradient norm). The adopted Z-order permutation
+    /// rides along as a layout *hint* (see [`SessionCheckpoint::layout_perm`]).
+    ///
+    /// Not captured (by design): the observer, a custom attractive engine,
+    /// and the per-call progress bookkeeping of
+    /// [`run_until`](Self::run_until) — the first two are process-local
+    /// callbacks the caller re-installs, the last is per-call by its
+    /// documented contract.
+    pub fn to_checkpoint(&self) -> SessionCheckpoint<T> {
+        let mut y = Vec::new();
+        let mut velocity = Vec::new();
+        let mut gains = Vec::new();
+        self.ws.unpermute_pairs_into(&self.ws.y, &mut y);
+        self.ws.unpermute_pairs_into(&self.ws.opt.velocity, &mut velocity);
+        self.ws.unpermute_pairs_into(&self.ws.opt.gains, &mut gains);
+        SessionCheckpoint {
+            iter: self.iter,
+            last_z: self.last_z.to_f64(),
+            last_grad_norm: self.last_grad_norm,
+            aff_nnz: self.aff.p().nnz(),
+            aff_perplexity: self.aff.perplexity(),
+            y,
+            velocity,
+            gains,
+            layout_perm: self.ws.permutation().map(|p| p.to_vec()),
+        }
+    }
+
+    /// Write a checkpoint file ([`Self::to_checkpoint`] + the versioned,
+    /// checksummed format of [`crate::tsne::persist`]). The session is not
+    /// perturbed: checkpointing mid-run leaves the trajectory bit-identical.
+    pub fn checkpoint(&self, path: impl AsRef<Path>) -> Result<(), PersistError> {
+        self.to_checkpoint().save(path)
+    }
+
+    /// Rebuild a session from an in-memory checkpoint over the same
+    /// affinities. The caller supplies the `plan`/`cfg` the original session
+    /// ran with (they are deliberately not persisted — a checkpoint is pure
+    /// optimizer state and may be resumed under a different layout or kernel
+    /// variant).
+    ///
+    /// Bit-identity contract: resumed under the **same** plan, config, and
+    /// thread count, the continued trajectory — and a final
+    /// [`finish`](Self::finish) — matches an uninterrupted run exactly. Under
+    /// [`Layout::Zorder`] that exactness comes from replaying the
+    /// checkpoint's layout hint so every layout-dependent FP summation order
+    /// is reproduced; resuming under a *different* layout is supported and
+    /// agrees to FP noise (the layout-parity contract).
+    pub fn from_checkpoint(
+        aff: &'a Affinities<'a, T>,
+        plan: StagePlan,
+        cfg: TsneConfig,
+        ck: SessionCheckpoint<T>,
+    ) -> Result<TsneSession<'a, T>, PersistError> {
+        if ck.y.len() % 2 != 0
+            || ck.velocity.len() != ck.y.len()
+            || ck.gains.len() != ck.y.len()
+        {
+            return Err(PersistError::Corrupt(format!(
+                "checkpoint state arrays disagree: y {}, velocity {}, gains {}",
+                ck.y.len(),
+                ck.velocity.len(),
+                ck.gains.len()
+            )));
+        }
+        if ck.n() != aff.n() {
+            return Err(PersistError::Mismatch(format!(
+                "checkpoint holds {} points, affinities hold {}",
+                ck.n(),
+                aff.n()
+            )));
+        }
+        // Same-n but different fit: the checkpoint's affinity fingerprint
+        // (nnz + perplexity) must match, or the optimizer state would be
+        // silently continued against the wrong `P`.
+        if ck.aff_nnz != aff.p().nnz() || ck.aff_perplexity != aff.perplexity() {
+            return Err(PersistError::Mismatch(format!(
+                "checkpoint descends from a different fit: nnz {} / perplexity {} \
+                 vs the given affinities' nnz {} / perplexity {}",
+                ck.aff_nnz,
+                ck.aff_perplexity,
+                aff.p().nnz(),
+                aff.perplexity()
+            )));
+        }
+        let SessionCheckpoint {
+            iter,
+            last_z,
+            last_grad_norm,
+            y,
+            velocity,
+            gains,
+            layout_perm,
+            ..
+        } = ck;
+        let mut sess = Self::with_init(aff, plan, cfg, y)?;
+        sess.ws.opt.velocity.copy_from_slice(&velocity);
+        sess.ws.opt.gains.copy_from_slice(&gains);
+        sess.iter = iter;
+        sess.last_z = T::from_f64(last_z);
+        sess.last_grad_norm = last_grad_norm;
+        if sess.plan.layout == Layout::Zorder {
+            if let Some(perm) = layout_perm {
+                let Self { ref pool, ref mut ws, aff, .. } = sess;
+                ws.adopt_permutation(pool, &perm, aff.p()).map_err(PersistError::Corrupt)?;
+            }
+        }
+        Ok(sess)
+    }
+
+    /// Resume from a checkpoint file written by [`Self::checkpoint`]:
+    /// [`SessionCheckpoint::load`] + [`Self::from_checkpoint`]. Typed
+    /// [`PersistError`]s for hostile files and for a checkpoint whose point
+    /// count disagrees with `aff`.
+    pub fn restore(
+        aff: &'a Affinities<'a, T>,
+        plan: StagePlan,
+        cfg: TsneConfig,
+        path: impl AsRef<Path>,
+    ) -> Result<TsneSession<'a, T>, PersistError> {
+        Self::from_checkpoint(aff, plan, cfg, SessionCheckpoint::load(path)?)
+    }
+
     /// Consume the session: un-permute the embedding back to the caller's
     /// point order (the run's single un-permute) and compute the final KL.
     /// `step_times` covers the gradient phase only — the compat wrappers
@@ -542,7 +718,7 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
     pub fn finish(self) -> TsneResult<T> {
         let TsneSession { aff, plan, ws, times, iter, last_z, .. } = self;
         let y = ws.into_original_order();
-        let kl = kl_with_z(&aff.p, &y, last_z.to_f64());
+        let kl = kl_with_z(aff.p(), &y, last_z.to_f64());
         TsneResult {
             embedding: y,
             kl_divergence: kl,
@@ -555,7 +731,7 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
     fn emit_snapshot(&mut self) {
         if let Some((every, mut f)) = self.observer.take() {
             self.ws.copy_original_order_into(&mut self.snapshot_buf);
-            let kl = kl_with_z(&self.aff.p, &self.snapshot_buf, self.last_z.to_f64());
+            let kl = kl_with_z(self.aff.p(), &self.snapshot_buf, self.last_z.to_f64());
             let snap = Snapshot {
                 iter: self.iter,
                 embedding: &self.snapshot_buf,
@@ -586,7 +762,7 @@ mod tests {
         }
     }
 
-    fn fitted(n: usize, seed: u64) -> (crate::data::Dataset<f64>, Affinities<f64>) {
+    fn fitted(n: usize, seed: u64) -> (crate::data::Dataset<f64>, Affinities<'static, f64>) {
         let ds = gaussian_mixture::<f64>(n, 8, 4, 8.0, seed);
         let pool = ThreadPool::new(4);
         let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, 10.0, &StagePlan::acc_tsne());
@@ -709,6 +885,146 @@ mod tests {
         assert_eq!(out.reason, StopReason::MaxIter);
         assert_eq!(out.n_iter, 25);
         assert_eq!(sess.finish().n_iter, 25);
+    }
+
+    #[test]
+    fn borrowed_and_owned_affinities_feed_bit_identical_sessions() {
+        let (_ds, aff) = fitted(250, 40);
+        let p = aff.p().clone();
+        let cfg = quick_cfg(12);
+        fn run(a: &Affinities<'_, f64>, cfg: TsneConfig) -> Vec<f64> {
+            let mut sess = TsneSession::new(a, StagePlan::acc_tsne(), cfg).unwrap();
+            sess.run(cfg.n_iter);
+            sess.finish().embedding
+        }
+        let owned = Affinities::from_csr(p.clone(), 10.0);
+        let borrowed = Affinities::from_csr_ref(&p, 10.0);
+        assert_eq!(borrowed.k(), owned.k());
+        assert_eq!(run(&owned, cfg), run(&borrowed, cfg));
+    }
+
+    #[test]
+    fn in_memory_checkpoint_round_trip_is_bit_identical() {
+        // checkpoint at k, resume, run to n == uninterrupted n-iteration run,
+        // for both layouts, at a fixed thread count.
+        for plan in [
+            StagePlan::acc_tsne(),
+            StagePlan::acc_tsne().with_layout(Layout::Original).unwrap(),
+        ] {
+            let (_ds, aff) = fitted(300, 41);
+            let cfg = quick_cfg(0);
+            let mut uninterrupted = TsneSession::new(&aff, plan, cfg).unwrap();
+            uninterrupted.run(40);
+            let want = uninterrupted.finish();
+
+            let mut first = TsneSession::new(&aff, plan, cfg).unwrap();
+            first.run(15);
+            let ck = first.to_checkpoint();
+            drop(first);
+            let mut resumed = TsneSession::from_checkpoint(&aff, plan, cfg, ck).unwrap();
+            assert_eq!(resumed.iterations(), 15);
+            resumed.run(25);
+            let got = resumed.finish();
+            assert_eq!(got.embedding, want.embedding, "layout {:?}", plan.layout);
+            assert_eq!(got.kl_divergence, want.kl_divergence);
+            assert_eq!(got.n_iter, want.n_iter);
+        }
+    }
+
+    #[test]
+    fn checkpoint_taken_under_zorder_restores_under_original_layout() {
+        // The checkpoint is layout-free: state is stored un-permuted, so a
+        // Z-order checkpoint resumes under the original layout (and vice
+        // versa), agreeing to the usual cross-layout FP-noise tolerance.
+        let (_ds, aff) = fitted(300, 43);
+        let cfg = quick_cfg(0);
+        let z_plan = StagePlan::acc_tsne();
+        let o_plan = StagePlan::acc_tsne().with_layout(Layout::Original).unwrap();
+
+        let mut z_sess = TsneSession::new(&aff, z_plan, cfg).unwrap();
+        z_sess.run(20);
+        let ck = z_sess.to_checkpoint();
+        assert!(ck.layout_perm.is_some(), "20 early iterations must have adopted a layout");
+        drop(z_sess);
+
+        // same-layout resume is the bit-identical reference ...
+        let mut same = TsneSession::from_checkpoint(&aff, z_plan, cfg, ck.clone()).unwrap();
+        same.run(10);
+        let want = same.finish();
+        // ... cross-layout resume matches it to FP noise
+        let mut crossed = TsneSession::from_checkpoint(&aff, o_plan, cfg, ck).unwrap();
+        crossed.run(10);
+        let got = crossed.finish();
+        for i in 0..want.embedding.len() {
+            assert!(
+                (want.embedding[i] - got.embedding[i]).abs()
+                    < 1e-6 * (1.0 + want.embedding[i].abs()),
+                "idx {i}: zorder {} vs original {}",
+                want.embedding[i],
+                got.embedding[i]
+            );
+        }
+    }
+
+    #[test]
+    fn checkpoint_restore_rejects_mismatched_affinities() {
+        let (_ds, aff) = fitted(300, 44);
+        let (_ds2, aff_small) = fitted(200, 45);
+        let cfg = quick_cfg(0);
+        let mut sess = TsneSession::new(&aff, StagePlan::acc_tsne(), cfg).unwrap();
+        sess.run(3);
+        let ck = sess.to_checkpoint();
+        match TsneSession::from_checkpoint(&aff_small, StagePlan::acc_tsne(), cfg, ck.clone()) {
+            Err(PersistError::Mismatch(_)) => {}
+            other => panic!("expected Mismatch, got {:?}", other.map(|_| ())),
+        }
+        // an invalid plan surfaces as the typed plan error
+        let mut bad_plan = StagePlan::fit_sne();
+        bad_plan.layout = Layout::Zorder;
+        match TsneSession::from_checkpoint(&aff, bad_plan, cfg, ck) {
+            Err(PersistError::Plan(PlanError::FftLayoutZorder)) => {}
+            other => panic!("expected Plan(FftLayoutZorder), got {:?}", other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn concurrent_sessions_share_one_affinities_bit_identically() {
+        // The serve-many-sessions contract: N threads borrow ONE fitted
+        // Affinities (it is Sync — compile-time assert at the top of this
+        // module) and each session's output is bit-identical to the same
+        // seed's serial run.
+        let (_ds, aff) = fitted(300, 46);
+        let seeds = [7u64, 11, 1234, 99];
+        let serial: Vec<Vec<f64>> = seeds
+            .iter()
+            .map(|&seed| {
+                let mut cfg = quick_cfg(25);
+                cfg.seed = seed;
+                let mut sess = TsneSession::new(&aff, StagePlan::acc_tsne(), cfg).unwrap();
+                sess.run(cfg.n_iter);
+                sess.finish().embedding
+            })
+            .collect();
+        let aff_ref = &aff;
+        let concurrent: Vec<Vec<f64>> = std::thread::scope(|s| {
+            let handles: Vec<_> = seeds
+                .iter()
+                .map(|&seed| {
+                    s.spawn(move || {
+                        let mut cfg = quick_cfg(25);
+                        cfg.seed = seed;
+                        let mut sess =
+                            TsneSession::new(aff_ref, StagePlan::acc_tsne(), cfg).unwrap();
+                        sess.run(cfg.n_iter);
+                        sess.finish().embedding
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (i, (a, b)) in serial.iter().zip(&concurrent).enumerate() {
+            assert_eq!(a, b, "seed {} diverged under concurrency", seeds[i]);
+        }
     }
 
     #[test]

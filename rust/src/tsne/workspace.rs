@@ -218,15 +218,82 @@ impl<T: Real> IterationWorkspace<T> {
     /// [`Self::into_original_order`] — observer snapshots and mid-run KL
     /// evaluation use it without disturbing the layout-order state.
     pub fn copy_original_order_into(&self, out: &mut Vec<T>) {
-        out.resize(self.y.len(), T::ZERO);
+        self.unpermute_pairs_into(&self.y, out);
+    }
+
+    /// Un-permute any layout-order interleaved per-point array (`2n` values:
+    /// embedding, velocity, gains, …) into the caller's original point order.
+    /// An identity copy while the state is still un-adopted. Checkpointing
+    /// serializes every state array through this, so a checkpoint file is
+    /// layout-free.
+    pub fn unpermute_pairs_into(&self, src: &[T], out: &mut Vec<T>) {
+        assert_eq!(src.len(), self.y.len(), "array must hold 2n interleaved values");
+        out.resize(src.len(), T::ZERO);
         if !self.adopted {
-            out.copy_from_slice(&self.y);
+            out.copy_from_slice(src);
             return;
         }
         for (slot, &orig) in self.perm.iter().enumerate() {
-            out[2 * orig as usize] = self.y[2 * slot];
-            out[2 * orig as usize + 1] = self.y[2 * slot + 1];
+            out[2 * orig as usize] = src[2 * slot];
+            out[2 * orig as usize + 1] = src[2 * slot + 1];
         }
+    }
+
+    /// Re-permute a workspace whose state is still in ORIGINAL order into the
+    /// given layout — the restore path of a checkpointed session. `perm` is
+    /// the adopted `slot → original` map saved in the checkpoint and `p` is
+    /// the run's CSR `P` in original index space (re-indexed into slot space
+    /// here, exactly as [`Self::maybe_adopt`] would have).
+    ///
+    /// Replaying the saved permutation makes the restored in-memory layout —
+    /// and therefore every layout-dependent FP summation order — bit-identical
+    /// to the checkpointed session's, which is what makes a resumed run match
+    /// an uninterrupted one exactly.
+    ///
+    /// Returns `Err` (instead of panicking) when `perm` is not a bijection of
+    /// `0..n` — checkpoints are external input.
+    pub fn adopt_permutation(
+        &mut self,
+        pool: &ThreadPool,
+        perm: &[u32],
+        p: &CsrMatrix<T>,
+    ) -> Result<(), String> {
+        assert!(self.zorder, "adopt_permutation applies to the Z-order mode only");
+        assert!(!self.adopted, "workspace must still be in original order");
+        let n = self.n();
+        if perm.len() != n {
+            return Err(format!("layout permutation has {} entries for n = {n}", perm.len()));
+        }
+        let mut seen = vec![false; n];
+        for &orig in perm {
+            let o = orig as usize;
+            if o >= n || seen[o] {
+                return Err(format!("layout permutation is not a bijection of 0..{n}"));
+            }
+            seen[o] = true;
+        }
+
+        self.state_scratch.resize(2 * n, T::ZERO);
+        self.perm.copy_from_slice(perm);
+        for (slot, &orig) in perm.iter().enumerate() {
+            self.inv_perm[orig as usize] = slot as u32;
+        }
+        // State rides into the layout: values relocated, never recomputed.
+        permute_pairs(pool, perm, &self.y, &mut self.state_scratch);
+        std::mem::swap(&mut self.y, &mut self.state_scratch);
+        permute_pairs(pool, perm, &self.opt.velocity, &mut self.state_scratch);
+        std::mem::swap(&mut self.opt.velocity, &mut self.state_scratch);
+        permute_pairs(pool, perm, &self.opt.gains, &mut self.state_scratch);
+        std::mem::swap(&mut self.opt.gains, &mut self.state_scratch);
+        let p_z = self.p_z.get_or_insert_with(|| CsrMatrix {
+            n,
+            row_ptr: Vec::new(),
+            col: Vec::new(),
+            val: Vec::new(),
+        });
+        permute_symmetric_into(pool, p, &self.perm, &self.inv_perm, p_z);
+        self.adopted = true;
+        Ok(())
     }
 
     /// Consume the workspace, returning the embedding un-permuted to the
@@ -293,7 +360,8 @@ mod tests {
         let y0 = random_y(n, 1);
         let pool = ThreadPool::new(4);
         let p = ring_p(n);
-        let mut ws = IterationWorkspace::new(y0.clone(), UpdateParams::default(), true, ADOPT_DRIFT_PCT);
+        let mut ws =
+            IterationWorkspace::new(y0.clone(), UpdateParams::default(), true, ADOPT_DRIFT_PCT);
         // distinct optimizer state so relocation is observable
         for i in 0..2 * n {
             ws.opt.velocity[i] = i as f64 * 0.5;
@@ -344,7 +412,12 @@ mod tests {
         assert_eq!(t2.layout_drift(), 0);
         assert!(!ws.maybe_adopt(&pool, &mut t2, &p));
         // original-layout workspaces never adopt
-        let mut ws_orig = IterationWorkspace::new(random_y(n, 3), UpdateParams::default(), false, ADOPT_DRIFT_PCT);
+        let mut ws_orig = IterationWorkspace::new(
+            random_y(n, 3),
+            UpdateParams::default(),
+            false,
+            ADOPT_DRIFT_PCT,
+        );
         let mut t3 = build_morton(&pool, &ws_orig.y);
         assert!(!ws_orig.maybe_adopt(&pool, &mut t3, &p));
         assert!(ws_orig.p_z.is_none());
@@ -356,7 +429,8 @@ mod tests {
         let y0 = random_y(n, 4);
         let pool = ThreadPool::new(2);
         let p = ring_p(n);
-        let mut ws = IterationWorkspace::new(y0.clone(), UpdateParams::default(), true, ADOPT_DRIFT_PCT);
+        let mut ws =
+            IterationWorkspace::new(y0.clone(), UpdateParams::default(), true, ADOPT_DRIFT_PCT);
         let mut tree = build_morton(&pool, &ws.y);
         assert!(ws.maybe_adopt(&pool, &mut tree, &p));
         assert_ne!(ws.y, y0, "layout must actually differ");
@@ -399,6 +473,84 @@ mod tests {
     }
 
     #[test]
+    fn adopt_permutation_reproduces_maybe_adopt_state_exactly() {
+        // The restore path: replaying a saved permutation over original-order
+        // state must land in the SAME in-memory state maybe_adopt produced.
+        let n = 400;
+        let y0 = random_y(n, 21);
+        let pool = ThreadPool::new(4);
+        let p = ring_p(n);
+        let mk = || {
+            let mut ws =
+                IterationWorkspace::new(y0.clone(), UpdateParams::default(), true, ADOPT_DRIFT_PCT);
+            for i in 0..2 * n {
+                ws.opt.velocity[i] = (i as f64).sin();
+                ws.opt.gains[i] = 1.0 + (i as f64).cos().abs();
+            }
+            ws
+        };
+        let mut live = mk();
+        let mut tree = build_morton(&pool, &live.y);
+        assert!(live.maybe_adopt(&pool, &mut tree, &p));
+        let perm = live.permutation().unwrap().to_vec();
+
+        let mut restored = mk();
+        restored.adopt_permutation(&pool, &perm, &p).unwrap();
+        assert_eq!(restored.y, live.y);
+        assert_eq!(restored.opt.velocity, live.opt.velocity);
+        assert_eq!(restored.opt.gains, live.opt.gains);
+        assert_eq!(restored.permutation().unwrap(), &perm[..]);
+        let (a, b) = (restored.p_z.as_ref().unwrap(), live.p_z.as_ref().unwrap());
+        assert_eq!(a.row_ptr, b.row_ptr);
+        assert_eq!(a.col, b.col);
+        assert_eq!(a.val, b.val);
+    }
+
+    #[test]
+    fn adopt_permutation_rejects_non_bijections() {
+        let n = 50;
+        let pool = ThreadPool::new(2);
+        let p = ring_p(n);
+        let mut ws = IterationWorkspace::new(
+            random_y(n, 22),
+            UpdateParams::default(),
+            true,
+            ADOPT_DRIFT_PCT,
+        );
+        let mut dup: Vec<u32> = (0..n as u32).collect();
+        dup[0] = 1; // slot 0 and 1 both claim original 1
+        assert!(ws.adopt_permutation(&pool, &dup, &p).is_err());
+        let short: Vec<u32> = (0..(n as u32 - 1)).collect();
+        assert!(ws.adopt_permutation(&pool, &short, &p).is_err());
+        let oob: Vec<u32> = (1..=n as u32).collect(); // contains n
+        assert!(ws.adopt_permutation(&pool, &oob, &p).is_err());
+        // state untouched by the failed attempts
+        assert!(ws.permutation().is_none());
+    }
+
+    #[test]
+    fn unpermute_pairs_into_covers_every_state_array() {
+        let n = 200;
+        let y0 = random_y(n, 23);
+        let pool = ThreadPool::new(4);
+        let p = ring_p(n);
+        let mut ws =
+            IterationWorkspace::new(y0.clone(), UpdateParams::default(), true, ADOPT_DRIFT_PCT);
+        let vel0: Vec<f64> = (0..2 * n).map(|i| i as f64 * 0.25).collect();
+        ws.opt.velocity.copy_from_slice(&vel0);
+        let mut out = Vec::new();
+        // identity before adoption
+        ws.unpermute_pairs_into(&ws.opt.velocity, &mut out);
+        assert_eq!(out, vel0);
+        let mut tree = build_morton(&pool, &ws.y);
+        assert!(ws.maybe_adopt(&pool, &mut tree, &p));
+        ws.unpermute_pairs_into(&ws.opt.velocity, &mut out);
+        assert_eq!(out, vel0, "velocity un-permutes back to original order");
+        ws.unpermute_pairs_into(&ws.y, &mut out);
+        assert_eq!(out, y0, "and the embedding path matches copy_original_order_into");
+    }
+
+    #[test]
     fn repeated_adoption_composes_against_original() {
         // Two adoptions in sequence: the composed permutation must still map
         // slots straight back to ORIGINAL indices (no compounding error).
@@ -406,7 +558,8 @@ mod tests {
         let y0 = random_y(n, 5);
         let pool = ThreadPool::new(4);
         let p = ring_p(n);
-        let mut ws = IterationWorkspace::new(y0.clone(), UpdateParams::default(), true, ADOPT_DRIFT_PCT);
+        let mut ws =
+            IterationWorkspace::new(y0.clone(), UpdateParams::default(), true, ADOPT_DRIFT_PCT);
         let mut t1 = build_morton(&pool, &ws.y);
         assert!(ws.maybe_adopt(&pool, &mut t1, &p));
         let perm0 = ws.permutation().unwrap().to_vec();

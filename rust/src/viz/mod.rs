@@ -60,7 +60,8 @@ pub fn rasterize<T: Real>(y: &[T], labels: &[u16], size: usize) -> (Vec<u8>, usi
     let usable = size as f64 * (1.0 - 2.0 * margin);
     for i in 0..n {
         let px = ((y[2 * i].to_f64() - lo[0]) / span[0] * usable + size as f64 * margin) as usize;
-        let py = ((y[2 * i + 1].to_f64() - lo[1]) / span[1] * usable + size as f64 * margin) as usize;
+        let py =
+            ((y[2 * i + 1].to_f64() - lo[1]) / span[1] * usable + size as f64 * margin) as usize;
         let color = label_color(labels[i]);
         for dx in 0..2 {
             for dy in 0..2 {
@@ -74,7 +75,12 @@ pub fn rasterize<T: Real>(y: &[T], labels: &[u16], size: usize) -> (Vec<u8>, usi
 }
 
 /// Write a binary PPM (P6) scatter plot.
-pub fn write_ppm<T: Real>(path: impl AsRef<Path>, y: &[T], labels: &[u16], size: usize) -> std::io::Result<()> {
+pub fn write_ppm<T: Real>(
+    path: impl AsRef<Path>,
+    y: &[T],
+    labels: &[u16],
+    size: usize,
+) -> std::io::Result<()> {
     let (img, w, h) = rasterize(y, labels, size);
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
     write!(f, "P6\n{w} {h}\n255\n")?;
@@ -83,7 +89,12 @@ pub fn write_ppm<T: Real>(path: impl AsRef<Path>, y: &[T], labels: &[u16], size:
 }
 
 /// Write an SVG scatter plot (for the docs; vector, label-colored circles).
-pub fn write_svg<T: Real>(path: impl AsRef<Path>, y: &[T], labels: &[u16], size: usize) -> std::io::Result<()> {
+pub fn write_svg<T: Real>(
+    path: impl AsRef<Path>,
+    y: &[T],
+    labels: &[u16],
+    size: usize,
+) -> std::io::Result<()> {
     let n = labels.len();
     assert_eq!(y.len(), 2 * n);
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);

@@ -1,0 +1,298 @@
+//! Integration: the persistence layer's cross-process contracts.
+//!
+//! Two families of assertions:
+//!
+//! 1. **Fidelity** — `Affinities` save → load → save is byte-identical, a
+//!    loaded artifact feeds sessions bit-identical to the in-memory fit, and
+//!    a session checkpointed to disk at iteration k and resumed runs on
+//!    bit-identical to an uninterrupted run (fixed thread count), under both
+//!    `--layout original` and `--layout zorder`.
+//! 2. **Hostility** — truncated files, flipped checksum bytes, wrong magic,
+//!    future format versions, wrong scalar width, and trailing garbage each
+//!    return their matching typed `PersistError` without panicking.
+
+use acc_tsne::data::synthetic::gaussian_mixture;
+use acc_tsne::parallel::ThreadPool;
+use acc_tsne::tsne::{
+    Affinities, Layout, PersistError, SessionCheckpoint, StagePlan, TsneConfig, TsneSession,
+};
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("acc_tsne_itest_{}_{name}", std::process::id()));
+    p
+}
+
+fn cfg(n_iter: usize) -> TsneConfig {
+    TsneConfig {
+        perplexity: 10.0,
+        n_iter,
+        // 0 ⇒ available_cores(), which honors ACC_TSNE_NUM_THREADS /
+        // RAYON_NUM_THREADS — CI's thread-count matrix pins these tests to
+        // 1/4/8 threads. Every bit-identity comparison below is
+        // within-process, so the resolved count is the same on both sides.
+        n_threads: 0,
+        seed: 7,
+        ..TsneConfig::default()
+    }
+}
+
+fn fit(n: usize, seed: u64) -> Affinities<'static, f64> {
+    let ds = gaussian_mixture::<f64>(n, 8, 4, 8.0, seed);
+    let pool = ThreadPool::new(4);
+    Affinities::fit(&pool, &ds.points, ds.n, ds.d, 10.0, &StagePlan::acc_tsne())
+}
+
+#[test]
+fn persist_affinities_save_load_save_is_byte_identical() {
+    let aff = fit(300, 1);
+    let p1 = tmp("aff_a.bin");
+    let p2 = tmp("aff_b.bin");
+    aff.save(&p1).unwrap();
+    let loaded = Affinities::<f64>::load(&p1).unwrap();
+    assert_eq!(loaded.n(), aff.n());
+    assert_eq!(loaded.perplexity(), aff.perplexity());
+    assert_eq!(loaded.k(), aff.k());
+    assert_eq!(loaded.p().row_ptr, aff.p().row_ptr);
+    assert_eq!(loaded.p().col, aff.p().col);
+    assert_eq!(loaded.p().val, aff.p().val);
+    loaded.save(&p2).unwrap();
+    let (a, b) = (std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+    assert_eq!(a, b, "save → load → save must be byte-identical");
+    std::fs::remove_file(p1).ok();
+    std::fs::remove_file(p2).ok();
+}
+
+#[test]
+fn persist_loaded_affinities_feed_bit_identical_sessions() {
+    let aff = fit(300, 2);
+    let path = tmp("aff_session.bin");
+    aff.save(&path).unwrap();
+    let loaded = Affinities::<f64>::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let c = cfg(30);
+    let run = |a: &Affinities<'_, f64>| {
+        let mut sess = TsneSession::new(a, StagePlan::acc_tsne(), c).unwrap();
+        sess.run(c.n_iter);
+        sess.finish()
+    };
+    let (mem, disk) = (run(&aff), run(&loaded));
+    assert_eq!(mem.embedding, disk.embedding, "loaded fit must be indistinguishable");
+    assert_eq!(mem.kl_divergence, disk.kl_divergence);
+}
+
+#[test]
+fn persist_checkpoint_resume_is_bit_identical_across_layouts() {
+    // THE acceptance contract: checkpoint at k, restart from the file, run to
+    // n == an uninterrupted n-iteration run, exactly, at a fixed thread
+    // count, for both layouts.
+    let aff = fit(300, 3);
+    for layout in [Layout::Original, Layout::Zorder] {
+        let plan = StagePlan::acc_tsne().with_layout(layout).unwrap();
+        let c = cfg(0);
+        let mut uninterrupted = TsneSession::new(&aff, plan, c).unwrap();
+        uninterrupted.run(50);
+        let want = uninterrupted.finish();
+
+        let path = tmp(&format!("ckpt_{}.bin", layout.name()));
+        let mut first = TsneSession::new(&aff, plan, c).unwrap();
+        first.run(20);
+        first.checkpoint(&path).unwrap();
+        drop(first); // the "restart": only the file carries the state
+
+        let mut resumed = TsneSession::restore(&aff, plan, c, &path).unwrap();
+        assert_eq!(resumed.iterations(), 20);
+        resumed.run(30);
+        let got = resumed.finish();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(got.embedding, want.embedding, "layout {layout}");
+        assert_eq!(got.kl_divergence, want.kl_divergence, "layout {layout}");
+        assert_eq!(got.n_iter, want.n_iter);
+    }
+}
+
+#[test]
+fn persist_checkpoint_mid_run_does_not_perturb_the_trajectory() {
+    let aff = fit(250, 4);
+    let c = cfg(0);
+    let plan = StagePlan::acc_tsne();
+    let mut plain = TsneSession::new(&aff, plan, c).unwrap();
+    plain.run(30);
+    let want = plain.finish();
+
+    let path = tmp("ckpt_noperturb.bin");
+    let mut observed = TsneSession::new(&aff, plan, c).unwrap();
+    for _ in 0..6 {
+        observed.run(5);
+        observed.checkpoint(&path).unwrap();
+    }
+    std::fs::remove_file(&path).ok();
+    let got = observed.finish();
+    assert_eq!(got.embedding, want.embedding);
+}
+
+#[test]
+fn persist_checkpoint_file_round_trips_through_disk_exactly() {
+    let aff = fit(250, 5);
+    let mut sess = TsneSession::new(&aff, StagePlan::acc_tsne(), cfg(0)).unwrap();
+    sess.run(25);
+    let ck = sess.to_checkpoint();
+    let path = tmp("ckpt_rt.bin");
+    ck.save(&path).unwrap();
+    let back = SessionCheckpoint::<f64>::load(&path).unwrap();
+    assert_eq!(back, ck, "disk round trip preserves every field bit-for-bit");
+    // save → load → save byte identity for checkpoints too
+    let path2 = tmp("ckpt_rt2.bin");
+    back.save(&path2).unwrap();
+    assert_eq!(std::fs::read(&path).unwrap(), std::fs::read(&path2).unwrap());
+    std::fs::remove_file(path).ok();
+    std::fs::remove_file(path2).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Hostile inputs. Each writes a valid artifact, corrupts it in a specific
+// way, and asserts the matching typed error — no panics, no garbage loads.
+// ---------------------------------------------------------------------------
+
+fn saved_affinities_bytes() -> Vec<u8> {
+    let aff = fit(200, 6);
+    let path = tmp("hostile_src.bin");
+    aff.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    bytes
+}
+
+fn load_from_bytes(bytes: &[u8], name: &str) -> Result<Affinities<'static, f64>, PersistError> {
+    let path = tmp(name);
+    std::fs::write(&path, bytes).unwrap();
+    let r = Affinities::<f64>::load(&path);
+    std::fs::remove_file(&path).ok();
+    r
+}
+
+#[test]
+fn persist_truncated_file_is_a_typed_truncation_error() {
+    let bytes = saved_affinities_bytes();
+    // every kind of cut: inside the magic, inside the header, at the header
+    // boundary, and inside the payload
+    for cut in [3usize, 17, 28, bytes.len() / 2, bytes.len() - 1] {
+        match load_from_bytes(&bytes[..cut], "hostile_trunc.bin") {
+            Err(PersistError::Truncated) => {}
+            other => panic!("cut at {cut}: expected Truncated, got {:?}", other.map(|_| ())),
+        }
+    }
+    // the empty file too
+    match load_from_bytes(&[], "hostile_empty.bin") {
+        Err(PersistError::Truncated) => {}
+        other => panic!("expected Truncated, got {:?}", other.map(|_| ())),
+    }
+}
+
+#[test]
+fn persist_flipped_checksum_byte_is_a_checksum_mismatch() {
+    let bytes = saved_affinities_bytes();
+    // flip a byte of the stored checksum itself (header offset 20..28) ...
+    let mut bad = bytes.clone();
+    bad[20] ^= 0xFF;
+    match load_from_bytes(&bad, "hostile_cksum.bin") {
+        Err(PersistError::ChecksumMismatch { stored, computed }) => {
+            assert_ne!(stored, computed)
+        }
+        other => panic!("expected ChecksumMismatch, got {:?}", other.map(|_| ())),
+    }
+    // ... and a byte of the payload (the checksum's other side). The flipped
+    // byte sits in the val array, far from any length field, so the payload
+    // still parses shape-wise and only the checksum can catch it.
+    let mut bad = bytes.clone();
+    let last = bad.len() - 3;
+    bad[last] ^= 0x01;
+    match load_from_bytes(&bad, "hostile_payload.bin") {
+        Err(PersistError::ChecksumMismatch { .. }) => {}
+        other => panic!("expected ChecksumMismatch, got {:?}", other.map(|_| ())),
+    }
+}
+
+#[test]
+fn persist_wrong_magic_is_a_typed_error() {
+    let mut bytes = saved_affinities_bytes();
+    bytes[..8].copy_from_slice(b"NOTMAGIC");
+    match load_from_bytes(&bytes, "hostile_magic.bin") {
+        Err(PersistError::BadMagic { found }) => assert_eq!(&found, b"NOTMAGIC"),
+        other => panic!("expected BadMagic, got {:?}", other.map(|_| ())),
+    }
+    // a checkpoint file loaded as affinities is also "wrong magic"
+    let aff = fit(200, 7);
+    let mut sess = TsneSession::new(&aff, StagePlan::acc_tsne(), cfg(0)).unwrap();
+    sess.run(2);
+    let path = tmp("hostile_kind.bin");
+    sess.checkpoint(&path).unwrap();
+    match Affinities::<f64>::load(&path) {
+        Err(PersistError::BadMagic { .. }) => {}
+        other => panic!("expected BadMagic, got {:?}", other.map(|_| ())),
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn persist_future_version_is_a_typed_error() {
+    let mut bytes = saved_affinities_bytes();
+    // version field: u32 LE at offset 8
+    bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+    match load_from_bytes(&bytes, "hostile_version.bin") {
+        Err(PersistError::UnsupportedVersion { found: 99, supported }) => {
+            assert_eq!(supported, acc_tsne::tsne::persist::FORMAT_VERSION)
+        }
+        other => panic!("expected UnsupportedVersion, got {:?}", other.map(|_| ())),
+    }
+}
+
+#[test]
+fn persist_wrong_scalar_width_is_a_typed_error() {
+    let bytes = saved_affinities_bytes(); // f64 artifact
+    let path = tmp("hostile_width.bin");
+    std::fs::write(&path, &bytes).unwrap();
+    match Affinities::<f32>::load(&path) {
+        Err(PersistError::ScalarWidthMismatch { found: 8, expected: 4 }) => {}
+        other => panic!("expected ScalarWidthMismatch, got {:?}", other.map(|_| ())),
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn persist_trailing_garbage_is_a_typed_error() {
+    let mut bytes = saved_affinities_bytes();
+    bytes.extend_from_slice(b"junk");
+    match load_from_bytes(&bytes, "hostile_trailing.bin") {
+        Err(PersistError::Corrupt(msg)) => assert!(msg.contains("trailing"), "{msg}"),
+        other => panic!("expected Corrupt(trailing), got {:?}", other.map(|_| ())),
+    }
+}
+
+#[test]
+fn persist_restore_rejects_checkpoint_from_a_different_fit() {
+    let aff = fit(300, 8);
+    let aff_other = fit(200, 9);
+    let c = cfg(0);
+    let mut sess = TsneSession::new(&aff, StagePlan::acc_tsne(), c).unwrap();
+    sess.run(5);
+    let path = tmp("ckpt_mismatch.bin");
+    sess.checkpoint(&path).unwrap();
+    match TsneSession::restore(&aff_other, StagePlan::acc_tsne(), c, &path) {
+        Err(PersistError::Mismatch(msg)) => {
+            assert!(msg.contains("300") && msg.contains("200"), "{msg}")
+        }
+        other => panic!("expected Mismatch, got {:?}", other.map(|_| ())),
+    }
+    // Same n, same P, but a different fit perplexity: the affinity
+    // fingerprint (nnz + perplexity) must catch it.
+    let aff_refit = Affinities::from_csr(aff.p().clone(), 12.0);
+    match TsneSession::restore(&aff_refit, StagePlan::acc_tsne(), c, &path) {
+        Err(PersistError::Mismatch(msg)) => {
+            assert!(msg.contains("different fit"), "{msg}")
+        }
+        other => panic!("expected fingerprint Mismatch, got {:?}", other.map(|_| ())),
+    }
+    std::fs::remove_file(path).ok();
+}

@@ -76,7 +76,15 @@ fn thread_count_does_not_change_convergence_quality() {
 fn step_times_are_recorded_for_all_pipeline_steps() {
     let ds = gaussian_mixture::<f64>(500, 8, 4, 6.0, 7);
     let r = run_tsne(&ds.points, ds.n, ds.d, &cfg(20, 4), Implementation::AccTsne);
-    for step in [Step::Knn, Step::Bsp, Step::TreeBuild, Step::Summarize, Step::Attractive, Step::Repulsive, Step::Update] {
+    for step in [
+        Step::Knn,
+        Step::Bsp,
+        Step::TreeBuild,
+        Step::Summarize,
+        Step::Attractive,
+        Step::Repulsive,
+        Step::Update,
+    ] {
         assert!(
             r.step_times.get(step) > 0.0,
             "step {} recorded no time",

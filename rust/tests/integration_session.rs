@@ -26,7 +26,7 @@ fn cfg(n_iter: usize) -> TsneConfig {
 }
 
 /// An easy, well-separated mixture: 300 points, 3 far-apart clusters.
-fn easy_fit() -> Affinities<f64> {
+fn easy_fit() -> Affinities<'static, f64> {
     let ds = gaussian_mixture::<f64>(300, 8, 3, 12.0, 31);
     let pool = ThreadPool::new(4);
     Affinities::fit(&pool, &ds.points, ds.n, ds.d, 10.0, &StagePlan::acc_tsne())

@@ -344,7 +344,13 @@ fn prop_forces_antisymmetric_for_two_points() {
 /// rather than recomputed and the CSR re-index preserves per-row entry order,
 /// so over a short horizon the embeddings agree to FP noise. Sweeps
 /// theta in {0, 0.5}, 1/4/8-thread pools, and duplicate-heavy inputs.
-fn layout_parity(data: &[f64], n: usize, d: usize, theta: f64, threads: usize) -> Result<(), String> {
+fn layout_parity(
+    data: &[f64],
+    n: usize,
+    d: usize,
+    theta: f64,
+    threads: usize,
+) -> Result<(), String> {
     let mut cfg = TsneConfig {
         perplexity: 5.0,
         theta,

@@ -1,0 +1,111 @@
+"""Unit tests for scripts/bench_trend.py (run by the cheap early CI step:
+python3 -m unittest discover -s scripts -p "test_*.py").
+
+The script is fails-soft by contract, so every scenario asserts on the
+*output* (warnings emitted or not) and on the return code staying 0.
+"""
+import contextlib
+import io
+import json
+import os
+import tempfile
+import unittest
+
+import bench_trend
+
+
+class BenchTrendCase(unittest.TestCase):
+    def setUp(self):
+        self._tmp = tempfile.TemporaryDirectory()
+        self._old_cwd = os.getcwd()
+        os.chdir(self._tmp.name)
+        os.mkdir(bench_trend.BASELINE_DIR)
+
+    def tearDown(self):
+        os.chdir(self._old_cwd)
+        self._tmp.cleanup()
+
+    def write(self, path, payload):
+        with open(path, "w") as f:
+            json.dump(payload, f)
+
+    def run_main(self, paths):
+        out = io.StringIO()
+        with contextlib.redirect_stdout(out):
+            rc = bench_trend.main(paths)
+        return rc, out.getvalue()
+
+    def test_regression_detected(self):
+        self.write(os.path.join(bench_trend.BASELINE_DIR, "BENCH_x.json"), {"a_s": 1.0})
+        self.write("BENCH_x.json", {"a_s": 1.5})
+        rc, out = self.run_main(["BENCH_x.json"])
+        self.assertEqual(rc, 0, "the trend check is advisory: rc stays 0")
+        self.assertIn("::warning", out)
+        self.assertIn("bench regression", out)
+        self.assertIn("a_s", out)
+        self.assertIn("1 warning(s)", out)
+
+    def test_nested_regression_detected(self):
+        self.write(
+            os.path.join(bench_trend.BASELINE_DIR, "BENCH_x.json"),
+            {"zorder": {"update_s": 2.0}},
+        )
+        self.write("BENCH_x.json", {"zorder": {"update_s": 4.0}})
+        rc, out = self.run_main(["BENCH_x.json"])
+        self.assertEqual(rc, 0)
+        self.assertIn("::warning", out)
+        self.assertIn("zorder.update_s", out)
+
+    def test_missing_baseline_reported(self):
+        self.write("BENCH_x.json", {"a_s": 1.0})
+        rc, out = self.run_main(["BENCH_x.json"])
+        self.assertEqual(rc, 0)
+        self.assertIn("no baseline", out)
+        self.assertIn("a_s", out, "current values are printed so a baseline can be seeded")
+        self.assertNotIn("::warning", out, "a missing baseline is informational, not a warning")
+
+    def test_within_tolerance_silent(self):
+        self.write(os.path.join(bench_trend.BASELINE_DIR, "BENCH_x.json"), {"a_s": 1.0})
+        self.write("BENCH_x.json", {"a_s": 1.1})  # +10% < the 20% threshold
+        rc, out = self.run_main(["BENCH_x.json"])
+        self.assertEqual(rc, 0)
+        self.assertNotIn("::warning", out)
+        self.assertIn("ok BENCH_x.json:a_s", out)
+        self.assertIn("0 warning(s)", out)
+
+    def test_improvement_is_silent(self):
+        self.write(os.path.join(bench_trend.BASELINE_DIR, "BENCH_x.json"), {"a_s": 1.0})
+        self.write("BENCH_x.json", {"a_s": 0.3})
+        rc, out = self.run_main(["BENCH_x.json"])
+        self.assertEqual(rc, 0)
+        self.assertNotIn("::warning", out)
+
+    def test_missing_snapshot_warns_but_does_not_fail(self):
+        rc, out = self.run_main(["BENCH_never_written.json"])
+        self.assertEqual(rc, 0)
+        self.assertIn("::warning", out)
+        self.assertIn("missing", out)
+
+    def test_new_keys_without_baseline_are_reported_not_flagged(self):
+        self.write(os.path.join(bench_trend.BASELINE_DIR, "BENCH_x.json"), {"a_s": 1.0})
+        self.write("BENCH_x.json", {"a_s": 1.0, "persist": {"save_s": 0.5}})
+        rc, out = self.run_main(["BENCH_x.json"])
+        self.assertEqual(rc, 0)
+        self.assertNotIn("::warning", out)
+        self.assertIn("persist.save_s", out)
+        self.assertIn("without a baseline", out)
+
+    def test_non_timing_keys_are_ignored(self):
+        # only *_s keys participate in the trend; counters may drift freely
+        self.write(
+            os.path.join(bench_trend.BASELINE_DIR, "BENCH_x.json"),
+            {"a_s": 1.0, "n": 1000, "speedup": 2.0},
+        )
+        self.write("BENCH_x.json", {"a_s": 1.0, "n": 9000, "speedup": 0.1})
+        rc, out = self.run_main(["BENCH_x.json"])
+        self.assertEqual(rc, 0)
+        self.assertNotIn("::warning", out)
+
+
+if __name__ == "__main__":
+    unittest.main()
