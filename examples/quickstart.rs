@@ -10,7 +10,7 @@
 use acc_tsne::data::synthetic::gaussian_mixture;
 use acc_tsne::parallel::ThreadPool;
 use acc_tsne::tsne::{
-    Affinities, Convergence, ObserverControl, StagePlan, TsneConfig, TsneSession,
+    Affinities, Convergence, KnnGraph, ObserverControl, StagePlan, TsneConfig, TsneSession,
 };
 use acc_tsne::viz;
 
@@ -28,7 +28,8 @@ fn main() {
     // Phase 1 — the affinity fit (KNN → BSP → symmetrize), computed ONCE.
     let plan = StagePlan::acc_tsne();
     let pool = ThreadPool::with_all_cores();
-    let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, cfg.perplexity, &plan);
+    let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, cfg.perplexity, &plan)
+        .expect("hostile shapes come back as typed FitErrors");
     println!(
         "affinities: nnz={} fit in {:.2}s",
         aff.p().nnz(),
@@ -92,6 +93,37 @@ fn main() {
         aff_loaded.p().nnz(),
         aff_loaded.p().val == aff.p().val
     );
+
+    // KNN-graph persistence — the multi-perplexity serving path. KNN
+    // dominates the fit, but the graph depends only on the data and k: save
+    // it once (built at the LARGEST sweep perplexity's ⌊3u⌋), reload it
+    // anywhere, and every re-fit is BSP-only. A re-fit at the fit perplexity
+    // is bit-identical to the full fit above.
+    let graph = KnnGraph::build_for_perplexity(&pool, &ds.points, ds.n, ds.d, 30.0, &plan)
+        .expect("valid shape");
+    graph.save("results/quickstart.knn").expect("save knn graph");
+    let graph = KnnGraph::<f64>::load("results/quickstart.knn").expect("load knn graph");
+    graph.verify_source(&ds.points, ds.n, ds.d).expect("same dataset");
+    println!(
+        "persisted knn: results/quickstart.knn (k={}, engine={})",
+        graph.k(),
+        graph.engine()
+    );
+    for u in [10.0, 20.0, 30.0] {
+        let aff_u = Affinities::from_knn(&pool, &graph, u, &plan).expect("floor(3u) <= k");
+        let mut sess_u = TsneSession::new(&aff_u, plan, cfg).expect("preset plans validate");
+        sess_u.run(250);
+        let bsp_s = aff_u.step_times().total();
+        println!(
+            "  perplexity {u:>4}: KL = {:.4} (re-fit in {bsp_s:.3}s, no KNN{})",
+            sess_u.finish().kl_divergence,
+            if u == 30.0 && aff_u.p().val == aff.p().val {
+                "; P bit-identical to the full fit"
+            } else {
+                ""
+            }
+        );
+    }
 
     let mut cfg_c = cfg;
     cfg_c.seed = 7;

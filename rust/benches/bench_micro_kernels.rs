@@ -8,6 +8,9 @@
 //!   repulsive: scalar vs SIMD-tiled (SoA traversal view, masked Eq. 9) —
 //!     also snapshotted to BENCH_repulsive.json for the perf trajectory;
 //!   BSP: sequential vs parallel;
+//!   KNN graph: save/load + BSP-only perplexity re-fit vs a full fit
+//!     (`knn_graph.*` keys of BENCH_gradient_loop.json — the serving cost of
+//!     a perplexity sweep);
 //!   gradient loop: original vs Z-order-persistent layout (per-step times
 //!     from the pipeline itself) — snapshotted to BENCH_gradient_loop.json.
 
@@ -26,7 +29,7 @@ use acc_tsne::quadtree::morton::{encode_points, encode_points_simd, RootCell};
 use acc_tsne::quadtree::summarize::{summarize_parallel, summarize_sequential};
 use acc_tsne::quadtree::view::TraversalView;
 use acc_tsne::sparse::{symmetrize, CsrMatrix};
-use acc_tsne::tsne::{Affinities, Layout, StagePlan, TsneConfig, TsneSession};
+use acc_tsne::tsne::{Affinities, KnnGraph, Layout, StagePlan, TsneConfig, TsneSession};
 
 fn env_n() -> usize {
     std::env::var("ACC_TSNE_MICRO_N")
@@ -183,6 +186,40 @@ fn main() {
     b.bench("simd+prefetch-1t", || attractive_forces(&seq_pool, &p, &y, Variant::Simd, &mut out));
     b.report();
 
+    // --- KNN graph persistence + perplexity re-fit (the multi-perplexity
+    // serving path: KNN once, BSP per sweep point). fit_s is the full
+    // KNN+BSP fit the artifact amortizes; refit_bsp_s is what each further
+    // perplexity costs from a built/loaded graph.
+    let knn_plan = StagePlan::acc_tsne();
+    let mut b = Bencher::new(&format!("knn_refit (n={an}, d={d})")).sampling(1, 3, 10.0);
+    let fit_s = b
+        .bench("fit_full", || {
+            Affinities::fit(&pool, &data, an, d, 30.0, &knn_plan).expect("valid fit").n()
+        })
+        .mean;
+    let graph = KnnGraph::build_for_perplexity(&pool, &data, an, d, 30.0, &knn_plan)
+        .expect("valid build");
+    let graph_path =
+        std::env::temp_dir().join(format!("acc_tsne_bench_knn_{}.bin", std::process::id()));
+    let knn_save_s = b.bench("graph_save", || graph.save(&graph_path).expect("bench save")).mean;
+    let knn_load_s = b
+        .bench("graph_load", || KnnGraph::<f64>::load(&graph_path).expect("bench load").n())
+        .mean;
+    let refit_bsp_s = b
+        .bench("refit_bsp", || {
+            Affinities::from_knn(&pool, &graph, 10.0, &knn_plan).expect("valid refit").n()
+        })
+        .mean;
+    b.report();
+    std::fs::remove_file(&graph_path).ok();
+    println!(
+        "  one graph, sweep of m perplexities: fit {:.3}s once vs {:.3}s per re-fit \
+         ({:.1}x per sweep point)",
+        fit_s,
+        refit_bsp_s,
+        fit_s / refit_bsp_s.max(1e-12)
+    );
+
     // --- θ ablation: BH speed/accuracy trade-off (paper Eq. 9's knob).
     let an2 = n.min(20_000);
     let y2: Vec<f64> = (0..2 * an2).map(|_| rng.next_gaussian() * 10.0).collect();
@@ -263,7 +300,7 @@ fn main() {
     // One Affinities instance drives the layout A/B *and* the adoption sweep
     // below — the session API's fit-once/descend-many contract, with no
     // per-run copy of P.
-    let aff_loop = Affinities::from_csr(p_loop, 30.0);
+    let aff_loop = Affinities::from_csr(p_loop, 30.0).expect("valid synthetic CSR");
 
     // --- affinities persistence (the serving layer's cold-start path:
     // loading a cached fit instead of redoing KNN+BSP). Times a full
@@ -361,6 +398,10 @@ fn main() {
     js.push_str("  },\n");
     js.push_str(&format!(
         "  \"persist\": {{ \"save_s\": {save_s:.6e}, \"load_s\": {load_s:.6e} }},\n"
+    ));
+    js.push_str(&format!(
+        "  \"knn_graph\": {{ \"fit_s\": {fit_s:.6e}, \"save_s\": {knn_save_s:.6e}, \
+         \"load_s\": {knn_load_s:.6e}, \"refit_bsp_s\": {refit_bsp_s:.6e} }},\n"
     ));
     js.push_str(&format!(
         "  \"speedup_attractive\": {:.3},\n",

@@ -23,7 +23,9 @@ impl Summary {
             0.0
         };
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp, not partial_cmp().unwrap(): one NaN measurement (a
+        // poisoned timer, a 0/0 ratio) must not abort a whole bench run.
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let median = if n % 2 == 1 {
             sorted[n / 2]
         } else {
@@ -94,6 +96,16 @@ mod tests {
     #[should_panic]
     fn empty_panics() {
         Summary::of(&[]);
+    }
+
+    #[test]
+    fn nan_sample_does_not_abort() {
+        // NaN sorts last under the IEEE total order, so min/median stay
+        // meaningful and the call must not panic.
+        let s = Summary::of(&[2.0, f64::NAN, 1.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 2.0);
+        assert!(s.max.is_nan());
     }
 
     #[test]

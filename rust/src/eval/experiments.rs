@@ -107,7 +107,8 @@ pub fn table3_accuracy(cfg: &ExpConfig, datasets: &[PaperDataset]) -> Vec<Vec<St
         let ds = gen(d, cfg);
         let tc = tsne_cfg(cfg, threads);
         let aff =
-            Affinities::fit(&pool, &ds.points, ds.n, ds.d, tc.perplexity, &StagePlan::acc_tsne());
+            Affinities::fit(&pool, &ds.points, ds.n, ds.d, tc.perplexity, &StagePlan::acc_tsne())
+                .expect("valid fit");
         let kl_of = |imp: Implementation, seed: u64| -> f64 {
             let mut c = tc;
             c.seed = seed;

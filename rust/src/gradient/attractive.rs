@@ -31,11 +31,42 @@ pub enum Variant {
 }
 
 impl Variant {
+    pub const ALL: [Variant; 3] = [Variant::Scalar, Variant::Prefetch, Variant::Simd];
+
+    /// Stable, parseable name. [`Variant::Simd`] historically reported
+    /// itself as "simd+prefetch", which nothing could parse back;
+    /// [`FromStr`](std::str::FromStr) still accepts that legacy spelling.
     pub fn name(self) -> &'static str {
         match self {
             Variant::Scalar => "scalar",
             Variant::Prefetch => "prefetch",
-            Variant::Simd => "simd+prefetch",
+            Variant::Simd => "simd",
+        }
+    }
+
+    /// [`FromStr`](std::str::FromStr) without the error payload.
+    pub fn from_name(s: &str) -> Option<Self> {
+        s.parse().ok()
+    }
+}
+
+impl std::fmt::Display for Variant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Variant {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "scalar" => Ok(Variant::Scalar),
+            "prefetch" => Ok(Variant::Prefetch),
+            "simd" | "simd+prefetch" => Ok(Variant::Simd),
+            _ => Err(format!(
+                "unknown attractive variant '{s}' (expected: scalar, prefetch, simd)"
+            )),
         }
     }
 }
@@ -311,6 +342,20 @@ mod tests {
             assert_eq!(out[0], 0.0, "{}", variant.name());
             assert_eq!(out[4], 0.0);
         }
+    }
+
+    #[test]
+    fn variant_names_roundtrip() {
+        for v in Variant::ALL {
+            assert_eq!(Variant::from_name(v.name()), Some(v));
+            assert_eq!(v.to_string(), v.name());
+            assert_eq!(v.name().parse::<Variant>(), Ok(v));
+        }
+        // the legacy unparseable label is accepted as an alias
+        assert_eq!(Variant::from_name("simd+prefetch"), Some(Variant::Simd));
+        assert_eq!(Variant::from_name("bogus"), None);
+        let err = "bogus".parse::<Variant>().unwrap_err();
+        assert!(err.contains("prefetch"), "error lists the choices: {err}");
     }
 
     #[test]

@@ -39,6 +39,21 @@ impl<T: Real> NeighborLists<T> {
     pub fn dists(&self, i: usize) -> &[T] {
         &self.distances_sq[i * self.k..(i + 1) * self.k]
     }
+
+    /// The first `k_new` entries of every row. Rows are ascending by
+    /// distance, so this is exactly the `k_new`-nearest-neighbor result over
+    /// the same data — the shrink that lets one deep KNN graph serve every
+    /// smaller ⌊3·perplexity⌋ support (`tsne::Affinities::from_knn`).
+    pub fn truncated(&self, k_new: usize) -> NeighborLists<T> {
+        assert!(k_new <= self.k, "cannot grow a neighbor list ({k_new} > {})", self.k);
+        let mut indices = Vec::with_capacity(self.n * k_new);
+        let mut dists = Vec::with_capacity(self.n * k_new);
+        for i in 0..self.n {
+            indices.extend_from_slice(&self.neighbors(i)[..k_new]);
+            dists.extend_from_slice(&self.dists(i)[..k_new]);
+        }
+        NeighborLists { n: self.n, k: k_new, indices, distances_sq: dists }
+    }
 }
 
 /// A KNN engine (native or XLA-offloaded).
@@ -215,7 +230,10 @@ pub fn knn_reference<T: Real>(data: &[T], n: usize, d: usize, k: usize) -> Neigh
                 (acc, j as u32)
             })
             .collect();
-        cand.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // total_cmp, not partial_cmp().unwrap(): a NaN coordinate in hostile
+        // or synthetic data must not abort the oracle the engines are
+        // compared against (NaNs sort last under the IEEE total order).
+        cand.sort_by(|a, b| a.0.to_f64().total_cmp(&b.0.to_f64()));
         for j in 0..k {
             indices[i * k + j] = cand[j].1;
             dists[i * k + j] = cand[j].0;
@@ -300,6 +318,39 @@ mod tests {
         // nearest neighbor of 0 is its duplicate at distance ~0
         assert_eq!(nl.neighbors(0)[0], 1);
         assert!(nl.dists(0)[0] < 1e-12);
+    }
+
+    #[test]
+    fn truncated_rows_equal_a_fresh_smaller_k_search() {
+        let n = 150;
+        let d = 5;
+        let data = random_data(n, d, 11);
+        let pool = ThreadPool::new(3);
+        let deep = BruteForceKnn::default().search(&pool, &data, n, d, 20);
+        let small = BruteForceKnn::default().search(&pool, &data, n, d, 7);
+        let cut = deep.truncated(7);
+        assert_eq!(cut.n, n);
+        assert_eq!(cut.k, 7);
+        assert_eq!(cut.indices, small.indices);
+        assert_eq!(cut.distances_sq, small.distances_sq);
+        // full-width truncation is the identity
+        let same = deep.truncated(20);
+        assert_eq!(same.indices, deep.indices);
+        assert_eq!(same.distances_sq, deep.distances_sq);
+    }
+
+    #[test]
+    fn reference_oracle_survives_nan_coordinates() {
+        // One poisoned sample must not abort the oracle (total_cmp, not
+        // partial_cmp().unwrap()); NaN distances sort last, so the finite
+        // neighbors still come out front.
+        let mut data = random_data(40, 3, 13);
+        data[5 * 3] = f64::NAN;
+        let nl = knn_reference(&data, 40, 3, 4);
+        for j in nl.neighbors(0) {
+            assert_ne!(*j, 5, "NaN point must not be a nearest neighbor of 0");
+        }
+        assert!(nl.dists(0).iter().all(|v| v.is_finite()));
     }
 
     #[test]

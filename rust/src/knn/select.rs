@@ -2,10 +2,25 @@
 //! (distance, index) pairs seen. The KNN inner loop pushes every candidate;
 //! the heap root is the current k-th best, giving an O(log k) accept path and
 //! an O(1) reject path (the common case).
+//!
+//! Candidates are ordered by the **(distance, index) lexicographic total
+//! order**, not by distance alone: exact distance ties (duplicate points)
+//! resolve to the smaller index, so the selected k-set is a deterministic,
+//! scan-order-independent function of the candidates — and the k₂ smallest
+//! are always a prefix of the k₁ smallest for k₂ ≤ k₁. That prefix stability
+//! is what lets a deep KNN graph re-fit smaller perplexities bit-identically
+//! (`tsne::Affinities::from_knn` truncates rows).
 
 use crate::common::float::Real;
 
-/// Max-heap over distance holding at most `k` best (smallest) candidates.
+/// `a < b` under the (distance, index) lexicographic total order.
+#[inline(always)]
+fn lt<T: Real>(a: &(T, u32), b: &(T, u32)) -> bool {
+    a.0 < b.0 || (a.0 == b.0 && a.1 < b.1)
+}
+
+/// Max-heap over (distance, index) holding at most `k` best (smallest)
+/// candidates.
 #[derive(Clone, Debug)]
 pub struct KBest<T: Real> {
     k: usize,
@@ -41,13 +56,15 @@ impl<T: Real> KBest<T> {
         }
     }
 
-    /// Offer a candidate.
+    /// Offer a candidate. Ties on distance resolve to the smaller index
+    /// (the lexicographic total order), so the retained set never depends
+    /// on the scan order or on `k` beyond the cut itself.
     #[inline]
     pub fn push(&mut self, dist: T, idx: u32) {
         if self.heap.len() < self.k {
             self.heap.push((dist, idx));
             self.sift_up(self.heap.len() - 1);
-        } else if dist < self.heap[0].0 {
+        } else if lt(&(dist, idx), &self.heap[0]) {
             self.heap[0] = (dist, idx);
             self.sift_down(0);
         }
@@ -56,7 +73,7 @@ impl<T: Real> KBest<T> {
     fn sift_up(&mut self, mut i: usize) {
         while i > 0 {
             let parent = (i - 1) / 2;
-            if self.heap[i].0 > self.heap[parent].0 {
+            if lt(&self.heap[parent], &self.heap[i]) {
                 self.heap.swap(i, parent);
                 i = parent;
             } else {
@@ -71,10 +88,10 @@ impl<T: Real> KBest<T> {
             let l = 2 * i + 1;
             let r = 2 * i + 2;
             let mut largest = i;
-            if l < n && self.heap[l].0 > self.heap[largest].0 {
+            if l < n && lt(&self.heap[largest], &self.heap[l]) {
                 largest = l;
             }
-            if r < n && self.heap[r].0 > self.heap[largest].0 {
+            if r < n && lt(&self.heap[largest], &self.heap[r]) {
                 largest = r;
             }
             if largest == i {
@@ -85,10 +102,14 @@ impl<T: Real> KBest<T> {
         }
     }
 
-    /// Drain into (distance-ascending) sorted order.
+    /// Drain into sorted order: distance ascending, index ascending within
+    /// equal distances (the same total order `push` selects under).
     pub fn into_sorted(mut self) -> Vec<(T, u32)> {
-        self.heap
-            .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        self.heap.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.1.cmp(&b.1))
+        });
         self.heap
     }
 }
@@ -131,6 +152,28 @@ mod tests {
         assert_eq!(kb.threshold(), Some(4.0));
         kb.push(1.0, 2);
         assert_eq!(kb.threshold(), Some(2.0));
+    }
+
+    #[test]
+    fn ties_resolve_to_smaller_indices_independent_of_scan_order_and_k() {
+        // Four zero-distance candidates plus one far one, in two scan
+        // orders. The retained set must be the (dist, idx)-smallest k in
+        // both, and the k=2 result must be a prefix of the k=3 result —
+        // the contract Affinities::from_knn's truncation rests on.
+        let scans: [&[(f64, u32)]; 2] = [
+            &[(0.0, 7), (0.0, 2), (5.0, 1), (0.0, 9), (0.0, 4)],
+            &[(0.0, 9), (5.0, 1), (0.0, 4), (0.0, 2), (0.0, 7)],
+        ];
+        for scan in scans {
+            for (k, want) in [(2, vec![2u32, 4]), (3, vec![2, 4, 7])] {
+                let mut kb = KBest::<f64>::new(k);
+                for &(dist, idx) in scan {
+                    kb.push(dist, idx);
+                }
+                let got: Vec<u32> = kb.into_sorted().iter().map(|p| p.1).collect();
+                assert_eq!(got, want, "k = {k}");
+            }
+        }
     }
 
     #[test]

@@ -34,10 +34,12 @@
 //! let ds = gaussian_mixture::<f64>(2_000, 16, 10, 4.0, 42);
 //! let cfg = TsneConfig::default();
 //!
-//! // Phase 1 — KNN → perplexity search → symmetrize, computed once.
+//! // Phase 1 — KNN → perplexity search → symmetrize, computed once. Hostile
+//! // shapes and out-of-range perplexities are typed FitErrors, not panics.
 //! let plan = StagePlan::acc_tsne(); // presets: sklearn_like()/daal4py_like()/fit_sne()/...
 //! let pool = ThreadPool::with_all_cores();
-//! let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, cfg.perplexity, &plan);
+//! let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, cfg.perplexity, &plan)
+//!     .expect("valid shape and perplexity");
 //!
 //! // Phase 2 — a resumable optimizer over the fitted affinities.
 //! let mut session = TsneSession::new(&aff, plan, cfg).expect("preset plans validate");
@@ -83,7 +85,8 @@
 //! let pool = ThreadPool::with_all_cores();
 //!
 //! // Fit once, persist, and reuse from any process.
-//! let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, cfg.perplexity, &plan);
+//! let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, cfg.perplexity, &plan)
+//!     .expect("valid fit");
 //! aff.save("digits.affinities").expect("write artifact");
 //! let aff = Affinities::<f64>::load("digits.affinities").expect("read artifact");
 //!
@@ -100,6 +103,45 @@
 //! session.run(500);
 //! let result = session.finish();
 //! println!("KL = {:.3}", result.kl_divergence);
+//! ```
+//!
+//! ### Fit KNN once, sweep perplexities
+//!
+//! KNN dominates the fit wall clock, but the neighbor graph depends only on
+//! the data and `k` — the perplexity enters in step 2 (BSP), which consumes
+//! the ⌊3u⌋ *nearest* stored neighbors. [`tsne::KnnGraph`] makes that split
+//! first-class: build (or load) the graph once at your **largest** sweep
+//! perplexity, then [`tsne::Affinities::from_knn`] re-fits at every smaller
+//! one in BSP-only time — **bit-identical** to a fresh full fit at that
+//! perplexity, whether the graph is fresh from [`tsne::KnnGraph::build`] or
+//! round-tripped through [`tsne::KnnGraph::save`]/[`tsne::KnnGraph::load`]:
+//!
+//! ```no_run
+//! use acc_tsne::data::synthetic::gaussian_mixture;
+//! use acc_tsne::parallel::ThreadPool;
+//! use acc_tsne::tsne::{Affinities, KnnGraph, StagePlan, TsneConfig, TsneSession};
+//!
+//! let ds = gaussian_mixture::<f64>(2_000, 16, 10, 4.0, 42);
+//! let plan = StagePlan::acc_tsne();
+//! let pool = ThreadPool::with_all_cores();
+//!
+//! // KNN once, at the largest perplexity of the sweep (k = ⌊3·50⌋ = 150).
+//! let graph = KnnGraph::build_for_perplexity(&pool, &ds.points, ds.n, ds.d, 50.0, &plan)
+//!     .expect("valid shape and perplexity");
+//! graph.save("digits.knn").expect("write artifact");
+//!
+//! // Later / elsewhere: reload, check it matches this dataset, and sweep —
+//! // each re-fit runs BSP + symmetrize only, never KNN.
+//! let graph = KnnGraph::<f64>::load("digits.knn").expect("read artifact");
+//! graph.verify_source(&ds.points, ds.n, ds.d).expect("same data");
+//! for perplexity in [10.0, 30.0, 50.0] {
+//!     let aff = Affinities::from_knn(&pool, &graph, perplexity, &plan)
+//!         .expect("floor(3u) fits the graph's k");
+//!     let cfg = TsneConfig { perplexity, ..TsneConfig::default() };
+//!     let mut session = TsneSession::new(&aff, plan, cfg).expect("preset plans validate");
+//!     session.run(1000);
+//!     println!("perplexity {perplexity}: KL = {:.3}", session.finish().kl_divergence);
+//! }
 //! ```
 //!
 //! The classic one-shot call is still there, as a thin wrapper that is

@@ -21,19 +21,24 @@
 //! un-permuted KL/grad-norm snapshots.
 //!
 //! Persistence: `--save-affinities FILE` writes the fitted artifact for
-//! cross-process reuse; `--checkpoint FILE` writes a session checkpoint at
-//! the end of the run (every N iterations with `--checkpoint-every N`); and
-//! `--resume FILE` continues a checkpointed session — bit-identical to an
-//! uninterrupted run at a fixed thread count.
+//! cross-process reuse; `--save-knn FILE` writes the KNN graph alone, and
+//! `--knn FILE` re-fits from it at the requested `--perplexity` without
+//! re-running KNN (bit-identical to a fresh fit at that perplexity, for any
+//! perplexity whose ⌊3u⌋ fits the graph's k); `--checkpoint FILE` writes a
+//! session checkpoint at the end of the run (every N iterations with
+//! `--checkpoint-every N`); and `--resume FILE` continues a checkpointed
+//! session — bit-identical to an uninterrupted run at a fixed thread count.
 
 use acc_tsne::cli::Args;
+use acc_tsne::common::timer::StepTimes;
 use acc_tsne::data::datasets::PaperDataset;
 use acc_tsne::eval::{experiments, ExpConfig};
 use acc_tsne::parallel::pool::available_cores;
 use acc_tsne::parallel::ThreadPool;
 use acc_tsne::tsne::{
-    Affinities, Convergence, Implementation, Layout, ObserverControl, RepulsiveVariant, Scalar,
-    SessionCheckpoint, StagePlan, StopReason, TsneConfig, TsneResult, TsneSession,
+    Affinities, AttractiveVariant, Convergence, Implementation, KnnGraph, Layout, ObserverControl,
+    RepulsiveVariant, Scalar, SessionCheckpoint, StagePlan, StopReason, TsneConfig, TsneResult,
+    TsneSession,
 };
 
 fn main() {
@@ -49,9 +54,9 @@ fn main() {
 
 const COMMON_FLAGS: &[&str] = &[
     "dataset", "impl", "scale", "iters", "threads", "seed", "out", "plot", "f32", "sweep",
-    "perplexity", "theta", "repulsive", "layout", "adopt-threshold", "min-grad-norm",
-    "n-iter-without-progress", "snapshot-every", "save-affinities", "affinities", "checkpoint",
-    "checkpoint-every", "resume",
+    "perplexity", "theta", "repulsive", "layout", "attractive", "adopt-threshold",
+    "min-grad-norm", "n-iter-without-progress", "snapshot-every", "save-affinities",
+    "affinities", "checkpoint", "checkpoint-every", "resume", "save-knn", "knn",
 ];
 
 fn exp_config(args: &Args) -> Result<ExpConfig, String> {
@@ -119,6 +124,12 @@ struct PersistOpts<'a> {
     save_affinities: Option<&'a str>,
     /// Load affinities from here instead of fitting (skips KNN/BSP).
     load_affinities: Option<&'a str>,
+    /// Write the KNN graph here after the KNN step (re-fit at any smaller
+    /// perplexity later with `--knn`, skipping KNN entirely).
+    save_knn: Option<&'a str>,
+    /// Load a KNN graph from here instead of running KNN; BSP runs at
+    /// `--perplexity` (requires ⌊3·perplexity⌋ ≤ the graph's k).
+    load_knn: Option<&'a str>,
     /// Write session checkpoints here.
     checkpoint: Option<&'a str>,
     /// Checkpoint every N iterations (0 ⇒ once, at the end of the run;
@@ -151,6 +162,9 @@ fn run_session<T: Scalar>(
         ),
         None => None,
     };
+    // KNN wall time of a graph built/loaded here (the `Affinities::fit`
+    // fast path records it itself); folded into the result below.
+    let mut knn_times = StepTimes::new();
     let aff = match persist.load_affinities {
         Some(path) => {
             let aff =
@@ -171,7 +185,43 @@ fn run_session<T: Scalar>(
             println!("[affinities] loaded {path} (n={}, nnz={})", aff.n(), aff.p().nnz());
             aff
         }
-        None => Affinities::fit(pool, points, n, d, cfg.perplexity, &plan),
+        None if persist.load_knn.is_some() || persist.save_knn.is_some() => {
+            // The split fit: KNN graph first (loaded or built), then a
+            // BSP-only re-fit — bit-identical to a plain fit at the same
+            // perplexity, and the graph can be persisted for later sweeps.
+            let graph = match persist.load_knn {
+                Some(path) => {
+                    let g = KnnGraph::<T>::load(path)
+                        .map_err(|e| format!("loading KNN graph {path}: {e}"))?;
+                    g.verify_source(points, n, d).map_err(|e| format!("KNN graph {path}: {e}"))?;
+                    println!(
+                        "[knn] loaded {path} (n={}, k={}, engine={})",
+                        g.n(),
+                        g.k(),
+                        g.engine()
+                    );
+                    g
+                }
+                None => {
+                    KnnGraph::build_for_perplexity(pool, points, n, d, cfg.perplexity, &plan)
+                        .map_err(|e| e.to_string())?
+                }
+            };
+            if let Some(path) = persist.save_knn {
+                graph.save(path).map_err(|e| format!("saving KNN graph {path}: {e}"))?;
+                println!(
+                    "[knn] saved {path} (n={}, k={} — re-fit any perplexity <= {} with --knn)",
+                    graph.n(),
+                    graph.k(),
+                    graph.k() / 3
+                );
+            }
+            knn_times.merge(graph.step_times());
+            Affinities::from_knn(pool, &graph, cfg.perplexity, &plan).map_err(|e| e.to_string())?
+        }
+        None => {
+            Affinities::fit(pool, points, n, d, cfg.perplexity, &plan).map_err(|e| e.to_string())?
+        }
     };
     if let Some(path) = persist.save_affinities {
         aff.save(path).map_err(|e| format!("saving affinities {path}: {e}"))?;
@@ -226,6 +276,7 @@ fn run_session<T: Scalar>(
     }
     let mut r = sess.finish();
     r.step_times.merge(aff.step_times());
+    r.step_times.merge(&knn_times);
     Ok(r)
 }
 
@@ -246,6 +297,10 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     if let Some(s) = args.get("layout") {
         let l: Layout = s.parse().map_err(|e| format!("--layout: {e}"))?;
         plan = plan.with_layout(l).map_err(|e| e.to_string())?;
+    }
+    if let Some(s) = args.get("attractive") {
+        let v: AttractiveVariant = s.parse().map_err(|e| format!("--attractive: {e}"))?;
+        plan = plan.with_attractive(v).map_err(|e| e.to_string())?;
     }
     if let Some(s) = args.get("adopt-threshold") {
         let pct: usize = s
@@ -304,12 +359,22 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let persist = PersistOpts {
         save_affinities: args.get("save-affinities"),
         load_affinities: args.get("affinities"),
+        save_knn: args.get("save-knn"),
+        load_knn: args.get("knn"),
         checkpoint: args.get("checkpoint"),
         checkpoint_every: args.get_parse("checkpoint-every", 0usize)?,
         resume: args.get("resume"),
     };
     if persist.checkpoint_every > 0 && persist.checkpoint.is_none() {
         return Err("--checkpoint-every requires --checkpoint FILE (where to write)".into());
+    }
+    if persist.load_affinities.is_some()
+        && (persist.load_knn.is_some() || persist.save_knn.is_some())
+    {
+        return Err(
+            "--affinities skips KNN and BSP entirely; it cannot combine with --knn/--save-knn"
+                .into(),
+        );
     }
     // run_until's no-progress window is per call by contract, and the
     // checkpoint loop calls it once per chunk — a window at least as long as
@@ -322,7 +387,11 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             persist.checkpoint_every
         );
     }
-    for (flag, path) in [("affinities", persist.load_affinities), ("resume", persist.resume)] {
+    for (flag, path) in [
+        ("affinities", persist.load_affinities),
+        ("knn", persist.load_knn),
+        ("resume", persist.resume),
+    ] {
         if let Some(path) = path {
             if !std::path::Path::new(path).is_file() {
                 return Err(format!("--{flag}: no such file '{path}'"));
@@ -332,6 +401,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     // Output paths: a typo'd directory must fail now, not after the fit.
     for (flag, path) in [
         ("save-affinities", persist.save_affinities),
+        ("save-knn", persist.save_knn),
         ("checkpoint", persist.checkpoint),
     ] {
         if let Some(path) = path {
@@ -415,9 +485,12 @@ const HELP: &str = "\
 acc-tsne <subcommand> [flags]
   run        one t-SNE run  (--dataset --impl --scale --iters --threads --out --plot --f32
              --repulsive scalar|simd-tiled  --layout original|zorder  --adopt-threshold PCT
+             --attractive scalar|prefetch|simd                # attractive-kernel variant
              --min-grad-norm F  --n-iter-without-progress N   # convergence-based early stop
              --snapshot-every N                               # stream KL/grad-norm snapshots
              --save-affinities FILE  --affinities FILE        # persist / reuse the fitted P
+             --save-knn FILE  --knn FILE                      # persist / reuse the KNN graph
+                                                              #  (re-fit perplexity, skip KNN)
              --checkpoint FILE  --checkpoint-every N          # periodic session checkpoints
              --resume FILE                                    # continue a checkpointed run)
   compare    Fig 4 + Table 3 across datasets and implementations
@@ -465,6 +538,9 @@ mod tests {
         assert!(e.contains("zorder"), "{e}");
         let e = real_main(&argv("run --repulsive bogus")).unwrap_err();
         assert!(e.contains("simd-tiled"), "{e}");
+        let e = real_main(&argv("run --attractive bogus")).unwrap_err();
+        assert!(e.contains("--attractive"), "{e}");
+        assert!(e.contains("prefetch"), "{e}");
     }
 
     #[test]
@@ -512,6 +588,45 @@ mod tests {
         let e = real_main(&argv("run --affinities /no/such/affinities.bin")).unwrap_err();
         assert!(e.contains("no such file"), "{e}");
         assert!(e.contains("affinities"), "{e}");
+        let e = real_main(&argv("run --knn /no/such/graph.bin")).unwrap_err();
+        assert!(e.contains("no such file"), "{e}");
+        assert!(e.contains("knn"), "{e}");
+    }
+
+    #[test]
+    fn save_knn_requires_an_existing_directory() {
+        let e = real_main(&argv("run --save-knn /no/such/dir/graph.knn")).unwrap_err();
+        assert!(e.contains("does not exist"), "{e}");
+        assert!(e.contains("save-knn"), "{e}");
+    }
+
+    #[test]
+    fn affinities_and_knn_flags_are_mutually_exclusive() {
+        // Checked before any file IO or data generation, so nonexistent
+        // paths are fine here.
+        for extra in ["--knn g.knn", "--save-knn g.knn"] {
+            let e = real_main(&argv(&format!("run --affinities p.aff {extra}"))).unwrap_err();
+            assert!(e.contains("--affinities"), "{e}");
+            assert!(e.contains("cannot combine"), "{e}");
+        }
+    }
+
+    #[test]
+    fn loading_a_non_knn_file_is_a_typed_persist_error() {
+        // Same shape as the bad-checkpoint test: garbage bytes come back as
+        // the persist layer's typed bad-magic message, not a panic. Only
+        // dataset generation is paid — the graph loads before any KNN run.
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("acc_tsne_cli_bad_knn_{}.bin", std::process::id()));
+        std::fs::write(&path, b"definitely not a knn graph").unwrap();
+        let e = real_main(&argv(&format!(
+            "run --dataset digits --iters 1 --threads 2 --knn {}",
+            path.display()
+        )))
+        .unwrap_err();
+        std::fs::remove_file(&path).ok();
+        assert!(e.contains("loading KNN graph"), "{e}");
+        assert!(e.contains("magic"), "{e}");
     }
 
     #[test]

@@ -107,9 +107,13 @@ pub fn binary_search_perplexity<T: Real>(
 ) -> Conditionals<T> {
     let n = knn.n;
     let k = knn.k;
+    // Last-resort contract check: the public fitting API (tsne::Affinities)
+    // validates this at its boundary and returns FitError::PerplexityTooLarge
+    // before ever reaching here.
     assert!(
         perplexity <= k as f64,
-        "perplexity {perplexity} needs at least {perplexity} neighbors, have {k}"
+        "perplexity {perplexity} needs at least {} neighbors, have {k}",
+        perplexity.ceil() as usize
     );
     let mut p = vec![T::ZERO; n * k];
     let mut betas = vec![T::ZERO; n];
@@ -207,6 +211,45 @@ mod tests {
         bsp_row(&dists, 8.0, &mut out);
         let u = perplexity_of(&out.iter().map(|&x| x as f64).collect::<Vec<_>>());
         assert!((u - 8.0).abs() < 0.05, "perplexity {u}");
+    }
+
+    #[test]
+    fn all_zero_distances_yield_finite_uniform_row() {
+        // Duplicate-heavy data puts all-zero squared distances in a row: the
+        // Gaussian is flat at every β, the entropy search saturates, and the
+        // row must still come out finite and uniform — never NaN.
+        for k in [1usize, 2, 12, 64] {
+            let dists = vec![0.0f64; k];
+            let mut out = vec![-1.0; k];
+            let beta = bsp_row(&dists, (k as f64).min(5.0).max(1.0), &mut out);
+            assert!(beta.is_finite(), "k = {k}: beta = {beta}");
+            let want = 1.0 / k as f64;
+            for (j, &p) in out.iter().enumerate() {
+                assert!(p.is_finite(), "k = {k} pos {j}: {p}");
+                assert!((p - want).abs() < 1e-12, "k = {k} pos {j}: {p} != {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn assert_message_names_the_neighbor_requirement_not_the_perplexity_twice() {
+        // The old message interpolated `perplexity` into both holes
+        // ("perplexity 30 needs at least 30 neighbors"), which only read
+        // sensibly by accident; the requirement is ⌈perplexity⌉ neighbors.
+        let r = std::panic::catch_unwind(|| {
+            let pool = ThreadPool::new(1);
+            let knn = NeighborLists::<f64> {
+                n: 4,
+                k: 2,
+                indices: vec![1, 2, 0, 2, 0, 1, 0, 1],
+                distances_sq: vec![1.0; 8],
+            };
+            binary_search_perplexity(&pool, &knn, 7.5, ParMode::Sequential);
+        });
+        let err = r.expect_err("must still panic at this internal boundary");
+        let msg = err.downcast_ref::<String>().expect("panic carries a String");
+        assert!(msg.contains("needs at least 8 neighbors"), "{msg}");
+        assert!(msg.contains("have 2"), "{msg}");
     }
 
     #[test]

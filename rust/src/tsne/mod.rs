@@ -3,8 +3,13 @@
 //! The public API is staged around the pipeline's two lifetimes (Fig. 1a:
 //! KNN+BSP run once, the gradient loop runs ~1000×):
 //!
+//! - [`KnnGraph`] (`session`) — the step-1 neighbor lists as a first-class,
+//!   persistable artifact; [`Affinities::from_knn`] re-fits at any
+//!   perplexity with ⌊3u⌋ ≤ k without re-running KNN (bit-identical to a
+//!   fresh fit at that perplexity);
 //! - [`Affinities`] (`session`) — the fitted KNN→BSP→symmetrize artifact;
-//!   compute once, reuse across gradient runs;
+//!   compute once, reuse across gradient runs; every hostile shape or
+//!   out-of-range perplexity on the fitting paths is a typed [`FitError`];
 //! - [`StagePlan`] (`plan`) — the public, validated stage table (KNN engine,
 //!   BSP/tree/summarize parallelism, kernel variants, layout, adoption
 //!   threshold) with the five [`Implementation`]s as preset constructors and
@@ -51,10 +56,12 @@ pub use persist::{PersistError, SessionCheckpoint};
 pub use pipeline::{run_tsne, run_tsne_custom, run_tsne_with_p, AttractiveEngine, NativeAttractive};
 pub use plan::{PlanError, StagePlan};
 pub use session::{
-    Affinities, Convergence, ObserverControl, RunOutcome, Snapshot, StepInfo, StopReason,
-    TsneSession,
+    Affinities, Convergence, FitError, KnnGraph, MIN_POINTS, ObserverControl, RunOutcome, Snapshot,
+    StepInfo, StopReason, TsneSession,
 };
 pub use workspace::IterationWorkspace;
+
+pub use crate::gradient::attractive::Variant as AttractiveVariant;
 
 use crate::common::timer::StepTimes;
 use crate::common::float::Real;

@@ -77,9 +77,13 @@ pub fn run_tsne_custom<T: Scalar>(
     let plan = StagePlan::compat(imp, cfg);
     let nt = if cfg.n_threads == 0 { available_cores() } else { cfg.n_threads };
 
-    // Phase 1: the affinity fit (KNN + BSP + symmetrize), once.
+    // Phase 1: the affinity fit (KNN + BSP + symmetrize), once. The classic
+    // wrappers predate the typed FitError and stay infallible in signature:
+    // a hostile shape still fails loudly, but with the typed error's message
+    // (callers that want a Result use Affinities::fit directly).
     let fit_pool = ThreadPool::new(nt);
-    let aff = Affinities::fit(&fit_pool, points, n, d, cfg.perplexity, &plan);
+    let aff = Affinities::fit(&fit_pool, points, n, d, cfg.perplexity, &plan)
+        .unwrap_or_else(|e| panic!("run_tsne: {e}"));
 
     // Optional PCA initialization (sklearn init="pca": top-2 PCs scaled so
     // the largest component has std 1e-4, then descent as usual).
@@ -122,7 +126,8 @@ pub fn run_tsne_with_p<T: Scalar>(
     imp: Implementation,
 ) -> TsneResult<T> {
     let plan = StagePlan::compat(imp, cfg);
-    let aff = Affinities::from_csr_ref(p, cfg.perplexity);
+    let aff = Affinities::from_csr_ref(p, cfg.perplexity)
+        .unwrap_or_else(|e| panic!("run_tsne_with_p: {e}"));
     let mut cfg = *cfg;
     cfg.n_threads = pool.n_threads();
     let mut sess =
@@ -353,7 +358,8 @@ mod tests {
 
         let plan = StagePlan::acc_tsne();
         let pool = ThreadPool::new(cfg.n_threads);
-        let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, cfg.perplexity, &plan);
+        let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, cfg.perplexity, &plan)
+            .expect("valid fit");
         let mut sess = TsneSession::new(&aff, plan, cfg).unwrap();
         for _ in 0..cfg.n_iter {
             sess.step();
@@ -372,7 +378,8 @@ mod tests {
         let pool = ThreadPool::new(4);
         let cfg = quick_cfg(30);
         let plan = StagePlan::acc_tsne();
-        let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, cfg.perplexity, &plan);
+        let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, cfg.perplexity, &plan)
+            .expect("valid fit");
         let wrapper = run_tsne_with_p(&pool, aff.p(), &cfg, Implementation::AccTsne);
         let mut sess = TsneSession::new(&aff, plan, cfg).unwrap();
         sess.run(cfg.n_iter);

@@ -207,6 +207,15 @@ impl StagePlan {
         Ok(self)
     }
 
+    /// Override the attractive-force kernel variant (scalar / +prefetch /
+    /// +SIMD). Valid on every preset — the FIt-SNE pipeline replaces only
+    /// the *repulsive* traversal; its attractive step is the same CSR sweep.
+    pub fn with_attractive(mut self, variant: Variant) -> Result<StagePlan, PlanError> {
+        self.attractive_variant = variant;
+        self.validate()?;
+        Ok(self)
+    }
+
     /// Override the Z-order adoption threshold (percentage of drifted points
     /// above which the workspace re-adopts the tree's fresh order). Only
     /// consulted when the plan's layout is [`Layout::Zorder`]; on other
@@ -287,6 +296,17 @@ mod tests {
             assert!(e.to_string().contains("Barnes-Hut"), "{e}");
         }
         assert!(StagePlan::acc_tsne().with_repulsive(RepulsiveVariant::Scalar).is_ok());
+    }
+
+    #[test]
+    fn attractive_override_composes_with_every_preset() {
+        for imp in crate::tsne::Implementation::ALL {
+            for v in Variant::ALL {
+                let plan = StagePlan::preset(imp).with_attractive(v).unwrap();
+                assert_eq!(plan.attractive_variant, v, "{imp:?}");
+                assert!(plan.validate().is_ok());
+            }
+        }
     }
 
     #[test]

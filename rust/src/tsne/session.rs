@@ -5,6 +5,12 @@
 //! KNN + BSP + symmetrization run **once**, the gradient loop runs ~1000×.
 //! The session API splits them accordingly:
 //!
+//! - [`KnnGraph`] — the step-1 artifact on its own: exact neighbor lists
+//!   plus reuse metadata. KNN dominates the fit wall clock, and the ⌊3u⌋
+//!   support of Eq. 2 only shrinks as the perplexity drops, so one graph
+//!   built at `k` serves a BSP-only re-fit at every perplexity with
+//!   ⌊3u⌋ ≤ k ([`Affinities::from_knn`]) — the multi-perplexity serving
+//!   path. Persistable ([`KnnGraph::save`]/[`KnnGraph::load`]).
 //! - [`Affinities`] — the fitted KNN→BSP→symmetrize artifact (the sparse CSR
 //!   `P` plus its fit metadata). Compute it once, then drive any number of
 //!   gradient runs from it with different seeds, layouts, or kernels.
@@ -33,6 +39,7 @@ use super::plan::{PlanError, StagePlan};
 use super::workspace::IterationWorkspace;
 use super::{Layout, Scalar, TsneConfig, TsneResult};
 use crate::common::timer::{Step, StepTimes};
+use crate::data::io::Fnv1a64;
 use crate::fitsne::{fitsne_repulsive_into, FitsneParams};
 use crate::gradient::exact::kl_with_z;
 use crate::gradient::repulsive::{repulsive_forces_into, RepulsiveVariant};
@@ -46,6 +53,257 @@ use crate::quadtree::summarize::{summarize_parallel, summarize_sequential};
 use crate::sparse::{symmetrize, CsrMatrix};
 use std::borrow::Cow;
 use std::path::Path;
+
+/// Fewest points an affinity fit accepts (below this the ⌊3u⌋ neighbor
+/// support and the quadtree degenerate; the historical `assert!(n >= 8)`
+/// made public, as the bound behind [`FitError::TooFewPoints`]).
+pub const MIN_POINTS: usize = 8;
+
+/// Why an affinity fit (or a KNN-graph build) could not run. Every
+/// precondition reachable from the public fitting API —
+/// [`Affinities::fit`], [`Affinities::from_knn`], [`Affinities::from_csr`],
+/// [`KnnGraph::build`] — maps to a typed variant instead of a panic deep
+/// inside the KNN or BSP kernels.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FitError {
+    /// `points.len()` disagrees with `n * d`.
+    PointsShape { n: usize, d: usize, len: usize },
+    /// Fewer than [`MIN_POINTS`] points.
+    TooFewPoints { n: usize, min: usize },
+    /// Perplexity is not a finite value ≥ 1.
+    InvalidPerplexity { perplexity: f64 },
+    /// The neighbor count cannot support this perplexity: BSP needs
+    /// `perplexity <= k`. Reached when the ⌊3u⌋ support is clamped by a
+    /// small `n` (the perplexity exceeds `n - 1`).
+    PerplexityTooLarge { perplexity: f64, k: usize },
+    /// KNN needs `1 <= k < n`.
+    KOutOfRange { k: usize, n: usize },
+    /// Re-fitting at this perplexity needs more neighbors per point than the
+    /// [`KnnGraph`] stores — rebuild the graph with a larger `k`.
+    GraphTooShallow { needed: usize, k: usize, perplexity: f64 },
+    /// A loaded [`KnnGraph`] disagrees with the dataset it is being applied
+    /// to (wrong `n`/`d`, or a different data fingerprint).
+    GraphMismatch(String),
+    /// An externally supplied CSR failed structural validation.
+    InvalidCsr(String),
+}
+
+impl std::fmt::Display for FitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FitError::PointsShape { n, d, len } => write!(
+                f,
+                "points slice has {len} values, expected n*d = {n}*{d} = {}",
+                n.saturating_mul(*d)
+            ),
+            FitError::TooFewPoints { n, min } => {
+                write!(f, "need at least {min} points, have {n}")
+            }
+            FitError::InvalidPerplexity { perplexity } => {
+                write!(f, "perplexity must be a finite value >= 1, got {perplexity}")
+            }
+            FitError::PerplexityTooLarge { perplexity, k } => write!(
+                f,
+                "perplexity {perplexity} needs at least {} neighbors per point, have {k} \
+                 (reduce the perplexity or use more points)",
+                perplexity.ceil() as usize
+            ),
+            FitError::KOutOfRange { k, n } => {
+                write!(f, "neighbor count k = {k} is out of range: KNN needs 1 <= k < n = {n}")
+            }
+            FitError::GraphTooShallow { needed, k, perplexity } => write!(
+                f,
+                "re-fitting at perplexity {perplexity} needs floor(3u) = {needed} neighbors \
+                 per point, but the KNN graph stores only k = {k} (rebuild it with a larger k)"
+            ),
+            FitError::GraphMismatch(msg) => write!(f, "KNN graph mismatch: {msg}"),
+            FitError::InvalidCsr(msg) => write!(f, "invalid CSR matrix: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for FitError {}
+
+/// Perplexity sanity shared by every fitting entry point. `!(p >= 1.0)`
+/// also catches NaN.
+fn check_perplexity(perplexity: f64) -> Result<(), FitError> {
+    if !perplexity.is_finite() || perplexity < 1.0 {
+        return Err(FitError::InvalidPerplexity { perplexity });
+    }
+    Ok(())
+}
+
+/// FNV-1a fingerprint of the raw input points (each coordinate's f64 bit
+/// pattern, little-endian). Lets a loaded [`KnnGraph`] be checked against
+/// the dataset it is about to serve ([`KnnGraph::verify_source`]) at O(n·d)
+/// cost — noise next to the KNN it replaces.
+fn data_fingerprint<T: Scalar>(points: &[T]) -> u64 {
+    let mut h = Fnv1a64::new();
+    for &v in points {
+        h.update(&v.to_f64().to_le_bytes());
+    }
+    h.finish()
+}
+
+/// The persisted step-1 artifact: exact k-nearest-neighbor lists plus the
+/// metadata needed to reuse them safely (`n`, `d`, a fingerprint of the
+/// input points, the engine that built them).
+///
+/// KNN dominates the pipeline wall clock — the paper reports its speedups
+/// "excl. KNN" for exactly this reason — yet the graph depends only on the
+/// data and `k`, not on the perplexity: Eq. 2 consumes the ⌊3u⌋ *nearest*
+/// of them, and that support only shrinks as `u` drops. So one graph built
+/// at `k` serves a BSP-only re-fit at every perplexity with ⌊3u⌋ ≤ k
+/// ([`Affinities::from_knn`]), and [`Self::save`]/[`Self::load`] make the
+/// expensive step survive the process. A re-fit from a saved + loaded graph
+/// is **bit-identical** to a fresh [`Affinities::fit`] at the same
+/// perplexity, plan, and thread count (asserted by the refit parity tests).
+#[derive(Clone, Debug)]
+pub struct KnnGraph<T: Scalar> {
+    knn: NeighborLists<T>,
+    d: usize,
+    data_fp: u64,
+    engine: String,
+    times: StepTimes,
+}
+
+impl<T: Scalar> KnnGraph<T> {
+    /// Run the plan's KNN engine over `points` (n × d, row-major) for `k`
+    /// neighbors per point. Validates every precondition up front — the
+    /// engines' internal `assert!`s are unreachable from here.
+    pub fn build(
+        pool: &ThreadPool,
+        points: &[T],
+        n: usize,
+        d: usize,
+        k: usize,
+        plan: &StagePlan,
+    ) -> Result<KnnGraph<T>, FitError> {
+        if n.checked_mul(d) != Some(points.len()) {
+            return Err(FitError::PointsShape { n, d, len: points.len() });
+        }
+        if n < MIN_POINTS {
+            return Err(FitError::TooFewPoints { n, min: MIN_POINTS });
+        }
+        if k == 0 || k >= n {
+            return Err(FitError::KOutOfRange { k, n });
+        }
+        let data_fp = data_fingerprint(points);
+        let blocked = BruteForceKnn::default();
+        let vp = crate::knn::vptree::VpTreeKnn::default();
+        let engine: &dyn KnnEngine<T> = if plan.knn_blocked { &blocked } else { &vp };
+        let name = engine.name().to_string();
+        let mut times = StepTimes::new();
+        let knn = times.time(Step::Knn, || engine.search(pool, points, n, d, k));
+        Ok(KnnGraph { knn, d, data_fp, engine: name, times })
+    }
+
+    /// [`Self::build`] with the `k` a fresh [`Affinities::fit`] at this
+    /// perplexity would use — ⌊3·perplexity⌋, clamped to `1..=n-1` (Eq. 2).
+    /// Build at your *largest* sweep perplexity: every smaller one re-fits
+    /// from the same graph.
+    pub fn build_for_perplexity(
+        pool: &ThreadPool,
+        points: &[T],
+        n: usize,
+        d: usize,
+        perplexity: f64,
+        plan: &StagePlan,
+    ) -> Result<KnnGraph<T>, FitError> {
+        check_perplexity(perplexity)?;
+        // Shape preconditions are build()'s job; only the perplexity-derived
+        // ones live here.
+        let k = k_for(perplexity, n);
+        if perplexity > k as f64 {
+            return Err(FitError::PerplexityTooLarge { perplexity, k });
+        }
+        Self::build(pool, points, n, d, k, plan)
+    }
+
+    /// Read a graph written by [`Self::save`]. Hostile inputs — truncation,
+    /// bit flips, wrong magic, future versions, the wrong scalar width,
+    /// out-of-range or self-loop neighbor rows, non-ascending or non-finite
+    /// distances — come back as typed [`PersistError`]s, never panics.
+    pub fn load(path: impl AsRef<Path>) -> Result<KnnGraph<T>, PersistError> {
+        let (knn, d, data_fp, engine) = persist::read_knn_graph::<T>(path.as_ref())?;
+        Ok(KnnGraph { knn, d, data_fp, engine, times: StepTimes::new() })
+    }
+
+    /// Write the graph to `path` in the versioned, checksummed binary format
+    /// of [`crate::tsne::persist`]. Save → [`Self::load`] → save is
+    /// byte-identical; build wall time is not persisted.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), PersistError> {
+        persist::write_knn_graph(path.as_ref(), &self.knn, self.d, self.data_fp, &self.engine)
+    }
+
+    /// Check a (typically loaded) graph against the dataset it is about to
+    /// serve: `n`, `d`, and the FNV-1a fingerprint of the raw points must
+    /// all match. O(n·d).
+    pub fn verify_source(&self, points: &[T], n: usize, d: usize) -> Result<(), FitError> {
+        if self.knn.n != n || self.d != d {
+            return Err(FitError::GraphMismatch(format!(
+                "graph was built over n = {}, d = {}; the dataset is n = {n}, d = {d}",
+                self.knn.n, self.d
+            )));
+        }
+        if n.checked_mul(d) != Some(points.len()) {
+            return Err(FitError::PointsShape { n, d, len: points.len() });
+        }
+        let fp = data_fingerprint(points);
+        if fp != self.data_fp {
+            return Err(FitError::GraphMismatch(format!(
+                "data fingerprint {fp:#018x} does not match the graph's {:#018x} \
+                 (the graph was built from different points)",
+                self.data_fp
+            )));
+        }
+        Ok(())
+    }
+
+    /// Number of points.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.knn.n
+    }
+
+    /// Input dimensionality the graph was built over.
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Neighbors stored per point. [`Affinities::from_knn`] serves any
+    /// perplexity with ⌊3u⌋ ≤ k.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.knn.k
+    }
+
+    /// Name of the engine that built the graph (`"brute-force-native"` /
+    /// `"vp-tree"`).
+    #[inline]
+    pub fn engine(&self) -> &str {
+        &self.engine
+    }
+
+    /// FNV-1a fingerprint of the input points (see [`Self::verify_source`]).
+    #[inline]
+    pub fn data_fingerprint(&self) -> u64 {
+        self.data_fp
+    }
+
+    /// The neighbor lists themselves (rows ascending by squared distance).
+    #[inline]
+    pub fn neighbors(&self) -> &NeighborLists<T> {
+        &self.knn
+    }
+
+    /// KNN wall time of the build (empty for [`Self::load`]).
+    #[inline]
+    pub fn step_times(&self) -> &StepTimes {
+        &self.times
+    }
+}
 
 /// The fitted affinity artifact: the symmetrized sparse `P` of paper Eq. 2
 /// plus its fit metadata. Phase 1 of the pipeline (KNN → binary-search
@@ -82,6 +340,13 @@ impl<T: Scalar> Affinities<'static, T> {
     /// neighbors with the plan's KNN engine, binary-search perplexity with the
     /// plan's BSP mode, then symmetrization. The KNN/BSP wall time is recorded
     /// in [`step_times`](Self::step_times).
+    ///
+    /// Equivalent to — and literally implemented as —
+    /// [`KnnGraph::build_for_perplexity`] + [`Self::from_knn`], so a graph
+    /// persisted from the first half re-fits bit-identically later. Every
+    /// hostile shape (wrong `points` length, too few points, a perplexity
+    /// that is non-finite, < 1, or larger than the clamped neighbor support)
+    /// is a typed [`FitError`], not a panic.
     pub fn fit(
         pool: &ThreadPool,
         points: &[T],
@@ -89,27 +354,62 @@ impl<T: Scalar> Affinities<'static, T> {
         d: usize,
         perplexity: f64,
         plan: &StagePlan,
-    ) -> Affinities<'static, T> {
-        assert_eq!(points.len(), n * d, "points must be n*d");
-        assert!(n >= 8, "need at least 8 points");
-        let mut times = StepTimes::new();
+    ) -> Result<Affinities<'static, T>, FitError> {
         // ⌊3u⌋ neighbors (Eq. 2). The blocked engine models daal4py's; the
         // VP-tree models Multicore-TSNE's (vdMaaten's code).
-        let k = k_for(perplexity, n);
-        let knn: NeighborLists<T> = times.time(Step::Knn, || {
-            if plan.knn_blocked {
-                BruteForceKnn::default().search(pool, points, n, d, k)
-            } else {
-                crate::knn::vptree::VpTreeKnn::default().search(pool, points, n, d, k)
-            }
-        });
+        let graph = KnnGraph::build_for_perplexity(pool, points, n, d, perplexity, plan)?;
+        let mut aff = Self::from_knn(pool, &graph, perplexity, plan)?;
+        aff.times.merge(graph.step_times());
+        Ok(aff)
+    }
+
+    /// Re-fit affinities from an existing [`KnnGraph`] — BSP + symmetrize
+    /// only, **no KNN**. The graph's rows are ascending under the
+    /// (distance, index) total order the engines select with, so the
+    /// ⌊3·perplexity⌋-nearest prefix of a `k`-deep row *is* the fresh
+    /// ⌊3u⌋-NN result: the output is bit-identical to
+    /// [`Self::fit`] at the same perplexity, plan, and thread count, whether
+    /// the graph came from [`KnnGraph::build`] or a [`KnnGraph::load`]ed
+    /// file. (One caveat: the VP-tree engine's branch-and-bound pruning can
+    /// resolve *exact* distance ties at the cut differently between build
+    /// depths; the blocked engine — every preset except multicore-like —
+    /// scans all candidates and is exactly prefix-stable even under ties.)
+    /// Requires ⌊3·perplexity⌋ ≤ [`KnnGraph::k`]
+    /// ([`FitError::GraphTooShallow`] otherwise). BSP wall time is charged
+    /// to [`step_times`](Self::step_times); KNN time stays with the graph.
+    pub fn from_knn(
+        pool: &ThreadPool,
+        graph: &KnnGraph<T>,
+        perplexity: f64,
+        plan: &StagePlan,
+    ) -> Result<Affinities<'static, T>, FitError> {
+        check_perplexity(perplexity)?;
+        let n = graph.n();
+        if n < MIN_POINTS {
+            return Err(FitError::TooFewPoints { n, min: MIN_POINTS });
+        }
+        let k_use = k_for(perplexity, n);
+        if perplexity > k_use as f64 {
+            return Err(FitError::PerplexityTooLarge { perplexity, k: k_use });
+        }
+        if k_use > graph.k() {
+            return Err(FitError::GraphTooShallow { needed: k_use, k: graph.k(), perplexity });
+        }
+        let truncated;
+        let knn: &NeighborLists<T> = if k_use == graph.k() {
+            &graph.knn
+        } else {
+            truncated = graph.knn.truncated(k_use);
+            &truncated
+        };
         // BSP + symmetrization (charged to BSP, as daal4py does).
+        let mut times = StepTimes::new();
         let p = times.time(Step::Bsp, || {
             let mode = if plan.bsp_parallel { ParMode::Parallel } else { ParMode::Sequential };
-            let cond = binary_search_perplexity(pool, &knn, perplexity, mode);
-            symmetrize(pool, &knn, &cond.p)
+            let cond = binary_search_perplexity(pool, knn, perplexity, mode);
+            symmetrize(pool, knn, &cond.p)
         });
-        Affinities { p: Cow::Owned(p), perplexity, k, times }
+        Ok(Affinities { p: Cow::Owned(p), perplexity, k: k_use, times })
     }
 
     /// Wrap an already-symmetrized CSR `P` (columns in the caller's point
@@ -117,18 +417,18 @@ impl<T: Scalar> Affinities<'static, T> {
     /// callers with externally-computed affinities enter here; no KNN/BSP
     /// time is charged. [`Self::from_csr_ref`] is the borrowing sibling.
     ///
-    /// Panics if the *structural* CSR invariants the gradient loop relies on
-    /// are violated ([`CsrMatrix::validate_structural`]) — an O(nnz) check,
-    /// negligible next to a gradient run, that turns a silently corrupted
-    /// embedding into a loud error. Sorted unique columns per row — what
+    /// Returns [`FitError::InvalidCsr`] if the *structural* CSR invariants
+    /// the gradient loop relies on are violated
+    /// ([`CsrMatrix::validate_structural`]) — an O(nnz) check, negligible
+    /// next to a gradient run, that turns a silently corrupted embedding
+    /// into a typed error. Sorted unique columns per row — what
     /// [`Self::fit`] produces — are recommended for gather locality but not
     /// required: the kernels stream row entries in storage order.
-    pub fn from_csr(p: CsrMatrix<T>, perplexity: f64) -> Affinities<'static, T> {
-        if let Err(e) = p.validate_structural() {
-            panic!("invalid CSR: {e}");
-        }
+    pub fn from_csr(p: CsrMatrix<T>, perplexity: f64) -> Result<Affinities<'static, T>, FitError> {
+        check_perplexity(perplexity)?;
+        p.validate_structural().map_err(FitError::InvalidCsr)?;
         let k = k_for(perplexity, p.n);
-        Affinities { p: Cow::Owned(p), perplexity, k, times: StepTimes::new() }
+        Ok(Affinities { p: Cow::Owned(p), perplexity, k, times: StepTimes::new() })
     }
 
     /// Read an artifact written by [`Self::save`]. The loaded instance feeds
@@ -148,13 +448,15 @@ impl<'p, T: Scalar> Affinities<'p, T> {
     /// sibling of [`Affinities::from_csr`] for callers that keep ownership of
     /// `P` (the compat wrapper `run_tsne_with_p` routes through this, so it
     /// no longer clones the caller's matrix). Same structural validation,
-    /// same panic contract.
-    pub fn from_csr_ref(p: &'p CsrMatrix<T>, perplexity: f64) -> Affinities<'p, T> {
-        if let Err(e) = p.validate_structural() {
-            panic!("invalid CSR: {e}");
-        }
+    /// same typed-error contract.
+    pub fn from_csr_ref(
+        p: &'p CsrMatrix<T>,
+        perplexity: f64,
+    ) -> Result<Affinities<'p, T>, FitError> {
+        check_perplexity(perplexity)?;
+        p.validate_structural().map_err(FitError::InvalidCsr)?;
         let k = k_for(perplexity, p.n);
-        Affinities { p: Cow::Borrowed(p), perplexity, k, times: StepTimes::new() }
+        Ok(Affinities { p: Cow::Borrowed(p), perplexity, k, times: StepTimes::new() })
     }
 
     /// Write the artifact to `path` in the versioned, checksummed binary
@@ -765,7 +1067,8 @@ mod tests {
     fn fitted(n: usize, seed: u64) -> (crate::data::Dataset<f64>, Affinities<'static, f64>) {
         let ds = gaussian_mixture::<f64>(n, 8, 4, 8.0, seed);
         let pool = ThreadPool::new(4);
-        let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, 10.0, &StagePlan::acc_tsne());
+        let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, 10.0, &StagePlan::acc_tsne())
+            .expect("valid fit");
         (ds, aff)
     }
 
@@ -823,6 +1126,113 @@ mod tests {
         // chunked stepping is the same trajectory as one run() call
         assert_eq!(ra.embedding, rb.embedding);
         assert_eq!(ra.kl_divergence, rb.kl_divergence);
+    }
+
+    #[test]
+    fn fit_preconditions_are_typed_errors_not_panics() {
+        let pool = ThreadPool::new(2);
+        let plan = StagePlan::acc_tsne();
+        let pts = vec![0.5f64; 4 * 3];
+        // too few points (the old `assert!(n >= 8)`)
+        match Affinities::fit(&pool, &pts, 4, 3, 2.0, &plan) {
+            Err(FitError::TooFewPoints { n: 4, min }) => assert_eq!(min, MIN_POINTS),
+            other => panic!("expected TooFewPoints, got {:?}", other.map(|_| ())),
+        }
+        // shape mismatch (the old `assert_eq!(points.len(), n * d)`)
+        match Affinities::fit(&pool, &pts, 10, 3, 2.0, &plan) {
+            Err(FitError::PointsShape { n: 10, d: 3, len: 12 }) => {}
+            other => panic!("expected PointsShape, got {:?}", other.map(|_| ())),
+        }
+        // perplexity > n-1: would have asserted deep inside BSP before
+        let pts = vec![0.25f64; 10 * 3];
+        match Affinities::fit(&pool, &pts, 10, 3, 30.0, &plan) {
+            Err(FitError::PerplexityTooLarge { k: 9, .. }) => {}
+            other => panic!("expected PerplexityTooLarge, got {:?}", other.map(|_| ())),
+        }
+        // non-finite / sub-1 perplexities
+        for bad in [f64::NAN, f64::INFINITY, 0.5, -3.0] {
+            match Affinities::fit(&pool, &pts, 10, 3, bad, &plan) {
+                Err(FitError::InvalidPerplexity { .. }) => {}
+                other => panic!("perplexity {bad}: got {:?}", other.map(|_| ())),
+            }
+        }
+        // the error message the garbled assert used to produce is now sane:
+        // it names ⌈perplexity⌉ as the neighbor requirement, not perplexity
+        // itself twice
+        let msg = FitError::PerplexityTooLarge { perplexity: 30.0, k: 9 }.to_string();
+        assert!(msg.contains("30 neighbors"), "{msg}");
+        assert!(msg.contains("have 9"), "{msg}");
+    }
+
+    #[test]
+    fn from_csr_rejects_corrupt_csr_with_typed_error() {
+        // used to be a panic!("invalid CSR: ...")
+        let bad = crate::sparse::CsrMatrix::<f64> {
+            n: 3,
+            row_ptr: vec![0, 2, 2, 3],
+            col: vec![0, 7, 1], // column 7 out of range
+            val: vec![0.5, 0.25, 0.25],
+        };
+        match Affinities::from_csr(bad.clone(), 2.0) {
+            Err(FitError::InvalidCsr(msg)) => assert!(msg.contains("column"), "{msg}"),
+            other => panic!("expected InvalidCsr, got {:?}", other.map(|_| ())),
+        }
+        match Affinities::from_csr_ref(&bad, 2.0) {
+            Err(FitError::InvalidCsr(_)) => {}
+            other => panic!("expected InvalidCsr, got {:?}", other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn knn_graph_build_validates_k_range() {
+        let pool = ThreadPool::new(2);
+        let plan = StagePlan::acc_tsne();
+        let pts = vec![0.5f64; 10 * 3];
+        // the old `assert!(k < n)` inside the engines, now at the boundary
+        for k in [0usize, 10, 11] {
+            match KnnGraph::build(&pool, &pts, 10, 3, k, &plan) {
+                Err(FitError::KOutOfRange { k: got, n: 10 }) => assert_eq!(got, k),
+                other => panic!("k = {k}: expected KOutOfRange, got {:?}", other.map(|_| ())),
+            }
+        }
+        assert!(KnnGraph::build(&pool, &pts, 10, 3, 9, &plan).is_ok());
+    }
+
+    #[test]
+    fn refit_from_graph_is_bit_identical_to_fresh_fit() {
+        // The tentpole contract, in-memory leg: build the graph at the ⌊3u⌋
+        // of a LARGER perplexity, re-fit at a smaller one, and match a fresh
+        // fit at that smaller perplexity exactly.
+        let ds = gaussian_mixture::<f64>(300, 8, 4, 8.0, 77);
+        let pool = ThreadPool::new(4);
+        let plan = StagePlan::acc_tsne();
+        let graph = KnnGraph::build_for_perplexity(&pool, &ds.points, ds.n, ds.d, 20.0, &plan)
+            .expect("valid build");
+        assert_eq!(graph.k(), 60);
+        assert_eq!(graph.engine(), "brute-force-native");
+        assert!(graph.step_times().get(Step::Knn) > 0.0);
+        graph.verify_source(&ds.points, ds.n, ds.d).expect("same data");
+        for u in [5.0, 10.0, 20.0] {
+            let refit = Affinities::from_knn(&pool, &graph, u, &plan).expect("u <= k/3");
+            let fresh = Affinities::fit(&pool, &ds.points, ds.n, ds.d, u, &plan).expect("fit");
+            assert_eq!(refit.k(), fresh.k(), "u = {u}");
+            assert_eq!(refit.p().row_ptr, fresh.p().row_ptr, "u = {u}");
+            assert_eq!(refit.p().col, fresh.p().col, "u = {u}");
+            assert_eq!(refit.p().val, fresh.p().val, "u = {u}");
+            assert_eq!(refit.step_times().get(Step::Knn), 0.0, "re-fit must skip KNN");
+            assert!(refit.step_times().get(Step::Bsp) > 0.0);
+        }
+        // a perplexity whose ⌊3u⌋ outgrows the graph is a typed error
+        match Affinities::from_knn(&pool, &graph, 25.0, &plan) {
+            Err(FitError::GraphTooShallow { needed: 75, k: 60, .. }) => {}
+            other => panic!("expected GraphTooShallow, got {:?}", other.map(|_| ())),
+        }
+        // a graph from different data is caught by the fingerprint
+        let other = gaussian_mixture::<f64>(300, 8, 4, 8.0, 78);
+        match graph.verify_source(&other.points, other.n, other.d) {
+            Err(FitError::GraphMismatch(msg)) => assert!(msg.contains("fingerprint"), "{msg}"),
+            other => panic!("expected GraphMismatch, got {other:?}"),
+        }
     }
 
     #[test]
@@ -897,8 +1307,8 @@ mod tests {
             sess.run(cfg.n_iter);
             sess.finish().embedding
         }
-        let owned = Affinities::from_csr(p.clone(), 10.0);
-        let borrowed = Affinities::from_csr_ref(&p, 10.0);
+        let owned = Affinities::from_csr(p.clone(), 10.0).expect("valid CSR");
+        let borrowed = Affinities::from_csr_ref(&p, 10.0).expect("valid CSR");
         assert_eq!(borrowed.k(), owned.k());
         assert_eq!(run(&owned, cfg), run(&borrowed, cfg));
     }

@@ -1,0 +1,302 @@
+//! Integration: the KNN-graph artifact's cross-process contracts.
+//!
+//! Three families of assertions, mirroring `integration_persist.rs`:
+//!
+//! 1. **Refit parity** — `Affinities::from_knn` on a saved + loaded
+//!    `KnnGraph` is bit-identical to a fresh `Affinities::fit` at the same
+//!    perplexity, plan, and thread count, for f32 and f64 (THE acceptance
+//!    contract: one KNN run serves a whole perplexity sweep).
+//! 2. **Hostility** — truncated files, flipped checksum bytes, wrong magic,
+//!    future format versions, wrong scalar width, trailing garbage, and
+//!    mismatched n/k/fingerprint metadata each return their matching typed
+//!    `PersistError`/`FitError` without panicking.
+//! 3. **Degenerate data** — duplicate-heavy datasets (all-zero KNN rows)
+//!    flow through BSP into a finite, uniform `P`, never NaN.
+
+use acc_tsne::data::synthetic::gaussian_mixture;
+use acc_tsne::parallel::ThreadPool;
+use acc_tsne::tsne::{
+    Affinities, FitError, KnnGraph, PersistError, Scalar, StagePlan, TsneConfig, TsneSession,
+};
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("acc_tsne_knn_itest_{}_{name}", std::process::id()));
+    p
+}
+
+fn refit_round_trip_matches_fresh_fit<T: Scalar>(name: &str) {
+    let ds = gaussian_mixture::<f64>(300, 8, 4, 8.0, 21).cast::<T>();
+    let pool = ThreadPool::new(4);
+    let plan = StagePlan::acc_tsne();
+    // Graph at the ⌊3u⌋ of the LARGEST sweep perplexity (u1 = 15 → k = 45).
+    let graph = KnnGraph::build_for_perplexity(&pool, &ds.points, ds.n, ds.d, 15.0, &plan)
+        .expect("valid build");
+    let path = tmp(&format!("refit_{name}.bin"));
+    graph.save(&path).unwrap();
+    let loaded = KnnGraph::<T>::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded.n(), graph.n());
+    assert_eq!(loaded.k(), graph.k());
+    assert_eq!(loaded.d(), graph.d());
+    assert_eq!(loaded.engine(), graph.engine());
+    assert_eq!(loaded.data_fingerprint(), graph.data_fingerprint());
+    assert_eq!(loaded.neighbors().indices, graph.neighbors().indices);
+    assert_eq!(loaded.neighbors().distances_sq, graph.neighbors().distances_sq);
+    loaded.verify_source(&ds.points, ds.n, ds.d).expect("same data");
+    // Every smaller perplexity re-fits from the loaded graph bit-identically
+    // to a fresh full fit (KNN included) at that perplexity.
+    for u2 in [5.0, 10.0, 15.0] {
+        let refit = Affinities::from_knn(&pool, &loaded, u2, &plan).expect("u2 <= k/3");
+        let fresh = Affinities::fit(&pool, &ds.points, ds.n, ds.d, u2, &plan).expect("fit");
+        assert_eq!(refit.k(), fresh.k(), "{name} u2 = {u2}");
+        assert_eq!(refit.perplexity(), fresh.perplexity());
+        assert_eq!(refit.p().row_ptr, fresh.p().row_ptr, "{name} u2 = {u2}");
+        assert_eq!(refit.p().col, fresh.p().col, "{name} u2 = {u2}");
+        assert_eq!(refit.p().val, fresh.p().val, "{name} u2 = {u2}: P must be bit-identical");
+    }
+}
+
+#[test]
+fn refit_from_saved_graph_is_bit_identical_to_fresh_fit_f64() {
+    refit_round_trip_matches_fresh_fit::<f64>("f64");
+}
+
+#[test]
+fn refit_from_saved_graph_is_bit_identical_to_fresh_fit_f32() {
+    refit_round_trip_matches_fresh_fit::<f32>("f32");
+}
+
+#[test]
+fn refit_affinities_drive_bit_identical_sessions() {
+    // End-to-end leg of the parity contract: a session over the re-fitted
+    // affinities reproduces a session over the fresh fit exactly.
+    let ds = gaussian_mixture::<f64>(300, 8, 4, 8.0, 22);
+    let pool = ThreadPool::new(4);
+    let plan = StagePlan::acc_tsne();
+    let graph = KnnGraph::build_for_perplexity(&pool, &ds.points, ds.n, ds.d, 12.0, &plan)
+        .expect("valid build");
+    let path = tmp("refit_session.bin");
+    graph.save(&path).unwrap();
+    let loaded = KnnGraph::<f64>::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let cfg = TsneConfig {
+        perplexity: 8.0,
+        n_iter: 30,
+        n_threads: 0, // resolved identically on both sides (CI pins it)
+        seed: 7,
+        ..TsneConfig::default()
+    };
+    let run = |aff: &Affinities<'_, f64>| {
+        let mut sess = TsneSession::new(aff, plan, cfg).unwrap();
+        sess.run(cfg.n_iter);
+        sess.finish()
+    };
+    let refit = Affinities::from_knn(&pool, &loaded, 8.0, &plan).expect("8 <= 12");
+    let fresh = Affinities::fit(&pool, &ds.points, ds.n, ds.d, 8.0, &plan).expect("valid fit");
+    let (a, b) = (run(&refit), run(&fresh));
+    assert_eq!(a.embedding, b.embedding, "re-fit must be indistinguishable downstream");
+    assert_eq!(a.kl_divergence, b.kl_divergence);
+}
+
+#[test]
+fn duplicate_heavy_data_yields_finite_uniform_bsp_rows() {
+    // 40 duplicates of one point: their KNN rows are all-zero distances, the
+    // flattest possible Gaussian. P must come out finite (uniform over the
+    // support before symmetrization), never NaN — and survive a descent.
+    let mut ds = gaussian_mixture::<f64>(200, 6, 3, 10.0, 23);
+    for i in 1..40 {
+        for t in 0..ds.d {
+            ds.points[i * ds.d + t] = ds.points[t];
+        }
+    }
+    let pool = ThreadPool::new(4);
+    let plan = StagePlan::acc_tsne();
+    let graph = KnnGraph::build_for_perplexity(&pool, &ds.points, ds.n, ds.d, 10.0, &plan)
+        .expect("valid build");
+    // duplicates really do produce (numerically) all-zero rows
+    assert!(graph.neighbors().dists(0).iter().all(|&v| v < 1e-18), "row 0 not all-zero");
+    let aff = Affinities::from_knn(&pool, &graph, 10.0, &plan).expect("valid refit");
+    assert!(aff.p().val.iter().all(|v| v.is_finite()), "P contains a non-finite value");
+    assert!(aff.p().val.iter().all(|&v| v >= 0.0));
+    let sum = aff.p().val.iter().sum::<f64>();
+    assert!((sum - 1.0).abs() < 1e-9, "P must stay normalized, sum = {sum}");
+    let cfg = TsneConfig {
+        perplexity: 10.0,
+        n_iter: 20,
+        n_threads: 4,
+        seed: 7,
+        ..TsneConfig::default()
+    };
+    let mut sess = TsneSession::new(&aff, plan, cfg).unwrap();
+    sess.run(20);
+    assert!(sess.finish().embedding.iter().all(|v| v.is_finite()));
+    // Truncation through the tied (all-zero) rows: KBest's (distance, index)
+    // total order makes the blocked engine prefix-stable even here, so a
+    // re-fit at a SMALLER perplexity from the deep graph still matches a
+    // fresh fit bit-for-bit.
+    let refit = Affinities::from_knn(&pool, &graph, 5.0, &plan).expect("5 <= 10");
+    let fresh = Affinities::fit(&pool, &ds.points, ds.n, ds.d, 5.0, &plan).expect("valid fit");
+    assert_eq!(refit.p().row_ptr, fresh.p().row_ptr);
+    assert_eq!(refit.p().col, fresh.p().col);
+    assert_eq!(refit.p().val, fresh.p().val, "tied rows must truncate prefix-stably");
+}
+
+// ---------------------------------------------------------------------------
+// Hostile inputs. Each writes a valid artifact, corrupts it in a specific
+// way, and asserts the matching typed error — no panics, no garbage loads.
+// ---------------------------------------------------------------------------
+
+fn saved_graph_bytes() -> Vec<u8> {
+    let ds = gaussian_mixture::<f64>(150, 6, 3, 8.0, 24);
+    let pool = ThreadPool::new(4);
+    let graph =
+        KnnGraph::build_for_perplexity(&pool, &ds.points, ds.n, ds.d, 10.0, &StagePlan::acc_tsne())
+            .expect("valid build");
+    let path = tmp("hostile_src.bin");
+    graph.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    bytes
+}
+
+fn load_from_bytes(bytes: &[u8], name: &str) -> Result<KnnGraph<f64>, PersistError> {
+    let path = tmp(name);
+    std::fs::write(&path, bytes).unwrap();
+    let r = KnnGraph::<f64>::load(&path);
+    std::fs::remove_file(&path).ok();
+    r
+}
+
+#[test]
+fn knn_graph_truncated_file_is_a_typed_truncation_error() {
+    let bytes = saved_graph_bytes();
+    // inside the magic, inside the header, at the header boundary, inside
+    // the payload, one byte short
+    for cut in [3usize, 17, 28, bytes.len() / 2, bytes.len() - 1] {
+        match load_from_bytes(&bytes[..cut], "hostile_trunc.bin") {
+            Err(PersistError::Truncated) => {}
+            other => panic!("cut at {cut}: expected Truncated, got {:?}", other.map(|_| ())),
+        }
+    }
+    match load_from_bytes(&[], "hostile_empty.bin") {
+        Err(PersistError::Truncated) => {}
+        other => panic!("expected Truncated, got {:?}", other.map(|_| ())),
+    }
+}
+
+#[test]
+fn knn_graph_flipped_byte_is_a_checksum_mismatch() {
+    let bytes = saved_graph_bytes();
+    // the stored checksum itself (header offset 20..28) ...
+    let mut bad = bytes.clone();
+    bad[20] ^= 0xFF;
+    match load_from_bytes(&bad, "hostile_cksum.bin") {
+        Err(PersistError::ChecksumMismatch { stored, computed }) => assert_ne!(stored, computed),
+        other => panic!("expected ChecksumMismatch, got {:?}", other.map(|_| ())),
+    }
+    // ... and a payload byte in the distance array, far from any length
+    // field, where only the checksum can catch the flip
+    let mut bad = bytes.clone();
+    let last = bad.len() - 3;
+    bad[last] ^= 0x01;
+    match load_from_bytes(&bad, "hostile_payload.bin") {
+        Err(PersistError::ChecksumMismatch { .. }) => {}
+        other => panic!("expected ChecksumMismatch, got {:?}", other.map(|_| ())),
+    }
+}
+
+#[test]
+fn knn_graph_wrong_magic_is_a_typed_error() {
+    let mut bytes = saved_graph_bytes();
+    bytes[..8].copy_from_slice(b"NOTMAGIC");
+    match load_from_bytes(&bytes, "hostile_magic.bin") {
+        Err(PersistError::BadMagic { found }) => assert_eq!(&found, b"NOTMAGIC"),
+        other => panic!("expected BadMagic, got {:?}", other.map(|_| ())),
+    }
+    // an affinities artifact loaded as a KNN graph is also "wrong magic"
+    let ds = gaussian_mixture::<f64>(150, 6, 3, 8.0, 25);
+    let pool = ThreadPool::new(2);
+    let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, 10.0, &StagePlan::acc_tsne())
+        .expect("valid fit");
+    let path = tmp("hostile_kind.bin");
+    aff.save(&path).unwrap();
+    match KnnGraph::<f64>::load(&path) {
+        Err(PersistError::BadMagic { .. }) => {}
+        other => panic!("expected BadMagic, got {:?}", other.map(|_| ())),
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn knn_graph_future_version_is_a_typed_error() {
+    let mut bytes = saved_graph_bytes();
+    // version field: u32 LE at offset 8
+    bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+    match load_from_bytes(&bytes, "hostile_version.bin") {
+        Err(PersistError::UnsupportedVersion { found: 99, supported }) => {
+            assert_eq!(supported, acc_tsne::tsne::persist::FORMAT_VERSION)
+        }
+        other => panic!("expected UnsupportedVersion, got {:?}", other.map(|_| ())),
+    }
+}
+
+#[test]
+fn knn_graph_wrong_scalar_width_is_a_typed_error() {
+    let bytes = saved_graph_bytes(); // f64 artifact
+    let path = tmp("hostile_width.bin");
+    std::fs::write(&path, &bytes).unwrap();
+    match KnnGraph::<f32>::load(&path) {
+        Err(PersistError::ScalarWidthMismatch { found: 8, expected: 4 }) => {}
+        other => panic!("expected ScalarWidthMismatch, got {:?}", other.map(|_| ())),
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn knn_graph_trailing_garbage_is_a_typed_error() {
+    let mut bytes = saved_graph_bytes();
+    bytes.extend_from_slice(b"junk");
+    match load_from_bytes(&bytes, "hostile_trailing.bin") {
+        Err(PersistError::Corrupt(msg)) => assert!(msg.contains("trailing"), "{msg}"),
+        other => panic!("expected Corrupt(trailing), got {:?}", other.map(|_| ())),
+    }
+}
+
+#[test]
+fn knn_graph_metadata_mismatches_are_typed_fit_errors() {
+    let ds = gaussian_mixture::<f64>(150, 6, 3, 8.0, 26);
+    let pool = ThreadPool::new(4);
+    let plan = StagePlan::acc_tsne();
+    let graph = KnnGraph::build_for_perplexity(&pool, &ds.points, ds.n, ds.d, 10.0, &plan)
+        .expect("valid build");
+    // wrong n
+    match graph.verify_source(&ds.points[..100 * ds.d], 100, ds.d) {
+        Err(FitError::GraphMismatch(msg)) => assert!(msg.contains("n = 100"), "{msg}"),
+        other => panic!("expected GraphMismatch, got {other:?}"),
+    }
+    // wrong d
+    match graph.verify_source(&ds.points, ds.n, ds.d + 1) {
+        Err(FitError::GraphMismatch(_)) => {}
+        other => panic!("expected GraphMismatch, got {other:?}"),
+    }
+    // same shape, different data → fingerprint
+    let other_ds = gaussian_mixture::<f64>(150, 6, 3, 8.0, 27);
+    match graph.verify_source(&other_ds.points, other_ds.n, other_ds.d) {
+        Err(FitError::GraphMismatch(msg)) => assert!(msg.contains("fingerprint"), "{msg}"),
+        other => panic!("expected GraphMismatch, got {other:?}"),
+    }
+    // a perplexity the stored k cannot support (k = 30, needs ⌊3·20⌋ = 60)
+    match Affinities::from_knn(&pool, &graph, 20.0, &plan) {
+        Err(FitError::GraphTooShallow { needed: 60, k: 30, .. }) => {}
+        other => panic!("expected GraphTooShallow, got {:?}", other.map(|_| ())),
+    }
+    // out-of-range perplexities never reach a panic either
+    for bad in [f64::NAN, 0.0, -1.0, f64::INFINITY] {
+        match Affinities::from_knn(&pool, &graph, bad, &plan) {
+            Err(FitError::InvalidPerplexity { .. }) => {}
+            other => panic!("perplexity {bad}: got {:?}", other.map(|_| ())),
+        }
+    }
+}

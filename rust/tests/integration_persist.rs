@@ -41,7 +41,7 @@ fn cfg(n_iter: usize) -> TsneConfig {
 fn fit(n: usize, seed: u64) -> Affinities<'static, f64> {
     let ds = gaussian_mixture::<f64>(n, 8, 4, 8.0, seed);
     let pool = ThreadPool::new(4);
-    Affinities::fit(&pool, &ds.points, ds.n, ds.d, 10.0, &StagePlan::acc_tsne())
+    Affinities::fit(&pool, &ds.points, ds.n, ds.d, 10.0, &StagePlan::acc_tsne()).expect("valid fit")
 }
 
 #[test]
@@ -287,7 +287,7 @@ fn persist_restore_rejects_checkpoint_from_a_different_fit() {
     }
     // Same n, same P, but a different fit perplexity: the affinity
     // fingerprint (nnz + perplexity) must catch it.
-    let aff_refit = Affinities::from_csr(aff.p().clone(), 12.0);
+    let aff_refit = Affinities::from_csr(aff.p().clone(), 12.0).expect("valid CSR");
     match TsneSession::restore(&aff_refit, StagePlan::acc_tsne(), c, &path) {
         Err(PersistError::Mismatch(msg)) => {
             assert!(msg.contains("different fit"), "{msg}")

@@ -29,7 +29,7 @@ fn cfg(n_iter: usize) -> TsneConfig {
 fn easy_fit() -> Affinities<'static, f64> {
     let ds = gaussian_mixture::<f64>(300, 8, 3, 12.0, 31);
     let pool = ThreadPool::new(4);
-    Affinities::fit(&pool, &ds.points, ds.n, ds.d, 10.0, &StagePlan::acc_tsne())
+    Affinities::fit(&pool, &ds.points, ds.n, ds.d, 10.0, &StagePlan::acc_tsne()).expect("valid fit")
 }
 
 #[test]
@@ -128,7 +128,8 @@ fn compat_wrapper_matches_session_for_every_implementation() {
     for imp in Implementation::ALL {
         let wrapper = run_tsne(&ds.points, ds.n, ds.d, &c, imp);
         let plan = StagePlan::preset(imp);
-        let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, c.perplexity, &plan);
+        let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, c.perplexity, &plan)
+            .expect("valid fit");
         let mut sess = TsneSession::new(&aff, plan, c).unwrap();
         sess.run(c.n_iter);
         let manual = sess.finish();
