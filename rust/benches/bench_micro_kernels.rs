@@ -12,11 +12,15 @@
 //!     (`knn_graph.*` keys of BENCH_gradient_loop.json — the serving cost of
 //!     a perplexity sweep);
 //!   gradient loop: original vs Z-order-persistent layout (per-step times
-//!     from the pipeline itself) — snapshotted to BENCH_gradient_loop.json.
+//!     from the pipeline itself) — snapshotted to BENCH_gradient_loop.json;
+//!   guardrails: the finite-input scan at the fit boundary and the in-loop
+//!     divergence guard's marginal cost (`guardrails.{validate,step_check}_s`
+//!     keys of BENCH_gradient_loop.json).
 
 use acc_tsne::common::bench::Bencher;
 use acc_tsne::common::rng::Rng;
 use acc_tsne::common::timer::Step;
+use acc_tsne::data::first_non_finite;
 use acc_tsne::gradient::attractive::{attractive_forces, Variant};
 use acc_tsne::gradient::repulsive::{repulsive_forces_scalar_into, repulsive_forces_tiled_into};
 use acc_tsne::knn::{BruteForceKnn, KnnEngine};
@@ -370,6 +374,27 @@ fn main() {
         );
     }
 
+    // --- guardrails: the measurable cost of the robustness layer.
+    // validate_s is the O(n·d) finite-input scan every fit/build pays at
+    // the boundary; step_check_s is the marginal per-iteration cost of
+    // divergence guarding at interval 1 (the worst case — the default
+    // interval of 50 pays the last-good capture 50x less often), measured
+    // as guarded-minus-unguarded short runs.
+    let guard_iters = iters.min(20).max(1);
+    let run_guarded = |every: usize| {
+        let mut sess =
+            TsneSession::new(&aff_loop, StagePlan::acc_tsne(), base_cfg).expect("valid plan");
+        sess.set_guard_interval(every);
+        sess.run(guard_iters);
+        sess.finish().kl_divergence
+    };
+    let mut b = Bencher::new(&format!("guardrails (n={an}, d={d})")).sampling(1, 6, 4.0);
+    let validate_s = b.bench("validate_scan", || first_non_finite(&data, d).is_none()).mean;
+    let s_guard_off = b.bench("loop_guard_off", || run_guarded(0));
+    let s_guard_on = b.bench("loop_guard_every_iter", || run_guarded(1));
+    b.report();
+    let step_check_s = ((s_guard_on.mean - s_guard_off.mean) / guard_iters as f64).max(0.0);
+
     let mut js = String::from("{\n  \"bench\": \"gradient_loop\",\n");
     js.push_str(&format!(
         "  \"n\": {n},\n  \"threads\": {},\n  \"iters\": {iters},\n",
@@ -402,6 +427,10 @@ fn main() {
     js.push_str(&format!(
         "  \"knn_graph\": {{ \"fit_s\": {fit_s:.6e}, \"save_s\": {knn_save_s:.6e}, \
          \"load_s\": {knn_load_s:.6e}, \"refit_bsp_s\": {refit_bsp_s:.6e} }},\n"
+    ));
+    js.push_str(&format!(
+        "  \"guardrails\": {{ \"validate_s\": {validate_s:.6e}, \
+         \"step_check_s\": {step_check_s:.6e} }},\n"
     ));
     js.push_str(&format!(
         "  \"speedup_attractive\": {:.3},\n",

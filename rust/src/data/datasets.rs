@@ -6,7 +6,7 @@
 
 use super::pca::pca;
 use super::synthetic::{gaussian_mixture, scrna_like};
-use super::Dataset;
+use super::{first_non_finite, DataError, Dataset};
 use crate::common::float::Real;
 use crate::parallel::ThreadPool;
 
@@ -81,6 +81,19 @@ impl PaperDataset {
     /// t-SNE sees carry realistic anisotropy and cluster imbalance.
     /// The image datasets are Gaussian mixtures at the paper's raw dims.
     pub fn generate<T: Real>(self, scale: f64, seed: u64, pool: &ThreadPool) -> Dataset<T> {
+        self.try_generate(scale, seed, pool)
+            .expect("paper-dataset generators must produce finite data")
+    }
+
+    /// [`Self::generate`] with the loader-boundary guardrail surfaced as a
+    /// typed error: any non-finite value in the generated (or PCA-projected)
+    /// matrix is reported by `(row, col)` instead of flowing into `fit`.
+    pub fn try_generate<T: Real>(
+        self,
+        scale: f64,
+        seed: u64,
+        pool: &ThreadPool,
+    ) -> Result<Dataset<T>, DataError> {
         let n = self.n_at_scale(scale);
         let (_, d, k) = self.spec();
         let mut ds = match self {
@@ -88,7 +101,7 @@ impl PaperDataset {
                 let genes = 200; // scaled-down gene count; PCA keeps 20 PCs as in the paper
                 let raw = scrna_like::<T>(n, genes, k, 0.6, seed);
                 let (proj, _) = pca(pool, &raw.points, n, genes, d, 30, seed ^ 0xD1CE);
-                Dataset::new("", proj, raw.labels, n, d)
+                Dataset::try_new("", proj, raw.labels, n, d)?
             }
             // Image-like datasets: cluster separation tuned so KNN graphs have
             // mixed-class neighborhoods like real image features do.
@@ -96,8 +109,11 @@ impl PaperDataset {
             PaperDataset::Cifar10 | PaperDataset::Svhn => gaussian_mixture::<T>(n, d, k, 0.8, seed),
             _ => gaussian_mixture::<T>(n, d, k, 1.5, seed),
         };
+        if let Some((row, col)) = first_non_finite(&ds.points, ds.d) {
+            return Err(DataError::NonFinite { row, col });
+        }
         ds.name = format!("{}@{:.3}", self.name(), scale);
-        ds
+        Ok(ds)
     }
 }
 

@@ -5,8 +5,52 @@
 
 use crate::common::float::Real;
 use std::fs::File;
-use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::io::{BufRead, BufReader, BufWriter, Read, Seek, Write};
 use std::path::Path;
+
+/// The seam between artifact writers and the storage they target.
+///
+/// Production code uses [`RealFs`]; the fault-injection tests substitute
+/// media that fail at chosen write boundaries, persist short prefixes, or
+/// "crash" between staging and rename — proving the atomic-save protocol of
+/// [`crate::tsne::persist`] keeps the previous artifact intact under every
+/// such fault. Only the write side is abstracted: torn files produced by a
+/// faulty medium land on the real filesystem and are re-opened through the
+/// normal load path, which must reject them with a typed error.
+pub trait Medium {
+    /// Writable artifact handle; seekable so a header checksum can be
+    /// patched after the payload is streamed out.
+    type Writer: Write + Seek;
+
+    /// Create (truncating) a file for writing.
+    fn create(&self, path: &Path) -> std::io::Result<Self::Writer>;
+
+    /// Atomically move a fully-written staging file over the final path.
+    fn rename(&self, from: &Path, to: &Path) -> std::io::Result<()>;
+
+    /// Remove a staging file after a failed save (best-effort cleanup).
+    fn remove(&self, path: &Path) -> std::io::Result<()>;
+}
+
+/// The production [`Medium`]: the real filesystem.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RealFs;
+
+impl Medium for RealFs {
+    type Writer = File;
+
+    fn create(&self, path: &Path) -> std::io::Result<File> {
+        File::create(path)
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> std::io::Result<()> {
+        std::fs::rename(from, to)
+    }
+
+    fn remove(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::remove_file(path)
+    }
+}
 
 /// Incremental 64-bit FNV-1a hash — the integrity checksum of the persisted
 /// binary formats. Not cryptographic: it detects truncation and bit flips,
@@ -119,8 +163,19 @@ pub fn write_matrix_bin(
     rows: usize,
     cols: usize,
 ) -> std::io::Result<()> {
+    write_matrix_bin_on(&RealFs, path.as_ref(), data, rows, cols)
+}
+
+/// [`write_matrix_bin`] on an explicit [`Medium`].
+pub fn write_matrix_bin_on<M: Medium>(
+    medium: &M,
+    path: &Path,
+    data: &[f64],
+    rows: usize,
+    cols: usize,
+) -> std::io::Result<()> {
     assert_eq!(data.len(), rows * cols);
-    let mut w = BufWriter::new(File::create(path)?);
+    let mut w = BufWriter::new(medium.create(path)?);
     w.write_all(MAGIC)?;
     w.write_all(&(rows as u64).to_le_bytes())?;
     w.write_all(&(cols as u64).to_le_bytes())?;

@@ -14,6 +14,43 @@ pub mod synthetic;
 
 use crate::common::float::Real;
 
+/// Typed rejection of hostile input data, raised at the loader boundary so a
+/// NaN in a CSV (or a mis-shaped buffer) never reaches the fitting pipeline.
+/// [`crate::tsne::FitError`] has a lossless `From` conversion for it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataError {
+    /// `points.len()` is not `n * d` (or `n * d` overflows `usize`).
+    Shape { n: usize, d: usize, len: usize },
+    /// First NaN/±inf in the data, by point and feature index.
+    NonFinite { row: usize, col: usize },
+}
+
+impl std::fmt::Display for DataError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            DataError::Shape { n, d, len } => {
+                write!(f, "points length {len} does not match {n} points x {d} dims")
+            }
+            DataError::NonFinite { row, col } => write!(
+                f,
+                "input contains a non-finite value at point {row}, dimension {col} \
+                 (clean the data before fitting)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for DataError {}
+
+/// Locate the first non-finite entry of a row-major `n x d` buffer, reported
+/// as `(row, col)`.
+pub fn first_non_finite<T: Real>(points: &[T], d: usize) -> Option<(usize, usize)> {
+    points
+        .iter()
+        .position(|v| !v.is_finite_r())
+        .map(|i| (i / d.max(1), i % d.max(1)))
+}
+
 /// An in-memory dataset: `n` points × `d` features, row-major, with class
 /// labels (used only for coloring the S1–S6 plots, never by the algorithm).
 #[derive(Clone, Debug)]
@@ -42,6 +79,37 @@ impl<T: Real> Dataset<T> {
             n,
             d,
         }
+    }
+
+    /// Validated constructor for externally-sourced data: rejects mis-shaped
+    /// buffers and non-finite values instead of panicking or letting NaN
+    /// propagate into `fit`. Labels must still be caller-consistent (they are
+    /// produced by our own loaders, never parsed from hostile input).
+    pub fn try_new(
+        name: impl Into<String>,
+        points: Vec<T>,
+        labels: Vec<u16>,
+        n: usize,
+        d: usize,
+    ) -> Result<Self, DataError> {
+        if n.checked_mul(d) != Some(points.len()) {
+            return Err(DataError::Shape {
+                n,
+                d,
+                len: points.len(),
+            });
+        }
+        assert_eq!(labels.len(), n, "labels length must be n");
+        if let Some((row, col)) = first_non_finite(&points, d) {
+            return Err(DataError::NonFinite { row, col });
+        }
+        Ok(Dataset {
+            name: name.into(),
+            points,
+            labels,
+            n,
+            d,
+        })
     }
 
     #[inline]
@@ -84,5 +152,23 @@ mod tests {
     #[should_panic]
     fn bad_shape_panics() {
         Dataset::new("t", vec![1.0f64; 5], vec![0, 1], 2, 2);
+    }
+
+    #[test]
+    fn try_new_rejects_shape_and_non_finite() {
+        assert_eq!(
+            Dataset::try_new("t", vec![1.0f64; 5], vec![0, 1], 2, 2).unwrap_err(),
+            DataError::Shape { n: 2, d: 2, len: 5 }
+        );
+        let mut pts = vec![0.25f64; 6];
+        pts[5] = f64::NAN;
+        assert_eq!(
+            Dataset::try_new("t", pts, vec![0, 1, 2], 3, 2).unwrap_err(),
+            DataError::NonFinite { row: 2, col: 1 }
+        );
+        let ds = Dataset::try_new("t", vec![0.25f64; 6], vec![0, 1, 2], 3, 2).unwrap();
+        assert_eq!(ds.n, 3);
+        let msg = DataError::NonFinite { row: 2, col: 1 }.to_string();
+        assert!(msg.contains("point 2") && msg.contains("dimension 1"), "{msg}");
     }
 }

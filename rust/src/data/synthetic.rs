@@ -35,7 +35,8 @@ pub fn gaussian_mixture<T: Real>(
             points[i * d + j] = T::from_f64(centers[c * d + j] + rng.next_gaussian());
         }
     }
-    Dataset::new(format!("gmm-n{n}-d{d}-k{k}"), points, labels, n, d)
+    Dataset::try_new(format!("gmm-n{n}-d{d}-k{k}"), points, labels, n, d)
+        .expect("gaussian_mixture must generate finite data (separation too large?)")
 }
 
 /// scRNA-seq-like generator: `k` clusters with Zipf-ish sizes, per-cluster
@@ -81,7 +82,8 @@ pub fn scrna_like<T: Real>(
             points[i * genes + j] = T::from_f64(v);
         }
     }
-    Dataset::new(format!("scrna-n{n}-g{genes}-k{k}"), points, assignment, n, genes)
+    Dataset::try_new(format!("scrna-n{n}-g{genes}-k{k}"), points, assignment, n, genes)
+        .expect("scrna_like must generate finite expression values")
 }
 
 

@@ -144,6 +144,45 @@
 //! }
 //! ```
 //!
+//! ### Robustness guarantees
+//!
+//! The pipeline is hardened end to end against hostile data and injected
+//! faults — the guarantees below are enforced by the integration suites
+//! (`tests/fault_injection.rs`, `tests/integration_persist.rs`,
+//! `tests/proptests.rs`) across 1/4/8 threads:
+//!
+//! - **Finite-input validation at the fit boundary.** [`tsne::Affinities::fit`]
+//!   and [`tsne::KnnGraph::build`] reject any NaN/∞ coordinate with
+//!   [`tsne::FitError::NonFinite`] locating the first offender by
+//!   `(row, col)` — a poisoned value never reaches the KNN distances, the
+//!   perplexity search, or the quadtree. The dataset loaders
+//!   ([`data::datasets`], [`data::Dataset::try_new`]) run the same check and
+//!   report a typed [`data::DataError`].
+//! - **Perplexity search degrades gracefully.** A row whose binary search
+//!   cannot converge (pathological distance spreads, zero variance) falls
+//!   back to a uniform distribution over its neighbors — sklearn's behavior
+//!   — instead of emitting NaN weights.
+//! - **Degenerate geometry is survivable.** Coincident and near-coincident
+//!   clouds (spreads below f64 precision) produce finite quadtrees and
+//!   finite forces in both tree builders; non-finite coordinates clamp to
+//!   the grid edge instead of corrupting the bounding box.
+//! - **Divergence is detected and rewound.** [`tsne::TsneSession::step`]
+//!   checks Z and the gradient norm every iteration; a non-finite value
+//!   becomes a typed [`tsne::StepError::Diverged`] and the session rewinds
+//!   itself to an in-memory last-good checkpoint (captured every
+//!   [`tsne::TsneSession::set_guard_interval`] iterations), bit-identical to
+//!   restoring the same snapshot from disk.
+//! - **Artifacts are crash-safe.** Every save ([`tsne::Affinities::save`],
+//!   [`tsne::KnnGraph::save`], [`tsne::SessionCheckpoint::save`]) stages to
+//!   a temp sibling and renames; the fault-injection harness proves that a
+//!   write error, short write, or crash at **every** flush boundary leaves
+//!   the previous artifact byte-identical and loadable, and that a torn
+//!   file never loads — it is rejected with a typed
+//!   [`tsne::PersistError`], never a panic or silently-wrong data.
+//!
+//! The CLI maps these families to distinct exit codes (usage 2, fit 3,
+//! persistence 4, plan 5, divergence 6) with a one-line stderr message.
+//!
 //! The classic one-shot call is still there, as a thin wrapper that is
 //! bit-identical to fitting affinities and stepping a session manually:
 //!

@@ -28,6 +28,12 @@
 //! session checkpoint at the end of the run (every N iterations with
 //! `--checkpoint-every N`); and `--resume FILE` continues a checkpointed
 //! session — bit-identical to an uninterrupted run at a fixed thread count.
+//!
+//! Exit codes: `0` success, `2` usage/flag errors, `3` fit errors (hostile
+//! data, unsatisfiable perplexity), `4` persistence errors (corrupt or
+//! mismatched artifacts, unwritable outputs), `5` invalid stage plans, `6`
+//! gradient-loop divergence. Every failure prints one `error: ...` line on
+//! stderr.
 
 use acc_tsne::cli::Args;
 use acc_tsne::common::timer::StepTimes;
@@ -36,9 +42,9 @@ use acc_tsne::eval::{experiments, ExpConfig};
 use acc_tsne::parallel::pool::available_cores;
 use acc_tsne::parallel::ThreadPool;
 use acc_tsne::tsne::{
-    Affinities, AttractiveVariant, Convergence, Implementation, KnnGraph, Layout, ObserverControl,
-    RepulsiveVariant, Scalar, SessionCheckpoint, StagePlan, StopReason, TsneConfig, TsneResult,
-    TsneSession,
+    Affinities, AttractiveVariant, Convergence, FitError, Implementation, KnnGraph, Layout,
+    ObserverControl, PlanError, RepulsiveVariant, Scalar, SessionCheckpoint, StagePlan, StopReason,
+    TsneConfig, TsneResult, TsneSession,
 };
 
 fn main() {
@@ -47,8 +53,80 @@ fn main() {
         Ok(()) => {}
         Err(e) => {
             eprintln!("error: {e}");
-            std::process::exit(1);
+            std::process::exit(e.code);
         }
+    }
+}
+
+/// Flag parsing / validation / impossible flag combinations.
+const EXIT_USAGE: i32 = 2;
+/// [`FitError`]: hostile input data or an unsatisfiable fit request.
+const EXIT_FIT: i32 = 3;
+/// [`acc_tsne::tsne::PersistError`]: a corrupt, mismatched, or unwritable
+/// artifact (affinities, KNN graph, checkpoint, or output file).
+const EXIT_PERSIST: i32 = 4;
+/// [`PlanError`]: an invalid stage plan.
+const EXIT_PLAN: i32 = 5;
+/// [`acc_tsne::tsne::StepError`]: the gradient loop diverged.
+const EXIT_STEP: i32 = 6;
+
+/// A CLI failure: the one-line stderr message plus the exit code of its
+/// error family, so scripts and CI can tell "you typed the wrong flag"
+/// ([`EXIT_USAGE`]) from "your artifact is corrupt" ([`EXIT_PERSIST`])
+/// without parsing stderr.
+#[derive(Debug)]
+struct CliError {
+    code: i32,
+    message: String,
+}
+
+impl CliError {
+    fn usage(message: impl Into<String>) -> CliError {
+        CliError { code: EXIT_USAGE, message: message.into() }
+    }
+
+    fn fit(message: impl Into<String>) -> CliError {
+        CliError { code: EXIT_FIT, message: message.into() }
+    }
+
+    fn persist(message: impl Into<String>) -> CliError {
+        CliError { code: EXIT_PERSIST, message: message.into() }
+    }
+
+    fn step(message: impl Into<String>) -> CliError {
+        CliError { code: EXIT_STEP, message: message.into() }
+    }
+
+    /// Substring check on the stderr message (the CLI tests assert on it).
+    #[cfg(test)]
+    fn contains(&self, needle: &str) -> bool {
+        self.message.contains(needle)
+    }
+}
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+/// The flag-parsing layer (`cli::Args`) reports plain strings — all usage
+/// errors by construction.
+impl From<String> for CliError {
+    fn from(message: String) -> CliError {
+        CliError::usage(message)
+    }
+}
+
+impl From<FitError> for CliError {
+    fn from(e: FitError) -> CliError {
+        CliError::fit(e.to_string())
+    }
+}
+
+impl From<PlanError> for CliError {
+    fn from(e: PlanError) -> CliError {
+        CliError { code: EXIT_PLAN, message: e.to_string() }
     }
 }
 
@@ -59,7 +137,7 @@ const COMMON_FLAGS: &[&str] = &[
     "affinities", "checkpoint", "checkpoint-every", "resume", "save-knn", "knn",
 ];
 
-fn exp_config(args: &Args) -> Result<ExpConfig, String> {
+fn exp_config(args: &Args) -> Result<ExpConfig, CliError> {
     let mut cfg = ExpConfig::default();
     cfg.scale = args.get_parse("scale", cfg.scale)?;
     cfg.n_iter = args.get_parse("iters", cfg.n_iter)?;
@@ -68,7 +146,7 @@ fn exp_config(args: &Args) -> Result<ExpConfig, String> {
     Ok(cfg)
 }
 
-fn real_main(argv: &[String]) -> Result<(), String> {
+fn real_main(argv: &[String]) -> Result<(), CliError> {
     let args = Args::parse(argv)?;
     args.ensure_known(COMMON_FLAGS)?;
     let sub = args.subcommand.as_deref().unwrap_or("help");
@@ -152,13 +230,13 @@ fn run_session<T: Scalar>(
     conv: Option<Convergence>,
     snapshot_every: usize,
     persist: PersistOpts<'_>,
-) -> Result<TsneResult<T>, String> {
+) -> Result<TsneResult<T>, CliError> {
     // The resume checkpoint is read FIRST: a corrupt or mismatched file must
     // fail before the (possibly minutes-long) affinity fit, not after it.
     let resume_ck = match persist.resume {
         Some(path) => Some(
             SessionCheckpoint::<T>::load(path)
-                .map_err(|e| format!("resuming from {path}: {e}"))?,
+                .map_err(|e| CliError::persist(format!("resuming from {path}: {e}")))?,
         ),
         None => None,
     };
@@ -167,13 +245,13 @@ fn run_session<T: Scalar>(
     let mut knn_times = StepTimes::new();
     let aff = match persist.load_affinities {
         Some(path) => {
-            let aff =
-                Affinities::load(path).map_err(|e| format!("loading affinities {path}: {e}"))?;
+            let aff = Affinities::load(path)
+                .map_err(|e| CliError::persist(format!("loading affinities {path}: {e}")))?;
             if aff.n() != n {
-                return Err(format!(
+                return Err(CliError::persist(format!(
                     "affinities {path} hold {} points but the dataset has {n}",
                     aff.n()
-                ));
+                )));
             }
             if (aff.perplexity() - cfg.perplexity).abs() > 1e-12 {
                 eprintln!(
@@ -192,8 +270,9 @@ fn run_session<T: Scalar>(
             let graph = match persist.load_knn {
                 Some(path) => {
                     let g = KnnGraph::<T>::load(path)
-                        .map_err(|e| format!("loading KNN graph {path}: {e}"))?;
-                    g.verify_source(points, n, d).map_err(|e| format!("KNN graph {path}: {e}"))?;
+                        .map_err(|e| CliError::persist(format!("loading KNN graph {path}: {e}")))?;
+                    g.verify_source(points, n, d)
+                        .map_err(|e| CliError::fit(format!("KNN graph {path}: {e}")))?;
                     println!(
                         "[knn] loaded {path} (n={}, k={}, engine={})",
                         g.n(),
@@ -202,13 +281,12 @@ fn run_session<T: Scalar>(
                     );
                     g
                 }
-                None => {
-                    KnnGraph::build_for_perplexity(pool, points, n, d, cfg.perplexity, &plan)
-                        .map_err(|e| e.to_string())?
-                }
+                None => KnnGraph::build_for_perplexity(pool, points, n, d, cfg.perplexity, &plan)?,
             };
             if let Some(path) = persist.save_knn {
-                graph.save(path).map_err(|e| format!("saving KNN graph {path}: {e}"))?;
+                graph
+                    .save(path)
+                    .map_err(|e| CliError::persist(format!("saving KNN graph {path}: {e}")))?;
                 println!(
                     "[knn] saved {path} (n={}, k={} — re-fit any perplexity <= {} with --knn)",
                     graph.n(),
@@ -217,25 +295,24 @@ fn run_session<T: Scalar>(
                 );
             }
             knn_times.merge(graph.step_times());
-            Affinities::from_knn(pool, &graph, cfg.perplexity, &plan).map_err(|e| e.to_string())?
+            Affinities::from_knn(pool, &graph, cfg.perplexity, &plan)?
         }
-        None => {
-            Affinities::fit(pool, points, n, d, cfg.perplexity, &plan).map_err(|e| e.to_string())?
-        }
+        None => Affinities::fit(pool, points, n, d, cfg.perplexity, &plan)?,
     };
     if let Some(path) = persist.save_affinities {
-        aff.save(path).map_err(|e| format!("saving affinities {path}: {e}"))?;
+        aff.save(path)
+            .map_err(|e| CliError::persist(format!("saving affinities {path}: {e}")))?;
         println!("[affinities] saved {path} (nnz={})", aff.p().nnz());
     }
     let mut sess = match resume_ck {
         Some(ck) => {
             let path = persist.resume.unwrap();
             let sess = TsneSession::from_checkpoint(&aff, plan, *cfg, ck)
-                .map_err(|e| format!("resuming from {path}: {e}"))?;
+                .map_err(|e| CliError::persist(format!("resuming from {path}: {e}")))?;
             println!("[resume] {path} @ iteration {}", sess.iterations());
             sess
         }
-        None => TsneSession::new(&aff, plan, *cfg).map_err(|e| e.to_string())?,
+        None => TsneSession::new(&aff, plan, *cfg)?,
     };
     if snapshot_every > 0 {
         sess.set_observer(snapshot_every, |snap| {
@@ -264,13 +341,26 @@ fn run_session<T: Scalar>(
             }
         };
         if let Some(path) = persist.checkpoint {
-            sess.checkpoint(path).map_err(|e| format!("checkpointing to {path}: {e}"))?;
+            // On divergence this persists the REWOUND (last-good) state, so
+            // the artifact on disk is always resumable.
+            sess.checkpoint(path)
+                .map_err(|e| CliError::persist(format!("checkpointing to {path}: {e}")))?;
             println!("[checkpoint] {path} @ iteration {}", sess.iterations());
         }
         if out.reason != StopReason::MaxIter || sess.iterations() >= budget {
             break out;
         }
     };
+    if outcome.reason == StopReason::Diverged {
+        let rewound = match sess.last_good_iteration() {
+            Some(it) => format!("session rewound to last-good iteration {it}"),
+            None => "no last-good state to rewind to".to_string(),
+        };
+        return Err(CliError::step(format!(
+            "gradient loop diverged (non-finite Z or gradient norm); {rewound} — lower the \
+             learning rate or change --seed and retry"
+        )));
+    }
     if outcome.reason != StopReason::MaxIter {
         println!("converged: stopped after {} iterations ({:?})", outcome.n_iter, outcome.reason);
     }
@@ -280,10 +370,11 @@ fn run_session<T: Scalar>(
     Ok(r)
 }
 
-fn cmd_run(args: &Args) -> Result<(), String> {
+fn cmd_run(args: &Args) -> Result<(), CliError> {
     let dataset = args.get("dataset").unwrap_or("digits");
-    let ds_kind = PaperDataset::from_name(dataset)
-        .ok_or_else(|| format!("unknown dataset '{dataset}' (see `acc-tsne info`)"))?;
+    let ds_kind = PaperDataset::from_name(dataset).ok_or_else(|| {
+        CliError::usage(format!("unknown dataset '{dataset}' (see `acc-tsne info`)"))
+    })?;
     let imp: Implementation = args.get_parse("impl", Implementation::AccTsne)?;
     let exp = exp_config(args)?;
 
@@ -291,22 +382,24 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     // combinations come back as typed plan errors, before any data is built.
     let mut plan = StagePlan::preset(imp);
     if let Some(s) = args.get("repulsive") {
-        let v: RepulsiveVariant = s.parse().map_err(|e| format!("--repulsive: {e}"))?;
-        plan = plan.with_repulsive(v).map_err(|e| e.to_string())?;
+        let v: RepulsiveVariant =
+            s.parse().map_err(|e| CliError::usage(format!("--repulsive: {e}")))?;
+        plan = plan.with_repulsive(v)?;
     }
     if let Some(s) = args.get("layout") {
-        let l: Layout = s.parse().map_err(|e| format!("--layout: {e}"))?;
-        plan = plan.with_layout(l).map_err(|e| e.to_string())?;
+        let l: Layout = s.parse().map_err(|e| CliError::usage(format!("--layout: {e}")))?;
+        plan = plan.with_layout(l)?;
     }
     if let Some(s) = args.get("attractive") {
-        let v: AttractiveVariant = s.parse().map_err(|e| format!("--attractive: {e}"))?;
-        plan = plan.with_attractive(v).map_err(|e| e.to_string())?;
+        let v: AttractiveVariant =
+            s.parse().map_err(|e| CliError::usage(format!("--attractive: {e}")))?;
+        plan = plan.with_attractive(v)?;
     }
     if let Some(s) = args.get("adopt-threshold") {
         let pct: usize = s
             .parse()
-            .map_err(|e| format!("--adopt-threshold: cannot parse '{s}': {e}"))?;
-        plan = plan.with_adopt_drift_pct(pct).map_err(|e| e.to_string())?;
+            .map_err(|e| CliError::usage(format!("--adopt-threshold: cannot parse '{s}': {e}")))?;
+        plan = plan.with_adopt_drift_pct(pct)?;
     }
 
     let cfg = TsneConfig {
@@ -321,7 +414,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     // Convergence control: either flag switches run() → run_until().
     let min_grad_norm = args.get_parse("min-grad-norm", 0.0f64)?;
     if min_grad_norm < 0.0 {
-        return Err(format!("--min-grad-norm must be >= 0, got {min_grad_norm}"));
+        return Err(CliError::usage(format!("--min-grad-norm must be >= 0, got {min_grad_norm}")));
     }
     let n_no_progress = args.get_parse("n-iter-without-progress", 0usize)?;
     let conv = if min_grad_norm > 0.0 || n_no_progress > 0 {
@@ -366,15 +459,16 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         resume: args.get("resume"),
     };
     if persist.checkpoint_every > 0 && persist.checkpoint.is_none() {
-        return Err("--checkpoint-every requires --checkpoint FILE (where to write)".into());
+        return Err(CliError::usage(
+            "--checkpoint-every requires --checkpoint FILE (where to write)",
+        ));
     }
     if persist.load_affinities.is_some()
         && (persist.load_knn.is_some() || persist.save_knn.is_some())
     {
-        return Err(
-            "--affinities skips KNN and BSP entirely; it cannot combine with --knn/--save-knn"
-                .into(),
-        );
+        return Err(CliError::usage(
+            "--affinities skips KNN and BSP entirely; it cannot combine with --knn/--save-knn",
+        ));
     }
     // run_until's no-progress window is per call by contract, and the
     // checkpoint loop calls it once per chunk — a window at least as long as
@@ -394,7 +488,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     ] {
         if let Some(path) = path {
             if !std::path::Path::new(path).is_file() {
-                return Err(format!("--{flag}: no such file '{path}'"));
+                return Err(CliError::usage(format!("--{flag}: no such file '{path}'")));
             }
         }
     }
@@ -407,7 +501,9 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         if let Some(path) = path {
             let parent = std::path::Path::new(path).parent().unwrap_or(std::path::Path::new(""));
             if !parent.as_os_str().is_empty() && !parent.is_dir() {
-                return Err(format!("--{flag}: directory of '{path}' does not exist"));
+                return Err(CliError::usage(format!(
+                    "--{flag}: directory of '{path}' does not exist"
+                )));
             }
         }
     }
@@ -419,7 +515,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         exp.resolved_threads(),
         cfg.n_iter
     );
-    let ds = ds_kind.generate::<f64>(exp.scale, exp.seed, &pool);
+    let ds = ds_kind.try_generate::<f64>(exp.scale, exp.seed, &pool).map_err(FitError::from)?;
     println!("n={} d={}", ds.n, ds.d);
 
     // The gen pool is reused for the affinity fit; the session owns its own
@@ -450,7 +546,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     }
     if let Some(out) = args.get("out") {
         acc_tsne::data::io::write_embedding_csv(out, &embedding, &labels)
-            .map_err(|e| format!("writing {out}: {e}"))?;
+            .map_err(|e| CliError::persist(format!("writing {out}: {e}")))?;
         println!("[csv] {out}");
     }
     if let Some(plot) = args.get("plot") {
@@ -459,13 +555,13 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         } else {
             acc_tsne::viz::write_ppm(plot, &embedding, &labels, 768)
         }
-        .map_err(|e| format!("writing {plot}: {e}"))?;
+        .map_err(|e| CliError::persist(format!("writing {plot}: {e}")))?;
         println!("[plot] {plot}");
     }
     Ok(())
 }
 
-fn cmd_info() -> Result<(), String> {
+fn cmd_info() -> Result<(), CliError> {
     println!("acc-tsne — Barnes-Hut t-SNE (Chaudhary et al. 2022) reproduction");
     println!("cores available : {}", available_cores());
     println!(
@@ -646,5 +742,66 @@ mod tests {
         std::fs::remove_file(&path).ok();
         assert!(e.contains("resuming from"), "{e}");
         assert!(e.contains("magic"), "{e}");
+    }
+
+    // ── exit-code discipline ─────────────────────────────────────────────
+    // Each error family carries its own process exit code, so scripts and CI
+    // branch on $? instead of parsing stderr: 2 usage, 3 fit, 4 persist,
+    // 5 plan, 6 divergence.
+
+    #[test]
+    fn usage_and_plan_errors_carry_their_exit_codes() {
+        let e = real_main(&argv("run --min-grad-nrm 0.1")).unwrap_err();
+        assert_eq!(e.code, EXIT_USAGE, "{e}");
+        let e = real_main(&argv("run --dataset bogus")).unwrap_err();
+        assert_eq!(e.code, EXIT_USAGE, "{e}");
+        let e = real_main(&argv("run --checkpoint-every 50")).unwrap_err();
+        assert_eq!(e.code, EXIT_USAGE, "{e}");
+        let e = real_main(&argv("run --impl fit-sne --layout zorder")).unwrap_err();
+        assert_eq!(e.code, EXIT_PLAN, "{e}");
+    }
+
+    #[test]
+    fn fit_errors_carry_the_fit_exit_code() {
+        // A perplexity no tiny dataset can satisfy is rejected by the typed
+        // fit layer — only dataset generation is paid, never a KNN run.
+        let e = real_main(&argv(
+            "run --dataset digits --scale 0.02 --threads 2 --iters 1 --perplexity 1000000",
+        ))
+        .unwrap_err();
+        assert_eq!(e.code, EXIT_FIT, "{e}");
+        assert!(e.contains("perplexity"), "{e}");
+    }
+
+    #[test]
+    fn persist_errors_carry_the_persist_exit_code() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("acc_tsne_cli_exit_code_{}.bin", std::process::id()));
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        let e = real_main(&argv(&format!(
+            "run --dataset digits --scale 0.05 --iters 1 --threads 2 --resume {}",
+            path.display()
+        )))
+        .unwrap_err();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(e.code, EXIT_PERSIST, "{e}");
+    }
+
+    #[test]
+    fn typed_error_conversions_pick_the_right_family() {
+        assert_eq!(CliError::from(String::from("bad flag")).code, EXIT_USAGE);
+        assert_eq!(CliError::usage("x").code, EXIT_USAGE);
+        assert_eq!(CliError::persist("x").code, EXIT_PERSIST);
+        assert_eq!(CliError::step("x").code, EXIT_STEP);
+        let e = CliError::from(FitError::NonFinite { row: 3, col: 1 });
+        assert_eq!(e.code, EXIT_FIT);
+        assert!(e.contains("non-finite"), "{e}");
+        let codes = [EXIT_USAGE, EXIT_FIT, EXIT_PERSIST, EXIT_PLAN, EXIT_STEP];
+        for (i, a) in codes.iter().enumerate() {
+            assert!(*a != 0 && *a != 1, "family codes must not collide with the generic 0/1");
+            for b in &codes[i + 1..] {
+                assert_ne!(a, b, "exit codes must be distinct");
+            }
+        }
     }
 }

@@ -43,12 +43,26 @@ pub struct Conditionals<T: Real> {
 /// Matches the vdMaaten/sklearn `_binary_search_perplexity` logic: H computed
 /// in nats, β doubled/halved until bracketed, then bisected.
 pub fn bsp_row<T: Real>(dist_sq: &[T], perplexity: f64, out: &mut [T]) -> T {
+    bsp_row_checked(dist_sq, perplexity, out).0
+}
+
+/// `bsp_row` plus an explicit convergence flag.
+///
+/// When the entropy search converges, the output is bit-identical to what
+/// `bsp_row` has always produced. When it does not — the β bracket saturates
+/// (all-equal or all-zero distances make the entropy flat in β), the
+/// arithmetic goes non-finite, or the total probability mass underflows the
+/// `T::TINY` clamp — the row degrades to the uniform distribution
+/// `1/k` with a finite fallback β of 1, instead of whatever the last bisection
+/// step left behind. Returns `(β, converged)`.
+pub fn bsp_row_checked<T: Real>(dist_sq: &[T], perplexity: f64, out: &mut [T]) -> (T, bool) {
     debug_assert_eq!(dist_sq.len(), out.len());
     let desired_entropy = T::from_f64(perplexity.ln());
     let mut beta = T::ONE;
     let mut beta_min = T::MIN_REAL; // acts as -inf sentinel
     let mut beta_max = T::MAX_REAL; // +inf sentinel
     let tol = T::from_f64(TOL);
+    let mut converged = false;
 
     for _ in 0..MAX_ITER {
         // p_j = exp(-β d_j²); accumulate Σp and Σ β d² p for the entropy.
@@ -65,6 +79,7 @@ pub fn bsp_row<T: Real>(dist_sq: &[T], perplexity: f64, out: &mut [T]) -> T {
         let entropy = sum_p.ln() + beta * sum_disp / sum_p;
         let diff = entropy - desired_entropy;
         if diff.abs() <= tol {
+            converged = true;
             break;
         }
         if diff > T::ZERO {
@@ -92,10 +107,25 @@ pub fn bsp_row<T: Real>(dist_sq: &[T], perplexity: f64, out: &mut [T]) -> T {
         sum_p += p;
     }
     let inv = T::ONE / sum_p.max_r(T::TINY);
+    // Underflowed mass is non-convergence: once Σp falls to the T::TINY
+    // clamp, the entropy the search matched is an artifact of the clamp
+    // (ln TINY + β·Σd²p/TINY sweeps through every target as Σp → TINY) and
+    // the row cannot renormalize to mass 1.
+    let mut finite = beta.is_finite_r() && sum_p > T::TINY;
     for o in out.iter_mut() {
         *o *= inv;
+        finite = finite && o.is_finite_r();
     }
-    beta
+    if converged && finite {
+        return (beta, true);
+    }
+    // Graceful degradation: uniform row, finite β. NaN conditionals would
+    // otherwise poison the symmetrized P matrix and every later stage.
+    let uniform = T::ONE / T::from_usize(out.len().max(1));
+    for o in out.iter_mut() {
+        *o = uniform;
+    }
+    (T::ONE, false)
 }
 
 /// BSP over all points (paper step 2).
@@ -228,6 +258,54 @@ mod tests {
                 assert!(p.is_finite(), "k = {k} pos {j}: {p}");
                 assert!((p - want).abs() < 1e-12, "k = {k} pos {j}: {p} != {want}");
             }
+        }
+    }
+
+    #[test]
+    fn checked_row_flags_uniform_fallback_on_flat_entropy() {
+        // All-equal distances make the conditional distribution uniform at
+        // every β: the entropy is pinned at ln k and the search can only
+        // converge when the target perplexity is exactly k. Off-target rows
+        // must degrade to the explicit uniform fallback, never garbage β.
+        let dists = vec![3.25f64; 16];
+        let mut out = vec![0.0; 16];
+        let (beta, converged) = bsp_row_checked(&dists, 5.0, &mut out);
+        assert!(!converged);
+        assert_eq!(beta, 1.0);
+        for &p in &out {
+            assert_eq!(p, 1.0 / 16.0);
+        }
+    }
+
+    #[test]
+    fn checked_row_matches_unchecked_on_converging_input() {
+        let mut rng = Rng::new(7);
+        for _ in 0..10 {
+            let k = 25;
+            let dists: Vec<f64> = (0..k).map(|_| rng.next_f64() * 8.0 + 0.05).collect();
+            let mut a = vec![0.0; k];
+            let mut b = vec![0.0; k];
+            let beta_a = bsp_row(&dists, 9.0, &mut a);
+            let (beta_b, converged) = bsp_row_checked(&dists, 9.0, &mut b);
+            assert!(converged);
+            assert_eq!(beta_a, beta_b);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn extreme_dynamic_range_stays_finite() {
+        // 1e±30 distances overflow exp(-β d²) toward 0/1 long before the
+        // bracket settles; whichever way the search ends, the row and β must
+        // be finite.
+        let dists = vec![1e30f64, 1e30, 1e-30, 1e-30, 1.0, 2.0];
+        let mut out = vec![0.0; 6];
+        let (beta, _) = bsp_row_checked(&dists, 3.0, &mut out);
+        assert!(beta.is_finite(), "beta = {beta}");
+        let sum: f64 = out.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "sum = {sum}");
+        for &p in &out {
+            assert!(p.is_finite() && p >= 0.0, "p = {p}");
         }
     }
 

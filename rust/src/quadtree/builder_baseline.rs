@@ -168,6 +168,29 @@ mod tests {
     }
 
     #[test]
+    fn near_coincident_and_non_finite_points_terminate_with_finite_geometry() {
+        let pool = ThreadPool::new(2);
+        let mut pos = vec![0.0f64; 2 * 24];
+        for i in 0..24 {
+            pos[2 * i] = 0.5 + i as f64 * 1e-300;
+            pos[2 * i + 1] = 0.5;
+        }
+        let tree = build_baseline(&pool, &pos);
+        tree.validate().unwrap();
+        // NaN never equals itself, so the coincidence cutoff cannot fire for
+        // a poisoned cell — the depth cap must still terminate the build with
+        // finite cell geometry.
+        pos[3] = f64::NAN;
+        pos[10] = f64::NEG_INFINITY;
+        let tree = build_baseline(&pool, &pos);
+        tree.validate().unwrap();
+        assert_eq!(tree.root().count, 24);
+        assert!(tree.nodes.iter().all(|nd| {
+            nd.width.to_f64().is_finite() && nd.center.iter().all(|c| c.to_f64().is_finite())
+        }));
+    }
+
+    #[test]
     fn same_leaf_partition_as_morton_builder() {
         // Both builders subdivide the same root square with the same rule, so
         // leaf point-sets must coincide (morton grid vs float comparisons can

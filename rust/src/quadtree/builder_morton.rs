@@ -201,21 +201,9 @@ pub fn build_morton<T: Real>(pool: &ThreadPool, pos: &[T]) -> QuadTree<T> {
 /// Single-thread morton build: same algorithm, zero pool dispatches.
 fn build_morton_small<T: Real>(pos: &[T]) -> QuadTree<T> {
     let n = pos.len() / 2;
-    // bbox
-    let (mut lo, mut hi) = ([f64::INFINITY; 2], [f64::NEG_INFINITY; 2]);
-    for i in 0..n {
-        for d in 0..2 {
-            let v = pos[2 * i + d].to_f64();
-            lo[d] = lo[d].min(v);
-            hi[d] = hi[d].max(v);
-        }
-    }
-    let cent = [(lo[0] + hi[0]) * 0.5, (lo[1] + hi[1]) * 0.5];
-    let span = ((hi[0] - lo[0]).max(hi[1] - lo[1]) * 0.5).max(f64::MIN_POSITIVE);
-    let root_cell = RootCell {
-        cent,
-        r_span: span * (1.0 + 1e-9),
-    };
+    // bbox (shared with the parallel path — identical by min/max associativity,
+    // and it closes the same non-finite escape hatches)
+    let root_cell = RootCell::bounding_seq(pos);
     // encode + sort
     let mut pairs: Vec<(u64, u32)> = (0..n)
         .map(|i| {
@@ -508,6 +496,34 @@ mod tests {
             assert_eq!(t2.point_pos, t1.point_pos);
             t2.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn near_coincident_and_non_finite_points_build_finite_trees() {
+        let pool = ThreadPool::new(4);
+        // near-coincident: spread far below the 2⁻³² grid resolution, so all
+        // codes collide into one multi-point leaf
+        let mut pos = vec![0.0f64; 2 * 32];
+        for i in 0..32 {
+            pos[2 * i] = 1.0 + i as f64 * 1e-300;
+            pos[2 * i + 1] = -1.0;
+        }
+        let tree = build_morton(&pool, &pos);
+        tree.validate().unwrap();
+        let finite_geometry = |t: &QuadTree<f64>| {
+            t.nodes.iter().all(|nd| {
+                nd.width.to_f64().is_finite()
+                    && nd.center.iter().all(|c| c.to_f64().is_finite())
+            })
+        };
+        assert!(finite_geometry(&tree));
+        // poisoned coordinates must not blow the cell geometry up either
+        pos[7] = f64::NAN;
+        pos[12] = f64::INFINITY;
+        let tree = build_morton(&pool, &pos);
+        tree.validate().unwrap();
+        assert!(finite_geometry(&tree));
+        assert_eq!(tree.root().count, 32);
     }
 
     #[test]

@@ -139,10 +139,15 @@ impl<T: Real> QuadTree<T> {
                         return Err(format!("point {orig} duplicated or out of range"));
                     }
                     seen[orig] = true;
-                    // point inside cell (with fp slack)
+                    // point inside cell (with fp slack); non-finite
+                    // coordinates clamp to the grid edge during encoding, so
+                    // containment is meaningless for them
                     let half = node.width.to_f64() * 0.5 * (1.0 + 1e-6) + 1e-9;
                     for d in 0..2 {
                         let v = self.point_pos[2 * p + d].to_f64();
+                        if !v.is_finite() {
+                            continue;
+                        }
                         let c = node.center[d].to_f64();
                         if (v - c).abs() > half {
                             return Err(format!(

@@ -62,6 +62,13 @@ pub struct RootCell {
 impl RootCell {
     /// Bounding square of a point set (paper: boundaries from min/max of Y).
     /// Expands the span slightly so the max point stays inside the open cell.
+    ///
+    /// Degenerate-geometry contract: the returned cell is always finite.
+    /// Non-finite coordinates are excluded from the extents (their points
+    /// clamp to the grid edge at encode time), an all-coincident cloud gets
+    /// the minimal positive span instead of a zero cell, and extents so wide
+    /// their difference would overflow are capped — `scale()` never divides
+    /// by zero, infinity, or NaN.
     pub fn bounding<T: Real>(pool: &ThreadPool, pos: &[T]) -> RootCell {
         let n = pos.len() / 2;
         assert!(n > 0, "empty point set");
@@ -78,8 +85,10 @@ impl RootCell {
                 for i in s..e {
                     for d in 0..2 {
                         let v = pos[2 * i + d].to_f64();
-                        lo[d] = lo[d].min(v);
-                        hi[d] = hi[d].max(v);
+                        if v.is_finite() {
+                            lo[d] = lo[d].min(v);
+                            hi[d] = hi[d].max(v);
+                        }
                     }
                 }
                 // disjoint: slot tid
@@ -97,8 +106,43 @@ impl RootCell {
                 hi[d] = hi[d].max(maxs[t][d]);
             }
         }
-        let cent = [(lo[0] + hi[0]) * 0.5, (lo[1] + hi[1]) * 0.5];
-        let span = ((hi[0] - lo[0]).max(hi[1] - lo[1]) * 0.5).max(f64::MIN_POSITIVE);
+        Self::from_extents(lo, hi)
+    }
+
+    /// Sequential sibling of [`Self::bounding`] for the small-n builder path
+    /// (no pool dispatch). Min/max reductions are order-independent, so the
+    /// two produce identical cells.
+    pub fn bounding_seq<T: Real>(pos: &[T]) -> RootCell {
+        let n = pos.len() / 2;
+        assert!(n > 0, "empty point set");
+        let mut lo = [f64::INFINITY; 2];
+        let mut hi = [f64::NEG_INFINITY; 2];
+        for i in 0..n {
+            for d in 0..2 {
+                let v = pos[2 * i + d].to_f64();
+                if v.is_finite() {
+                    lo[d] = lo[d].min(v);
+                    hi[d] = hi[d].max(v);
+                }
+            }
+        }
+        Self::from_extents(lo, hi)
+    }
+
+    /// Root square from per-dimension extents, with every non-finite escape
+    /// hatch closed: a dimension that saw no finite coordinate (lo > hi)
+    /// centers at 0; the halved-before-subtracting span cannot overflow and
+    /// is floored for coincident clouds and capped so the 1e-9 inflation
+    /// stays finite.
+    fn from_extents(lo: [f64; 2], hi: [f64; 2]) -> RootCell {
+        let mut cent = [0.0f64; 2];
+        let mut span = f64::MIN_POSITIVE;
+        for d in 0..2 {
+            if lo[d] <= hi[d] {
+                cent[d] = lo[d] * 0.5 + hi[d] * 0.5;
+                span = span.max((hi[d] * 0.5 - lo[d] * 0.5).min(f64::MAX * 0.25));
+            }
+        }
         RootCell {
             cent,
             r_span: span * (1.0 + 1e-9),
@@ -311,6 +355,41 @@ mod tests {
         let root = RootCell::bounding(&pool, &[1.0f64, 2.0]);
         assert!(root.r_span > 0.0);
         let _ = root.encode(1.0, 2.0); // must not panic
+    }
+
+    #[test]
+    fn bounding_ignores_non_finite_coordinates() {
+        let pool = ThreadPool::new(2);
+        // finite x extents: {1.0, -1.0, 3.0}; finite y extents: {0.5, 2.0, -4.0}
+        let pos = vec![f64::NAN, 0.5, 1.0, f64::INFINITY, -1.0, 2.0, 3.0, -4.0];
+        let root = RootCell::bounding(&pool, &pos);
+        assert_eq!(root.cent, [1.0, -1.0]);
+        assert!(root.r_span.is_finite() && root.r_span > 0.0);
+        let seq = RootCell::bounding_seq(&pos);
+        assert_eq!(seq.cent, root.cent);
+        assert_eq!(seq.r_span, root.r_span);
+    }
+
+    #[test]
+    fn bounding_all_non_finite_defaults_to_origin() {
+        let pool = ThreadPool::new(1);
+        let pos = vec![f64::NAN; 6];
+        let root = RootCell::bounding(&pool, &pos);
+        assert_eq!(root.cent, [0.0, 0.0]);
+        assert!(root.r_span.is_finite() && root.r_span > 0.0);
+        let _ = root.encode(f64::NAN, f64::NAN); // must not panic
+    }
+
+    #[test]
+    fn bounding_extreme_extents_stay_finite() {
+        // ±1.5e308 extents: hi − lo would overflow to inf; the halved
+        // subtraction plus the cap keep the cell and its scale finite.
+        let pool = ThreadPool::new(2);
+        let pos = vec![-1.5e308f64, 1.5e308, 1.5e308, -1.5e308];
+        let root = RootCell::bounding(&pool, &pos);
+        assert!(root.cent.iter().all(|c| c.is_finite()));
+        assert!(root.r_span.is_finite() && root.r_span > 0.0);
+        assert!(root.scale().is_finite() && root.scale() > 0.0);
     }
 
     #[test]

@@ -57,7 +57,7 @@ pub use pipeline::{run_tsne, run_tsne_custom, run_tsne_with_p, AttractiveEngine,
 pub use plan::{PlanError, StagePlan};
 pub use session::{
     Affinities, Convergence, FitError, KnnGraph, MIN_POINTS, ObserverControl, RunOutcome, Snapshot,
-    StepInfo, StopReason, TsneSession,
+    StepError, StepInfo, StopReason, TsneSession,
 };
 pub use workspace::IterationWorkspace;
 

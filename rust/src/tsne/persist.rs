@@ -40,6 +40,13 @@
 //! as a `.tmp` sibling and renamed into place, so a crash mid-save never
 //! destroys the previous good file.
 //!
+//! All writes go through the [`Medium`](crate::data::io::Medium) seam
+//! (`save_on` on each artifact type takes an explicit medium; plain `save`
+//! uses the real filesystem). The fault-injection suite drives the same
+//! codec through media that fail at every write boundary, persist short
+//! prefixes, or crash between staging and rename, and proves the previous
+//! artifact always survives and a torn file never loads.
+//!
 //! ## Failure model
 //!
 //! Loading never panics on hostile input: wrong magic, a future format
@@ -54,6 +61,7 @@ use super::plan::PlanError;
 use crate::common::float::Real;
 use crate::data::io::{
     read_f64_le, read_u32_le, read_u64_le, write_f64_le, write_u32_le, write_u64_le, Fnv1a64,
+    Medium, RealFs,
 };
 use crate::knn::NeighborLists;
 use crate::sparse::CsrMatrix;
@@ -209,6 +217,16 @@ impl<T: Real> SessionCheckpoint<T> {
 
     /// Write the checkpoint to `path` (format: module docs).
     pub fn save(&self, path: impl AsRef<Path>) -> Result<(), PersistError> {
+        self.save_on(&RealFs, path)
+    }
+
+    /// [`Self::save`] on an explicit storage [`Medium`] — the seam the
+    /// fault-injection suite uses to fail writes at chosen boundaries.
+    pub fn save_on<M: Medium>(
+        &self,
+        medium: &M,
+        path: impl AsRef<Path>,
+    ) -> Result<(), PersistError> {
         let n = self.n();
         if self.y.len() != 2 * n
             || self.velocity.len() != self.y.len()
@@ -229,7 +247,7 @@ impl<T: Real> SessionCheckpoint<T> {
                 )));
             }
         }
-        save_to_path(path.as_ref(), CHECKPOINT_MAGIC, scalar_width::<T>(), |w| {
+        save_to_medium(medium, path.as_ref(), CHECKPOINT_MAGIC, scalar_width::<T>(), |w| {
             write_u64_le(w, n as u64)?;
             write_u64_le(w, self.iter as u64)?;
             write_f64_le(w, self.last_z)?;
@@ -317,13 +335,14 @@ impl<T: Real> SessionCheckpoint<T> {
 /// Write the fitted-affinities artifact: the CSR `P` + fit metadata.
 /// Private plumbing for [`Affinities::save`](super::Affinities::save) (the
 /// struct's fields live in `session.rs`).
-pub(crate) fn write_affinities<T: Real>(
+pub(crate) fn write_affinities<T: Real, M: Medium>(
+    medium: &M,
     path: &Path,
     p: &CsrMatrix<T>,
     perplexity: f64,
     k: usize,
 ) -> Result<(), PersistError> {
-    save_to_path(path, AFFINITIES_MAGIC, scalar_width::<T>(), |w| {
+    save_to_medium(medium, path, AFFINITIES_MAGIC, scalar_width::<T>(), |w| {
         write_u64_le(w, p.n as u64)?;
         write_u64_le(w, k as u64)?;
         write_f64_le(w, perplexity)?;
@@ -389,7 +408,8 @@ pub(crate) fn read_affinities<T: Real>(
 /// Write the KNN-graph artifact: neighbor lists + reuse metadata. Private
 /// plumbing for [`KnnGraph::save`](super::KnnGraph::save) (the struct's
 /// fields live in `session.rs`).
-pub(crate) fn write_knn_graph<T: Real>(
+pub(crate) fn write_knn_graph<T: Real, M: Medium>(
+    medium: &M,
     path: &Path,
     knn: &NeighborLists<T>,
     d: usize,
@@ -402,7 +422,7 @@ pub(crate) fn write_knn_graph<T: Real>(
             engine.len()
         )));
     }
-    save_to_path(path, KNN_MAGIC, scalar_width::<T>(), |w| {
+    save_to_medium(medium, path, KNN_MAGIC, scalar_width::<T>(), |w| {
         write_u64_le(w, knn.n as u64)?;
         write_u64_le(w, d as u64)?;
         write_u64_le(w, knn.k as u64)?;
@@ -572,16 +592,23 @@ impl<R: Read> Read for HashingReader<R> {
 /// sibling, the checksum is patched into its header, and only then is the
 /// temp file renamed over `path`. A crash (or full disk) mid-save therefore
 /// never destroys the previous good artifact — which is the whole point of
-/// periodic checkpointing. The `.tmp` file is cleaned up on failure.
-fn save_to_path<F>(path: &Path, magic: &[u8; 8], width: u32, payload: F) -> Result<(), PersistError>
+/// periodic checkpointing. The `.tmp` file is cleaned up on failure. All
+/// storage operations go through `medium`, so tests can fail any of them.
+fn save_to_medium<M: Medium, F>(
+    medium: &M,
+    path: &Path,
+    magic: &[u8; 8],
+    width: u32,
+    payload: F,
+) -> Result<(), PersistError>
 where
-    F: FnOnce(&mut HashingWriter<BufWriter<File>>) -> Result<(), PersistError>,
+    F: FnOnce(&mut HashingWriter<BufWriter<M::Writer>>) -> Result<(), PersistError>,
 {
     let tmp = tmp_sibling(path);
-    let result = write_file(&tmp, magic, width, payload)
-        .and_then(|()| std::fs::rename(&tmp, path).map_err(PersistError::from));
+    let result = write_file(medium, &tmp, magic, width, payload)
+        .and_then(|()| medium.rename(&tmp, path).map_err(PersistError::from));
     if result.is_err() {
-        std::fs::remove_file(&tmp).ok();
+        medium.remove(&tmp).ok();
     }
     result
 }
@@ -598,11 +625,17 @@ fn tmp_sibling(path: &Path) -> PathBuf {
 }
 
 /// Write header + hashed payload, then patch the checksum into the header.
-fn write_file<F>(path: &Path, magic: &[u8; 8], width: u32, payload: F) -> Result<(), PersistError>
+fn write_file<M: Medium, F>(
+    medium: &M,
+    path: &Path,
+    magic: &[u8; 8],
+    width: u32,
+    payload: F,
+) -> Result<(), PersistError>
 where
-    F: FnOnce(&mut HashingWriter<BufWriter<File>>) -> Result<(), PersistError>,
+    F: FnOnce(&mut HashingWriter<BufWriter<M::Writer>>) -> Result<(), PersistError>,
 {
-    let file = File::create(path)?;
+    let file = medium.create(path)?;
     let mut w = BufWriter::new(file);
     w.write_all(magic)?;
     write_u32_le(&mut w, FORMAT_VERSION)?;
@@ -708,7 +741,7 @@ mod tests {
     fn affinities_payload_round_trips_exactly() {
         let path = tmp("aff_rt.bin");
         let p = ring_p(64);
-        write_affinities(&path, &p, 12.5, 37).unwrap();
+        write_affinities(&RealFs, &path, &p, 12.5, 37).unwrap();
         let (q, perplexity, k) = read_affinities::<f64>(&path).unwrap();
         assert_eq!(q.n, p.n);
         assert_eq!(q.row_ptr, p.row_ptr);
@@ -796,7 +829,7 @@ mod tests {
     fn knn_graph_payload_round_trips_exactly() {
         let path = tmp("knn_rt.bin");
         let knn = ring_knn(40, 6);
-        write_knn_graph(&path, &knn, 17, 0xDEAD_BEEF_u64, "brute-force-native").unwrap();
+        write_knn_graph(&RealFs, &path, &knn, 17, 0xDEAD_BEEF_u64, "brute-force-native").unwrap();
         let (back, d, fp, engine) = read_knn_graph::<f64>(&path).unwrap();
         assert_eq!(back.n, knn.n);
         assert_eq!(back.k, knn.k);
@@ -827,7 +860,7 @@ mod tests {
             let mut knn = ring_knn(30, 4);
             corrupt(&mut knn);
             let path = tmp("knn_badrows.bin");
-            write_knn_graph(&path, &knn, 5, 1, "brute-force-native").unwrap();
+            write_knn_graph(&RealFs, &path, &knn, 5, 1, "brute-force-native").unwrap();
             match read_knn_graph::<f64>(&path) {
                 Err(PersistError::Corrupt(msg)) => {
                     assert!(msg.contains("row"), "{what}: {msg}")
@@ -842,7 +875,7 @@ mod tests {
     fn knn_graph_engine_name_length_is_bounded() {
         let knn = ring_knn(10, 2);
         let long = "x".repeat(300);
-        match write_knn_graph(&tmp("knn_long.bin"), &knn, 3, 0, &long) {
+        match write_knn_graph(&RealFs, &tmp("knn_long.bin"), &knn, 3, 0, &long) {
             Err(PersistError::Mismatch(msg)) => assert!(msg.contains("engine"), "{msg}"),
             other => panic!("expected Mismatch, got {other:?}"),
         }
@@ -852,7 +885,7 @@ mod tests {
     fn loading_the_wrong_artifact_kind_is_bad_magic() {
         let path = tmp("kind.bin");
         let p = ring_p(16);
-        write_affinities(&path, &p, 5.0, 3).unwrap();
+        write_affinities(&RealFs, &path, &p, 5.0, 3).unwrap();
         match SessionCheckpoint::<f64>::load(&path) {
             Err(PersistError::BadMagic { found }) => assert_eq!(&found, AFFINITIES_MAGIC),
             other => panic!("expected BadMagic, got {other:?}"),

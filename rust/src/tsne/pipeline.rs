@@ -362,7 +362,7 @@ mod tests {
             .expect("valid fit");
         let mut sess = TsneSession::new(&aff, plan, cfg).unwrap();
         for _ in 0..cfg.n_iter {
-            sess.step();
+            sess.step().expect("healthy step");
         }
         let manual = sess.finish();
 

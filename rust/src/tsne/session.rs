@@ -86,6 +86,11 @@ pub enum FitError {
     GraphMismatch(String),
     /// An externally supplied CSR failed structural validation.
     InvalidCsr(String),
+    /// The input points contain a NaN or infinite coordinate; `row`/`col`
+    /// locate the first offender in the n × d row-major layout. Caught at the
+    /// fit boundary so a poisoned value never reaches the KNN distances, the
+    /// perplexity search, or the quadtree.
+    NonFinite { row: usize, col: usize },
 }
 
 impl std::fmt::Display for FitError {
@@ -118,11 +123,35 @@ impl std::fmt::Display for FitError {
             ),
             FitError::GraphMismatch(msg) => write!(f, "KNN graph mismatch: {msg}"),
             FitError::InvalidCsr(msg) => write!(f, "invalid CSR matrix: {msg}"),
+            FitError::NonFinite { row, col } => write!(
+                f,
+                "input contains a non-finite value at point {row}, dimension {col} \
+                 (clean the data before fitting)"
+            ),
         }
     }
 }
 
 impl std::error::Error for FitError {}
+
+impl From<crate::data::DataError> for FitError {
+    fn from(e: crate::data::DataError) -> FitError {
+        match e {
+            crate::data::DataError::Shape { n, d, len } => FitError::PointsShape { n, d, len },
+            crate::data::DataError::NonFinite { row, col } => FitError::NonFinite { row, col },
+        }
+    }
+}
+
+/// Index (row, column) of the first non-finite coordinate of an n × d
+/// row-major point set, if any. O(n·d), branch-predictable — noise next to
+/// the KNN pass it protects.
+fn first_non_finite<T: Scalar>(points: &[T], d: usize) -> Option<(usize, usize)> {
+    points
+        .iter()
+        .position(|v| !v.is_finite_r())
+        .map(|i| (i / d.max(1), i % d.max(1)))
+}
 
 /// Perplexity sanity shared by every fitting entry point. `!(p >= 1.0)`
 /// also catches NaN.
@@ -188,6 +217,9 @@ impl<T: Scalar> KnnGraph<T> {
         if k == 0 || k >= n {
             return Err(FitError::KOutOfRange { k, n });
         }
+        if let Some((row, col)) = first_non_finite(points, d) {
+            return Err(FitError::NonFinite { row, col });
+        }
         let data_fp = data_fingerprint(points);
         let blocked = BruteForceKnn::default();
         let vp = crate::knn::vptree::VpTreeKnn::default();
@@ -233,7 +265,25 @@ impl<T: Scalar> KnnGraph<T> {
     /// of [`crate::tsne::persist`]. Save → [`Self::load`] → save is
     /// byte-identical; build wall time is not persisted.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<(), PersistError> {
-        persist::write_knn_graph(path.as_ref(), &self.knn, self.d, self.data_fp, &self.engine)
+        self.save_on(&crate::data::io::RealFs, path)
+    }
+
+    /// [`Self::save`] on an explicit storage [`Medium`](crate::data::io::Medium)
+    /// — the seam the fault-injection suite uses to fail writes at chosen
+    /// boundaries.
+    pub fn save_on<M: crate::data::io::Medium>(
+        &self,
+        medium: &M,
+        path: impl AsRef<Path>,
+    ) -> Result<(), PersistError> {
+        persist::write_knn_graph(
+            medium,
+            path.as_ref(),
+            &self.knn,
+            self.d,
+            self.data_fp,
+            &self.engine,
+        )
     }
 
     /// Check a (typically loaded) graph against the dataset it is about to
@@ -466,7 +516,18 @@ impl<'p, T: Scalar> Affinities<'p, T> {
     /// artifact starts with empty [`step_times`](Self::step_times), exactly
     /// like [`Affinities::from_csr`].
     pub fn save(&self, path: impl AsRef<Path>) -> Result<(), PersistError> {
-        persist::write_affinities(path.as_ref(), self.p(), self.perplexity, self.k)
+        self.save_on(&crate::data::io::RealFs, path)
+    }
+
+    /// [`Self::save`] on an explicit storage [`Medium`](crate::data::io::Medium)
+    /// — the seam the fault-injection suite uses to fail writes at chosen
+    /// boundaries.
+    pub fn save_on<M: crate::data::io::Medium>(
+        &self,
+        medium: &M,
+        path: impl AsRef<Path>,
+    ) -> Result<(), PersistError> {
+        persist::write_affinities(medium, path.as_ref(), self.p(), self.perplexity, self.k)
     }
 
     /// Number of points.
@@ -545,7 +606,47 @@ pub enum StopReason {
     NoProgress,
     /// The observer returned [`ObserverControl::Stop`].
     Observer,
+    /// A [`TsneSession::step`] diverged (non-finite Z or gradient norm); the
+    /// session was rewound to its last-good state — see [`StepError`].
+    Diverged,
 }
+
+/// Why a gradient iteration was rejected by [`TsneSession::step`].
+///
+/// Divergence (an exploding learning rate, a hostile initial embedding, a
+/// custom attractive engine emitting garbage) surfaces as a non-finite Z or
+/// gradient norm in the fused update sweep. The session detects it **before**
+/// the iteration counter advances, rewinds itself to the last-good in-memory
+/// checkpoint (captured every [`TsneSession::set_guard_interval`] iterations),
+/// and reports what happened — so a serving loop can damp the learning rate
+/// and retry instead of dying. The rewound state is bit-identical to
+/// [`TsneSession::from_checkpoint`] of the same snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StepError {
+    /// Iteration `iter` produced a non-finite Z and/or gradient norm.
+    /// `rewound_to` is the iteration of the restored last-good state, or
+    /// `None` if guarding was disabled and the session is left poisoned.
+    Diverged { iter: usize, z: f64, grad_norm: f64, rewound_to: Option<usize> },
+}
+
+impl std::fmt::Display for StepError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StepError::Diverged { iter, z, grad_norm, rewound_to } => {
+                write!(
+                    f,
+                    "gradient iteration {iter} diverged (Z = {z}, |grad| = {grad_norm}); "
+                )?;
+                match rewound_to {
+                    Some(it) => write!(f, "session rewound to iteration {it}"),
+                    None => write!(f, "no last-good state to rewind to (guarding disabled)"),
+                }
+            }
+        }
+    }
+}
+
+impl std::error::Error for StepError {}
 
 /// Outcome of a [`TsneSession::run`]/[`TsneSession::run_until`] call.
 #[derive(Clone, Copy, Debug)]
@@ -596,6 +697,11 @@ type Observer<'a, T> = Box<dyn FnMut(&Snapshot<T>) -> ObserverControl + 'a>;
 /// against FP-noise "improvements" at the plateau).
 const PROGRESS_REL_TOL: f64 = 1e-3;
 
+/// Default spacing of the last-good divergence-guard snapshots: a checkpoint
+/// capture is three O(n) copies, amortized to noise at this interval next to
+/// the O(n log n) tree + force work of each iteration.
+const GUARD_EVERY_DEFAULT: usize = 50;
+
 /// A resumable t-SNE optimizer over fitted [`Affinities`].
 ///
 /// Owns the iteration workspace (embedding, force buffers, optimizer state,
@@ -619,6 +725,8 @@ pub struct TsneSession<'a, T: Scalar> {
     observer: Option<(usize, Observer<'a, T>)>,
     snapshot_buf: Vec<T>,
     stop_requested: bool,
+    guard_every: usize,
+    last_good: Option<SessionCheckpoint<T>>,
 }
 
 impl<'a, T: Scalar> TsneSession<'a, T> {
@@ -662,6 +770,8 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
             observer: None,
             snapshot_buf: Vec::new(),
             stop_requested: false,
+            guard_every: GUARD_EVERY_DEFAULT,
+            last_good: None,
         })
     }
 
@@ -718,6 +828,25 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
         &self.plan
     }
 
+    /// Set how often the divergence guard refreshes its in-memory last-good
+    /// checkpoint (default every 50 iterations; `0` disables guarding, after
+    /// which a diverged [`step`](Self::step) cannot rewind and leaves the
+    /// session poisoned). Capturing is read-only: it never perturbs the
+    /// trajectory.
+    pub fn set_guard_interval(&mut self, every: usize) {
+        self.guard_every = every;
+        if every == 0 {
+            self.last_good = None;
+        }
+    }
+
+    /// Iteration of the current last-good guard snapshot, if one has been
+    /// captured.
+    #[inline]
+    pub fn last_good_iteration(&self) -> Option<usize> {
+        self.last_good.as_ref().map(|ck| ck.iter)
+    }
+
     /// Current embedding, un-permuted to the caller's original point order
     /// (a copy; the live state may be in Z-order).
     pub fn embedding(&self) -> Vec<T> {
@@ -736,7 +865,19 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
     /// Run one gradient iteration: (tree build + summarize + BH repulsive) or
     /// FFT repulsive, attractive over the layout-order `P`, then the fused
     /// combine+descent sweep. Returns the iteration's gradient norm and Z.
-    pub fn step(&mut self) -> StepInfo {
+    ///
+    /// A non-finite Z or gradient norm is divergence: the iteration is
+    /// rejected (the counter does not advance), the session rewinds to its
+    /// last-good guard checkpoint, and a typed [`StepError`] reports both.
+    /// Healthy iterations are bit-identical to what they were before the
+    /// guard existed — the check only reads values the fused sweep already
+    /// produced.
+    pub fn step(&mut self) -> Result<StepInfo, StepError> {
+        if self.guard_every > 0
+            && (self.last_good.is_none() || self.iter % self.guard_every == 0)
+        {
+            self.last_good = Some(self.to_checkpoint());
+        }
         let iter = self.iter;
         let native_engine = NativeAttractive(self.plan.attractive_variant);
         let Self {
@@ -824,20 +965,68 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
 
         self.last_z = z;
         self.last_grad_norm = norm_sq.to_f64().sqrt();
+        let z_f = z.to_f64();
+        if !self.last_grad_norm.is_finite() || !z_f.is_finite() {
+            let grad_norm = self.last_grad_norm;
+            let rewound_to = self.rewind_to_last_good();
+            return Err(StepError::Diverged { iter, z: z_f, grad_norm, rewound_to });
+        }
         self.iter += 1;
         let snapshot_due = matches!(&self.observer, Some((every, _)) if self.iter % *every == 0);
         if snapshot_due {
             self.emit_snapshot();
         }
-        StepInfo { iter, grad_norm: self.last_grad_norm, z: z.to_f64() }
+        Ok(StepInfo { iter, grad_norm: self.last_grad_norm, z: z_f })
+    }
+
+    /// Restore the session to its last-good guard checkpoint, exactly the way
+    /// [`Self::from_checkpoint`] would (fresh workspace from the un-permuted
+    /// state, then the layout hint replayed) — the rewound trajectory is
+    /// bit-identical to a clean restore of the same snapshot. Returns the
+    /// restored iteration, or `None` when no guard snapshot exists (the
+    /// session then stays poisoned).
+    fn rewind_to_last_good(&mut self) -> Option<usize> {
+        let ck = self.last_good.clone()?;
+        let SessionCheckpoint {
+            iter,
+            last_z,
+            last_grad_norm,
+            y,
+            velocity,
+            gains,
+            layout_perm,
+            ..
+        } = ck;
+        let zorder = self.plan.layout == Layout::Zorder;
+        self.ws = IterationWorkspace::new(y, self.cfg.update, zorder, self.plan.adopt_drift_pct);
+        self.ws.opt.velocity.copy_from_slice(&velocity);
+        self.ws.opt.gains.copy_from_slice(&gains);
+        self.iter = iter;
+        self.last_z = T::from_f64(last_z);
+        self.last_grad_norm = last_grad_norm;
+        if zorder {
+            if let Some(perm) = layout_perm {
+                self.ws
+                    .adopt_permutation(&self.pool, &perm, self.aff.p())
+                    .expect("guard checkpoint carries the permutation it was captured with");
+            }
+        }
+        Some(iter)
     }
 
     /// Run `iters` more iterations (or until the observer requests a stop).
     /// A previous observer stop does not stick: each call starts fresh.
+    ///
+    /// A diverged step ends the call with [`StopReason::Diverged`] after the
+    /// automatic rewind — retrying the identical trajectory would diverge
+    /// identically, so the decision (damp the learning rate, re-seed, give
+    /// up) goes back to the caller.
     pub fn run(&mut self, iters: usize) -> RunOutcome {
         self.stop_requested = false;
         for _ in 0..iters {
-            self.step();
+            if self.step().is_err() {
+                return RunOutcome { n_iter: self.iter, reason: StopReason::Diverged };
+            }
             if self.stop_requested {
                 return RunOutcome { n_iter: self.iter, reason: StopReason::Observer };
             }
@@ -859,7 +1048,10 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
         let mut best = f64::INFINITY;
         let mut since_progress = 0usize;
         while self.iter < conv.max_iter {
-            let info = self.step();
+            let info = match self.step() {
+                Ok(info) => info,
+                Err(_) => return RunOutcome { n_iter: self.iter, reason: StopReason::Diverged },
+            };
             if self.stop_requested {
                 return RunOutcome { n_iter: self.iter, reason: StopReason::Observer };
             }
@@ -1117,7 +1309,7 @@ mod tests {
         b.run(10);
         assert_eq!(b.iterations(), 10);
         for _ in 0..5 {
-            b.step();
+            b.step().expect("healthy step");
         }
         let out = b.run(15);
         assert_eq!(out.n_iter, 30);
@@ -1253,7 +1445,7 @@ mod tests {
         // Reference trajectory without an observer.
         let mut plain = TsneSession::new(&aff, StagePlan::acc_tsne(), cfg).unwrap();
         for _ in 0..20 {
-            plain.step();
+            plain.step().expect("healthy step");
         }
         let y20 = plain.embedding();
         let n = aff.n();
@@ -1435,6 +1627,177 @@ mod tests {
         for (i, (a, b)) in serial.iter().zip(&concurrent).enumerate() {
             assert_eq!(a, b, "seed {} diverged under concurrency", seeds[i]);
         }
+    }
+
+    #[test]
+    fn non_finite_points_are_rejected_at_the_fit_boundary() {
+        let pool = ThreadPool::new(2);
+        let plan = StagePlan::acc_tsne();
+        let mut pts: Vec<f64> = (0..20 * 3).map(|i| (i % 13) as f64 * 0.5).collect();
+        pts[3 * 7 + 2] = f64::NAN;
+        match Affinities::fit(&pool, &pts, 20, 3, 5.0, &plan) {
+            Err(FitError::NonFinite { row: 7, col: 2 }) => {}
+            other => panic!("expected NonFinite at (7, 2), got {:?}", other.map(|_| ())),
+        }
+        pts[3 * 7 + 2] = f64::NEG_INFINITY;
+        match KnnGraph::build(&pool, &pts, 20, 3, 5, &plan) {
+            Err(FitError::NonFinite { row: 7, col: 2 }) => {}
+            other => panic!("expected NonFinite at (7, 2), got {:?}", other.map(|_| ())),
+        }
+        let msg = FitError::NonFinite { row: 7, col: 2 }.to_string();
+        assert!(msg.contains("point 7") && msg.contains("dimension 2"), "{msg}");
+        // the clean version of the same data fits
+        pts[3 * 7 + 2] = 0.75;
+        assert!(KnnGraph::build(&pool, &pts, 20, 3, 5, &plan).is_ok());
+    }
+
+    /// Delegates to the native attractive kernel, poisoning the output of one
+    /// chosen call with NaN — the deterministic divergence trigger for the
+    /// guard/rewind tests.
+    struct PoisonEngine {
+        native: NativeAttractive,
+        poison_at: usize,
+        calls: std::cell::Cell<usize>,
+    }
+
+    impl PoisonEngine {
+        fn new(plan: &StagePlan, poison_at: usize) -> PoisonEngine {
+            PoisonEngine {
+                native: NativeAttractive(plan.attractive_variant),
+                poison_at,
+                calls: std::cell::Cell::new(0),
+            }
+        }
+    }
+
+    impl AttractiveEngine<f64> for PoisonEngine {
+        fn name(&self) -> &'static str {
+            "poison-once"
+        }
+        fn compute(
+            &self,
+            pool: &ThreadPool,
+            p: &CsrMatrix<f64>,
+            y: &[f64],
+            out: &mut [f64],
+        ) {
+            let call = self.calls.get();
+            self.calls.set(call + 1);
+            self.native.compute(pool, p, y, out);
+            if call == self.poison_at {
+                for o in out.iter_mut() {
+                    *o = f64::NAN;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forced_divergence_rewinds_bit_identically_to_a_clean_restore() {
+        let (_ds, aff) = fitted(300, 50);
+        let cfg = quick_cfg(0);
+        let plan = StagePlan::acc_tsne();
+
+        // Poisoned session: guard every 10 iters, NaN injected on the step
+        // at iteration 17 (the engine delegates natively before that, so the
+        // trajectory is the healthy one bit for bit).
+        let poison = PoisonEngine::new(&plan, 17);
+        let mut sess = TsneSession::new(&aff, plan, cfg).unwrap();
+        sess.set_guard_interval(10);
+        sess.set_attractive_engine(&poison);
+        for _ in 0..17 {
+            sess.step().expect("healthy step");
+        }
+        assert_eq!(sess.last_good_iteration(), Some(10));
+        match sess.step() {
+            Err(StepError::Diverged { iter: 17, rewound_to: Some(10), grad_norm, .. }) => {
+                assert!(!grad_norm.is_finite());
+            }
+            other => panic!("expected Diverged with rewind, got {other:?}"),
+        }
+        assert_eq!(sess.iterations(), 10, "rewound to the guard snapshot");
+        // The poison call is spent: continuing replays the healthy kernel.
+        for _ in 0..15 {
+            sess.step().expect("healthy after rewind");
+        }
+        let got = sess.finish();
+
+        // Clean restore of the same iteration-10 state via the public
+        // checkpoint path — the rewind must match it bit for bit.
+        let mut clean = TsneSession::new(&aff, plan, cfg).unwrap();
+        clean.run(10);
+        let ck = clean.to_checkpoint();
+        drop(clean);
+        let mut restored = TsneSession::from_checkpoint(&aff, plan, cfg, ck).unwrap();
+        for _ in 0..15 {
+            restored.step().expect("healthy step");
+        }
+        let want = restored.finish();
+        assert_eq!(got.embedding, want.embedding);
+        assert_eq!(got.kl_divergence, want.kl_divergence);
+        assert_eq!(got.n_iter, want.n_iter);
+    }
+
+    #[test]
+    fn disabled_guard_reports_divergence_without_rewind() {
+        let (_ds, aff) = fitted(200, 51);
+        let plan = StagePlan::acc_tsne();
+        let poison = PoisonEngine::new(&plan, 3);
+        let mut sess = TsneSession::new(&aff, plan, quick_cfg(0)).unwrap();
+        sess.set_guard_interval(0);
+        sess.set_attractive_engine(&poison);
+        for _ in 0..3 {
+            sess.step().expect("healthy step");
+        }
+        match sess.step() {
+            Err(StepError::Diverged { iter: 3, rewound_to: None, .. }) => {}
+            other => panic!("expected Diverged without rewind, got {other:?}"),
+        }
+        assert_eq!(sess.iterations(), 3, "counter does not advance past divergence");
+        let msg = StepError::Diverged {
+            iter: 3,
+            z: f64::NAN,
+            grad_norm: f64::NAN,
+            rewound_to: None,
+        }
+        .to_string();
+        assert!(msg.contains("iteration 3") && msg.contains("no last-good"), "{msg}");
+    }
+
+    #[test]
+    fn run_surfaces_divergence_as_a_stop_reason() {
+        let (_ds, aff) = fitted(200, 52);
+        let plan = StagePlan::acc_tsne();
+        let poison = PoisonEngine::new(&plan, 5);
+        let mut sess = TsneSession::new(&aff, plan, quick_cfg(0)).unwrap();
+        sess.set_attractive_engine(&poison);
+        let out = sess.run(50);
+        assert_eq!(out.reason, StopReason::Diverged);
+        // default guard captured the initial state at iteration 0
+        assert_eq!(out.n_iter, 0);
+        assert!(sess.embedding().iter().all(|v| v.is_finite()), "rewound state is clean");
+    }
+
+    #[test]
+    fn degenerate_inputs_run_the_full_pipeline_without_panics() {
+        // All-coincident cloud: every KNN distance is zero, every BSP row
+        // takes the uniform fallback, the quadtree is one multi-point leaf —
+        // and the whole fit → session → checkpoint path stays finite.
+        let pool = ThreadPool::new(4);
+        let plan = StagePlan::acc_tsne();
+        let n = 64;
+        let pts = vec![1.25f64; n * 4];
+        let aff = Affinities::fit(&pool, &pts, n, 4, 5.0, &plan).expect("coincident cloud fits");
+        assert!(aff.p().val.iter().all(|v| v.is_finite() && *v >= 0.0));
+        let mut sess = TsneSession::new(&aff, plan, quick_cfg(0)).unwrap();
+        for _ in 0..10 {
+            sess.step().expect("finite step");
+        }
+        let ck = sess.to_checkpoint();
+        assert!(ck.y.iter().all(|v| v.is_finite()));
+        let r = sess.finish();
+        assert!(r.embedding.iter().all(|v| v.is_finite()));
+        assert!(r.kl_divergence.is_finite());
     }
 
     #[test]

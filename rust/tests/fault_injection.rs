@@ -1,0 +1,302 @@
+//! Fault-injection harness for the persistence layer: drive each artifact
+//! format through storage media that fail in controlled ways and prove two
+//! guarantees at every fault point:
+//!
+//! 1. the previous good artifact at the target path always survives, byte
+//!    for byte, and still loads;
+//! 2. a torn staging file never loads — even if something promotes it over
+//!    the artifact path, the loader rejects it with a typed `PersistError`,
+//!    never a panic or a silently-wrong artifact.
+//!
+//! Faults injected, for all three formats (`Affinities`, `SessionCheckpoint`,
+//! `KnnGraph`):
+//! - a write error at EVERY write boundary of the save (each payload buffer
+//!   flush and the header checksum patch);
+//! - a short write (a prefix persists, then the error hits) at every
+//!   boundary — the disk-full torn-file case;
+//! - a rename failure, and a crash between staging and rename (cleanup never
+//!   runs, the staging file is abandoned).
+
+use acc_tsne::data::io::Medium;
+use acc_tsne::data::synthetic::gaussian_mixture;
+use acc_tsne::parallel::ThreadPool;
+use acc_tsne::tsne::{
+    Affinities, KnnGraph, PersistError, SessionCheckpoint, StagePlan, TsneConfig, TsneSession,
+};
+use std::cell::Cell;
+use std::fs::File;
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("acc_tsne_fault_{}_{name}", std::process::id()));
+    p
+}
+
+/// `<name>.tmp` sibling — mirrors the persist layer's staging-path rule.
+fn staging(path: &Path) -> PathBuf {
+    let mut name = path.file_name().expect("artifact path has a name").to_os_string();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct Faults {
+    /// Fail the k-th write syscall to the staging file (0-based).
+    fail_write_at: Option<usize>,
+    /// Bytes of the failing write that persist before the error fires — a
+    /// short write followed by disk-full, the classic torn-file producer.
+    short_by: usize,
+    /// Fail the staging → final rename.
+    fail_rename: bool,
+    /// Simulate a crash at the fault: cleanup never runs, torn staging
+    /// files are abandoned on disk.
+    crash: bool,
+}
+
+/// A [`Medium`] over the real filesystem that injects the configured
+/// [`Faults`]. Tests are single-threaded, so the write counter is a plain
+/// `Rc<Cell>` shared with the handles it creates.
+struct FaultMedium {
+    faults: Faults,
+    writes: Rc<Cell<usize>>,
+}
+
+impl FaultMedium {
+    fn new(faults: Faults) -> FaultMedium {
+        FaultMedium { faults, writes: Rc::new(Cell::new(0)) }
+    }
+
+    /// Write syscalls the staging file has seen (fault-free saves use this
+    /// to count the boundaries the fault sweep must cover).
+    fn writes_seen(&self) -> usize {
+        self.writes.get()
+    }
+}
+
+struct FaultFile {
+    inner: File,
+    faults: Faults,
+    writes: Rc<Cell<usize>>,
+}
+
+impl Write for FaultFile {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let k = self.writes.get();
+        self.writes.set(k + 1);
+        if self.faults.fail_write_at == Some(k) {
+            let keep = self.faults.short_by.min(buf.len());
+            if keep > 0 {
+                self.inner.write_all(&buf[..keep])?;
+            }
+            self.inner.flush()?;
+            return Err(std::io::Error::new(std::io::ErrorKind::Other, "injected write fault"));
+        }
+        self.inner.write(buf)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+impl Seek for FaultFile {
+    fn seek(&mut self, pos: SeekFrom) -> std::io::Result<u64> {
+        self.inner.seek(pos)
+    }
+}
+
+impl Medium for FaultMedium {
+    type Writer = FaultFile;
+
+    fn create(&self, path: &Path) -> std::io::Result<FaultFile> {
+        Ok(FaultFile {
+            inner: File::create(path)?,
+            faults: self.faults,
+            writes: Rc::clone(&self.writes),
+        })
+    }
+
+    fn rename(&self, from: &Path, to: &Path) -> std::io::Result<()> {
+        if self.faults.fail_rename {
+            return Err(std::io::Error::new(std::io::ErrorKind::Other, "injected rename fault"));
+        }
+        std::fs::rename(from, to)
+    }
+
+    fn remove(&self, path: &Path) -> std::io::Result<()> {
+        if self.faults.crash {
+            return Ok(()); // the process died before cleanup could run
+        }
+        std::fs::remove_file(path)
+    }
+}
+
+/// The generic proof, run per format. `save_a` writes the pre-existing good
+/// artifact via the normal filesystem path; `save_b` writes a *different*
+/// artifact through an injected medium; `load` opens whatever sits at the
+/// path.
+fn prove_fault_tolerance(
+    name: &str,
+    save_a: &dyn Fn(&Path),
+    save_b: &dyn Fn(&FaultMedium, &Path) -> Result<(), PersistError>,
+    load: &dyn Fn(&Path) -> Result<(), PersistError>,
+) {
+    let path = tmp(&format!("{name}_artifact.bin"));
+    let stage = staging(&path);
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&stage).ok();
+
+    // Count the write boundaries of a fault-free save of B on a scratch
+    // path, and keep its bytes so "the old artifact survived" cannot pass
+    // vacuously (A and B must actually differ).
+    let scratch = tmp(&format!("{name}_scratch.bin"));
+    let counting = FaultMedium::new(Faults::default());
+    save_b(&counting, &scratch).expect("fault-free save through the medium");
+    let boundaries = counting.writes_seen();
+    assert!(boundaries >= 2, "{name}: expected at least a payload flush and the checksum patch");
+    let bytes_b = std::fs::read(&scratch).unwrap();
+    std::fs::remove_file(&scratch).ok();
+
+    save_a(&path);
+    let bytes_a = std::fs::read(&path).unwrap();
+    assert_ne!(bytes_a, bytes_b, "{name}: artifacts A and B must differ");
+    load(&path).expect("artifact A loads before any fault");
+
+    // A write error at every boundary × clean/short-write × cleanup/crash.
+    // short_by = 7 tears mid-field everywhere (every field is ≥ 4 bytes) and
+    // keeps even the final checksum patch (8 bytes) incomplete.
+    for k in 0..boundaries {
+        for short_by in [0usize, 7] {
+            for crash in [false, true] {
+                let medium = FaultMedium::new(Faults {
+                    fail_write_at: Some(k),
+                    short_by,
+                    crash,
+                    ..Faults::default()
+                });
+                let err = save_b(&medium, &path)
+                    .expect_err("save through a failing medium must error");
+                assert!(
+                    matches!(err, PersistError::Io(_)),
+                    "{name}: boundary {k}: expected Io, got {err:?}"
+                );
+                assert_eq!(
+                    std::fs::read(&path).unwrap(),
+                    bytes_a,
+                    "{name}: boundary {k} short {short_by} crash {crash}: previous artifact torn"
+                );
+                load(&path).unwrap_or_else(|e| {
+                    panic!("{name}: boundary {k}: previous artifact no longer loads: {e}")
+                });
+                if crash {
+                    // The crash abandoned a torn staging file. Promote it
+                    // over the artifact path — the worst case a non-atomic
+                    // writer would allow — and prove it never loads.
+                    let torn = std::fs::read(&stage)
+                        .expect("crash leaves the torn staging file behind");
+                    if torn != bytes_b {
+                        std::fs::copy(&stage, &path).unwrap();
+                        match load(&path) {
+                            Err(
+                                PersistError::Truncated
+                                | PersistError::ChecksumMismatch { .. }
+                                | PersistError::Corrupt(_),
+                            ) => {}
+                            Err(other) => panic!(
+                                "{name}: boundary {k}: torn file gave unexpected error {other:?}"
+                            ),
+                            Ok(()) => {
+                                panic!("{name}: boundary {k}: torn file loaded successfully")
+                            }
+                        }
+                        std::fs::write(&path, &bytes_a).unwrap();
+                    }
+                    std::fs::remove_file(&stage).ok();
+                } else {
+                    assert!(
+                        !stage.exists(),
+                        "{name}: boundary {k}: failed save must clean up its staging file"
+                    );
+                }
+            }
+        }
+    }
+
+    // A rename failure (with cleanup) and a crash between the fully-written
+    // staging file and the rename (no cleanup at all).
+    for crash in [false, true] {
+        let medium = FaultMedium::new(Faults { fail_rename: true, crash, ..Faults::default() });
+        let err = save_b(&medium, &path).expect_err("rename fault must error");
+        assert!(matches!(err, PersistError::Io(_)), "{name}: rename: expected Io, got {err:?}");
+        assert_eq!(std::fs::read(&path).unwrap(), bytes_a, "{name}: rename fault tore the artifact");
+        load(&path).expect("previous artifact still loads after rename fault");
+        if crash {
+            // The abandoned staging file is complete — but the artifact path
+            // still serves A, which is the whole point of staging.
+            assert_eq!(std::fs::read(&stage).unwrap(), bytes_b);
+            std::fs::remove_file(&stage).ok();
+        } else {
+            assert!(!stage.exists(), "{name}: rename failure must clean up the staging file");
+        }
+    }
+
+    std::fs::remove_file(&path).ok();
+}
+
+fn pool() -> ThreadPool {
+    ThreadPool::new(2)
+}
+
+fn fit(n: usize, seed: u64) -> Affinities<'static, f64> {
+    let ds = gaussian_mixture::<f64>(n, 8, 4, 8.0, seed);
+    Affinities::fit(&pool(), &ds.points, ds.n, ds.d, 10.0, &StagePlan::acc_tsne())
+        .expect("valid fit")
+}
+
+#[test]
+fn fault_injection_affinities_survive_and_torn_files_never_load() {
+    let a = fit(160, 11);
+    let b = fit(160, 22);
+    prove_fault_tolerance(
+        "affinities",
+        &|path| a.save(path).unwrap(),
+        &|medium, path| b.save_on(medium, path),
+        &|path| Affinities::<f64>::load(path).map(|_| ()),
+    );
+}
+
+#[test]
+fn fault_injection_checkpoints_survive_and_torn_files_never_load() {
+    let aff = fit(300, 33);
+    let cfg = TsneConfig { perplexity: 10.0, n_threads: 2, seed: 7, ..TsneConfig::default() };
+    let mut sess = TsneSession::new(&aff, StagePlan::acc_tsne(), cfg).unwrap();
+    sess.run(5);
+    let ck_a = sess.to_checkpoint();
+    sess.run(4);
+    let ck_b = sess.to_checkpoint();
+    prove_fault_tolerance(
+        "checkpoint",
+        &|path| ck_a.save(path).unwrap(),
+        &|medium, path| ck_b.save_on(medium, path),
+        &|path| SessionCheckpoint::<f64>::load(path).map(|_| ()),
+    );
+}
+
+#[test]
+fn fault_injection_knn_graphs_survive_and_torn_files_never_load() {
+    let plan = StagePlan::acc_tsne();
+    let ds_a = gaussian_mixture::<f64>(200, 8, 4, 8.0, 44);
+    let ds_b = gaussian_mixture::<f64>(200, 8, 4, 8.0, 55);
+    let p = pool();
+    let a = KnnGraph::build(&p, &ds_a.points, ds_a.n, ds_a.d, 10, &plan).unwrap();
+    let b = KnnGraph::build(&p, &ds_b.points, ds_b.n, ds_b.d, 10, &plan).unwrap();
+    prove_fault_tolerance(
+        "knn_graph",
+        &|path| a.save(path).unwrap(),
+        &|medium, path| b.save_on(medium, path),
+        &|path| KnnGraph::<f64>::load(path).map(|_| ()),
+    );
+}

@@ -42,7 +42,8 @@ fn run_until_early_exits_under_min_grad_norm_on_an_easy_mixture() {
     // Reference: full budget, recording the grad-norm trajectory and KL.
     let plan = StagePlan::acc_tsne();
     let mut reference = TsneSession::new(&aff, plan, c).unwrap();
-    let norms: Vec<f64> = (0..budget).map(|_| reference.step().grad_norm).collect();
+    let norms: Vec<f64> =
+        (0..budget).map(|_| reference.step().expect("healthy step").grad_norm).collect();
     let kl_full = reference.finish().kl_divergence;
 
     // Threshold slightly above the smallest norm seen in the late window
@@ -82,7 +83,8 @@ fn run_until_no_progress_rule_fires_exactly_where_the_trajectory_says() {
 
     let plan = StagePlan::acc_tsne();
     let mut reference = TsneSession::new(&aff, plan, c).unwrap();
-    let norms: Vec<f64> = (0..budget).map(|_| reference.step().grad_norm).collect();
+    let norms: Vec<f64> =
+        (0..budget).map(|_| reference.step().expect("healthy step").grad_norm).collect();
 
     // Independent simulation of the documented rule: progress = beating the
     // best-seen norm by >0.1%, checked only after exaggeration.

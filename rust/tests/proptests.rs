@@ -10,7 +10,7 @@ use acc_tsne::gradient::repulsive::{repulsive_forces_scalar_into, repulsive_forc
 use acc_tsne::knn::{knn_reference, BruteForceKnn, KnnEngine};
 use acc_tsne::parallel::sort::radix_sort_pairs;
 use acc_tsne::parallel::ThreadPool;
-use acc_tsne::perplexity::bsp_row;
+use acc_tsne::perplexity::{bsp_row, bsp_row_checked};
 use acc_tsne::quadtree::builder_baseline::build_baseline;
 use acc_tsne::quadtree::builder_morton::build_morton;
 use acc_tsne::quadtree::morton::{quadrant_at, RootCell};
@@ -192,6 +192,109 @@ fn prop_bsp_row_normalized_and_on_target() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_adversarial_bsp_rows_stay_finite_or_fall_back() {
+    // Hostile distance rows: flat (all-equal), 1e±30 dynamic range,
+    // duplicate-heavy (half the row at distance zero), and random-extreme.
+    // Every row must come back finite, non-negative, and normalized; rows the
+    // solver could not converge must be exactly the uniform fallback.
+    check(
+        "adversarial bsp rows",
+        Config { cases: 60, ..Config::default() },
+        |rng| {
+            let k = gen_len(rng, 3, 60);
+            let u = 1.5 + rng.next_f64() * (k as f64 * 0.8 - 1.5);
+            let mode = rng.next_below(4);
+            let dists: Vec<f64> = (0..k)
+                .map(|i| match mode {
+                    0 => 3.25,
+                    1 => {
+                        if i % 2 == 0 {
+                            1e30
+                        } else {
+                            1e-30
+                        }
+                    }
+                    2 => {
+                        if i < k / 2 {
+                            0.0
+                        } else {
+                            1.0 + i as f64
+                        }
+                    }
+                    _ => 10f64.powf(rng.next_f64() * 60.0 - 30.0),
+                })
+                .collect();
+            let mut out = vec![0.0; k];
+            let (beta, converged) = bsp_row_checked(&dists, u, &mut out);
+            if !beta.is_finite() {
+                return Err(format!("mode {mode}: beta = {beta}"));
+            }
+            if out.iter().any(|p| !p.is_finite() || *p < 0.0) {
+                return Err(format!("mode {mode}: non-finite or negative probability"));
+            }
+            let sum: f64 = out.iter().sum();
+            if (sum - 1.0).abs() > 1e-9 {
+                return Err(format!("mode {mode}: row sums to {sum}"));
+            }
+            if !converged {
+                let uniform = 1.0 / k as f64;
+                if out.iter().any(|&p| p != uniform) {
+                    return Err(format!("mode {mode}: fallback row is not exactly uniform"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_coincident_clouds_yield_finite_trees_and_forces() {
+    // Degenerate geometry: all points coincident, or coincident plus a
+    // sub-epsilon jitter. Both builders must terminate with structurally
+    // valid trees and finite cell geometry, and the repulsive pass must
+    // return finite forces with Z > 0 — across 1/4/8-thread pools.
+    check(
+        "coincident clouds stay finite",
+        Config { cases: 18, ..Config::default() },
+        |rng| {
+            let n = gen_len(rng, 2, 300);
+            let cx = rng.next_f64() * 8.0 - 4.0;
+            let cy = rng.next_f64() * 8.0 - 4.0;
+            let jitter = [0.0, 1e-300, 1e-18][rng.next_below(3)];
+            let mut pos = vec![0.0f64; 2 * n];
+            for i in 0..n {
+                pos[2 * i] = cx + i as f64 * jitter;
+                pos[2 * i + 1] = cy - i as f64 * jitter;
+            }
+            let threads = [1, 4, 8][rng.next_below(3)];
+            let pool = ThreadPool::new(threads);
+            for (which, tree) in [
+                ("morton", build_morton(&pool, &pos)),
+                ("baseline", build_baseline(&pool, &pos)),
+            ] {
+                tree.validate().map_err(|e| format!("{which}: {e}"))?;
+                for node in &tree.nodes {
+                    if !node.width.is_finite() || node.center.iter().any(|c| !c.is_finite()) {
+                        return Err(format!("{which}: non-finite cell geometry"));
+                    }
+                }
+            }
+            let mut tree = build_morton(&pool, &pos);
+            summarize_parallel(&pool, &mut tree);
+            let mut raw = vec![0.0f64; 2 * n];
+            let z = repulsive_forces_scalar_into(&pool, &tree, 0.5, &mut raw);
+            if !(z.is_finite() && z > 0.0) {
+                return Err(format!("Z = {z} for a coincident cloud"));
+            }
+            if raw.iter().any(|v| !v.is_finite()) {
+                return Err("non-finite repulsive force".into());
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
