@@ -15,12 +15,17 @@
 //!     from the pipeline itself) — snapshotted to BENCH_gradient_loop.json;
 //!   guardrails: the finite-input scan at the fit boundary and the in-loop
 //!     divergence guard's marginal cost (`guardrails.{validate,step_check}_s`
-//!     keys of BENCH_gradient_loop.json).
+//!     keys of BENCH_gradient_loop.json);
+//!   FIt-SNE engine: cold step (buffer growth + kernel FFTs) vs steady-state
+//!     step on a persistent workspace, plus the BH↔FIt per-step crossover
+//!     sweep that motivates `StagePlan::auto_for` — snapshotted to
+//!     BENCH_fitsne.json (`fitsne.*` and `crossover.*` keys).
 
 use acc_tsne::common::bench::Bencher;
 use acc_tsne::common::rng::Rng;
 use acc_tsne::common::timer::Step;
 use acc_tsne::data::first_non_finite;
+use acc_tsne::fitsne::{fitsne_repulsive_into, FitsneParams, FitsneWorkspace};
 use acc_tsne::gradient::attractive::{attractive_forces, Variant};
 use acc_tsne::gradient::repulsive::{repulsive_forces_scalar_into, repulsive_forces_tiled_into};
 use acc_tsne::knn::{BruteForceKnn, KnnEngine};
@@ -445,5 +450,82 @@ fn main() {
         eprintln!("warning: could not write BENCH_gradient_loop.json: {e}");
     } else {
         println!("[json] BENCH_gradient_loop.json");
+    }
+
+    // --- FIt-SNE engine: cold step (buffer growth + kernel grid FFTs) vs
+    // steady state on a persistent workspace (allocation-free, cached
+    // kernels). kernel_rebuilds over the steady samples must stay 0 — a
+    // non-zero value means the span-lattice cache is thrashing.
+    let fit_params = FitsneParams::default();
+    let mut fit_raw = vec![0.0f64; 2 * n];
+    let mut b = Bencher::new(&format!("fitsne (n={n})")).sampling(1, 8, 5.0);
+    let s_cold = b.bench("cold_step", || {
+        let mut ws = FitsneWorkspace::new();
+        fitsne_repulsive_into(&pool, &pos, &fit_params, &mut ws, &mut fit_raw)
+    });
+    let mut fit_ws = FitsneWorkspace::new();
+    fitsne_repulsive_into(&pool, &pos, &fit_params, &mut fit_ws, &mut fit_raw);
+    let rebuilds_before = fit_ws.kernel_rebuilds();
+    let s_steady = b.bench("steady_step", || {
+        fitsne_repulsive_into(&pool, &pos, &fit_params, &mut fit_ws, &mut fit_raw)
+    });
+    let steady_rebuilds = fit_ws.kernel_rebuilds() - rebuilds_before;
+    b.bench("steady_step-1t", || {
+        fitsne_repulsive_into(&seq_pool, &pos, &fit_params, &mut fit_ws, &mut fit_raw)
+    });
+    b.report();
+
+    // --- BH↔FIt crossover sweep: full BH repulsive step (tree build +
+    // summarize + view rebuild + tiled kernel, all O(n log n)) vs the
+    // steady-state FIt step (scatter/gather O(n), bounded-grid FFT). The
+    // first size where FIt wins is the empirical basis for FFT_CROSSOVER_N.
+    let sweep_sizes = [10_000usize, 25_000, 50_000, 100_000, 200_000];
+    let mut sweep = Vec::new();
+    for &sn in sweep_sizes.iter().filter(|&&sn| sn <= n) {
+        let ys = &pos[..2 * sn];
+        let mut raw_s = vec![0.0f64; 2 * sn];
+        let mut bsw = Bencher::new(&format!("crossover (n={sn})")).sampling(1, 5, 4.0);
+        let bh = bsw.bench("bh_step", || {
+            let mut t = build_morton(&pool, ys);
+            summarize_parallel(&pool, &mut t);
+            let mut v = TraversalView::new();
+            v.rebuild_parallel(&pool, &t);
+            repulsive_forces_tiled_into(&pool, &t, &v, 0.5, &mut raw_s)
+        });
+        let mut ws_s = FitsneWorkspace::new();
+        fitsne_repulsive_into(&pool, ys, &fit_params, &mut ws_s, &mut raw_s);
+        let fit = bsw.bench("fit_step", || {
+            fitsne_repulsive_into(&pool, ys, &fit_params, &mut ws_s, &mut raw_s)
+        });
+        bsw.report();
+        sweep.push((sn, bh.mean, fit.mean));
+    }
+    // Smallest swept size where the steady FIt step already beats BH
+    // (0 = FIt never won within this sweep's range).
+    let estimate_n = sweep.iter().find(|&&(_, bh, fit)| fit < bh).map_or(0, |&(sn, _, _)| sn);
+    println!("\n== BH↔FIt crossover (threads={}) ==", pool.n_threads());
+    println!("{:<10} {:>12} {:>12}", "n", "bh_step(s)", "fit_step(s)");
+    for (sn, bh, fit) in &sweep {
+        println!("{sn:<10} {bh:>12.5} {fit:>12.5}");
+    }
+    println!("crossover estimate: n={estimate_n}");
+
+    let mut fj = String::from("{\n  \"bench\": \"fitsne\",\n");
+    fj.push_str(&format!("  \"n\": {n},\n  \"threads\": {},\n", pool.n_threads()));
+    fj.push_str("  \"fitsne\": {\n");
+    fj.push_str(&format!("    \"cold_step_s\": {:.6e},\n", s_cold.mean));
+    fj.push_str(&format!("    \"step_s\": {:.6e},\n", s_steady.mean));
+    fj.push_str(&format!("    \"kernel_rebuilds\": {steady_rebuilds}\n  }},\n"));
+    fj.push_str("  \"crossover\": {\n");
+    for (sn, bh, fit) in &sweep {
+        fj.push_str(&format!(
+            "    \"n{sn}\": {{ \"bh_step_s\": {bh:.6e}, \"fit_step_s\": {fit:.6e} }},\n"
+        ));
+    }
+    fj.push_str(&format!("    \"estimate_n\": {estimate_n}\n  }}\n}}\n"));
+    if let Err(e) = std::fs::write("BENCH_fitsne.json", &fj) {
+        eprintln!("warning: could not write BENCH_fitsne.json: {e}");
+    } else {
+        println!("[json] BENCH_fitsne.json");
     }
 }

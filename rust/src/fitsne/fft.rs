@@ -36,9 +36,16 @@ impl Cpx {
 
 /// In-place radix-2 FFT. `data.len()` must be a power of two.
 /// `invert = true` computes the inverse transform including the 1/n scale.
+///
+/// A non-power-of-two length is a programming error (every caller derives the
+/// size via `next_power_of_two`): debug builds panic, release builds leave the
+/// buffer untouched instead of corrupting it — the FIt path is panic-free.
 pub fn fft_inplace(data: &mut [Cpx], invert: bool) {
     let n = data.len();
-    assert!(n.is_power_of_two(), "FFT length must be a power of two");
+    debug_assert!(n.is_power_of_two(), "FFT length must be a power of two");
+    if !n.is_power_of_two() {
+        return;
+    }
     if n <= 1 {
         return;
     }
@@ -119,6 +126,72 @@ pub fn fft2_inplace(pool: &ThreadPool, data: &mut [Cpx], rows: usize, cols: usiz
     }
 }
 
+/// In-place 2-D FFT of `n_grids` concatenated row-major `rows × cols` grids,
+/// fused into single pool dispatches: one parallel sweep over all
+/// `n_grids · rows` rows, then one over all `n_grids · cols` columns. The pool
+/// cannot nest broadcasts, so batching independent transforms into shared
+/// sweeps is how the FIt-SNE convolution pipeline runs its grids "in
+/// parallel" — and it halves the number of barriers versus sequential
+/// [`fft2_inplace`] calls.
+///
+/// `col_scratch` is caller-owned per-thread column storage
+/// (`pool.n_threads() * rows` entries) so the steady-state hot loop performs
+/// no heap allocation; an undersized scratch is a programming error (debug
+/// panic, release no-op).
+pub fn fft2_batch_inplace(
+    pool: &ThreadPool,
+    data: &mut [Cpx],
+    n_grids: usize,
+    rows: usize,
+    cols: usize,
+    invert: bool,
+    col_scratch: &mut [Cpx],
+) {
+    let nt = pool.n_threads();
+    debug_assert_eq!(data.len(), n_grids * rows * cols);
+    debug_assert!(col_scratch.len() >= nt * rows, "column scratch must hold nt*rows entries");
+    if data.len() != n_grids * rows * cols || col_scratch.len() < nt * rows {
+        return;
+    }
+    // Rows: grids are contiguous, so the batch is just n_grids·rows
+    // independent rows of `cols` entries each.
+    {
+        let ds = SyncSlice::new(data);
+        parallel_for(pool, n_grids * rows, Schedule::Dynamic { grain: 4 }, |range| {
+            for r in range {
+                // disjoint: row r of the concatenated grids
+                let row = unsafe { ds.slice_mut(r * cols, cols) };
+                fft_inplace(row, invert);
+            }
+        });
+    }
+    // Columns: statically chunk the n_grids·cols columns over the pool; each
+    // thread strides through its columns via its private scratch slice, so
+    // the sweep is deterministic and allocation-free.
+    {
+        let ds = SyncSlice::new(data);
+        let cs = SyncSlice::new(col_scratch);
+        pool.broadcast(|tid| {
+            let (s, e) = crate::parallel::par_for::static_chunk(n_grids * cols, nt, tid);
+            // disjoint: per-thread scratch block
+            let buf = unsafe { cs.slice_mut(tid * rows, rows) };
+            for ci in s..e {
+                let (g, c) = (ci / cols, ci % cols);
+                let base = g * rows * cols;
+                for r in 0..rows {
+                    // read-only overlap is fine; writes below are disjoint per column
+                    buf[r] = unsafe { *ds.get_mut(base + r * cols + c) };
+                }
+                fft_inplace(buf, invert);
+                for r in 0..rows {
+                    // disjoint: column c of grid g
+                    unsafe { *ds.get_mut(base + r * cols + c) = buf[r] };
+                }
+            }
+        });
+    }
+}
+
 /// Circular 2-D convolution via FFT: `out = ifft2(fft2(a) ∘ fft2(b))`.
 /// Both grids `rows × cols`, powers of two. Used by tests; the FIt-SNE path
 /// caches the kernel transform across charge vectors instead.
@@ -187,11 +260,23 @@ mod tests {
         }
     }
 
+    #[cfg(debug_assertions)]
     #[test]
     #[should_panic(expected = "power of two")]
     fn rejects_non_power_of_two() {
         let mut d = vec![Cpx::default(); 12];
         fft_inplace(&mut d, false);
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn non_power_of_two_is_a_release_no_op() {
+        // Release builds must not corrupt the buffer (or loop forever) on the
+        // invalid length — the data comes back untouched.
+        let d: Vec<Cpx> = (0..12).map(|i| Cpx::new(i as f64, -(i as f64))).collect();
+        let mut x = d.clone();
+        fft_inplace(&mut x, false);
+        assert_eq!(x, d);
     }
 
     #[test]
@@ -229,6 +314,33 @@ mod tests {
                 }
                 let g = got[or * c + oc].re;
                 assert!((g - acc).abs() < 1e-9, "({or},{oc}): {g} vs {acc}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_per_grid_fft2() {
+        let mut rng = Rng::new(6);
+        let (r, c, n_grids) = (16, 8, 3);
+        let pool = ThreadPool::new(4);
+        for invert in [false, true] {
+            let data: Vec<Cpx> = (0..n_grids * r * c)
+                .map(|_| Cpx::new(rng.next_gaussian(), rng.next_gaussian()))
+                .collect();
+            let mut batched = data.clone();
+            let mut scratch = vec![Cpx::default(); pool.n_threads() * r];
+            fft2_batch_inplace(&pool, &mut batched, n_grids, r, c, invert, &mut scratch);
+            for g in 0..n_grids {
+                let mut single = data[g * r * c..(g + 1) * r * c].to_vec();
+                fft2_inplace(&pool, &mut single, r, c, invert);
+                for i in 0..r * c {
+                    let got = batched[g * r * c + i];
+                    let want = single[i];
+                    assert!(
+                        (got.re - want.re).abs() < 1e-12 && (got.im - want.im).abs() < 1e-12,
+                        "grid {g} slot {i} (invert={invert}): {got:?} vs {want:?}"
+                    );
+                }
             }
         }
     }

@@ -12,13 +12,23 @@
 //! - `K1(d) = (1+d²)⁻¹`, charge 1 → Z (after subtracting N self-terms);
 //! - `K2(d) = (1+d²)⁻²`, charges (1, x_j, y_j) →
 //!   `raw_i = y_i·φ_1(i) − φ_{x,y}(i)` (the un-normalized repulsive force).
+//!
+//! The engine is stateful: a [`FitsneWorkspace`] owned by the session carries
+//! the forward-transformed kernel grids (rebuilt only when the embedding's
+//! bounding box changes the grid geometry — the span is snapped to a geometric
+//! lattice so a slowly-breathing embedding keeps hitting the cache) and every
+//! scatter/charge/pad buffer, so the steady-state step is allocation-free like
+//! the BH hot loop. The four convolutions are batched: the real charge grids
+//! ride the re/im planes of two complex transforms (real-input packing) and
+//! all grids share fused row/column FFT sweeps ([`fft::fft2_batch_inplace`]) —
+//! 5 FFT2 passes per step instead of the 10 a stateless step pays.
 
 pub mod fft;
 pub mod interp;
 
 use crate::common::float::Real;
 use crate::parallel::{parallel_for, Schedule, SyncSlice, ThreadPool};
-use fft::{fft2_inplace, Cpx};
+use fft::{fft2_batch_inplace, fft2_inplace, Cpx};
 use interp::{lagrange_weights, P_NODES};
 
 /// FIt-SNE tuning knobs (Linderman defaults scaled to this testbed).
@@ -45,41 +55,130 @@ impl Default for FitsneParams {
 /// Number of charge vectors batched through the K2 convolution.
 const N_TERMS: usize = 3; // (1, x, y)
 
+/// Complex pad grids carried through the batched convolution:
+/// pad 0 = q₁, pad 1 = qₓ + i·q_y (real-input packing), pad 2 = the K1
+/// product (pads 0/1 are reused in place for the two K2 products).
+const N_PADS: usize = 3;
+
+/// Span-quantization lattice density. The bounding-box span is rounded up to
+/// the next point of the geometric lattice `2^(k/64)` (steps of ~1.1%) before
+/// the grid geometry is derived, so the kernel-transform cache keyed on
+/// (n_int, m, h_node) keeps hitting while the embedding breathes within a
+/// lattice bucket; the ≤1.1% coarser node spacing is far inside the p=3
+/// interpolation error budget.
+const SPAN_LATTICE_PER_OCTAVE: f64 = 64.0;
+
+/// Round `span` up to the enclosing point of the geometric lattice.
+fn quantize_span(span: f64) -> f64 {
+    if !(span.is_finite() && span > 0.0) {
+        // RootCell::bounding guarantees a finite positive span; keep the
+        // fallback total anyway (hostile inputs reach this path via step()).
+        return 1.0;
+    }
+    let k = (span.log2() * SPAN_LATTICE_PER_OCTAVE).ceil();
+    (k / SPAN_LATTICE_PER_OCTAVE).exp2()
+}
+
+/// Forward-transformed squared-Cauchy kernel grids, valid for one grid
+/// geometry. The kernels depend only on (node count, FFT size, node spacing) —
+/// not on where the bounding box sits — so they survive every iteration whose
+/// quantized span lands in the same lattice bucket.
+#[derive(Debug)]
+struct CachedKernels {
+    n_int: usize,
+    m: usize,
+    h_node_bits: u64,
+    fk1: Vec<Cpx>,
+    fk2: Vec<Cpx>,
+}
+
+/// Persistent FIt-SNE state: cached kernel transforms plus every buffer the
+/// scatter → FFT → gather pipeline touches. One workspace per session; after
+/// the first step at a given geometry, [`fitsne_repulsive_into`] performs no
+/// heap allocation and no kernel FFT until the geometry changes.
+#[derive(Debug, Default)]
+pub struct FitsneWorkspace {
+    /// Per-thread scatter grids (`nt · gsz · N_TERMS`).
+    partial: Vec<f64>,
+    /// `N_PADS` concatenated `m × m` complex pad grids.
+    pads: Vec<Cpx>,
+    /// Per-thread column-FFT scratch (`nt · m`).
+    col_scratch: Vec<Cpx>,
+    /// Per-thread Z partial sums (`nt`).
+    z_parts: Vec<f64>,
+    kernels: Option<CachedKernels>,
+    kernel_rebuilds: u64,
+}
+
+impl FitsneWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// How many times the kernel grids have been rebuilt + re-transformed.
+    /// Steady-state iterations at unchanged grid geometry must not move this
+    /// counter — the workspace-reuse test and the `fitsne.kernel_rebuilds`
+    /// bench key both watch it.
+    pub fn kernel_rebuilds(&self) -> u64 {
+        self.kernel_rebuilds
+    }
+}
+
 /// Compute FIt-SNE repulsive accumulations (same contract as the BH
 /// kernels in [`crate::gradient::repulsive`]) into a caller-owned `raw`
-/// buffer (`2n`, original order); returns the ordered-pair normalization Z.
-/// The pipeline's hot loop reuses one buffer across iterations instead of
-/// allocating `2n` floats per step (the allocating wrapper is gone with the
-/// rest of the compatibility wrappers).
+/// buffer (`2n`, embedding order); returns the ordered-pair normalization Z.
+/// The scatter/gather only reads `y[2i..2i+2]`, so the embedding may be
+/// morton-resident — the engine is layout-agnostic.
+///
+/// `ws` carries all buffers and the kernel cache across calls; a mis-sized
+/// `raw` is a programming error (debug panic, graceful release no-op), and an
+/// empty embedding returns the smallest positive Z instead of panicking.
 pub fn fitsne_repulsive_into<T: Real>(
     pool: &ThreadPool,
     y: &[T],
     params: &FitsneParams,
+    ws: &mut FitsneWorkspace,
     raw: &mut [T],
 ) -> T {
     let n = y.len() / 2;
-    assert!(n > 0);
-    assert_eq!(raw.len(), 2 * n, "raw buffer must be 2n");
-    // Bounding box (shared helper from the quadtree's RootCell).
+    debug_assert_eq!(raw.len(), 2 * n, "raw buffer must be 2n");
+    if n == 0 || raw.len() < 2 * n {
+        return T::from_f64(f64::MIN_POSITIVE);
+    }
+    // Bounding box (shared helper from the quadtree's RootCell), span snapped
+    // to the geometric lattice so the kernel cache below can hit.
     let root = crate::quadtree::morton::RootCell::bounding(pool, y);
-    let span = 2.0 * root.r_span;
+    let span = quantize_span(2.0 * root.r_span);
     let n_int = ((span / params.interval_size).ceil() as usize)
         .clamp(params.min_intervals, params.max_intervals);
     let n_grid = n_int * P_NODES; // nodes per dimension
     let h_int = span / n_int as f64; // interval side
     let h_node = h_int / P_NODES as f64; // node spacing
-    let x0 = root.cent[0] - root.r_span;
-    let y0 = root.cent[1] - root.r_span;
+    let x0 = root.cent[0] - 0.5 * span;
+    let y0 = root.cent[1] - 0.5 * span;
     let m = (2 * n_grid).next_power_of_two(); // FFT size per dim
+
+    let nt = pool.n_threads();
+    let gsz = n_grid * n_grid;
+    let msz = m * m;
+    // Re-zero the reused buffers. `clear` + `resize` only touches the
+    // allocator when this geometry needs more capacity than any step before
+    // it — the steady-state step is allocation-free.
+    ws.partial.clear();
+    ws.partial.resize(nt * gsz * N_TERMS, 0.0);
+    ws.pads.clear();
+    ws.pads.resize(N_PADS * msz, Cpx::default());
+    ws.z_parts.clear();
+    ws.z_parts.resize(nt, 0.0);
+    if ws.col_scratch.len() < nt * m {
+        ws.col_scratch.resize(nt * m, Cpx::default());
+    }
 
     // --- Scatter: charge grids for K2 ⊗ (1, x, y) and K1 ⊗ 1.
     // Sequential scatter per grid would race; scatter into per-thread grids
     // and reduce (n_grid² ≤ 384² f64 ≈ 1.2 MB per charge — acceptable).
-    let nt = pool.n_threads();
-    let gsz = n_grid * n_grid;
-    let mut partial = vec![0.0f64; nt * gsz * N_TERMS];
     {
-        let ps = SyncSlice::new(&mut partial);
+        let ps = SyncSlice::new(&mut ws.partial);
         pool.broadcast(|tid| {
             let (s, e) = crate::parallel::par_for::static_chunk(n, nt, tid);
             // disjoint: per-thread block
@@ -106,69 +205,88 @@ pub fn fitsne_repulsive_into<T: Real>(
             }
         });
     }
-    // Reduce thread partials into N_TERMS grids.
-    let mut charge_grids = vec![0.0f64; gsz * N_TERMS];
+    // Reduce thread partials straight into the complex pads: pad 0 carries
+    // q₁ on its real plane, pad 1 packs (qₓ, q_y) as re/im — one inverse
+    // transform later recovers both K2 convolutions at once since the
+    // kernels are real.
     {
-        let cg = SyncSlice::new(&mut charge_grids);
-        let partial = &partial;
-        parallel_for(pool, gsz * N_TERMS, Schedule::Static, |range| {
+        let ps = SyncSlice::new(&mut ws.pads);
+        let partial = &ws.partial;
+        parallel_for(pool, gsz, Schedule::Static, |range| {
             for idx in range {
-                let mut acc = 0.0;
+                let mut acc = [0.0f64; N_TERMS];
                 for t in 0..nt {
-                    acc += partial[t * gsz * N_TERMS + idx];
+                    let base = t * gsz * N_TERMS;
+                    for (term, a) in acc.iter_mut().enumerate() {
+                        *a += partial[base + term * gsz + idx];
+                    }
                 }
-                // disjoint: slot idx
-                unsafe { *cg.get_mut(idx) = acc };
+                let cell = (idx / n_grid) * m + idx % n_grid;
+                // disjoint: slot cell of pads 0 and 1
+                unsafe {
+                    *ps.get_mut(cell) = Cpx::new(acc[0], 0.0);
+                    *ps.get_mut(msz + cell) = Cpx::new(acc[1], acc[2]);
+                }
             }
         });
     }
 
-    // --- Kernel transforms (K1, K2) on the padded M×M grid.
-    let kernel = |dsq: f64, squared: bool| {
-        let v = 1.0 / (1.0 + dsq);
-        if squared {
-            v * v
-        } else {
-            v
-        }
-    };
-    let mut fk1 = build_kernel_grid(pool, n_grid, m, h_node, |d| kernel(d, false));
-    let mut fk2 = build_kernel_grid(pool, n_grid, m, h_node, |d| kernel(d, true));
-    fft2_inplace(pool, &mut fk1, m, m, false);
-    fft2_inplace(pool, &mut fk2, m, m, false);
-
-    // --- Convolve each charge grid with its kernel.
-    // potentials: phi_k1_1, phi_k2_1, phi_k2_x, phi_k2_y
-    let mut potentials: Vec<Vec<f64>> = Vec::with_capacity(4);
-    for (term, use_k2) in [(0usize, false), (0, true), (1, true), (2, true)] {
-        let grid = &charge_grids[term * gsz..(term + 1) * gsz];
-        let mut padded = vec![Cpx::default(); m * m];
-        for gx in 0..n_grid {
-            for gy in 0..n_grid {
-                padded[gx * m + gy] = Cpx::new(grid[gx * n_grid + gy], 0.0);
+    // --- Kernel transforms (K1, K2) on the padded M×M grid: geometry-keyed
+    // cache, rebuilt only when the quantized span changes bucket.
+    let h_node_bits = h_node.to_bits();
+    let cached = ws
+        .kernels
+        .as_ref()
+        .is_some_and(|k| k.n_int == n_int && k.m == m && k.h_node_bits == h_node_bits);
+    if !cached {
+        let kernel = |dsq: f64, squared: bool| {
+            let v = 1.0 / (1.0 + dsq);
+            if squared {
+                v * v
+            } else {
+                v
             }
-        }
-        fft2_inplace(pool, &mut padded, m, m, false);
-        let fk = if use_k2 { &fk2 } else { &fk1 };
-        for (p, k) in padded.iter_mut().zip(fk.iter()) {
-            *p = p.mul(*k);
-        }
-        fft2_inplace(pool, &mut padded, m, m, true);
-        let mut pot = vec![0.0f64; gsz];
-        for gx in 0..n_grid {
-            for gy in 0..n_grid {
-                pot[gx * n_grid + gy] = padded[gx * m + gy].re;
-            }
-        }
-        potentials.push(pot);
+        };
+        let mut fk1 = build_kernel_grid(pool, n_grid, m, h_node, |d| kernel(d, false));
+        let mut fk2 = build_kernel_grid(pool, n_grid, m, h_node, |d| kernel(d, true));
+        fft2_inplace(pool, &mut fk1, m, m, false);
+        fft2_inplace(pool, &mut fk2, m, m, false);
+        ws.kernels = Some(CachedKernels { n_int, m, h_node_bits, fk1, fk2 });
+        ws.kernel_rebuilds += 1;
     }
+    let kernels = ws.kernels.as_ref().expect("kernel cache populated above");
+
+    // --- Convolve: 2 forward transforms (q₁ and the packed qₓ+i·q_y), three
+    // pointwise products in one sweep, 3 inverse transforms — all grids fused
+    // into shared row/column FFT passes over the pool.
+    let pads = &mut ws.pads;
+    let col_scratch = &mut ws.col_scratch;
+    fft2_batch_inplace(pool, &mut pads[..2 * msz], 2, m, m, false, col_scratch);
+    {
+        let ps = SyncSlice::new(pads);
+        let (fk1, fk2) = (&kernels.fk1, &kernels.fk2);
+        parallel_for(pool, msz, Schedule::Static, |range| {
+            for i in range {
+                // disjoint: slot i of each pad
+                unsafe {
+                    let a = *ps.get_mut(i);
+                    *ps.get_mut(2 * msz + i) = a.mul(fk1[i]);
+                    *ps.get_mut(i) = a.mul(fk2[i]);
+                    let b = *ps.get_mut(msz + i);
+                    *ps.get_mut(msz + i) = b.mul(fk2[i]);
+                }
+            }
+        });
+    }
+    fft2_batch_inplace(pool, pads, N_PADS, m, m, true, col_scratch);
 
     // --- Gather potentials back to points and assemble forces + Z.
-    let mut z_parts = vec![0.0f64; nt];
+    // φ_{K1,1} lives on pad 2 (re), φ_{K2,1} on pad 0 (re), φ_{K2,(x,y)} on
+    // pad 1 (re, im).
     {
         let rs = SyncSlice::new(raw);
-        let zs = SyncSlice::new(&mut z_parts);
-        let potentials = &potentials;
+        let zs = SyncSlice::new(&mut ws.z_parts);
+        let pads = &*pads;
         pool.broadcast(|tid| {
             let (s, e) = crate::parallel::par_for::static_chunk(n, nt, tid);
             let mut z_local = 0.0;
@@ -185,10 +303,12 @@ pub fn fitsne_repulsive_into<T: Real>(
                     for ky in 0..P_NODES {
                         let gy = by * P_NODES + ky;
                         let w = wx[kx] * wy[ky];
-                        let cell = gx * n_grid + gy;
-                        for (t, p) in potentials.iter().enumerate() {
-                            phi[t] += w * p[cell];
-                        }
+                        let cell = gx * m + gy;
+                        phi[0] += w * pads[2 * msz + cell].re;
+                        let pb = pads[msz + cell];
+                        phi[1] += w * pads[cell].re;
+                        phi[2] += w * pb.re;
+                        phi[3] += w * pb.im;
                     }
                 }
                 // K1 self-term: q(i,i) = 1 → subtract per point.
@@ -205,7 +325,7 @@ pub fn fitsne_repulsive_into<T: Real>(
             unsafe { *zs.get_mut(tid) = z_local };
         });
     }
-    let z: f64 = z_parts.iter().sum();
+    let z: f64 = ws.z_parts.iter().sum();
     T::from_f64(z.max(f64::MIN_POSITIVE))
 }
 
@@ -273,8 +393,9 @@ mod tests {
     }
 
     fn fitsne_rep<T: Real>(pool: &ThreadPool, y: &[T], params: &FitsneParams) -> Rep<T> {
+        let mut ws = FitsneWorkspace::new();
         let mut raw = vec![T::ZERO; y.len()];
-        let z = fitsne_repulsive_into(pool, y, params, &mut raw);
+        let z = fitsne_repulsive_into(pool, y, params, &mut ws, &mut raw);
         Rep { raw, z }
     }
 
@@ -345,5 +466,101 @@ mod tests {
             den += want[i] * want[i];
         }
         assert!((num / den).sqrt() < 0.05);
+    }
+
+    #[test]
+    fn empty_embedding_is_a_graceful_no_op() {
+        let pool = ThreadPool::new(2);
+        let mut ws = FitsneWorkspace::new();
+        let y: Vec<f64> = Vec::new();
+        let mut raw: Vec<f64> = Vec::new();
+        let z = fitsne_repulsive_into(&pool, &y, &FitsneParams::default(), &mut ws, &mut raw);
+        assert!(z > 0.0 && z.is_finite());
+        assert_eq!(ws.kernel_rebuilds(), 0);
+    }
+
+    #[test]
+    fn span_quantization_is_monotone_and_enclosing() {
+        let mut prev = 0.0;
+        for e in -40..40 {
+            for frac in [1.0, 1.003, 1.01, 1.3, 1.7] {
+                let span = (e as f64).exp2() * frac;
+                let q = quantize_span(span);
+                // ~half an ulp of lattice rounding is tolerable: locate() clamps.
+                assert!(q >= span * (1.0 - 1e-12), "span {span}: q {q}");
+                assert!(q <= span * 1.02, "span {span}: q {q} too coarse");
+                assert!(q >= prev, "lattice must be monotone");
+                prev = q;
+            }
+        }
+        // Hostile spans fall back to a finite bucket.
+        assert_eq!(quantize_span(f64::NAN), 1.0);
+        assert_eq!(quantize_span(f64::INFINITY), 1.0);
+        assert_eq!(quantize_span(0.0), 1.0);
+    }
+
+    #[test]
+    fn workspace_reuse_is_allocation_free_and_caches_kernels() {
+        let y = random_y(500, 6.0, 7);
+        let pool = ThreadPool::new(4);
+        let params = FitsneParams::default();
+        let mut ws = FitsneWorkspace::new();
+        let mut raw1 = vec![0.0f64; y.len()];
+        let z1 = fitsne_repulsive_into(&pool, &y, &params, &mut ws, &mut raw1);
+        assert_eq!(ws.kernel_rebuilds(), 1, "first step builds the kernels once");
+        let fingerprint = (
+            ws.partial.as_ptr(),
+            ws.partial.capacity(),
+            ws.pads.as_ptr(),
+            ws.pads.capacity(),
+            ws.col_scratch.as_ptr(),
+            ws.col_scratch.capacity(),
+        );
+        // Steady state: same geometry → no kernel rebuild, no reallocation,
+        // and a bit-identical result (the cached transform is the same data
+        // the rebuild would produce).
+        let mut raw2 = vec![0.0f64; y.len()];
+        let z2 = fitsne_repulsive_into(&pool, &y, &params, &mut ws, &mut raw2);
+        assert_eq!(ws.kernel_rebuilds(), 1, "unchanged geometry must hit the cache");
+        assert_eq!(
+            fingerprint,
+            (
+                ws.partial.as_ptr(),
+                ws.partial.capacity(),
+                ws.pads.as_ptr(),
+                ws.pads.capacity(),
+                ws.col_scratch.as_ptr(),
+                ws.col_scratch.capacity(),
+            ),
+            "steady-state step must not reallocate any workspace buffer"
+        );
+        assert_eq!(z1, z2);
+        assert_eq!(raw1, raw2);
+        // Small drift inside the same lattice bucket still hits the cache.
+        let y_drift: Vec<f64> = y.iter().map(|v| v * 1.0001).collect();
+        fitsne_repulsive_into(&pool, &y_drift, &params, &mut ws, &mut raw2);
+        assert_eq!(ws.kernel_rebuilds(), 1, "sub-bucket drift must not rebuild");
+        // A genuine geometry change (span × 4) rebuilds exactly once.
+        let y_big: Vec<f64> = y.iter().map(|v| v * 4.0).collect();
+        fitsne_repulsive_into(&pool, &y_big, &params, &mut ws, &mut raw2);
+        assert_eq!(ws.kernel_rebuilds(), 2, "a new lattice bucket rebuilds the kernels");
+    }
+
+    #[test]
+    fn workspace_reuse_matches_fresh_workspace() {
+        // A workspace that has seen a different geometry must produce the
+        // same bits as a fresh one (stale pads/kernels fully masked).
+        let pool = ThreadPool::new(4);
+        let params = FitsneParams::default();
+        let y_a = random_y(300, 12.0, 8);
+        let y_b = random_y(450, 3.0, 9);
+        let mut ws = FitsneWorkspace::new();
+        let mut raw = vec![0.0f64; y_a.len()];
+        fitsne_repulsive_into(&pool, &y_a, &params, &mut ws, &mut raw);
+        let mut reused = vec![0.0f64; y_b.len()];
+        let z_reused = fitsne_repulsive_into(&pool, &y_b, &params, &mut ws, &mut reused);
+        let fresh = fitsne_rep(&pool, &y_b, &params);
+        assert_eq!(z_reused, fresh.z);
+        assert_eq!(reused, fresh.raw);
     }
 }

@@ -144,6 +144,41 @@
 //! }
 //! ```
 //!
+//! ### Choosing a repulsive engine
+//!
+//! Two interchangeable repulsive engines sit behind the same session API.
+//! **Barnes-Hut** (`StagePlan::acc_tsne()`) walks a summarized quadtree per
+//! point — O(n log n), the paper's headline path, fastest at small-to-medium
+//! n. **FIt-SNE** (`StagePlan::fit_sne()`) scatters charges onto a bounded
+//! interpolation grid and convolves via FFT — O(n) in the embedding size,
+//! so its per-step cost overtakes BH as n grows. The FFT engine keeps a
+//! persistent workspace inside the session: scatter/pad buffers are reused
+//! across iterations (steady-state steps are allocation-free) and the
+//! kernel-grid transforms are cached on a quantized span lattice, rebuilt
+//! only when the embedding's bounding box actually changes grid geometry.
+//! Both engines compose with either memory [`tsne::Layout`].
+//!
+//! [`tsne::StagePlan::auto_for`] picks the engine from the dataset size
+//! (crossover at [`tsne::FFT_CROSSOVER_N`] points; the
+//! `crossover.*` keys of `BENCH_fitsne.json` track the measured break-even),
+//! and the CLI exposes the same choice as `acc-tsne run --auto-engine`:
+//!
+//! ```no_run
+//! use acc_tsne::data::synthetic::gaussian_mixture;
+//! use acc_tsne::parallel::ThreadPool;
+//! use acc_tsne::tsne::{Affinities, StagePlan, TsneConfig, TsneSession};
+//!
+//! let ds = gaussian_mixture::<f64>(100_000, 16, 10, 4.0, 42);
+//! let plan = StagePlan::auto_for(ds.n); // n >= FFT_CROSSOVER_N → FFT repulsion
+//! let cfg = TsneConfig::default();
+//! let pool = ThreadPool::with_all_cores();
+//! let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, cfg.perplexity, &plan)
+//!     .expect("valid fit");
+//! let mut session = TsneSession::new(&aff, plan, cfg).expect("auto plans validate");
+//! session.run(1000);
+//! println!("KL = {:.3}", session.finish().kl_divergence);
+//! ```
+//!
 //! ### Robustness guarantees
 //!
 //! The pipeline is hardened end to end against hostile data and injected

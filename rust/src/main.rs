@@ -131,8 +131,8 @@ impl From<PlanError> for CliError {
 }
 
 const COMMON_FLAGS: &[&str] = &[
-    "dataset", "impl", "scale", "iters", "threads", "seed", "out", "plot", "f32", "sweep",
-    "perplexity", "theta", "repulsive", "layout", "attractive", "adopt-threshold",
+    "dataset", "impl", "auto-engine", "scale", "iters", "threads", "seed", "out", "plot", "f32",
+    "sweep", "perplexity", "theta", "repulsive", "layout", "attractive", "adopt-threshold",
     "min-grad-norm", "n-iter-without-progress", "snapshot-every", "save-affinities",
     "affinities", "checkpoint", "checkpoint-every", "resume", "save-knn", "knn",
 ];
@@ -378,29 +378,51 @@ fn cmd_run(args: &Args) -> Result<(), CliError> {
     let imp: Implementation = args.get_parse("impl", Implementation::AccTsne)?;
     let exp = exp_config(args)?;
 
+    // --auto-engine picks BH vs FFT repulsion from the dataset size (the
+    // measured crossover, StagePlan::auto_for), so the plan can only be
+    // resolved after the dataset exists — the flag therefore excludes the
+    // overrides that name an engine explicitly.
+    let auto_engine = args.has("auto-engine");
+    if auto_engine && args.get("impl").is_some() {
+        return Err(CliError::usage(
+            "--auto-engine picks the repulsive engine from the dataset size; \
+             it cannot combine with --impl",
+        ));
+    }
+    if auto_engine && args.get("repulsive").is_some() {
+        return Err(CliError::usage(
+            "--auto-engine may pick the FFT engine, which takes no --repulsive override",
+        ));
+    }
+
     // Stage plan: preset for --impl, then the checked overrides — impossible
     // combinations come back as typed plan errors, before any data is built.
-    let mut plan = StagePlan::preset(imp);
-    if let Some(s) = args.get("repulsive") {
-        let v: RepulsiveVariant =
-            s.parse().map_err(|e| CliError::usage(format!("--repulsive: {e}")))?;
-        plan = plan.with_repulsive(v)?;
-    }
-    if let Some(s) = args.get("layout") {
-        let l: Layout = s.parse().map_err(|e| CliError::usage(format!("--layout: {e}")))?;
-        plan = plan.with_layout(l)?;
-    }
-    if let Some(s) = args.get("attractive") {
-        let v: AttractiveVariant =
-            s.parse().map_err(|e| CliError::usage(format!("--attractive: {e}")))?;
-        plan = plan.with_attractive(v)?;
-    }
-    if let Some(s) = args.get("adopt-threshold") {
-        let pct: usize = s
-            .parse()
-            .map_err(|e| CliError::usage(format!("--adopt-threshold: cannot parse '{s}': {e}")))?;
-        plan = plan.with_adopt_drift_pct(pct)?;
-    }
+    // (With --auto-engine this pass only validates the overrides; the real
+    // plan is re-derived from n once the dataset exists.)
+    let apply_overrides = |mut plan: StagePlan| -> Result<StagePlan, CliError> {
+        if let Some(s) = args.get("repulsive") {
+            let v: RepulsiveVariant =
+                s.parse().map_err(|e| CliError::usage(format!("--repulsive: {e}")))?;
+            plan = plan.with_repulsive(v)?;
+        }
+        if let Some(s) = args.get("layout") {
+            let l: Layout = s.parse().map_err(|e| CliError::usage(format!("--layout: {e}")))?;
+            plan = plan.with_layout(l)?;
+        }
+        if let Some(s) = args.get("attractive") {
+            let v: AttractiveVariant =
+                s.parse().map_err(|e| CliError::usage(format!("--attractive: {e}")))?;
+            plan = plan.with_attractive(v)?;
+        }
+        if let Some(s) = args.get("adopt-threshold") {
+            let pct: usize = s.parse().map_err(|e| {
+                CliError::usage(format!("--adopt-threshold: cannot parse '{s}': {e}"))
+            })?;
+            plan = plan.with_adopt_drift_pct(pct)?;
+        }
+        Ok(plan)
+    };
+    let mut plan = apply_overrides(StagePlan::preset(imp))?;
 
     let cfg = TsneConfig {
         n_iter: exp.n_iter,
@@ -510,13 +532,23 @@ fn cmd_run(args: &Args) -> Result<(), CliError> {
 
     let pool = ThreadPool::new(exp.resolved_threads());
     println!(
-        "dataset={dataset} scale={} impl={imp} threads={} iters={}",
+        "dataset={dataset} scale={} impl={} threads={} iters={}",
         exp.scale,
+        if auto_engine { "auto".to_string() } else { imp.to_string() },
         exp.resolved_threads(),
         cfg.n_iter
     );
     let ds = ds_kind.try_generate::<f64>(exp.scale, exp.seed, &pool).map_err(FitError::from)?;
     println!("n={} d={}", ds.n, ds.d);
+    if auto_engine {
+        plan = apply_overrides(StagePlan::auto_for(ds.n))?;
+        println!(
+            "[auto] n={} → {} repulsion (crossover at n={})",
+            ds.n,
+            if plan.fft_repulsion { "FFT" } else { "Barnes-Hut" },
+            acc_tsne::tsne::FFT_CROSSOVER_N
+        );
+    }
 
     // The gen pool is reused for the affinity fit; the session owns its own
     // pools (same thread count) for the gradient phase.
@@ -580,6 +612,7 @@ fn cmd_info() -> Result<(), CliError> {
 const HELP: &str = "\
 acc-tsne <subcommand> [flags]
   run        one t-SNE run  (--dataset --impl --scale --iters --threads --out --plot --f32
+             --auto-engine                                    # pick BH vs FFT repulsion from n
              --repulsive scalar|simd-tiled  --layout original|zorder  --adopt-threshold PCT
              --attractive scalar|prefetch|simd                # attractive-kernel variant
              --min-grad-norm F  --n-iter-without-progress N   # convergence-based early stop
@@ -610,11 +643,13 @@ mod tests {
     // dataset is generated — the tests never pay for an actual t-SNE run.
 
     #[test]
-    fn fit_sne_plus_zorder_layout_is_a_typed_plan_error() {
-        let e = real_main(&argv("run --impl fit-sne --layout zorder")).unwrap_err();
-        assert!(e.contains("invalid stage plan"), "{e}");
-        assert!(e.contains("FIt-SNE"), "{e}");
-        assert!(e.contains("Z-order"), "{e}");
+    fn auto_engine_excludes_explicit_engine_flags() {
+        let e = real_main(&argv("run --auto-engine --impl fit-sne")).unwrap_err();
+        assert_eq!(e.code, EXIT_USAGE, "{e}");
+        assert!(e.contains("--impl"), "{e}");
+        let e = real_main(&argv("run --auto-engine --repulsive simd-tiled")).unwrap_err();
+        assert_eq!(e.code, EXIT_USAGE, "{e}");
+        assert!(e.contains("--repulsive"), "{e}");
     }
 
     #[test]
@@ -757,7 +792,7 @@ mod tests {
         assert_eq!(e.code, EXIT_USAGE, "{e}");
         let e = real_main(&argv("run --checkpoint-every 50")).unwrap_err();
         assert_eq!(e.code, EXIT_USAGE, "{e}");
-        let e = real_main(&argv("run --impl fit-sne --layout zorder")).unwrap_err();
+        let e = real_main(&argv("run --impl fit-sne --repulsive simd-tiled")).unwrap_err();
         assert_eq!(e.code, EXIT_PLAN, "{e}");
     }
 

@@ -44,7 +44,12 @@
 //! | `MulticoreLike`| VP-tree, par   | seq | baseline, seq | seq       | scalar, par      | BH, par   | original |
 //! | `Daal4pyLike`  | blocked, par   | seq | baseline, seq | seq       | scalar, par      | BH, par   | original |
 //! | `AccTsne`      | blocked, par   | par | morton, par   | par       | SIMD+prefetch, par| BH SIMD-tiled, par | Z-order |
-//! | `FitSne`       | blocked, par   | seq | —             | —         | scalar, par      | FFT interp| original |
+//! | `FitSne`       | blocked, par   | seq | —             | —         | scalar, par      | FFT interp| any      |
+//!
+//! `FitSne` defaults to the original layout but composes with either (its
+//! scatter/gather is layout-agnostic and never adopts a permutation);
+//! [`StagePlan::auto_for`] picks BH or FFT repulsion from the dataset size
+//! using the measured crossover ([`plan::FFT_CROSSOVER_N`]).
 
 pub mod persist;
 pub mod pipeline;
@@ -54,7 +59,7 @@ pub mod workspace;
 
 pub use persist::{PersistError, SessionCheckpoint};
 pub use pipeline::{run_tsne, run_tsne_custom, run_tsne_with_p, AttractiveEngine, NativeAttractive};
-pub use plan::{PlanError, StagePlan};
+pub use plan::{PlanError, StagePlan, FFT_CROSSOVER_N};
 pub use session::{
     Affinities, Convergence, FitError, KnnGraph, MIN_POINTS, ObserverControl, RunOutcome, Snapshot,
     StepError, StepInfo, StopReason, TsneSession,
@@ -219,7 +224,8 @@ pub struct TsneConfig {
     /// uses the preset's default (Z-order-persistent for
     /// [`Implementation::AccTsne`], original elsewhere — the A/B knob behind
     /// the layout-parity tests and `BENCH_gradient_loop.json`).
-    /// [`Implementation::FitSne`] builds no tree and always runs the original
+    /// [`Implementation::FitSne`] builds no tree, so a Z-order request there
+    /// never adopts a permutation — it runs bit-identical to the original
     /// layout. Sessions built directly read [`StagePlan::layout`] instead
     /// (checked by [`StagePlan::with_layout`]).
     pub layout: Option<Layout>,

@@ -11,9 +11,10 @@
 //! fit-and-run calls and are **bit-identical** to fitting [`Affinities`] and
 //! stepping a session manually (asserted by the parity tests): they resolve
 //! the plan with the historical override semantics (`cfg.repulsive` /
-//! `cfg.layout` applied on top of the preset; FIt-SNE silently forced to the
-//! original layout), run `cfg.n_iter` steps, and merge the affinity-fit
-//! KNN/BSP times into the result.
+//! `cfg.layout` applied on top of the preset; FIt-SNE silently ignores the
+//! BH repulsive-kernel knob, and a layout override there is a no-op
+//! permutation — the FFT path never adopts one), run `cfg.n_iter` steps, and
+//! merge the affinity-fit KNN/BSP times into the result.
 
 use super::plan::StagePlan;
 use super::session::{Affinities, TsneSession};
@@ -323,10 +324,11 @@ mod tests {
     }
 
     #[test]
-    fn fitsne_forces_original_layout() {
-        // No tree ⇒ no Z-order: through the compat wrapper a zorder request
-        // must stay a bit-identical no-op (the strict plan API rejects the
-        // combination with a typed error instead).
+    fn fitsne_zorder_request_is_a_bit_identical_no_op() {
+        // The FFT path builds no tree, so a Zorder plan never adopts a
+        // permutation: through the compat wrapper a zorder request runs the
+        // exact same trajectory as the original layout, bit for bit (the
+        // combination is a legal plan since the layout lift).
         let ds = gaussian_mixture::<f64>(300, 6, 3, 6.0, 19);
         let mut cfg = quick_cfg(8);
         cfg.layout = Some(crate::tsne::Layout::Zorder);

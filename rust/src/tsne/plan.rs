@@ -12,8 +12,13 @@
 //!
 //! Invalid stage combinations are rejected *at plan-build time* with a typed
 //! [`PlanError`] instead of ad-hoc CLI string checks or mid-run panics:
-//! the FIt-SNE FFT pipeline builds no quadtree, so it can neither persist a
-//! Z-order layout nor take a Barnes-Hut repulsive-kernel override.
+//! the FIt-SNE FFT pipeline replaces the Barnes-Hut traversal entirely, so a
+//! BH repulsive-kernel override cannot combine with it. (Layouts compose with
+//! every engine: the FFT scatter/gather only reads `y[2i..2i+2]`, so it
+//! consumes a morton-resident embedding as happily as the original order.)
+//!
+//! [`StagePlan::auto_for`] picks the repulsive engine from the dataset size
+//! using the measured BH↔FIt crossover ([`FFT_CROSSOVER_N`]).
 //!
 //! The plan is **not** part of a persisted artifact: a saved
 //! [`Affinities`](super::Affinities) or session checkpoint is pure data, and
@@ -32,9 +37,6 @@ use crate::tsne::workspace::ADOPT_DRIFT_PCT;
 /// validation — never panicked mid-pipeline.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PlanError {
-    /// The FIt-SNE FFT pipeline builds no quadtree, so there is no Z-order
-    /// to persist: `layout = Zorder` cannot combine with `fft_repulsion`.
-    FftLayoutZorder,
     /// The FIt-SNE FFT pipeline replaces the Barnes-Hut traversal entirely,
     /// so a BH repulsive-kernel override cannot combine with `fft_repulsion`.
     FftBhRepulsive,
@@ -46,11 +48,6 @@ pub enum PlanError {
 impl std::fmt::Display for PlanError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            PlanError::FftLayoutZorder => write!(
-                f,
-                "invalid stage plan: the FIt-SNE FFT pipeline builds no quadtree, \
-                 so the Z-order layout does not apply (use layout=original)"
-            ),
             PlanError::FftBhRepulsive => write!(
                 f,
                 "invalid stage plan: the FIt-SNE FFT pipeline replaces the \
@@ -177,7 +174,8 @@ impl StagePlan {
     }
 
     /// Linderman et al. FIt-SNE: FFT interpolation replaces the BH traversal
-    /// (no quadtree, original layout).
+    /// (no quadtree; defaults to the original layout, and composes with
+    /// [`Layout::Zorder`] — the scatter/gather is layout-agnostic).
     pub fn fit_sne() -> StagePlan {
         StagePlan {
             fft_repulsion: true,
@@ -186,8 +184,29 @@ impl StagePlan {
         }
     }
 
-    /// Override the gradient-state layout. Rejected on FFT plans — there is
-    /// no quadtree, hence no Z-order to persist.
+    /// Pick the repulsive engine from the dataset size: the full acc-t-SNE
+    /// parallel stack, with the BH traversal swapped for the FFT pipeline
+    /// once `n` crosses [`FFT_CROSSOVER_N`] — above it the O(n) interpolation
+    /// beats the super-linear tree descend per step. Every other stage (KNN,
+    /// BSP, attractive kernel, Z-order-resident state) stays at the paper's
+    /// parallel settings.
+    pub fn auto_for(n: usize) -> StagePlan {
+        if n >= FFT_CROSSOVER_N {
+            StagePlan {
+                fft_repulsion: true,
+                // The FFT pipeline has no BH kernel to tile.
+                repulsive_variant: RepulsiveVariant::Scalar,
+                preset: Implementation::FitSne,
+                ..Self::acc_tsne()
+            }
+        } else {
+            Self::acc_tsne()
+        }
+    }
+
+    /// Override the gradient-state layout. Valid on every preset — the FFT
+    /// pipeline never adopts a permutation (it builds no tree), so a Z-order
+    /// plan there runs bit-identical to the original layout.
     pub fn with_layout(mut self, layout: Layout) -> Result<StagePlan, PlanError> {
         self.layout = layout;
         self.validate()?;
@@ -231,9 +250,6 @@ impl StagePlan {
     /// [`TsneSession::new`](super::TsneSession::new); exposed so hand-mutated
     /// plans can be checked eagerly.
     pub fn validate(&self) -> Result<(), PlanError> {
-        if self.fft_repulsion && self.layout == Layout::Zorder {
-            return Err(PlanError::FftLayoutZorder);
-        }
         if self.fft_repulsion && self.repulsive_variant != RepulsiveVariant::Scalar {
             return Err(PlanError::FftBhRepulsive);
         }
@@ -245,16 +261,17 @@ impl StagePlan {
 
     /// The historical `run_tsne(cfg, imp)` semantics: apply the config's
     /// optional overrides on top of the preset, with FIt-SNE *silently*
-    /// ignoring the BH-only knobs (forced original layout, no repulsive
-    /// override) — the compat wrappers must not turn previously-working calls
-    /// into errors. New code should build plans explicitly instead.
+    /// ignoring the repulsive-kernel knob (its pipeline has no BH kernel) —
+    /// the compat wrappers must not turn previously-working calls into
+    /// errors. The layout override applies to every preset; on the FFT path
+    /// it is a no-op permutation, bit-identical to the original order. New
+    /// code should build plans explicitly instead.
     pub(crate) fn compat(imp: Implementation, cfg: &TsneConfig) -> StagePlan {
         let mut plan = Self::preset(imp);
-        if plan.fft_repulsion {
-            return plan;
-        }
         if let Some(v) = cfg.repulsive {
-            plan.repulsive_variant = v;
+            if !plan.fft_repulsion {
+                plan.repulsive_variant = v;
+            }
         }
         if let Some(l) = cfg.layout {
             plan.layout = l;
@@ -262,6 +279,16 @@ impl StagePlan {
         plan
     }
 }
+
+/// Dataset size at which the FIt-SNE FFT pipeline overtakes the SIMD-tiled
+/// Barnes-Hut descend per gradient step, as picked by [`StagePlan::auto_for`].
+///
+/// Provisional constant pending the first committed `BENCH_fitsne.json`
+/// baseline: the `crossover.*` keys emitted by `bench_micro_kernels` measure
+/// both engines' per-step wall time on 1e4–2e5-point synthetic clouds, and
+/// this constant should track the measured intersection once
+/// `promote-baselines.yml` commits the numbers from a trusted CI runner.
+pub const FFT_CROSSOVER_N: usize = 50_000;
 
 #[cfg(test)]
 mod tests {
@@ -278,14 +305,31 @@ mod tests {
     }
 
     #[test]
-    fn fft_rejects_zorder_layout_with_typed_error() {
-        let e = StagePlan::fit_sne().with_layout(Layout::Zorder).unwrap_err();
-        assert_eq!(e, PlanError::FftLayoutZorder);
-        assert!(e.to_string().contains("FIt-SNE"), "{e}");
-        // original layout is fine on the FFT plan
-        assert!(StagePlan::fit_sne().with_layout(Layout::Original).is_ok());
-        // and zorder is fine everywhere else
-        assert!(StagePlan::sklearn_like().with_layout(Layout::Zorder).is_ok());
+    fn every_layout_composes_with_every_preset() {
+        // The FFT scatter/gather is layout-agnostic, so Zorder × FitSne is a
+        // legal plan (it simply never adopts a permutation).
+        for imp in Implementation::ALL {
+            for layout in [Layout::Original, Layout::Zorder] {
+                let plan = StagePlan::preset(imp).with_layout(layout).unwrap();
+                assert_eq!(plan.layout, layout, "{imp:?}");
+                assert!(plan.validate().is_ok());
+            }
+        }
+    }
+
+    #[test]
+    fn auto_preset_picks_the_engine_from_n() {
+        let small = StagePlan::auto_for(FFT_CROSSOVER_N - 1);
+        assert!(!small.fft_repulsion);
+        assert_eq!(small, StagePlan::acc_tsne());
+        let big = StagePlan::auto_for(FFT_CROSSOVER_N);
+        assert!(big.fft_repulsion);
+        assert_eq!(big.preset, Implementation::FitSne);
+        // Every non-repulsive stage keeps the paper's parallel settings,
+        // including the Z-order-resident state the lift made legal.
+        assert_eq!(big.layout, Layout::Zorder);
+        assert!(big.knn_blocked && big.bsp_parallel && big.forces_parallel);
+        assert!(big.validate().is_ok());
     }
 
     #[test]
@@ -321,24 +365,26 @@ mod tests {
     #[test]
     fn validate_catches_hand_mutated_plans() {
         let mut plan = StagePlan::fit_sne();
-        plan.layout = Layout::Zorder;
-        assert_eq!(plan.validate(), Err(PlanError::FftLayoutZorder));
-        let mut plan = StagePlan::fit_sne();
         plan.repulsive_variant = RepulsiveVariant::SimdTiled;
         assert_eq!(plan.validate(), Err(PlanError::FftBhRepulsive));
+        let mut plan = StagePlan::acc_tsne();
+        plan.adopt_drift_pct = 250;
+        assert_eq!(plan.validate(), Err(PlanError::AdoptThresholdOutOfRange(250)));
     }
 
     #[test]
     fn compat_keeps_historical_fitsne_tolerance() {
-        // The old run_tsne silently forced original layout for FIt-SNE; the
-        // compat resolver must preserve that instead of erroring.
+        // The old run_tsne silently dropped BH-only knobs for FIt-SNE; the
+        // repulsive override must still be ignored (no kernel to tile), while
+        // the layout override — a no-op permutation on the FFT path — now
+        // applies like on every other preset.
         let cfg = TsneConfig {
             layout: Some(Layout::Zorder),
             repulsive: Some(RepulsiveVariant::SimdTiled),
             ..TsneConfig::default()
         };
         let plan = StagePlan::compat(Implementation::FitSne, &cfg);
-        assert_eq!(plan.layout, Layout::Original);
+        assert_eq!(plan.layout, Layout::Zorder);
         assert_eq!(plan.repulsive_variant, RepulsiveVariant::Scalar);
         assert!(plan.validate().is_ok());
         // non-FFT presets take the overrides verbatim

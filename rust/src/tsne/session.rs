@@ -40,7 +40,7 @@ use super::workspace::IterationWorkspace;
 use super::{Layout, Scalar, TsneConfig, TsneResult};
 use crate::common::timer::{Step, StepTimes};
 use crate::data::io::Fnv1a64;
-use crate::fitsne::{fitsne_repulsive_into, FitsneParams};
+use crate::fitsne::{fitsne_repulsive_into, FitsneParams, FitsneWorkspace};
 use crate::gradient::exact::kl_with_z;
 use crate::gradient::repulsive::{repulsive_forces_into, RepulsiveVariant};
 use crate::gradient::update::random_init;
@@ -718,6 +718,7 @@ pub struct TsneSession<'a, T: Scalar> {
     ws: IterationWorkspace<T>,
     times: StepTimes,
     fit_params: FitsneParams,
+    fit_ws: FitsneWorkspace,
     iter: usize,
     last_z: T,
     last_grad_norm: f64,
@@ -752,7 +753,9 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
         plan.validate()?;
         assert_eq!(y0.len(), 2 * aff.n(), "initial embedding must be 2n interleaved x,y");
         let nt = if cfg.n_threads == 0 { available_cores() } else { cfg.n_threads };
-        // validate() already rejects Zorder+FFT, so layout alone decides.
+        // The FFT path never builds a tree, so a Zorder plan simply never
+        // adopts a permutation there — layout alone decides the workspace
+        // shape on every preset.
         let zorder = plan.layout == Layout::Zorder;
         Ok(TsneSession {
             aff,
@@ -763,6 +766,7 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
             ws: IterationWorkspace::new(y0, cfg.update, zorder, plan.adopt_drift_pct),
             times: StepTimes::new(),
             fit_params: FitsneParams::default(),
+            fit_ws: FitsneWorkspace::new(),
             iter: 0,
             last_z: T::ONE,
             last_grad_norm: f64::INFINITY,
@@ -828,6 +832,15 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
         &self.plan
     }
 
+    /// How many times the FIt-SNE engine has rebuilt its kernel transforms
+    /// (0 on tree-based plans). Steady-state FFT iterations at unchanged grid
+    /// geometry do not move this counter — the crossover bench reports it as
+    /// `fitsne.kernel_rebuilds`.
+    #[inline]
+    pub fn fitsne_kernel_rebuilds(&self) -> u64 {
+        self.fit_ws.kernel_rebuilds()
+    }
+
     /// Set how often the divergence guard refreshes its in-memory last-good
     /// checkpoint (default every 50 iterations; `0` disables guarding, after
     /// which a diverged [`step`](Self::step) cannot rewind and leaves the
@@ -889,6 +902,7 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
             ref mut ws,
             ref mut times,
             ref fit_params,
+            ref mut fit_ws,
             attractive_override,
             ..
         } = *self;
@@ -902,8 +916,11 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
 
         let z: T = if plan.fft_repulsion {
             // FIt-SNE path: no tree; the FFT pipeline is the repulsive step.
+            // The persistent workspace keeps the kernel transforms and all
+            // grid buffers warm across iterations, so the steady-state step
+            // is allocation-free like the BH hot loop.
             times.time(Step::Repulsive, || {
-                fitsne_repulsive_into(force_pool, &ws.y, fit_params, &mut ws.rep_raw)
+                fitsne_repulsive_into(force_pool, &ws.y, fit_params, fit_ws, &mut ws.rep_raw)
             })
         } else {
             // Steps 3–4: quadtree + summarization.
@@ -1431,10 +1448,10 @@ mod tests {
     fn invalid_plan_is_a_typed_err_not_a_panic() {
         let (_ds, aff) = fitted(200, 4);
         let mut plan = StagePlan::fit_sne();
-        plan.layout = Layout::Zorder;
+        plan.repulsive_variant = RepulsiveVariant::SimdTiled;
         match TsneSession::new(&aff, plan, quick_cfg(5)) {
-            Err(PlanError::FftLayoutZorder) => {}
-            other => panic!("expected FftLayoutZorder, got {:?}", other.map(|_| ())),
+            Err(PlanError::FftBhRepulsive) => {}
+            other => panic!("expected FftBhRepulsive, got {:?}", other.map(|_| ())),
         }
     }
 
@@ -1582,10 +1599,10 @@ mod tests {
         }
         // an invalid plan surfaces as the typed plan error
         let mut bad_plan = StagePlan::fit_sne();
-        bad_plan.layout = Layout::Zorder;
+        bad_plan.repulsive_variant = RepulsiveVariant::SimdTiled;
         match TsneSession::from_checkpoint(&aff, bad_plan, cfg, ck) {
-            Err(PersistError::Plan(PlanError::FftLayoutZorder)) => {}
-            other => panic!("expected Plan(FftLayoutZorder), got {:?}", other.map(|_| ())),
+            Err(PersistError::Plan(PlanError::FftBhRepulsive)) => {}
+            other => panic!("expected Plan(FftBhRepulsive), got {:?}", other.map(|_| ())),
         }
     }
 
@@ -1805,9 +1822,84 @@ mod tests {
         let (_ds, aff) = fitted(200, 8);
         let mut sess = TsneSession::new(&aff, StagePlan::fit_sne(), quick_cfg(0)).unwrap();
         sess.run(10);
+        assert!(sess.fitsne_kernel_rebuilds() >= 1, "FFT steps build the kernel cache");
         let r = sess.finish();
         assert!(r.embedding.iter().all(|v| v.is_finite()));
         assert_eq!(r.implementation, Implementation::FitSne);
         assert_eq!(r.step_times.get(Step::TreeBuild), 0.0, "FFT path builds no tree");
+    }
+
+    #[test]
+    fn bh_plans_never_touch_the_fitsne_workspace() {
+        let (_ds, aff) = fitted(200, 9);
+        let mut sess = TsneSession::new(&aff, StagePlan::acc_tsne(), quick_cfg(0)).unwrap();
+        sess.run(5);
+        assert_eq!(sess.fitsne_kernel_rebuilds(), 0);
+    }
+
+    #[test]
+    fn fitsne_zorder_layout_is_bit_identical_to_original() {
+        // The lifted restriction: FitSne × Zorder is a valid plan, and since
+        // the FFT path never builds a tree (so never adopts a permutation),
+        // the session runs bit-identical to the original layout.
+        let (_ds, aff) = fitted(250, 53);
+        let cfg = quick_cfg(0);
+        let zorder_plan = StagePlan::fit_sne().with_layout(Layout::Zorder).expect("lifted");
+        let mut a = TsneSession::new(&aff, StagePlan::fit_sne(), cfg).unwrap();
+        let mut b = TsneSession::new(&aff, zorder_plan, cfg).unwrap();
+        for _ in 0..15 {
+            a.step().expect("healthy step");
+            b.step().expect("healthy step");
+        }
+        let (ra, rb) = (a.finish(), b.finish());
+        assert_eq!(ra.embedding, rb.embedding);
+        assert_eq!(ra.kl_divergence, rb.kl_divergence);
+    }
+
+    #[test]
+    fn fitsne_divergence_rewinds_under_the_fft_preset() {
+        // StepError::Diverged + last-good rewind must work on the FFT path
+        // exactly like on the BH path (the guard reads the fused sweep's
+        // outputs, which both engines share).
+        let (_ds, aff) = fitted(250, 54);
+        let cfg = quick_cfg(0);
+        let plan = StagePlan::fit_sne();
+        let poison = PoisonEngine::new(&plan, 12);
+        let mut sess = TsneSession::new(&aff, plan, cfg).unwrap();
+        sess.set_guard_interval(10);
+        sess.set_attractive_engine(&poison);
+        for _ in 0..12 {
+            sess.step().expect("healthy step");
+        }
+        match sess.step() {
+            Err(StepError::Diverged { iter: 12, rewound_to: Some(10), .. }) => {}
+            other => panic!("expected Diverged with rewind, got {other:?}"),
+        }
+        assert_eq!(sess.iterations(), 10, "rewound to the guard snapshot");
+        for _ in 0..5 {
+            sess.step().expect("healthy after rewind");
+        }
+        assert!(sess.embedding().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn fitsne_degenerate_inputs_run_the_full_pipeline() {
+        // Coincident cloud under the FFT preset: the span→0 grid is held
+        // finite by the min_intervals clamp, and the whole fit → session →
+        // checkpoint path stays finite — same guarantee as the BH presets.
+        let pool = ThreadPool::new(4);
+        let plan = StagePlan::fit_sne();
+        let n = 64;
+        let pts = vec![1.25f64; n * 4];
+        let aff = Affinities::fit(&pool, &pts, n, 4, 5.0, &plan).expect("coincident cloud fits");
+        let mut sess = TsneSession::new(&aff, plan, quick_cfg(0)).unwrap();
+        for _ in 0..10 {
+            sess.step().expect("finite step");
+        }
+        let ck = sess.to_checkpoint();
+        assert!(ck.y.iter().all(|v| v.is_finite()));
+        let r = sess.finish();
+        assert!(r.embedding.iter().all(|v| v.is_finite()));
+        assert!(r.kl_divergence.is_finite());
     }
 }

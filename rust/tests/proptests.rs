@@ -5,6 +5,7 @@
 
 use acc_tsne::common::proptest::{check, gen_len, gen_points, Config};
 use acc_tsne::common::rng::Rng;
+use acc_tsne::fitsne::{fitsne_repulsive_into, FitsneParams, FitsneWorkspace};
 use acc_tsne::gradient::exact::exact_repulsive;
 use acc_tsne::gradient::repulsive::{repulsive_forces_scalar_into, repulsive_forces_tiled_into};
 use acc_tsne::knn::{knn_reference, BruteForceKnn, KnnEngine};
@@ -291,6 +292,87 @@ fn prop_coincident_clouds_yield_finite_trees_and_forces() {
             }
             if raw.iter().any(|v| !v.is_finite()) {
                 return Err("non-finite repulsive force".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fitsne_matches_exact_oracle() {
+    // FFT-engine parity against the O(n²) oracle across 1/4/8-thread pools:
+    // p = 3 Lagrange interpolation gives a few-percent force accuracy and
+    // ~1% on Z (the fitsne module's established tolerances), independent of
+    // the thread count and of workspace reuse across cases.
+    check(
+        "fitsne == exact oracle",
+        Config { cases: 10, ..Config::default() },
+        |rng| {
+            let n = 100 + gen_len(rng, 0, 400);
+            let pos = gen_points(rng, 2 * n, 6.0);
+            let threads = [1, 4, 8][rng.next_below(3)];
+            let pool = ThreadPool::new(threads);
+            let params = FitsneParams::default();
+            let mut ws = FitsneWorkspace::new();
+            let mut raw = vec![0.0f64; 2 * n];
+            let z = fitsne_repulsive_into(&pool, &pos, &params, &mut ws, &mut raw);
+            let (want, z_want) = exact_repulsive(&pool, &pos);
+            let z_rel = (z - z_want).abs() / z_want;
+            if z_rel > 0.02 {
+                return Err(format!("n={n} t={threads}: Z rel error {z_rel}"));
+            }
+            let mut num = 0.0;
+            let mut den = 0.0;
+            for i in 0..2 * n {
+                num += (raw[i] - want[i]) * (raw[i] - want[i]);
+                den += want[i] * want[i] + 1e-30;
+            }
+            let rel = (num / den).sqrt();
+            if rel > 0.06 {
+                return Err(format!("n={n} t={threads}: force rel-RMS {rel}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_coincident_clouds_fitsne_forces_stay_finite() {
+    // Degenerate geometry through the FFT engine: coincident (and
+    // sub-epsilon-jittered) clouds collapse the bounding span to ~0; the
+    // min_intervals clamp and the span-lattice fallback must keep the grid
+    // finite, the forces finite, and Z > 0 — across 1/4/8-thread pools and
+    // across workspace reuse between unrelated degenerate cases.
+    check(
+        "coincident clouds stay finite (fitsne)",
+        Config { cases: 18, ..Config::default() },
+        |rng| {
+            let n = gen_len(rng, 2, 300);
+            let cx = rng.next_f64() * 8.0 - 4.0;
+            let cy = rng.next_f64() * 8.0 - 4.0;
+            let jitter = [0.0, 1e-300, 1e-18][rng.next_below(3)];
+            let mut pos = vec![0.0f64; 2 * n];
+            for i in 0..n {
+                pos[2 * i] = cx + i as f64 * jitter;
+                pos[2 * i + 1] = cy - i as f64 * jitter;
+            }
+            let threads = [1, 4, 8][rng.next_below(3)];
+            let pool = ThreadPool::new(threads);
+            let params = FitsneParams::default();
+            let mut ws = FitsneWorkspace::new();
+            let mut raw = vec![0.0f64; 2 * n];
+            let z = fitsne_repulsive_into(&pool, &pos, &params, &mut ws, &mut raw);
+            if !(z.is_finite() && z > 0.0) {
+                return Err(format!("Z = {z} for a coincident cloud"));
+            }
+            if raw.iter().any(|v| !v.is_finite()) {
+                return Err("non-finite FFT repulsive force".into());
+            }
+            // A second pass through the same workspace must behave the same
+            // (stale kernels from the first geometry fully masked).
+            let z2 = fitsne_repulsive_into(&pool, &pos, &params, &mut ws, &mut raw);
+            if z2 != z {
+                return Err(format!("workspace reuse changed Z: {z} vs {z2}"));
             }
             Ok(())
         },

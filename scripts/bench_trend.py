@@ -10,6 +10,8 @@ noisy and the trend is advisory (see ROADMAP "wire it into a trend check").
 
 Refresh a baseline by copying the snapshot from a trusted run:
     cp rust/BENCH_repulsive.json bench_baselines/
+
+With no arguments the full snapshot set (DEFAULT_SNAPSHOTS) is checked.
 """
 import json
 import os
@@ -17,6 +19,11 @@ import sys
 
 REGRESSION_THRESHOLD = 1.20  # warn if >20% slower than baseline
 BASELINE_DIR = "bench_baselines"
+DEFAULT_SNAPSHOTS = [
+    "rust/BENCH_repulsive.json",
+    "rust/BENCH_gradient_loop.json",
+    "rust/BENCH_fitsne.json",
+]
 
 
 def flatten(d, prefix=""):
@@ -73,4 +80,4 @@ def main(paths):
 
 
 if __name__ == "__main__":
-    sys.exit(main(sys.argv[1:]))
+    sys.exit(main(sys.argv[1:] or DEFAULT_SNAPSHOTS))

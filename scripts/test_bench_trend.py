@@ -95,6 +95,37 @@ class BenchTrendCase(unittest.TestCase):
         self.assertIn("persist.save_s", out)
         self.assertIn("without a baseline", out)
 
+    def test_fitsne_snapshot_shape(self):
+        # BENCH_fitsne.json nests timings under fitsne/crossover; the
+        # kernel_rebuilds counter and estimate_n are not timings and must
+        # never trip the trend even when they change.
+        base = {
+            "fitsne": {"cold_step_s": 0.5, "step_s": 0.1, "kernel_rebuilds": 0},
+            "crossover": {
+                "n10000": {"bh_step_s": 0.02, "fit_step_s": 0.03},
+                "estimate_n": 50000,
+            },
+        }
+        cur = {
+            "fitsne": {"cold_step_s": 0.5, "step_s": 0.2, "kernel_rebuilds": 9},
+            "crossover": {
+                "n10000": {"bh_step_s": 0.02, "fit_step_s": 0.03},
+                "estimate_n": 10000,
+            },
+        }
+        self.write(os.path.join(bench_trend.BASELINE_DIR, "BENCH_fitsne.json"), base)
+        self.write("BENCH_fitsne.json", cur)
+        rc, out = self.run_main(["BENCH_fitsne.json"])
+        self.assertEqual(rc, 0)
+        self.assertIn("fitsne.step_s", out, "the regressed steady-step timing is flagged")
+        self.assertIn("::warning", out)
+        self.assertIn("1 warning(s)", out, "counters and estimate_n do not warn")
+        self.assertIn("ok BENCH_fitsne.json:crossover.n10000.bh_step_s", out)
+
+    def test_default_snapshot_set_includes_fitsne(self):
+        self.assertIn("rust/BENCH_fitsne.json", bench_trend.DEFAULT_SNAPSHOTS)
+        self.assertEqual(len(bench_trend.DEFAULT_SNAPSHOTS), 3)
+
     def test_non_timing_keys_are_ignored(self):
         # only *_s keys participate in the trend; counters may drift freely
         self.write(
