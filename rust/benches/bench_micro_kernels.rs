@@ -19,15 +19,21 @@
 //!   FIt-SNE engine: cold step (buffer growth + kernel FFTs) vs steady-state
 //!     step on a persistent workspace, plus the BH↔FIt per-step crossover
 //!     sweep that motivates `StagePlan::auto_for` — snapshotted to
-//!     BENCH_fitsne.json (`fitsne.*` and `crossover.*` keys).
+//!     BENCH_fitsne.json (`fitsne.*` and `crossover.*` keys);
+//!   KNN recall: HNSW build + ef_search sweep vs the exact brute-force
+//!     engine, recall@k per beam width — snapshotted to BENCH_knn.json
+//!     (`knn_recall.*` keys; recall values carry no `_s` suffix so the
+//!     trend checker treats them as informational, not timings).
 
 use acc_tsne::common::bench::Bencher;
 use acc_tsne::common::rng::Rng;
 use acc_tsne::common::timer::Step;
 use acc_tsne::data::first_non_finite;
+use acc_tsne::data::synthetic::gaussian_mixture;
 use acc_tsne::fitsne::{fitsne_repulsive_into, FitsneParams, FitsneWorkspace};
 use acc_tsne::gradient::attractive::{attractive_forces, Variant};
 use acc_tsne::gradient::repulsive::{repulsive_forces_scalar_into, repulsive_forces_tiled_into};
+use acc_tsne::knn::hnsw::{HnswIndex, HnswParams, DEFAULT_EF_SEARCH};
 use acc_tsne::knn::{BruteForceKnn, KnnEngine};
 use acc_tsne::parallel::sort::radix_sort_pairs;
 use acc_tsne::parallel::ThreadPool;
@@ -527,5 +533,70 @@ fn main() {
         eprintln!("warning: could not write BENCH_fitsne.json: {e}");
     } else {
         println!("[json] BENCH_fitsne.json");
+    }
+
+    // --- KNN recall: the approximate engine's speed/recall frontier. One
+    // deterministic HNSW build, then an ef_search sweep against the exact
+    // brute-force rows — recall@k is the mean per-row overlap. This is the
+    // measurement behind the ">= 0.9 recall at the default beam" contract
+    // (StagePlan::auto_for swaps in HNSW above FFT_CROSSOVER_N).
+    let kn = (n / 4).clamp(2_000, 50_000);
+    let kd = 16usize;
+    let kk = 10usize;
+    let kds = gaussian_mixture::<f64>(kn, kd, 16, 6.0, 77);
+    let mut b = Bencher::new(&format!("knn_recall (n={kn}, d={kd}, k={kk})")).sampling(1, 3, 10.0);
+    let exact = BruteForceKnn::default().search(&pool, &kds.points, kn, kd, kk);
+    let s_exact = b.bench("exact_search", || {
+        BruteForceKnn::default().search(&pool, &kds.points, kn, kd, kk).n
+    });
+    let params = HnswParams::default();
+    let s_build = b.bench("hnsw_build", || {
+        HnswIndex::build(&pool, &kds.points, kn, kd, &params).len()
+    });
+    let index = HnswIndex::build(&pool, &kds.points, kn, kd, &params);
+    let recall_vs_exact = |approx: &acc_tsne::knn::NeighborLists<f64>| -> f64 {
+        let mut hits = 0usize;
+        for i in 0..kn {
+            let truth = exact.neighbors(i);
+            hits += approx.neighbors(i).iter().filter(|j| truth.contains(j)).count();
+        }
+        hits as f64 / (kn * kk) as f64
+    };
+    let ef_sweep = [16usize, 32, 64, 128, 256];
+    let mut sweep_rows = Vec::new();
+    let mut default_recall = 0.0f64;
+    for &ef in &ef_sweep {
+        let s = b.bench(&format!("hnsw_search ef={ef}"), || index.search_all(&pool, kk, ef).n);
+        let rows = index.search_all(&pool, kk, ef);
+        let recall = recall_vs_exact(&rows);
+        if ef == DEFAULT_EF_SEARCH {
+            default_recall = recall;
+        }
+        println!("  ef={ef}: {:.3}ms, recall@{kk} {recall:.4}", s.mean * 1e3);
+        sweep_rows.push((ef, s.mean, recall));
+    }
+    b.report();
+
+    let mut kj = String::from("{\n  \"bench\": \"knn\",\n");
+    kj.push_str(&format!(
+        "  \"n\": {kn},\n  \"d\": {kd},\n  \"k\": {kk},\n  \"threads\": {},\n",
+        pool.n_threads()
+    ));
+    kj.push_str("  \"knn_recall\": {\n");
+    kj.push_str(&format!("    \"build_s\": {:.6e},\n", s_build.mean));
+    kj.push_str(&format!("    \"exact_search_s\": {:.6e},\n", s_exact.mean));
+    kj.push_str(&format!("    \"default_ef\": {DEFAULT_EF_SEARCH},\n"));
+    kj.push_str(&format!("    \"default_recall\": {default_recall:.4},\n"));
+    for (i, (ef, mean, recall)) in sweep_rows.iter().enumerate() {
+        let sep = if i + 1 < sweep_rows.len() { "," } else { "" };
+        kj.push_str(&format!(
+            "    \"ef{ef}\": {{ \"search_s\": {mean:.6e}, \"recall\": {recall:.4} }}{sep}\n"
+        ));
+    }
+    kj.push_str("  }\n}\n");
+    if let Err(e) = std::fs::write("BENCH_knn.json", &kj) {
+        eprintln!("warning: could not write BENCH_knn.json: {e}");
+    } else {
+        println!("[json] BENCH_knn.json");
     }
 }

@@ -1,0 +1,136 @@
+//! Million-point end-to-end fit: the scale path the approximate-KNN subsystem
+//! exists for. Exact KNN is O(n²·d) — at n = 1M that is ~10¹³ distance ops and
+//! hours of wall time; the HNSW build + search is the only practical route.
+//!
+//! Pipeline (run with `cargo run --release --example million_points`):
+//!   1. synthesize a 1M-point Gaussian mixture (32 clusters, d = 16);
+//!   2. build an approximate KNN graph (`KnnGraph::build_approximate`,
+//!      default HNSW params: M = 16, ef_construction = 200, ef_search = 64
+//!      — ≥ 0.9 recall@k on clustered data, see BENCH_knn.json);
+//!   3. round-trip the graph through the persistence layer (save → load →
+//!      fingerprint check) — the artifact a perplexity sweep would reuse;
+//!   4. BSP-only affinity fit from the loaded graph (no second KNN pass);
+//!   5. descend with the plan `StagePlan::auto_for(n)` picks — FFT repulsion
+//!      and the HNSW engine above the measured crossover;
+//!   6. report per-stage times and a neighbor-preservation count on a
+//!      subsample (exact preservation at 1M would itself be O(n²)).
+//!
+//! Size and iteration count are env-tunable so CI smoke runs stay cheap:
+//!   ACC_TSNE_MILLION_N      point count   (default 1_000_000)
+//!   ACC_TSNE_MILLION_ITERS  iterations    (default 250)
+
+use std::time::Instant;
+
+use acc_tsne::common::timer::Step;
+use acc_tsne::data::synthetic::gaussian_mixture;
+use acc_tsne::knn::hnsw::HnswParams;
+use acc_tsne::metrics::neighbor_preservation;
+use acc_tsne::parallel::ThreadPool;
+use acc_tsne::tsne::{Affinities, KnnGraph, StagePlan, TsneConfig, TsneSession};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let n = env_usize("ACC_TSNE_MILLION_N", 1_000_000);
+    let iters = env_usize("ACC_TSNE_MILLION_ITERS", 250);
+    let (d, clusters, perplexity) = (16usize, 32usize, 30.0f64);
+    let k = (3.0 * perplexity) as usize; // the ⌊3u⌋ neighbor budget
+    let pool = ThreadPool::with_all_cores();
+    println!("million-point fit: n={n} d={d} k={k} iters={iters} threads={}", pool.n_threads());
+
+    let t = Instant::now();
+    let ds = gaussian_mixture::<f64>(n, d, clusters, 6.0, 4242);
+    println!(
+        "[{:8.2}s] dataset: {} clusters of ~{} points",
+        t.elapsed().as_secs_f64(),
+        clusters,
+        n / clusters
+    );
+
+    // Approximate KNN graph — the tentpole. Deterministic for the seed at any
+    // thread count, rows ascending (distance, index), so the ⌊3u⌋-prefix
+    // re-fit contract below holds for this build.
+    let graph =
+        KnnGraph::build_approximate(&pool, &ds.points, ds.n, ds.d, k, &HnswParams::default())
+            .expect("finite synthetic data builds");
+    println!(
+        "[{:8.2}s] KNN graph: engine {} ({:.1}s in Step::Knn)",
+        t.elapsed().as_secs_f64(),
+        graph.engine(),
+        graph.step_times().get(Step::Knn)
+    );
+
+    // Persist → reload → verify: the exact artifact flow a perplexity sweep
+    // uses (`--save-knn` / `--knn`), engine metadata included.
+    let path = std::env::temp_dir().join(format!("acc_tsne_million_{}.knn", std::process::id()));
+    graph.save(&path).expect("temp dir is writable");
+    let loaded = KnnGraph::<f64>::load(&path).expect("round-trip");
+    std::fs::remove_file(&path).ok();
+    loaded.verify_source(&ds.points, ds.n, ds.d).expect("fingerprint matches");
+    assert_eq!(loaded.engine(), graph.engine(), "engine metadata survives persistence");
+    println!(
+        "[{:8.2}s] graph round-tripped through disk (engine metadata intact)",
+        t.elapsed().as_secs_f64()
+    );
+
+    // BSP-only affinity fit from the loaded graph — no second KNN pass.
+    let plan = StagePlan::auto_for(ds.n);
+    println!(
+        "[{:8.2}s] plan: {} repulsion, {} KNN engine",
+        t.elapsed().as_secs_f64(),
+        if plan.fft_repulsion { "FFT" } else { "Barnes-Hut" },
+        plan.knn_engine.name()
+    );
+    let aff = Affinities::from_knn(&pool, &loaded, perplexity, &plan).expect("k >= 3u");
+
+    let cfg = TsneConfig {
+        n_iter: iters,
+        seed: 4242,
+        n_threads: pool.n_threads(),
+        perplexity,
+        ..TsneConfig::default()
+    };
+    let mut sess = TsneSession::new(&aff, plan, cfg).expect("auto plan is valid");
+    sess.run(iters);
+    let mut r = sess.finish();
+    // Fold the KNN (in-memory build; the loaded artifact's times are empty
+    // by contract) and BSP (affinity fit) wall times into the gradient-phase
+    // times so the percentages cover the whole pipeline.
+    r.step_times.merge(graph.step_times());
+    r.step_times.merge(aff.step_times());
+    println!(
+        "[{:8.2}s] descent done: KL = {:.4} after {} iters",
+        t.elapsed().as_secs_f64(),
+        r.kl_divergence,
+        r.n_iter
+    );
+    println!("per-stage share of {:.1}s total:", r.step_times.total());
+    for (step, pct) in r.step_times.percentages() {
+        println!("  {:<10} {:6.2}% ({:.2}s)", step.name(), pct, r.step_times.get(step));
+    }
+
+    // Neighborhood preservation on a strided subsample (exact at 1M would be
+    // O(n²)). The count answers "did the approximate graph still place the
+    // clusters?" — on this mixture expect well above the 1/32 random floor.
+    let sub = ds.n.min(5_000);
+    let stride = ds.n / sub;
+    let mut hi = Vec::with_capacity(sub * ds.d);
+    let mut lo = Vec::with_capacity(sub * 2);
+    for s in 0..sub {
+        let i = s * stride;
+        hi.extend_from_slice(&ds.points[i * ds.d..(i + 1) * ds.d]);
+        lo.extend_from_slice(&r.embedding[2 * i..2 * i + 2]);
+    }
+    let kq = 10usize;
+    let np = neighbor_preservation(&pool, &hi, sub, ds.d, &lo, kq);
+    println!(
+        "neighbor preservation @k={kq} on {sub}-point subsample: {:.3} \
+         (~{:.0} of each point's {kq} high-dim neighbors kept; random ≈ {:.3})",
+        np,
+        np * kq as f64,
+        kq as f64 / sub as f64
+    );
+    println!("total wall time: {:.2}s", t.elapsed().as_secs_f64());
+}

@@ -1,0 +1,716 @@
+//! Approximate KNN via HNSW (Malkov & Yashunin 2016) — the engine that takes
+//! step 1 past the exact-search wall at 10⁶⁺ points.
+//!
+//! A layered skip-list graph: every point lives on layer 0, a geometrically
+//! thinning subset on each layer above. A query greedily descends the sparse
+//! upper layers to a good entry point, then runs an `ef`-bounded best-first
+//! beam on layer 0. `ef_search` is the recall-vs-speed knob: wider beam, more
+//! exact rows, more distance evaluations.
+//!
+//! **Determinism.** Construction is batched level-synchronous rather than
+//! lock-sharded: a fixed doubling batch schedule (independent of thread
+//! count) alternates a *parallel, read-only* candidate search against the
+//! frozen graph with a *sequential, index-ordered* commit of the new links.
+//! Every tie breaks on the (distance, index) lexicographic total order
+//! (`select::KBest`'s order), so a fixed seed gives a bit-identical graph —
+//! and bit-identical neighbor rows — at any thread count. The trade is that
+//! points inside one batch do not see each other as candidates; with the
+//! doubling schedule a batch is never larger than the committed graph (capped
+//! at [`MAX_BATCH`]), which keeps the quality loss in the noise.
+//!
+//! Rows come out sorted ascending-(distance, index) like every other engine,
+//! so the ⌊3u⌋-prefix re-fit contract holds *within one build*: truncating a
+//! row is exactly the smaller-k search over the same graph. Across rebuilds
+//! (different seed, params, or data) the approximate k-set itself may differ
+//! — that is the documented difference from the exact engines.
+
+use super::select::KBest;
+use super::{KnnEngine, NeighborLists};
+use crate::common::float::Real;
+use crate::common::rng::Rng;
+use crate::parallel::{parallel_for, Schedule, SyncSlice, ThreadPool};
+use std::cell::RefCell;
+
+/// Default beam width for queries — the recall knob's resting position
+/// (≥0.9 recall@k on the bench suite's Gaussian-mixture workload).
+pub const DEFAULT_EF_SEARCH: usize = 64;
+
+/// Layer cap: P(level ≥ 16) < (1/M)¹⁶ ≈ 0 for any sensible M.
+const MAX_LEVEL: usize = 15;
+/// Insertion batch cap — bounds the candidate staleness inside one batch.
+const MAX_BATCH: usize = 4096;
+
+/// Tunables for [`HnswIndex`]; recorded verbatim in the engine metadata of an
+/// approximate [`KnnGraph`](crate::tsne::KnnGraph).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HnswParams {
+    /// Links per node on upper layers (layer 0 holds `2M`).
+    pub m: usize,
+    /// Beam width while inserting — graph quality.
+    pub ef_construction: usize,
+    /// Beam width while querying — recall-vs-speed.
+    pub ef_search: usize,
+    /// Seeds the level assignment; same seed ⇒ bit-identical index.
+    pub seed: u64,
+}
+
+impl Default for HnswParams {
+    fn default() -> Self {
+        HnswParams { m: 16, ef_construction: 200, ef_search: DEFAULT_EF_SEARCH, seed: 0x5EED }
+    }
+}
+
+/// `a < b` under the (distance, index) lexicographic total order — the same
+/// order `select::KBest` keeps, repeated here because that one is private.
+#[inline(always)]
+fn lt<T: Real>(a: &(T, u32), b: &(T, u32)) -> bool {
+    a.0 < b.0 || (a.0 == b.0 && a.1 < b.1)
+}
+
+#[inline(always)]
+fn dist_sq<T: Real>(data: &[T], d: usize, a: usize, b: usize) -> T {
+    let (ra, rb) = (&data[a * d..(a + 1) * d], &data[b * d..(b + 1) * d]);
+    let mut acc = T::ZERO;
+    for (x, y) in ra.iter().zip(rb.iter()) {
+        let diff = *x - *y;
+        acc += diff * diff;
+    }
+    acc
+}
+
+/// Plain binary min-heap over (distance, index) under [`lt`] — the beam's
+/// expansion frontier. `std::collections::BinaryHeap` needs `Ord`, which
+/// floats don't have; this is the 30-line alternative.
+struct MinHeap<T: Real> {
+    v: Vec<(T, u32)>,
+}
+
+impl<T: Real> MinHeap<T> {
+    fn with_capacity(c: usize) -> Self {
+        MinHeap { v: Vec::with_capacity(c) }
+    }
+
+    fn push(&mut self, e: (T, u32)) {
+        self.v.push(e);
+        let mut i = self.v.len() - 1;
+        while i > 0 {
+            let p = (i - 1) / 2;
+            if lt(&self.v[i], &self.v[p]) {
+                self.v.swap(i, p);
+                i = p;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn pop(&mut self) -> Option<(T, u32)> {
+        if self.v.is_empty() {
+            return None;
+        }
+        let last = self.v.len() - 1;
+        self.v.swap(0, last);
+        let out = self.v.pop();
+        let n = self.v.len();
+        let mut i = 0;
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut s = i;
+            if l < n && lt(&self.v[l], &self.v[s]) {
+                s = l;
+            }
+            if r < n && lt(&self.v[r], &self.v[s]) {
+                s = r;
+            }
+            if s == i {
+                break;
+            }
+            self.v.swap(i, s);
+            i = s;
+        }
+        out
+    }
+}
+
+/// Per-thread visited set: epoch-stamped marks instead of a cleared bitmap,
+/// so a beam search costs O(visited), not O(n), per query. Lives in a
+/// `thread_local` because the pool's workers persist across calls.
+struct SearchScratch {
+    stamp: Vec<u32>,
+    epoch: u32,
+}
+
+impl SearchScratch {
+    fn new() -> Self {
+        SearchScratch { stamp: Vec::new(), epoch: 0 }
+    }
+
+    fn begin(&mut self, n: usize) {
+        if self.stamp.len() < n {
+            self.stamp.resize(n, 0);
+        }
+        if self.epoch == u32::MAX {
+            self.stamp.fill(0);
+            self.epoch = 0;
+        }
+        self.epoch += 1;
+    }
+
+    /// Mark `v` visited; `true` if it already was (this epoch).
+    #[inline(always)]
+    fn visit(&mut self, v: u32) -> bool {
+        let s = &mut self.stamp[v as usize];
+        if *s == self.epoch {
+            true
+        } else {
+            *s = self.epoch;
+            false
+        }
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<SearchScratch> = RefCell::new(SearchScratch::new());
+}
+
+/// An immutable HNSW index over a borrowed dataset. Build once, then run
+/// [`Self::search_all`] at any `k`/`ef` — the bench suite's ef-sweep reuses
+/// one index across the whole recall curve.
+pub struct HnswIndex<'a, T: Real> {
+    data: &'a [T],
+    n: usize,
+    d: usize,
+    m: usize,
+    m0: usize,
+    levels: Vec<u8>,
+    entry: u32,
+    top: u8,
+    /// Layer-0 adjacency, flat `n × m0` with per-node counts.
+    links0: Vec<u32>,
+    cnt0: Vec<u32>,
+    /// `upper[v][l-1]` = v's neighbors on layer `l ≥ 1` (empty for most v).
+    upper: Vec<Vec<Vec<u32>>>,
+}
+
+impl<'a, T: Real> HnswIndex<'a, T> {
+    /// Number of indexed points.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// `true` only for an impossible empty index (`build` rejects n = 0);
+    /// present so `len` satisfies the usual pair convention.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Build over all `n` points of `data` (n × d). Deterministic for a given
+    /// `params.seed` at any pool width.
+    pub fn build(
+        pool: &ThreadPool,
+        data: &'a [T],
+        n: usize,
+        d: usize,
+        params: &HnswParams,
+    ) -> Self {
+        assert!(n > 0, "HNSW needs at least one point");
+        assert_eq!(data.len(), n * d);
+        let m = params.m.max(2);
+        let m0 = 2 * m;
+        let efc = params.ef_construction.max(m);
+        // Geometric level assignment, one sequential RNG pass (order is part
+        // of the determinism contract). -ln(0)·mult = +inf saturates under
+        // `as usize`, so a zero draw lands on MAX_LEVEL rather than UB.
+        let mult = 1.0 / (m as f64).ln();
+        let mut rng = Rng::new(params.seed);
+        let levels: Vec<u8> = (0..n)
+            .map(|_| ((-rng.next_f64().ln() * mult) as usize).min(MAX_LEVEL) as u8)
+            .collect();
+        let upper = levels.iter().map(|&l| vec![Vec::new(); l as usize]).collect();
+        let mut index = HnswIndex {
+            data,
+            n,
+            d,
+            m,
+            m0,
+            entry: 0,
+            top: levels[0],
+            levels,
+            links0: vec![0u32; n * m0],
+            cnt0: vec![0u32; n],
+            upper,
+        };
+        // Batched level-synchronous insertion: phase A searches the frozen
+        // graph in parallel, phase B commits links sequentially in index
+        // order. The doubling schedule is a pure function of n.
+        let mut committed = 1usize;
+        while committed < n {
+            let batch = committed.min(MAX_BATCH).min(n - committed);
+            let base = committed;
+            let mut found: Vec<Vec<Vec<(T, u32)>>> = Vec::new();
+            found.resize_with(batch, Vec::new);
+            {
+                let fs = SyncSlice::new(&mut found);
+                let frozen = &index;
+                parallel_for(pool, batch, Schedule::Dynamic { grain: 8 }, |range| {
+                    SCRATCH.with(|cell| {
+                        let scratch = &mut *cell.borrow_mut();
+                        for t in range {
+                            let cands = frozen.insert_candidates(base + t, efc, scratch);
+                            // disjoint: slot t
+                            unsafe { *fs.get_mut(t) = cands };
+                        }
+                    })
+                });
+            }
+            for t in 0..batch {
+                index.commit(base + t, std::mem::take(&mut found[t]));
+            }
+            committed += batch;
+        }
+        index
+    }
+
+    #[inline(always)]
+    fn dist(&self, a: usize, b: usize) -> T {
+        dist_sq(self.data, self.d, a, b)
+    }
+
+    #[inline]
+    fn neighbors(&self, v: usize, l: usize) -> &[u32] {
+        if l == 0 {
+            &self.links0[v * self.m0..v * self.m0 + self.cnt0[v] as usize]
+        } else {
+            match self.upper[v].get(l - 1) {
+                Some(list) => list,
+                None => &[],
+            }
+        }
+    }
+
+    fn neighbor_count(&self, v: usize, l: usize) -> usize {
+        self.neighbors(v, l).len()
+    }
+
+    fn add_link(&mut self, from: usize, to: u32, l: usize) {
+        if l == 0 {
+            let c = self.cnt0[from] as usize;
+            debug_assert!(c < self.m0);
+            self.links0[from * self.m0 + c] = to;
+            self.cnt0[from] += 1;
+        } else {
+            self.upper[from][l - 1].push(to);
+        }
+    }
+
+    fn set_links(&mut self, v: usize, l: usize, sel: &[(T, u32)]) {
+        if l == 0 {
+            for (j, &(_, u)) in sel.iter().enumerate() {
+                self.links0[v * self.m0 + j] = u;
+            }
+            self.cnt0[v] = sel.len() as u32;
+        } else {
+            let list = &mut self.upper[v][l - 1];
+            list.clear();
+            list.extend(sel.iter().map(|&(_, u)| u));
+        }
+    }
+
+    /// Greedy hill-climb on layer `l` toward `q`; ties go to the smaller
+    /// index so the walk is scan-order-free.
+    fn greedy(&self, q: usize, mut ep: u32, mut dep: T, l: usize) -> (u32, T) {
+        loop {
+            let mut improved = false;
+            let at = ep;
+            for &v in self.neighbors(at as usize, l) {
+                let dv = self.dist(q, v as usize);
+                if dv < dep || (dv == dep && v < ep) {
+                    dep = dv;
+                    ep = v;
+                    improved = true;
+                }
+            }
+            if !improved {
+                return (ep, dep);
+            }
+        }
+    }
+
+    /// Best-first beam on layer `l`: expand the closest frontier node until
+    /// it is farther than the ef-th best. Returns the ef best found, sorted
+    /// ascending-(distance, index).
+    fn search_layer(
+        &self,
+        q: usize,
+        ep: u32,
+        dep: T,
+        ef: usize,
+        l: usize,
+        scratch: &mut SearchScratch,
+    ) -> Vec<(T, u32)> {
+        scratch.begin(self.n);
+        let mut w = KBest::new(ef);
+        let mut cand = MinHeap::with_capacity(ef + 1);
+        scratch.visit(ep);
+        w.push(dep, ep);
+        cand.push((dep, ep));
+        while let Some((dc, c)) = cand.pop() {
+            if let Some(t) = w.threshold() {
+                if dc > t {
+                    break;
+                }
+            }
+            for &v in self.neighbors(c as usize, l) {
+                if scratch.visit(v) {
+                    continue;
+                }
+                let dv = self.dist(q, v as usize);
+                let expand = match w.threshold() {
+                    None => true,
+                    Some(t) => dv <= t,
+                };
+                w.push(dv, v);
+                if expand {
+                    cand.push((dv, v));
+                }
+            }
+        }
+        w.into_sorted()
+    }
+
+    /// Phase A of an insertion: candidate lists for `q` on every layer it
+    /// will join, computed read-only against the frozen graph.
+    fn insert_candidates(
+        &self,
+        q: usize,
+        efc: usize,
+        scratch: &mut SearchScratch,
+    ) -> Vec<Vec<(T, u32)>> {
+        let lq = (self.levels[q] as usize).min(self.top as usize);
+        let mut ep = self.entry;
+        let mut dep = self.dist(q, ep as usize);
+        let mut l = self.top as usize;
+        while l > lq {
+            let (e, de) = self.greedy(q, ep, dep, l);
+            ep = e;
+            dep = de;
+            l -= 1;
+        }
+        let mut out = vec![Vec::new(); lq + 1];
+        loop {
+            let w = self.search_layer(q, ep, dep, efc, l, scratch);
+            if let Some(&(d0, e0)) = w.first() {
+                ep = e0;
+                dep = d0;
+            }
+            out[l] = w;
+            if l == 0 {
+                return out;
+            }
+            l -= 1;
+        }
+    }
+
+    /// Phase B: wire `q` into the graph. Sequential, index order — the only
+    /// place the graph mutates.
+    fn commit(&mut self, q: usize, cands: Vec<Vec<(T, u32)>>) {
+        for (l, level_cands) in cands.into_iter().enumerate() {
+            if level_cands.is_empty() {
+                continue;
+            }
+            // Connect M per layer at insert time; layer 0's 2M capacity
+            // absorbs reverse-link growth before pruning kicks in.
+            let sel = self.select_heuristic(level_cands, self.m);
+            for &(dqv, v) in &sel {
+                self.add_link(q, v, l);
+                self.add_link_rev(v as usize, q as u32, dqv, l);
+            }
+        }
+        if self.levels[q] > self.top {
+            self.top = self.levels[q];
+            self.entry = q as u32;
+        }
+    }
+
+    /// Malkov's neighbor-selection heuristic over an ascending candidate
+    /// list: keep c unless some already-kept s is closer to c than q is
+    /// (diversity), then backfill skipped candidates in order up to `cap`.
+    /// Pure function of the (sorted) input — no RNG, no scan-order effects.
+    fn select_heuristic(&self, cands: Vec<(T, u32)>, cap: usize) -> Vec<(T, u32)> {
+        debug_assert!(cands.windows(2).all(|w| lt(&w[0], &w[1])));
+        if cands.len() <= cap {
+            return cands;
+        }
+        let mut sel: Vec<(T, u32)> = Vec::with_capacity(cap);
+        let mut skipped: Vec<(T, u32)> = Vec::new();
+        for &(dc, c) in &cands {
+            if sel.len() == cap {
+                break;
+            }
+            let dominated = sel.iter().any(|&(_, s)| self.dist(c as usize, s as usize) < dc);
+            if dominated {
+                skipped.push((dc, c));
+            } else {
+                sel.push((dc, c));
+            }
+        }
+        for &p in &skipped {
+            if sel.len() == cap {
+                break;
+            }
+            sel.push(p);
+        }
+        sel
+    }
+
+    /// Reverse edge v → q; prune v's list with the same heuristic if full.
+    fn add_link_rev(&mut self, v: usize, q: u32, dvq: T, l: usize) {
+        let cap = if l == 0 { self.m0 } else { self.m };
+        if self.neighbor_count(v, l) < cap {
+            self.add_link(v, q, l);
+            return;
+        }
+        let mut cands: Vec<(T, u32)> = self
+            .neighbors(v, l)
+            .iter()
+            .map(|&u| (self.dist(v, u as usize), u))
+            .collect();
+        cands.push((dvq, q));
+        cands.sort_by(|a, b| a.0.to_f64().total_cmp(&b.0.to_f64()).then_with(|| a.1.cmp(&b.1)));
+        let sel = self.select_heuristic(cands, cap);
+        self.set_links(v, l, &sel);
+    }
+
+    /// One query row: descend to layer 0, beam with `ef`, drop self, take k.
+    fn query_row(
+        &self,
+        i: usize,
+        k: usize,
+        ef: usize,
+        scratch: &mut SearchScratch,
+    ) -> Vec<(T, u32)> {
+        let mut ep = self.entry;
+        let mut dep = self.dist(i, ep as usize);
+        let mut l = self.top as usize;
+        while l > 0 {
+            let (e, de) = self.greedy(i, ep, dep, l);
+            ep = e;
+            dep = de;
+            l -= 1;
+        }
+        let w = self.search_layer(i, ep, dep, ef, 0, scratch);
+        let mut row: Vec<(T, u32)> =
+            w.into_iter().filter(|&(_, v)| v as usize != i).take(k).collect();
+        if row.len() < k {
+            // The beam can come up short on degenerate graphs (heavy
+            // duplication, tiny n). Exact fallback keeps every row a valid
+            // k-list — persist-time validation rejects anything less.
+            let mut best = KBest::new(k);
+            for j in 0..self.n {
+                if j != i {
+                    best.push(self.dist(i, j), j as u32);
+                }
+            }
+            row = best.into_sorted();
+        }
+        row
+    }
+
+    /// k approximate nearest neighbors of every indexed point, self excluded,
+    /// rows ascending-(distance, index). The beam runs at
+    /// `max(ef_search, k + 1)` (the query point itself occupies one slot).
+    pub fn search_all(&self, pool: &ThreadPool, k: usize, ef_search: usize) -> NeighborLists<T> {
+        assert!(k < self.n, "k ({k}) must be < n ({})", self.n);
+        let ef = ef_search.max(k + 1);
+        let mut indices = vec![0u32; self.n * k];
+        let mut dists = vec![T::ZERO; self.n * k];
+        {
+            let is = SyncSlice::new(&mut indices);
+            let ds = SyncSlice::new(&mut dists);
+            parallel_for(pool, self.n, Schedule::Dynamic { grain: 32 }, |range| {
+                SCRATCH.with(|cell| {
+                    let scratch = &mut *cell.borrow_mut();
+                    for i in range {
+                        let row = self.query_row(i, k, ef, scratch);
+                        debug_assert_eq!(row.len(), k);
+                        for (j, (dist, idx)) in row.into_iter().enumerate() {
+                            // disjoint: row i
+                            unsafe {
+                                *is.get_mut(i * k + j) = idx;
+                                *ds.get_mut(i * k + j) = dist;
+                            }
+                        }
+                    }
+                })
+            });
+        }
+        NeighborLists { n: self.n, k, indices, distances_sq: dists }
+    }
+}
+
+/// [`KnnEngine`] backed by [`HnswIndex`] — approximate rows, one build + one
+/// sweep per call. For an ef-sweep over one index, use [`HnswIndex`] direct.
+pub struct HnswKnn {
+    pub params: HnswParams,
+}
+
+impl Default for HnswKnn {
+    fn default() -> Self {
+        HnswKnn { params: HnswParams::default() }
+    }
+}
+
+impl<T: Real> KnnEngine<T> for HnswKnn {
+    fn name(&self) -> &'static str {
+        "hnsw"
+    }
+
+    fn search(
+        &self,
+        pool: &ThreadPool,
+        data: &[T],
+        n: usize,
+        d: usize,
+        k: usize,
+    ) -> NeighborLists<T> {
+        assert!(k < n, "k ({k}) must be < n ({n})");
+        assert_eq!(data.len(), n * d);
+        let index = HnswIndex::build(pool, data, n, d, &self.params);
+        index.search_all(pool, k, self.params.ef_search)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::knn_reference;
+    use super::*;
+    use crate::data::synthetic::gaussian_mixture;
+
+    fn recall(got: &NeighborLists<f64>, want: &NeighborLists<f64>) -> f64 {
+        let (n, k) = (want.n, want.k);
+        let mut hits = 0usize;
+        for i in 0..n {
+            let truth: std::collections::HashSet<u32> =
+                want.neighbors(i).iter().copied().collect();
+            hits += got.neighbors(i).iter().filter(|j| truth.contains(j)).count();
+        }
+        hits as f64 / (n * k) as f64
+    }
+
+    fn assert_rows_valid<T: Real>(nl: &NeighborLists<T>) {
+        for i in 0..nl.n {
+            let row = nl.neighbors(i);
+            assert!(row.iter().all(|&j| (j as usize) < nl.n && j as usize != i), "row {i}");
+            let mut seen = row.to_vec();
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len(), nl.k, "row {i} has duplicate neighbors");
+            let dr = nl.dists(i);
+            assert!(dr.iter().all(|v| v.is_finite_r()), "row {i} non-finite");
+            for w in 0..nl.k - 1 {
+                let a = (dr[w], row[w]);
+                let b = (dr[w + 1], row[w + 1]);
+                assert!(lt(&a, &b), "row {i} not ascending-(dist, idx) at {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn hnsw_recall_above_090_vs_exact_oracle() {
+        let ds = gaussian_mixture::<f64>(1500, 8, 10, 6.0, 42);
+        let pool = ThreadPool::new(4);
+        let params = HnswParams { m: 12, ef_construction: 120, ..HnswParams::default() };
+        let got = HnswKnn { params }.search(&pool, &ds.points, ds.n, ds.d, 10);
+        let want = knn_reference(&ds.points, ds.n, ds.d, 10);
+        let r = recall(&got, &want);
+        assert!(r >= 0.9, "recall@10 = {r} at default ef_search");
+        assert_rows_valid(&got);
+    }
+
+    #[test]
+    fn hnsw_bit_identical_across_thread_counts() {
+        let ds = gaussian_mixture::<f64>(700, 8, 6, 5.0, 7);
+        let mut results = Vec::new();
+        for nt in [1, 4, 8] {
+            let pool = ThreadPool::new(nt);
+            let nl: NeighborLists<f64> =
+                HnswKnn::default().search(&pool, &ds.points, ds.n, ds.d, 9);
+            results.push(nl);
+        }
+        for nl in &results[1..] {
+            assert_eq!(nl.indices, results[0].indices, "indices differ across thread counts");
+            assert_eq!(
+                nl.distances_sq, results[0].distances_sq,
+                "distances differ across thread counts"
+            );
+        }
+    }
+
+    #[test]
+    fn hnsw_rows_sorted_unique_and_self_free() {
+        let ds = gaussian_mixture::<f64>(400, 6, 5, 4.0, 11);
+        let pool = ThreadPool::new(3);
+        let nl: NeighborLists<f64> = HnswKnn::default().search(&pool, &ds.points, ds.n, ds.d, 12);
+        assert_rows_valid(&nl);
+    }
+
+    #[test]
+    fn hnsw_duplicate_heavy_and_coincident_clouds_stay_valid() {
+        // (a) heavy duplication: the first 40 of 120 points coincide.
+        let mut ds = gaussian_mixture::<f64>(120, 5, 3, 4.0, 13);
+        for i in 1..40 {
+            for j in 0..5 {
+                ds.points[i * 5 + j] = ds.points[j];
+            }
+        }
+        let pool = ThreadPool::new(4);
+        let nl: NeighborLists<f64> = HnswKnn::default().search(&pool, &ds.points, 120, 5, 8);
+        assert_rows_valid(&nl);
+        assert!(nl.dists(0)[0] == 0.0, "a duplicate must be the nearest neighbor");
+        // (b) fully coincident cloud: every distance is zero, rows must
+        // still be k distinct non-self indices, identically at 1 and 4
+        // threads.
+        let cloud = vec![1.25f64; 32 * 4];
+        let a: NeighborLists<f64> =
+            HnswKnn::default().search(&ThreadPool::new(1), &cloud, 32, 4, 5);
+        let b: NeighborLists<f64> =
+            HnswKnn::default().search(&ThreadPool::new(4), &cloud, 32, 4, 5);
+        assert_rows_valid(&a);
+        assert!(a.distances_sq.iter().all(|&v| v == 0.0));
+        assert_eq!(a.indices, b.indices);
+    }
+
+    #[test]
+    fn hnsw_truncated_prefix_matches_smaller_k_same_build() {
+        // Per-build prefix stability: both searches share the index and the
+        // effective beam (max(64, k+1) = 64), so the k=7 rows are exactly
+        // the first 7 columns of the k=20 rows.
+        let ds = gaussian_mixture::<f64>(500, 7, 4, 5.0, 17);
+        let pool = ThreadPool::new(4);
+        let index = HnswIndex::build(&pool, &ds.points, ds.n, ds.d, &HnswParams::default());
+        let deep = index.search_all(&pool, 20, DEFAULT_EF_SEARCH);
+        let small = index.search_all(&pool, 7, DEFAULT_EF_SEARCH);
+        let cut = deep.truncated(7);
+        assert_eq!(cut.indices, small.indices);
+        assert_eq!(cut.distances_sq, small.distances_sq);
+    }
+
+    #[test]
+    fn hnsw_f32_works() {
+        let ds = gaussian_mixture::<f32>(600, 6, 4, 5.0, 23);
+        let pool = ThreadPool::new(2);
+        let got: NeighborLists<f32> = HnswKnn::default().search(&pool, &ds.points, ds.n, ds.d, 8);
+        assert_rows_valid(&got);
+        let data64: Vec<f64> = ds.points.iter().map(|&v| v as f64).collect();
+        let want = knn_reference(&data64, ds.n, ds.d, 8);
+        let got64 = NeighborLists::<f64> {
+            n: got.n,
+            k: got.k,
+            indices: got.indices.clone(),
+            distances_sq: got.distances_sq.iter().map(|&v| v as f64).collect(),
+        };
+        assert!(recall(&got64, &want) >= 0.85);
+    }
+}

@@ -5,11 +5,14 @@
 //! computation `‖q−c‖² = ‖q‖² + ‖c‖² − 2⟨q,c⟩` with a per-query bounded heap —
 //! parallel over query blocks with dynamic scheduling.
 //!
-//! Two engines implement [`KnnEngine`]:
+//! Engines implementing [`KnnEngine`]:
 //! - [`BruteForceKnn`] (native Rust, default, this file);
+//! - [`vptree::VpTreeKnn`] — the Multicore-TSNE baseline architecture;
+//! - [`hnsw::HnswKnn`] — approximate (HNSW), the million-point path;
 //! - `runtime::engines::XlaKnn` — the distance tile computed by the AOT
 //!   Pallas `sqdist` kernel through PJRT (L1/L2 integration path).
 
+pub mod hnsw;
 pub mod select;
 pub mod vptree;
 

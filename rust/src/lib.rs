@@ -144,6 +144,60 @@
 //! }
 //! ```
 //!
+//! ### Scaling to millions of points
+//!
+//! Exact KNN is O(n²·d): already the dominant cost at paper scale, and an
+//! outright wall at n = 10⁶ (~10¹³ distance evaluations). The approximate
+//! path swaps it for the HNSW subsystem ([`knn::hnsw`]) — a parallel,
+//! deterministic-given-seed hierarchical small-world graph whose build and
+//! query are both near-linear in n. At the default query beam
+//! ([`knn::hnsw::DEFAULT_EF_SEARCH`]) it holds ≥ 0.9 recall@k on clustered
+//! data (the `knn_recall.*` keys of `BENCH_knn.json` track the measured
+//! recall/speed frontier), and t-SNE is forgiving of the remainder: the
+//! missing fraction of true neighbors perturbs `P` far less than the
+//! perplexity approximation already does.
+//!
+//! [`tsne::StagePlan::auto_for`] selects it automatically above
+//! [`tsne::FFT_CROSSOVER_N`] (alongside FFT repulsion), or opt in explicitly
+//! with [`tsne::StagePlan::with_knn_engine`] /
+//! [`tsne::KnnGraph::build_approximate`]; the CLI spells it
+//! `acc-tsne run --knn-engine hnsw [--ef-search N]`. The approximate graph
+//! is a first-class [`tsne::KnnGraph`]: it persists with its parameters in
+//! the engine metadata, fingerprint-checks against the source data, and
+//! re-fits BSP-only at any perplexity with ⌊3u⌋ ≤ k — bit-identical between
+//! the in-memory and the reloaded graph. One caveat is inherent: the
+//! ⌊3u⌋-prefix contract holds **per build**. Rebuilding with other
+//! parameters (or another seed) may change the approximate k-sets
+//! themselves, so persist the graph and sweep from the artifact —
+//! [`tsne::KnnGraph::require_engine`] rejects a graph whose engine family
+//! does not match what the run asked for. A full million-point walkthrough
+//! (graph → artifact → FFT descent → neighbor-preservation spot check)
+//! lives in `examples/million_points.rs`:
+//!
+//! ```no_run
+//! use acc_tsne::data::synthetic::gaussian_mixture;
+//! use acc_tsne::knn::hnsw::HnswParams;
+//! use acc_tsne::parallel::ThreadPool;
+//! use acc_tsne::tsne::{Affinities, KnnGraph, StagePlan, TsneConfig, TsneSession};
+//!
+//! let ds = gaussian_mixture::<f64>(1_000_000, 16, 32, 6.0, 42);
+//! let pool = ThreadPool::with_all_cores();
+//!
+//! // Approximate KNN once, at the largest sweep perplexity (k = ⌊3·30⌋ = 90).
+//! let graph =
+//!     KnnGraph::build_approximate(&pool, &ds.points, ds.n, ds.d, 90, &HnswParams::default())
+//!         .expect("valid build");
+//! graph.save("million.knn").expect("write artifact");
+//!
+//! // auto_for picks FFT repulsion AND the HNSW engine above the crossover.
+//! let plan = StagePlan::auto_for(ds.n);
+//! let aff = Affinities::from_knn(&pool, &graph, 30.0, &plan).expect("floor(3u) <= k");
+//! let cfg = TsneConfig { perplexity: 30.0, ..TsneConfig::default() };
+//! let mut session = TsneSession::new(&aff, plan, cfg).expect("auto plans validate");
+//! session.run(1000);
+//! println!("KL = {:.3}", session.finish().kl_divergence);
+//! ```
+//!
 //! ### Choosing a repulsive engine
 //!
 //! Two interchangeable repulsive engines sit behind the same session API.

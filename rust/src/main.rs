@@ -42,9 +42,9 @@ use acc_tsne::eval::{experiments, ExpConfig};
 use acc_tsne::parallel::pool::available_cores;
 use acc_tsne::parallel::ThreadPool;
 use acc_tsne::tsne::{
-    Affinities, AttractiveVariant, Convergence, FitError, Implementation, KnnGraph, Layout,
-    ObserverControl, PlanError, RepulsiveVariant, Scalar, SessionCheckpoint, StagePlan, StopReason,
-    TsneConfig, TsneResult, TsneSession,
+    Affinities, AttractiveVariant, Convergence, FitError, Implementation, KnnEngineKind, KnnGraph,
+    Layout, ObserverControl, PlanError, RepulsiveVariant, Scalar, SessionCheckpoint, StagePlan,
+    StopReason, TsneConfig, TsneResult, TsneSession,
 };
 
 fn main() {
@@ -134,7 +134,8 @@ const COMMON_FLAGS: &[&str] = &[
     "dataset", "impl", "auto-engine", "scale", "iters", "threads", "seed", "out", "plot", "f32",
     "sweep", "perplexity", "theta", "repulsive", "layout", "attractive", "adopt-threshold",
     "min-grad-norm", "n-iter-without-progress", "snapshot-every", "save-affinities",
-    "affinities", "checkpoint", "checkpoint-every", "resume", "save-knn", "knn",
+    "affinities", "checkpoint", "checkpoint-every", "resume", "save-knn", "knn", "knn-engine",
+    "ef-search",
 ];
 
 fn exp_config(args: &Args) -> Result<ExpConfig, CliError> {
@@ -215,6 +216,10 @@ struct PersistOpts<'a> {
     checkpoint_every: usize,
     /// Resume a checkpointed session from here.
     resume: Option<&'a str>,
+    /// Engine family the user demanded with `--knn-engine`; a loaded graph
+    /// must match it (an approximate graph must not silently serve a run
+    /// that asked for exact rows, or vice versa).
+    knn_engine: Option<KnnEngineKind>,
 }
 
 /// Fit (or load) affinities, run one session (fresh or resumed; full budget
@@ -271,6 +276,12 @@ fn run_session<T: Scalar>(
                 Some(path) => {
                     let g = KnnGraph::<T>::load(path)
                         .map_err(|e| CliError::persist(format!("loading KNN graph {path}: {e}")))?;
+                    // Engine family first (cheap, metadata-only), then the
+                    // O(n·d) fingerprint check.
+                    if let Some(kind) = persist.knn_engine {
+                        g.require_engine(kind)
+                            .map_err(|e| CliError::fit(format!("KNN graph {path}: {e}")))?;
+                    }
                     g.verify_source(points, n, d)
                         .map_err(|e| CliError::fit(format!("KNN graph {path}: {e}")))?;
                     println!(
@@ -395,6 +406,18 @@ fn cmd_run(args: &Args) -> Result<(), CliError> {
         ));
     }
 
+    // KNN engine family is parsed once, up front: the same value drives the
+    // plan override below AND the loaded-graph engine check in run_session.
+    let knn_engine_req: Option<KnnEngineKind> = match args.get("knn-engine") {
+        Some(s) => Some(s.parse().map_err(|e| CliError::usage(format!("--knn-engine: {e}")))?),
+        None => None,
+    };
+    if args.get("ef-search").is_some() && knn_engine_req != Some(KnnEngineKind::Hnsw) {
+        return Err(CliError::usage(
+            "--ef-search tunes the HNSW query beam; it requires --knn-engine hnsw",
+        ));
+    }
+
     // Stage plan: preset for --impl, then the checked overrides — impossible
     // combinations come back as typed plan errors, before any data is built.
     // (With --auto-engine this pass only validates the overrides; the real
@@ -419,6 +442,15 @@ fn cmd_run(args: &Args) -> Result<(), CliError> {
                 CliError::usage(format!("--adopt-threshold: cannot parse '{s}': {e}"))
             })?;
             plan = plan.with_adopt_drift_pct(pct)?;
+        }
+        if let Some(kind) = knn_engine_req {
+            plan = plan.with_knn_engine(kind)?;
+        }
+        if let Some(s) = args.get("ef-search") {
+            let ef: usize = s
+                .parse()
+                .map_err(|e| CliError::usage(format!("--ef-search: cannot parse '{s}': {e}")))?;
+            plan = plan.with_ef_search(ef)?;
         }
         Ok(plan)
     };
@@ -479,6 +511,7 @@ fn cmd_run(args: &Args) -> Result<(), CliError> {
         checkpoint: args.get("checkpoint"),
         checkpoint_every: args.get_parse("checkpoint-every", 0usize)?,
         resume: args.get("resume"),
+        knn_engine: knn_engine_req,
     };
     if persist.checkpoint_every > 0 && persist.checkpoint.is_none() {
         return Err(CliError::usage(
@@ -620,6 +653,8 @@ acc-tsne <subcommand> [flags]
              --save-affinities FILE  --affinities FILE        # persist / reuse the fitted P
              --save-knn FILE  --knn FILE                      # persist / reuse the KNN graph
                                                               #  (re-fit perplexity, skip KNN)
+             --knn-engine exact|hnsw                          # exact rows or approximate HNSW
+             --ef-search N                                    # HNSW query beam (recall knob)
              --checkpoint FILE  --checkpoint-every N          # periodic session checkpoints
              --resume FILE                                    # continue a checkpointed run)
   compare    Fig 4 + Table 3 across datasets and implementations
@@ -740,6 +775,60 @@ mod tests {
             assert!(e.contains("--affinities"), "{e}");
             assert!(e.contains("cannot combine"), "{e}");
         }
+    }
+
+    #[test]
+    fn knn_engine_and_ef_search_flags_are_validated_before_any_data() {
+        // Unknown engine names list the choices, at the usage exit code.
+        let e = real_main(&argv("run --knn-engine annoy")).unwrap_err();
+        assert_eq!(e.code, EXIT_USAGE, "{e}");
+        assert!(e.contains("hnsw"), "{e}");
+        // The beam knob is meaningless without the approximate engine —
+        // both "alone" and "with exact" are usage errors that name the fix.
+        for cmd in ["run --ef-search 32", "run --ef-search 32 --knn-engine exact"] {
+            let e = real_main(&argv(cmd)).unwrap_err();
+            assert_eq!(e.code, EXIT_USAGE, "{e}");
+            assert!(e.contains("--knn-engine hnsw"), "{e}");
+        }
+        // A zero beam is range-checked by the plan layer (typed plan error).
+        let e = real_main(&argv("run --knn-engine hnsw --ef-search 0")).unwrap_err();
+        assert_eq!(e.code, EXIT_PLAN, "{e}");
+        assert!(e.contains("ef-search"), "{e}");
+        let e = real_main(&argv("run --knn-engine hnsw --ef-search banana")).unwrap_err();
+        assert_eq!(e.code, EXIT_USAGE, "{e}");
+        assert!(e.contains("ef-search"), "{e}");
+    }
+
+    #[test]
+    fn loading_a_graph_from_the_wrong_engine_family_is_a_typed_fit_error() {
+        // Build a tiny approximate graph, persist it, then demand exact rows
+        // from it — the engine check fires before the fingerprint check, so
+        // only dataset generation plus a 60-point HNSW build is paid.
+        use acc_tsne::data::synthetic::gaussian_mixture;
+        use acc_tsne::knn::hnsw::HnswParams;
+        let ds = gaussian_mixture::<f64>(60, 5, 3, 4.0, 11);
+        let pool = ThreadPool::new(2);
+        let g = KnnGraph::<f64>::build_approximate(
+            &pool,
+            &ds.points,
+            ds.n,
+            ds.d,
+            6,
+            &HnswParams::default(),
+        )
+        .unwrap();
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("acc_tsne_cli_hnsw_graph_{}.bin", std::process::id()));
+        g.save(path.to_str().unwrap()).unwrap();
+        let e = real_main(&argv(&format!(
+            "run --dataset digits --iters 1 --threads 2 --knn {} --knn-engine exact",
+            path.display()
+        )))
+        .unwrap_err();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(e.code, EXIT_FIT, "{e}");
+        assert!(e.contains("engine mismatch"), "{e}");
+        assert!(e.contains("hnsw"), "{e}");
     }
 
     #[test]

@@ -59,7 +59,7 @@ pub mod workspace;
 
 pub use persist::{PersistError, SessionCheckpoint};
 pub use pipeline::{run_tsne, run_tsne_custom, run_tsne_with_p, AttractiveEngine, NativeAttractive};
-pub use plan::{PlanError, StagePlan, FFT_CROSSOVER_N};
+pub use plan::{KnnEngineKind, PlanError, StagePlan, FFT_CROSSOVER_N};
 pub use session::{
     Affinities, Convergence, FitError, KnnGraph, MIN_POINTS, ObserverControl, RunOutcome, Snapshot,
     StepError, StepInfo, StopReason, TsneSession,

@@ -31,7 +31,44 @@
 use super::{Implementation, Layout, TsneConfig};
 use crate::gradient::attractive::Variant;
 use crate::gradient::repulsive::RepulsiveVariant;
+use crate::knn::hnsw::DEFAULT_EF_SEARCH;
 use crate::tsne::workspace::ADOPT_DRIFT_PCT;
+
+/// Which KNN engine family builds the neighbor graph (pipeline step 1).
+///
+/// `Exact` covers both exact engines (the `knn_blocked` field picks blocked
+/// brute force vs the VP-tree sweep); `Hnsw` switches
+/// [`KnnGraph::build`](super::KnnGraph::build) to the approximate
+/// [`knn::hnsw`](crate::knn::hnsw) subsystem, whose recall is tuned by
+/// [`StagePlan::with_ef_search`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KnnEngineKind {
+    /// Exact neighbor rows (blocked brute force or VP-tree).
+    Exact,
+    /// Approximate rows from a deterministic-given-seed HNSW index.
+    Hnsw,
+}
+
+impl KnnEngineKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KnnEngineKind::Exact => "exact",
+            KnnEngineKind::Hnsw => "hnsw",
+        }
+    }
+}
+
+impl std::str::FromStr for KnnEngineKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "exact" => Ok(KnnEngineKind::Exact),
+            "hnsw" => Ok(KnnEngineKind::Hnsw),
+            other => Err(format!("unknown KNN engine '{other}' (expected exact|hnsw)")),
+        }
+    }
+}
 
 /// A stage combination that cannot run. Returned by plan construction and
 /// validation — never panicked mid-pipeline.
@@ -43,6 +80,9 @@ pub enum PlanError {
     /// The Z-order adoption threshold is a percentage; values above 100 are
     /// meaningless (100 already means "never re-adopt").
     AdoptThresholdOutOfRange(usize),
+    /// `ef_search` is the HNSW query beam width; a beam of zero cannot
+    /// return any neighbors.
+    EfSearchOutOfRange(usize),
 }
 
 impl std::fmt::Display for PlanError {
@@ -56,6 +96,11 @@ impl std::fmt::Display for PlanError {
             PlanError::AdoptThresholdOutOfRange(pct) => write!(
                 f,
                 "invalid stage plan: Z-order adoption threshold {pct}% is out of range (0..=100)"
+            ),
+            PlanError::EfSearchOutOfRange(ef) => write!(
+                f,
+                "invalid stage plan: ef-search {ef} is out of range (the HNSW query beam \
+                 must hold at least one candidate)"
             ),
         }
     }
@@ -95,6 +140,14 @@ pub struct StagePlan {
     /// points changed slots ([`Layout::Zorder`] only). `0` adopts on any
     /// drift; `100` never re-adopts (the state stays in the caller's order).
     pub adopt_drift_pct: usize,
+    /// KNN engine family: exact rows or the approximate HNSW subsystem
+    /// ([`KnnGraph::build`](super::KnnGraph::build) dispatches on this).
+    pub knn_engine: KnnEngineKind,
+    /// HNSW query beam width — the recall-vs-speed knob. Only consulted when
+    /// `knn_engine` is [`KnnEngineKind::Hnsw`]; on exact plans the field is
+    /// carried but has no effect (deliberately not an error, mirroring
+    /// `adopt_drift_pct` on non-Zorder layouts, so the overrides compose).
+    pub ef_search: usize,
 }
 
 impl Default for StagePlan {
@@ -131,6 +184,8 @@ impl StagePlan {
             fft_repulsion: false,
             layout: Layout::Original,
             adopt_drift_pct: ADOPT_DRIFT_PCT,
+            knn_engine: KnnEngineKind::Exact,
+            ef_search: DEFAULT_EF_SEARCH,
         }
     }
 
@@ -170,6 +225,8 @@ impl StagePlan {
             fft_repulsion: false,
             layout: Layout::Zorder,
             adopt_drift_pct: ADOPT_DRIFT_PCT,
+            knn_engine: KnnEngineKind::Exact,
+            ef_search: DEFAULT_EF_SEARCH,
         }
     }
 
@@ -184,12 +241,14 @@ impl StagePlan {
         }
     }
 
-    /// Pick the repulsive engine from the dataset size: the full acc-t-SNE
-    /// parallel stack, with the BH traversal swapped for the FFT pipeline
-    /// once `n` crosses [`FFT_CROSSOVER_N`] — above it the O(n) interpolation
-    /// beats the super-linear tree descend per step. Every other stage (KNN,
-    /// BSP, attractive kernel, Z-order-resident state) stays at the paper's
-    /// parallel settings.
+    /// Pick the engines from the dataset size: the full acc-t-SNE parallel
+    /// stack, with the BH traversal swapped for the FFT pipeline *and* exact
+    /// KNN swapped for the approximate HNSW subsystem once `n` crosses
+    /// [`FFT_CROSSOVER_N`] — above it the O(n) interpolation beats the
+    /// super-linear tree descend per step, and exact O(n·search) KNN becomes
+    /// the dominant wall (approximate rows at default `ef_search` hold ≥0.9
+    /// recall@k on the bench workload). Every other stage (BSP, attractive
+    /// kernel, Z-order-resident state) stays at the paper's settings.
     pub fn auto_for(n: usize) -> StagePlan {
         if n >= FFT_CROSSOVER_N {
             StagePlan {
@@ -197,11 +256,31 @@ impl StagePlan {
                 // The FFT pipeline has no BH kernel to tile.
                 repulsive_variant: RepulsiveVariant::Scalar,
                 preset: Implementation::FitSne,
+                knn_engine: KnnEngineKind::Hnsw,
                 ..Self::acc_tsne()
             }
         } else {
             Self::acc_tsne()
         }
+    }
+
+    /// Override the KNN engine family. Valid on every preset: the neighbor
+    /// graph feeds the same CSR affinities regardless of which engine built
+    /// the rows.
+    pub fn with_knn_engine(mut self, kind: KnnEngineKind) -> Result<StagePlan, PlanError> {
+        self.knn_engine = kind;
+        self.validate()?;
+        Ok(self)
+    }
+
+    /// Override the HNSW query beam width (the recall-vs-speed knob). Only
+    /// consulted when the plan's KNN engine is [`KnnEngineKind::Hnsw`]; on
+    /// exact plans the field is carried but has no effect (deliberately not
+    /// an error, so engine and beam overrides compose in either order).
+    pub fn with_ef_search(mut self, ef: usize) -> Result<StagePlan, PlanError> {
+        self.ef_search = ef;
+        self.validate()?;
+        Ok(self)
     }
 
     /// Override the gradient-state layout. Valid on every preset — the FFT
@@ -255,6 +334,9 @@ impl StagePlan {
         }
         if self.adopt_drift_pct > 100 {
             return Err(PlanError::AdoptThresholdOutOfRange(self.adopt_drift_pct));
+        }
+        if self.ef_search == 0 {
+            return Err(PlanError::EfSearchOutOfRange(self.ef_search));
         }
         Ok(())
     }
@@ -330,6 +412,37 @@ mod tests {
         assert_eq!(big.layout, Layout::Zorder);
         assert!(big.knn_blocked && big.bsp_parallel && big.forces_parallel);
         assert!(big.validate().is_ok());
+        // The engine switch applies to step 1 too: exact KNN below the
+        // crossover, the approximate HNSW subsystem above it.
+        assert_eq!(small.knn_engine, KnnEngineKind::Exact);
+        assert_eq!(big.knn_engine, KnnEngineKind::Hnsw);
+        assert_eq!(big.ef_search, crate::knn::hnsw::DEFAULT_EF_SEARCH);
+    }
+
+    #[test]
+    fn knn_engine_and_ef_search_overrides_compose_and_range_check() {
+        let plan = StagePlan::acc_tsne()
+            .with_knn_engine(KnnEngineKind::Hnsw)
+            .unwrap()
+            .with_ef_search(128)
+            .unwrap();
+        assert_eq!(plan.knn_engine, KnnEngineKind::Hnsw);
+        assert_eq!(plan.ef_search, 128);
+        // ef_search on an exact plan is carried-but-ignored, like
+        // adopt_drift_pct on a non-Zorder layout.
+        assert!(StagePlan::sklearn_like().with_ef_search(16).is_ok());
+        let e = StagePlan::acc_tsne().with_ef_search(0).unwrap_err();
+        assert_eq!(e, PlanError::EfSearchOutOfRange(0));
+        assert!(e.to_string().contains("ef-search"), "{e}");
+        // hand-mutated plans are caught by validate()
+        let mut plan = StagePlan::acc_tsne();
+        plan.ef_search = 0;
+        assert_eq!(plan.validate(), Err(PlanError::EfSearchOutOfRange(0)));
+        // the string form round-trips the CLI values
+        assert_eq!("exact".parse::<KnnEngineKind>().unwrap(), KnnEngineKind::Exact);
+        assert_eq!("hnsw".parse::<KnnEngineKind>().unwrap(), KnnEngineKind::Hnsw);
+        assert!("annoy".parse::<KnnEngineKind>().unwrap_err().contains("exact|hnsw"));
+        assert_eq!(KnnEngineKind::Hnsw.name(), "hnsw");
     }
 
     #[test]

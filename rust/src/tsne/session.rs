@@ -35,7 +35,7 @@
 
 use super::persist::{self, PersistError, SessionCheckpoint};
 use super::pipeline::{AttractiveEngine, NativeAttractive};
-use super::plan::{PlanError, StagePlan};
+use super::plan::{KnnEngineKind, PlanError, StagePlan};
 use super::workspace::IterationWorkspace;
 use super::{Layout, Scalar, TsneConfig, TsneResult};
 use crate::common::timer::{Step, StepTimes};
@@ -44,6 +44,7 @@ use crate::fitsne::{fitsne_repulsive_into, FitsneParams, FitsneWorkspace};
 use crate::gradient::exact::kl_with_z;
 use crate::gradient::repulsive::{repulsive_forces_into, RepulsiveVariant};
 use crate::gradient::update::random_init;
+use crate::knn::hnsw::{HnswKnn, HnswParams};
 use crate::knn::{BruteForceKnn, KnnEngine, NeighborLists};
 use crate::parallel::{pool::available_cores, ThreadPool};
 use crate::perplexity::{binary_search_perplexity, ParMode};
@@ -84,6 +85,10 @@ pub enum FitError {
     /// A loaded [`KnnGraph`] disagrees with the dataset it is being applied
     /// to (wrong `n`/`d`, or a different data fingerprint).
     GraphMismatch(String),
+    /// A [`KnnGraph`]'s engine family is not the one the caller requested —
+    /// e.g. an approximate (HNSW) graph where exact neighbor rows were
+    /// demanded ([`KnnGraph::require_engine`]).
+    GraphEngineMismatch { expected: &'static str, found: String },
     /// An externally supplied CSR failed structural validation.
     InvalidCsr(String),
     /// The input points contain a NaN or infinite coordinate; `row`/`col`
@@ -122,6 +127,11 @@ impl std::fmt::Display for FitError {
                  per point, but the KNN graph stores only k = {k} (rebuild it with a larger k)"
             ),
             FitError::GraphMismatch(msg) => write!(f, "KNN graph mismatch: {msg}"),
+            FitError::GraphEngineMismatch { expected, found } => write!(
+                f,
+                "KNN graph engine mismatch: the graph was built by '{found}' but {expected} \
+                 neighbor rows were requested (rebuild the graph or change --knn-engine)"
+            ),
             FitError::InvalidCsr(msg) => write!(f, "invalid CSR matrix: {msg}"),
             FitError::NonFinite { row, col } => write!(
                 f,
@@ -208,6 +218,58 @@ impl<T: Scalar> KnnGraph<T> {
         k: usize,
         plan: &StagePlan,
     ) -> Result<KnnGraph<T>, FitError> {
+        if plan.knn_engine == KnnEngineKind::Hnsw {
+            let params = HnswParams { ef_search: plan.ef_search, ..HnswParams::default() };
+            return Self::build_approximate(pool, points, n, d, k, &params);
+        }
+        Self::check_build_inputs(points, n, d, k)?;
+        let data_fp = data_fingerprint(points);
+        let blocked = BruteForceKnn::default();
+        let vp = crate::knn::vptree::VpTreeKnn::default();
+        let engine: &dyn KnnEngine<T> = if plan.knn_blocked { &blocked } else { &vp };
+        let name = engine.name().to_string();
+        let mut times = StepTimes::new();
+        let knn = times.time(Step::Knn, || engine.search(pool, points, n, d, k));
+        Ok(KnnGraph { knn, d, data_fp, engine: name, times })
+    }
+
+    /// Build an **approximate** graph with the HNSW subsystem
+    /// ([`crate::knn::hnsw`]) — the million-point path. Same preconditions
+    /// and artifact semantics as [`Self::build`]; the engine metadata records
+    /// the full parameter set (`hnsw(m=…,efc=…,efs=…,seed=…)`), so a loaded
+    /// graph is self-describing and [`Self::require_engine`] can reject an
+    /// approximate graph where exact rows were demanded.
+    ///
+    /// Rows come back sorted ascending-(distance, index) like every exact
+    /// engine's, so the ⌊3u⌋-prefix re-fit contract holds **per build**: one
+    /// graph built at `k` re-fits BSP-only at every perplexity with
+    /// ⌊3u⌋ ≤ k, bit-identically between the in-memory and the saved+loaded
+    /// graph. Across *rebuilds* (another seed, other params, different
+    /// `ef_search`-vs-`k` coupling) the approximate k-set itself may differ —
+    /// that is the documented contrast to the exact engines.
+    pub fn build_approximate(
+        pool: &ThreadPool,
+        points: &[T],
+        n: usize,
+        d: usize,
+        k: usize,
+        params: &HnswParams,
+    ) -> Result<KnnGraph<T>, FitError> {
+        Self::check_build_inputs(points, n, d, k)?;
+        let data_fp = data_fingerprint(points);
+        let engine = HnswKnn { params: *params };
+        let name = format!(
+            "hnsw(m={},efc={},efs={},seed={})",
+            params.m, params.ef_construction, params.ef_search, params.seed
+        );
+        let mut times = StepTimes::new();
+        let knn = times.time(Step::Knn, || KnnEngine::<T>::search(&engine, pool, points, n, d, k));
+        Ok(KnnGraph { knn, d, data_fp, engine: name, times })
+    }
+
+    /// Shape/range/finiteness preconditions shared by every build path — the
+    /// engines' internal `assert!`s stay unreachable from public code.
+    fn check_build_inputs(points: &[T], n: usize, d: usize, k: usize) -> Result<(), FitError> {
         if n.checked_mul(d) != Some(points.len()) {
             return Err(FitError::PointsShape { n, d, len: points.len() });
         }
@@ -220,14 +282,7 @@ impl<T: Scalar> KnnGraph<T> {
         if let Some((row, col)) = first_non_finite(points, d) {
             return Err(FitError::NonFinite { row, col });
         }
-        let data_fp = data_fingerprint(points);
-        let blocked = BruteForceKnn::default();
-        let vp = crate::knn::vptree::VpTreeKnn::default();
-        let engine: &dyn KnnEngine<T> = if plan.knn_blocked { &blocked } else { &vp };
-        let name = engine.name().to_string();
-        let mut times = StepTimes::new();
-        let knn = times.time(Step::Knn, || engine.search(pool, points, n, d, k));
-        Ok(KnnGraph { knn, d, data_fp, engine: name, times })
+        Ok(())
     }
 
     /// [`Self::build`] with the `k` a fresh [`Affinities::fit`] at this
@@ -329,11 +384,41 @@ impl<T: Scalar> KnnGraph<T> {
         self.knn.k
     }
 
-    /// Name of the engine that built the graph (`"brute-force-native"` /
-    /// `"vp-tree"`).
+    /// Name of the engine that built the graph (`"brute-force-native"`,
+    /// `"vp-tree"`, or `"hnsw(m=…,efc=…,efs=…,seed=…)"` with the build
+    /// parameters recorded).
     #[inline]
     pub fn engine(&self) -> &str {
         &self.engine
+    }
+
+    /// Whether the rows are approximate (built by the HNSW subsystem) rather
+    /// than exact — decided from the persisted engine metadata, so it holds
+    /// for loaded graphs too.
+    #[inline]
+    pub fn is_approximate(&self) -> bool {
+        self.engine.starts_with("hnsw")
+    }
+
+    /// Check that this graph's engine family is the one the caller wants —
+    /// the typed guard the CLI runs before serving a loaded graph under
+    /// `--knn-engine`: an approximate graph must not silently satisfy a run
+    /// that demanded exact rows (or vice versa).
+    pub fn require_engine(&self, kind: KnnEngineKind) -> Result<(), FitError> {
+        let ok = match kind {
+            KnnEngineKind::Hnsw => self.is_approximate(),
+            KnnEngineKind::Exact => !self.is_approximate(),
+        };
+        if ok {
+            return Ok(());
+        }
+        Err(FitError::GraphEngineMismatch {
+            expected: match kind {
+                KnnEngineKind::Exact => "exact",
+                KnnEngineKind::Hnsw => "approximate (hnsw)",
+            },
+            found: self.engine.clone(),
+        })
     }
 
     /// FNV-1a fingerprint of the input points (see [`Self::verify_source`]).
@@ -1405,6 +1490,64 @@ mod tests {
             }
         }
         assert!(KnnGraph::build(&pool, &pts, 10, 3, 9, &plan).is_ok());
+    }
+
+    #[test]
+    fn hnsw_plan_builds_an_approximate_graph_with_param_metadata() {
+        let ds = gaussian_mixture::<f64>(200, 6, 3, 6.0, 55);
+        let pool = ThreadPool::new(4);
+        let plan = StagePlan::acc_tsne()
+            .with_knn_engine(KnnEngineKind::Hnsw)
+            .unwrap()
+            .with_ef_search(80)
+            .unwrap();
+        let graph = KnnGraph::build(&pool, &ds.points, ds.n, ds.d, 15, &plan).expect("build");
+        assert!(graph.is_approximate());
+        assert_eq!(graph.engine(), "hnsw(m=16,efc=200,efs=80,seed=24301)");
+        assert!(graph.step_times().get(Step::Knn) > 0.0);
+        graph.require_engine(KnnEngineKind::Hnsw).expect("hnsw graph serves hnsw");
+        match graph.require_engine(KnnEngineKind::Exact) {
+            Err(FitError::GraphEngineMismatch { expected: "exact", found }) => {
+                assert!(found.starts_with("hnsw("), "{found}")
+            }
+            other => panic!("expected GraphEngineMismatch, got {:?}", other),
+        }
+        // the plan dispatch and the direct builder agree bit-for-bit
+        let params = HnswParams { ef_search: 80, ..HnswParams::default() };
+        let direct = KnnGraph::build_approximate(&pool, &ds.points, ds.n, ds.d, 15, &params)
+            .expect("build_approximate");
+        assert_eq!(direct.neighbors().indices, graph.neighbors().indices);
+        assert_eq!(direct.neighbors().distances_sq, graph.neighbors().distances_sq);
+        // exact graphs refuse an hnsw demand symmetrically
+        let exact = KnnGraph::build(&pool, &ds.points, ds.n, ds.d, 15, &StagePlan::acc_tsne())
+            .expect("exact build");
+        assert!(!exact.is_approximate());
+        exact.require_engine(KnnEngineKind::Exact).expect("exact serves exact");
+        assert!(matches!(
+            exact.require_engine(KnnEngineKind::Hnsw),
+            Err(FitError::GraphEngineMismatch { expected: "approximate (hnsw)", .. })
+        ));
+    }
+
+    #[test]
+    fn hnsw_refit_from_graph_is_bit_identical_and_bsp_only() {
+        // The per-build re-fit contract on an approximate graph: one HNSW
+        // graph built at k serves every perplexity with ⌊3u⌋ ≤ k, BSP-only,
+        // bit-identically to a second from_knn over the same graph.
+        let ds = gaussian_mixture::<f64>(250, 7, 4, 7.0, 91);
+        let pool = ThreadPool::new(4);
+        let plan = StagePlan::acc_tsne().with_knn_engine(KnnEngineKind::Hnsw).unwrap();
+        let graph = KnnGraph::build(&pool, &ds.points, ds.n, ds.d, 45, &plan).expect("build");
+        for u in [5.0, 10.0, 15.0] {
+            let a = Affinities::from_knn(&pool, &graph, u, &plan).expect("refit");
+            let b = Affinities::from_knn(&pool, &graph, u, &plan).expect("refit");
+            assert_eq!(a.p().val, b.p().val, "u = {u}");
+            assert_eq!(a.step_times().get(Step::Knn), 0.0, "re-fit must skip KNN");
+        }
+        match Affinities::from_knn(&pool, &graph, 20.0, &plan) {
+            Err(FitError::GraphTooShallow { needed: 60, k: 45, .. }) => {}
+            other => panic!("expected GraphTooShallow, got {:?}", other.map(|_| ())),
+        }
     }
 
     #[test]

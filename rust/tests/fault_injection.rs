@@ -300,3 +300,24 @@ fn fault_injection_knn_graphs_survive_and_torn_files_never_load() {
         &|path| KnnGraph::<f64>::load(path).map(|_| ()),
     );
 }
+
+#[test]
+fn fault_injection_hnsw_graphs_survive_and_torn_files_never_load() {
+    // Same proof over the approximate artifact: the HNSW engine only changes
+    // the rows and the (longer) engine-metadata string, and neither may
+    // weaken the torn-file guarantees.
+    use acc_tsne::knn::hnsw::HnswParams;
+    let ds_a = gaussian_mixture::<f64>(200, 8, 4, 8.0, 66);
+    let ds_b = gaussian_mixture::<f64>(200, 8, 4, 8.0, 77);
+    let p = pool();
+    let params = HnswParams::default();
+    let a = KnnGraph::build_approximate(&p, &ds_a.points, ds_a.n, ds_a.d, 10, &params).unwrap();
+    let b = KnnGraph::build_approximate(&p, &ds_b.points, ds_b.n, ds_b.d, 10, &params).unwrap();
+    assert!(a.is_approximate() && b.is_approximate());
+    prove_fault_tolerance(
+        "hnsw_graph",
+        &|path| a.save(path).unwrap(),
+        &|medium, path| b.save_on(medium, path),
+        &|path| KnnGraph::<f64>::load(path).map(|_| ()),
+    );
+}

@@ -14,9 +14,11 @@
 //!    flow through BSP into a finite, uniform `P`, never NaN.
 
 use acc_tsne::data::synthetic::gaussian_mixture;
+use acc_tsne::knn::hnsw::HnswParams;
 use acc_tsne::parallel::ThreadPool;
 use acc_tsne::tsne::{
-    Affinities, FitError, KnnGraph, PersistError, Scalar, StagePlan, TsneConfig, TsneSession,
+    Affinities, FitError, KnnEngineKind, KnnGraph, PersistError, Scalar, StagePlan, TsneConfig,
+    TsneSession,
 };
 use std::path::PathBuf;
 
@@ -298,5 +300,155 @@ fn knn_graph_metadata_mismatches_are_typed_fit_errors() {
             Err(FitError::InvalidPerplexity { .. }) => {}
             other => panic!("perplexity {bad}: got {:?}", other.map(|_| ())),
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Approximate (HNSW) graphs through the same artifact machinery. The graph is
+// a different engine but the SAME artifact type — everything below must hold
+// with zero persistence-layer changes.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hnsw_graph_round_trips_byte_identically_with_metadata() {
+    let ds = gaussian_mixture::<f64>(220, 7, 4, 8.0, 31);
+    let pool = ThreadPool::new(4);
+    let graph =
+        KnnGraph::build_approximate(&pool, &ds.points, ds.n, ds.d, 20, &HnswParams::default())
+            .expect("valid build");
+    assert!(graph.engine().starts_with("hnsw(m="), "params in metadata: {}", graph.engine());
+    assert!(graph.is_approximate());
+    let p1 = tmp("hnsw_rt1.bin");
+    let p2 = tmp("hnsw_rt2.bin");
+    graph.save(&p1).unwrap();
+    let loaded = KnnGraph::<f64>::load(&p1).unwrap();
+    loaded.save(&p2).unwrap();
+    let (b1, b2) = (std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p2).ok();
+    assert_eq!(b1, b2, "save → load → save must be byte-identical");
+    assert_eq!(loaded.engine(), graph.engine(), "HNSW params survive the round trip");
+    assert!(loaded.is_approximate());
+    assert_eq!(loaded.neighbors().indices, graph.neighbors().indices);
+    assert_eq!(loaded.neighbors().distances_sq, graph.neighbors().distances_sq);
+    loaded.verify_source(&ds.points, ds.n, ds.d).expect("same data");
+}
+
+#[test]
+fn hnsw_refit_from_loaded_graph_matches_in_memory_refit() {
+    // The BSP-only sweep contract on an approximate graph: re-fits from the
+    // persisted artifact are bit-identical to re-fits from the in-memory
+    // build, at every perplexity the stored k supports. (Unlike the exact
+    // engine there is no fresh-full-fit parity here — prefix stability is
+    // per-build by design, so the loaded graph IS the reference.)
+    let ds = gaussian_mixture::<f64>(300, 8, 4, 8.0, 32);
+    let pool = ThreadPool::new(4);
+    let plan = StagePlan::acc_tsne();
+    let graph =
+        KnnGraph::build_approximate(&pool, &ds.points, ds.n, ds.d, 45, &HnswParams::default())
+            .expect("valid build");
+    let path = tmp("hnsw_refit.bin");
+    graph.save(&path).unwrap();
+    let loaded = KnnGraph::<f64>::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    for u in [5.0, 10.0, 15.0] {
+        let a = Affinities::from_knn(&pool, &loaded, u, &plan).expect("3u <= k");
+        let b = Affinities::from_knn(&pool, &graph, u, &plan).expect("3u <= k");
+        assert_eq!(a.p().row_ptr, b.p().row_ptr, "u = {u}");
+        assert_eq!(a.p().col, b.p().col, "u = {u}");
+        assert_eq!(a.p().val, b.p().val, "u = {u}: P must be bit-identical");
+    }
+    // ⌊3u⌋ > k is still the typed depth error, approximate or not.
+    match Affinities::from_knn(&pool, &loaded, 20.0, &plan) {
+        Err(FitError::GraphTooShallow { needed: 60, k: 45, .. }) => {}
+        other => panic!("expected GraphTooShallow, got {:?}", other.map(|_| ())),
+    }
+}
+
+#[test]
+fn hnsw_engine_family_mismatch_is_a_typed_fit_error() {
+    let ds = gaussian_mixture::<f64>(150, 6, 3, 8.0, 33);
+    let pool = ThreadPool::new(2);
+    let plan = StagePlan::acc_tsne();
+    let exact = KnnGraph::build(&pool, &ds.points, ds.n, ds.d, 15, &plan).expect("valid build");
+    let approx =
+        KnnGraph::build_approximate(&pool, &ds.points, ds.n, ds.d, 15, &HnswParams::default())
+            .expect("valid build");
+    exact.require_engine(KnnEngineKind::Exact).expect("exact graph serves exact requests");
+    approx.require_engine(KnnEngineKind::Hnsw).expect("hnsw graph serves hnsw requests");
+    match exact.require_engine(KnnEngineKind::Hnsw) {
+        Err(FitError::GraphEngineMismatch { expected, found }) => {
+            assert_eq!(expected, "approximate (hnsw)");
+            assert!(!found.starts_with("hnsw"), "{found}");
+        }
+        other => panic!("expected GraphEngineMismatch, got {other:?}"),
+    }
+    match approx.require_engine(KnnEngineKind::Exact) {
+        Err(FitError::GraphEngineMismatch { expected, found }) => {
+            assert_eq!(expected, "exact");
+            assert!(found.starts_with("hnsw"), "{found}");
+        }
+        other => panic!("expected GraphEngineMismatch, got {other:?}"),
+    }
+}
+
+#[test]
+fn hnsw_coincident_clouds_build_valid_thread_invariant_graphs() {
+    // Duplicate-heavy data through build_approximate: 50 of 180 points
+    // coincide exactly. The graph must stay valid (persistable), identical
+    // at 1/4/8 threads, and its all-zero rows must flow through BSP finitely.
+    let mut ds = gaussian_mixture::<f64>(180, 6, 3, 10.0, 34);
+    for i in 1..50 {
+        for t in 0..ds.d {
+            ds.points[i * ds.d + t] = ds.points[t];
+        }
+    }
+    let build = |nt: usize| {
+        KnnGraph::build_approximate(
+            &ThreadPool::new(nt),
+            &ds.points,
+            ds.n,
+            ds.d,
+            12,
+            &HnswParams::default(),
+        )
+        .expect("valid build")
+    };
+    let g1 = build(1);
+    for nt in [4usize, 8] {
+        let g = build(nt);
+        assert_eq!(g.neighbors().indices, g1.neighbors().indices, "{nt} threads");
+        assert_eq!(g.neighbors().distances_sq, g1.neighbors().distances_sq, "{nt} threads");
+        assert_eq!(g.engine(), g1.engine());
+    }
+    assert!(g1.neighbors().dists(0).iter().all(|&v| v < 1e-18), "row 0 not all-zero");
+    // The coincident rows survive persistence validation and a BSP fit.
+    let path = tmp("hnsw_coincident.bin");
+    g1.save(&path).expect("degenerate rows are still a valid artifact");
+    let loaded = KnnGraph::<f64>::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let aff = Affinities::from_knn(&ThreadPool::new(4), &loaded, 4.0, &StagePlan::acc_tsne())
+        .expect("valid refit");
+    assert!(aff.p().val.iter().all(|v| v.is_finite()), "P contains a non-finite value");
+}
+
+#[test]
+fn hnsw_artifact_is_checksum_guarded_like_any_other() {
+    // One hostile-input spot check on the approximate artifact: a flipped
+    // payload byte is a checksum mismatch, not a silently-wrong graph.
+    let ds = gaussian_mixture::<f64>(150, 6, 3, 8.0, 35);
+    let pool = ThreadPool::new(2);
+    let graph =
+        KnnGraph::build_approximate(&pool, &ds.points, ds.n, ds.d, 10, &HnswParams::default())
+            .expect("valid build");
+    let path = tmp("hnsw_hostile.bin");
+    graph.save(&path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let last = bytes.len() - 3;
+    bytes[last] ^= 0x01;
+    match load_from_bytes(&bytes, "hnsw_hostile_flip.bin") {
+        Err(PersistError::ChecksumMismatch { .. }) => {}
+        other => panic!("expected ChecksumMismatch, got {:?}", other.map(|_| ())),
     }
 }

@@ -23,6 +23,7 @@ DEFAULT_SNAPSHOTS = [
     "rust/BENCH_repulsive.json",
     "rust/BENCH_gradient_loop.json",
     "rust/BENCH_fitsne.json",
+    "rust/BENCH_knn.json",
 ]
 
 

@@ -122,9 +122,42 @@ class BenchTrendCase(unittest.TestCase):
         self.assertIn("1 warning(s)", out, "counters and estimate_n do not warn")
         self.assertIn("ok BENCH_fitsne.json:crossover.n10000.bh_step_s", out)
 
-    def test_default_snapshot_set_includes_fitsne(self):
+    def test_default_snapshot_set_includes_fitsne_and_knn(self):
         self.assertIn("rust/BENCH_fitsne.json", bench_trend.DEFAULT_SNAPSHOTS)
-        self.assertEqual(len(bench_trend.DEFAULT_SNAPSHOTS), 3)
+        self.assertIn("rust/BENCH_knn.json", bench_trend.DEFAULT_SNAPSHOTS)
+        self.assertEqual(len(bench_trend.DEFAULT_SNAPSHOTS), 4)
+
+    def test_knn_snapshot_shape(self):
+        # BENCH_knn.json nests timings under knn_recall; recall values and
+        # default_ef are quality/config numbers, not timings — they may drift
+        # (e.g. a recall improvement) without tripping the trend. Only the
+        # *_s search/build timings participate.
+        base = {
+            "knn_recall": {
+                "build_s": 1.0,
+                "exact_search_s": 2.0,
+                "default_ef": 64,
+                "default_recall": 0.95,
+                "ef64": {"search_s": 0.1, "recall": 0.95},
+            }
+        }
+        cur = {
+            "knn_recall": {
+                "build_s": 1.0,
+                "exact_search_s": 2.0,
+                "default_ef": 64,
+                "default_recall": 0.40,  # silent: recall is not a timing
+                "ef64": {"search_s": 0.3, "recall": 0.40},  # 3x slower: flagged
+            }
+        }
+        self.write(os.path.join(bench_trend.BASELINE_DIR, "BENCH_knn.json"), base)
+        self.write("BENCH_knn.json", cur)
+        rc, out = self.run_main(["BENCH_knn.json"])
+        self.assertEqual(rc, 0)
+        self.assertIn("::warning", out)
+        self.assertIn("knn_recall.ef64.search_s", out, "the regressed search timing is flagged")
+        self.assertIn("1 warning(s)", out, "recall drift and default_ef never warn")
+        self.assertIn("ok BENCH_knn.json:knn_recall.build_s", out)
 
     def test_non_timing_keys_are_ignored(self):
         # only *_s keys participate in the trend; counters may drift freely
