@@ -23,7 +23,12 @@
 //!   KNN recall: HNSW build + ef_search sweep vs the exact brute-force
 //!     engine, recall@k per beam width — snapshotted to BENCH_knn.json
 //!     (`knn_recall.*` keys; recall values carry no `_s` suffix so the
-//!     trend checker treats them as informational, not timings).
+//!     trend checker treats them as informational, not timings);
+//!   serving: the `tsne::serve` daemon under N ∈ {1, 4, 8} concurrent
+//!     clients over loopback TCP — fleet throughput, scheduler step-latency
+//!     p50/p99, and the artifact-cache miss→hit Hello latency — snapshotted
+//!     to BENCH_serving.json (`serving.*` keys; `sessions_per_s` is a rate,
+//!     which the trend checker exempts from slower-is-worse warnings).
 
 use acc_tsne::common::bench::Bencher;
 use acc_tsne::common::rng::Rng;
@@ -44,6 +49,7 @@ use acc_tsne::quadtree::morton::{encode_points, encode_points_simd, RootCell};
 use acc_tsne::quadtree::summarize::{summarize_parallel, summarize_sequential};
 use acc_tsne::quadtree::view::TraversalView;
 use acc_tsne::sparse::{symmetrize, CsrMatrix};
+use acc_tsne::tsne::serve::{run_client, start as serve_start, Request, ServeConfig};
 use acc_tsne::tsne::{Affinities, KnnGraph, Layout, StagePlan, TsneConfig, TsneSession};
 
 fn env_n() -> usize {
@@ -598,5 +604,90 @@ fn main() {
         eprintln!("warning: could not write BENCH_knn.json: {e}");
     } else {
         println!("[json] BENCH_knn.json");
+    }
+
+    // --- serving: the embedding daemon (tsne::serve) under concurrent load.
+    // One fresh server per fleet size, so every fleet pays exactly one
+    // affinity fit (the cache miss) and N−1 artifact-cache hits.
+    // sessions_per_s is fleet-completion throughput (a rate — the trend
+    // checker exempts it); step p50/p99 come from the scheduler's per-turn
+    // samples; cache_{miss,hit}_s is the connect→Hello latency, which is
+    // exactly the fit-vs-lookup cost a client observes.
+    let serve_n = 512usize;
+    let serve_iters = env_loop_iters().clamp(10, 40);
+    let sds = gaussian_mixture::<f64>(serve_n, 16, 4, 4.0, 11);
+    println!("\n== serving (n={serve_n}, iters={serve_iters}, threads={}) ==", pool.n_threads());
+    let fleet_sizes = [1usize, 4, 8];
+    let mut fleet_rows = Vec::new();
+    let mut cache_miss_s = 0.0f64;
+    let mut cache_hit_s = 0.0f64;
+    for &fleet in &fleet_sizes {
+        let mut server = serve_start(&ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            n_threads: pool.n_threads(),
+            ..ServeConfig::default()
+        })
+        .expect("bench server");
+        let addr = server.addr().to_string();
+        let make_req = |seed: u64| Request {
+            resume_id: 0,
+            n: sds.n as u64,
+            d: sds.d as u64,
+            n_iter: serve_iters as u64,
+            snapshot_every: (serve_iters / 4).max(1) as u64,
+            seed,
+            perplexity: 12.0,
+            theta: 0.5,
+            points: sds.points.clone(),
+        };
+        let t0 = std::time::Instant::now();
+        let joins: Vec<_> = (0..fleet)
+            .map(|i| {
+                let addr = addr.clone();
+                let req = make_req(100 + i as u64);
+                std::thread::spawn(move || run_client(&addr, &req).expect("bench client"))
+            })
+            .collect();
+        let runs: Vec<_> =
+            joins.into_iter().map(|j| j.join().expect("bench client thread")).collect();
+        let wall = t0.elapsed().as_secs_f64();
+        if fleet == 1 {
+            cache_miss_s = runs[0].hello_secs;
+            // The same bytes again on the warm server: the cache-hit path.
+            cache_hit_s = run_client(&addr, &make_req(999)).expect("bench client").hello_secs;
+        }
+        let stats = server.stats();
+        server.shutdown();
+        let sessions_per_s = fleet as f64 / wall.max(1e-12);
+        println!(
+            "  n{fleet}: {sessions_per_s:.2} sessions/s, step p50 {:.3e}s p99 {:.3e}s \
+             (cache hits/misses {}/{})",
+            stats.step_p50_s, stats.step_p99_s, stats.cache_hits, stats.cache_misses
+        );
+        fleet_rows.push((fleet, sessions_per_s, stats));
+    }
+    println!("  cache: miss {cache_miss_s:.3e}s -> hit {cache_hit_s:.3e}s to Hello");
+
+    let mut sj = String::from("{\n  \"bench\": \"serving\",\n");
+    sj.push_str(&format!(
+        "  \"n\": {serve_n},\n  \"d\": 16,\n  \"iters\": {serve_iters},\n  \"threads\": {},\n",
+        pool.n_threads()
+    ));
+    sj.push_str("  \"serving\": {\n");
+    sj.push_str(&format!("    \"cache_miss_s\": {cache_miss_s:.6e},\n"));
+    sj.push_str(&format!("    \"cache_hit_s\": {cache_hit_s:.6e},\n"));
+    for (i, (fleet, sessions_per_s, stats)) in fleet_rows.iter().enumerate() {
+        let sep = if i + 1 < fleet_rows.len() { "," } else { "" };
+        sj.push_str(&format!(
+            "    \"n{fleet}\": {{ \"sessions_per_s\": {sessions_per_s:.4}, \
+             \"step_p50_s\": {:.6e}, \"step_p99_s\": {:.6e} }}{sep}\n",
+            stats.step_p50_s, stats.step_p99_s
+        ));
+    }
+    sj.push_str("  }\n}\n");
+    if let Err(e) = std::fs::write("BENCH_serving.json", &sj) {
+        eprintln!("warning: could not write BENCH_serving.json: {e}");
+    } else {
+        println!("[json] BENCH_serving.json");
     }
 }

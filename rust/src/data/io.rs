@@ -124,6 +124,27 @@ pub fn read_f64_le<R: Read>(r: &mut R) -> std::io::Result<f64> {
     Ok(f64::from_le_bytes(b))
 }
 
+/// Write a whole `f64` slice little-endian (bit patterns preserved exactly) —
+/// the bulk sibling of [`write_f64_le`], used by the serving wire protocol
+/// for embedding payloads.
+pub fn write_f64_slice_le<W: Write>(w: &mut W, vs: &[f64]) -> std::io::Result<()> {
+    for &v in vs {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read little-endian `f64`s into `out`, filling it completely — the bulk
+/// sibling of [`read_f64_le`].
+pub fn read_f64_slice_le<R: Read>(r: &mut R, out: &mut [f64]) -> std::io::Result<()> {
+    let mut b = [0u8; 8];
+    for v in out.iter_mut() {
+        r.read_exact(&mut b)?;
+        *v = f64::from_le_bytes(b);
+    }
+    Ok(())
+}
+
 /// Write an embedding (n×2) with labels as CSV: `x,y,label`.
 pub fn write_embedding_csv<T: Real>(
     path: impl AsRef<Path>,

@@ -233,6 +233,49 @@
 //! println!("KL = {:.3}", session.finish().kl_divergence);
 //! ```
 //!
+//! ### Serving embeddings
+//!
+//! [`tsne::serve`] turns the session API into a long-lived embedding
+//! service: a dependency-free TCP daemon (`acc-tsne serve`) that fingerprints
+//! each request's data, caches the fitted [`tsne::Affinities`] (a repeat of
+//! the same bytes skips KNN + BSP entirely), multiplexes every client's
+//! descent over **one** shared thread pool with fair round-robin step
+//! scheduling, and streams progressive length-prefixed, checksummed
+//! embedding frames. A client that disconnects mid-stream is detached — its
+//! session parks as a checkpoint and can be resumed by id, landing
+//! bit-identical to a run that never disconnected. The wire protocol is
+//! documented in `docs/serving.md`; `acc-tsne serve --smoke N` runs the
+//! self-verifying proof (N concurrent clients, bitwise comparison against
+//! direct sessions) that CI gates on, and the `serving.*` keys of
+//! `BENCH_serving.json` track per-step latency percentiles and session
+//! throughput at 1/4/8-client fleets:
+//!
+//! ```no_run
+//! use acc_tsne::data::synthetic::gaussian_mixture;
+//! use acc_tsne::tsne::serve::{self, run_client, Request, ServeConfig};
+//!
+//! // Daemon side (usually `acc-tsne serve --addr 127.0.0.1:7878`):
+//! let server = serve::start(&ServeConfig::default()).expect("bind");
+//! let addr = server.addr().to_string();
+//!
+//! // Client side: one request = one descent, streamed progressively.
+//! let ds = gaussian_mixture::<f64>(2_000, 16, 10, 4.0, 42);
+//! let run = run_client(&addr, &Request {
+//!     resume_id: 0,
+//!     n: ds.n as u64,
+//!     d: ds.d as u64,
+//!     n_iter: 1000,
+//!     snapshot_every: 100, // progressive frames; 0 = final frame only
+//!     seed: 42,
+//!     perplexity: 30.0,
+//!     theta: 0.5,
+//!     points: ds.points.clone(),
+//! }).expect("served run");
+//! println!("{} snapshots, final KL = {:.3}, cache hit: {}",
+//!          run.snapshots, run.final_kl, run.cache_hit);
+//! // A second client with the same bytes reuses the cached fit (cache_hit).
+//! ```
+//!
 //! ### Robustness guarantees
 //!
 //! The pipeline is hardened end to end against hostile data and injected
@@ -270,7 +313,8 @@
 //!   [`tsne::PersistError`], never a panic or silently-wrong data.
 //!
 //! The CLI maps these families to distinct exit codes (usage 2, fit 3,
-//! persistence 4, plan 5, divergence 6) with a one-line stderr message.
+//! persistence 4, plan 5, divergence 6, serving 7) with a one-line stderr
+//! message.
 //!
 //! The classic one-shot call is still there, as a thin wrapper that is
 //! bit-identical to fitting affinities and stepping a session manually:

@@ -10,6 +10,8 @@
 //! acc-tsne precision                                 # Table S1
 //! acc-tsne viz                                       # Figs S1–S6
 //! acc-tsne info                                      # system + dataset registry
+//! acc-tsne serve     [--addr HOST:PORT --threads N --cache-capacity N]   # embedding daemon
+//! acc-tsne serve     --smoke N [--threads N --iters N --seed N]          # CI serving smoke
 //! ```
 //!
 //! `run` drives the session API: it fits `Affinities` once (or loads a
@@ -29,11 +31,19 @@
 //! `--checkpoint-every N`); and `--resume FILE` continues a checkpointed
 //! session — bit-identical to an uninterrupted run at a fixed thread count.
 //!
+//! `serve` starts the `tsne::serve` daemon (see `docs/serving.md` for the
+//! wire protocol): fitted affinities cached by data fingerprint, concurrent
+//! sessions multiplexed round-robin over one shared pool, progressive
+//! embedding frames streamed as they evolve. `--smoke N` instead runs the
+//! self-verifying in-process smoke (N concurrent clients + a
+//! disconnect→resume leg, every final frame checked bit-identical against a
+//! direct session) — the CI serving tier's entry point.
+//!
 //! Exit codes: `0` success, `2` usage/flag errors, `3` fit errors (hostile
 //! data, unsatisfiable perplexity), `4` persistence errors (corrupt or
 //! mismatched artifacts, unwritable outputs), `5` invalid stage plans, `6`
-//! gradient-loop divergence. Every failure prints one `error: ...` line on
-//! stderr.
+//! gradient-loop divergence, `7` serving errors (bind/protocol/smoke
+//! verification). Every failure prints one `error: ...` line on stderr.
 
 use acc_tsne::cli::Args;
 use acc_tsne::common::timer::StepTimes;
@@ -41,6 +51,7 @@ use acc_tsne::data::datasets::PaperDataset;
 use acc_tsne::eval::{experiments, ExpConfig};
 use acc_tsne::parallel::pool::available_cores;
 use acc_tsne::parallel::ThreadPool;
+use acc_tsne::tsne::serve::{self, ServeConfig, ServeError};
 use acc_tsne::tsne::{
     Affinities, AttractiveVariant, Convergence, FitError, Implementation, KnnEngineKind, KnnGraph,
     Layout, ObserverControl, PlanError, RepulsiveVariant, Scalar, SessionCheckpoint, StagePlan,
@@ -69,6 +80,9 @@ const EXIT_PERSIST: i32 = 4;
 const EXIT_PLAN: i32 = 5;
 /// [`acc_tsne::tsne::StepError`]: the gradient loop diverged.
 const EXIT_STEP: i32 = 6;
+/// [`ServeError`]: the serving daemon failed (bind, protocol, or a smoke
+/// verification mismatch).
+const EXIT_SERVE: i32 = 7;
 
 /// A CLI failure: the one-line stderr message plus the exit code of its
 /// error family, so scripts and CI can tell "you typed the wrong flag"
@@ -95,6 +109,11 @@ impl CliError {
 
     fn step(message: impl Into<String>) -> CliError {
         CliError { code: EXIT_STEP, message: message.into() }
+    }
+
+    #[cfg(test)]
+    fn serve(message: impl Into<String>) -> CliError {
+        CliError { code: EXIT_SERVE, message: message.into() }
     }
 
     /// Substring check on the stderr message (the CLI tests assert on it).
@@ -130,6 +149,12 @@ impl From<PlanError> for CliError {
     }
 }
 
+impl From<ServeError> for CliError {
+    fn from(e: ServeError) -> CliError {
+        CliError { code: EXIT_SERVE, message: e.to_string() }
+    }
+}
+
 const COMMON_FLAGS: &[&str] = &[
     "dataset", "impl", "auto-engine", "scale", "iters", "threads", "seed", "out", "plot", "f32",
     "sweep", "perplexity", "theta", "repulsive", "layout", "attractive", "adopt-threshold",
@@ -137,6 +162,10 @@ const COMMON_FLAGS: &[&str] = &[
     "affinities", "checkpoint", "checkpoint-every", "resume", "save-knn", "knn", "knn-engine",
     "ef-search",
 ];
+
+/// The `serve` subcommand's own flag set — it shares nothing with the
+/// experiment subcommands, so a `run` flag under `serve` is a loud typo.
+const SERVE_FLAGS: &[&str] = &["addr", "threads", "smoke", "iters", "seed", "cache-capacity"];
 
 fn exp_config(args: &Args) -> Result<ExpConfig, CliError> {
     let mut cfg = ExpConfig::default();
@@ -149,8 +178,14 @@ fn exp_config(args: &Args) -> Result<ExpConfig, CliError> {
 
 fn real_main(argv: &[String]) -> Result<(), CliError> {
     let args = Args::parse(argv)?;
-    args.ensure_known(COMMON_FLAGS)?;
     let sub = args.subcommand.as_deref().unwrap_or("help");
+    // `serve` has its own flag vocabulary; everything else shares the
+    // experiment flag set.
+    if sub == "serve" {
+        args.ensure_known(SERVE_FLAGS)?;
+        return cmd_serve(&args);
+    }
+    args.ensure_known(COMMON_FLAGS)?;
     match sub {
         "run" => cmd_run(&args),
         "compare" => {
@@ -626,6 +661,59 @@ fn cmd_run(args: &Args) -> Result<(), CliError> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args) -> Result<(), CliError> {
+    let threads: usize = args.get_parse("threads", 0usize)?;
+    let cache_capacity: usize = args.get_parse("cache-capacity", 8usize)?;
+    if cache_capacity == 0 {
+        return Err(CliError::usage("--cache-capacity must be >= 1"));
+    }
+    if args.has("smoke") {
+        return Err(CliError::usage("--smoke needs a client count (e.g. --smoke 8)"));
+    }
+    let smoke: usize = args.get_parse("smoke", 0usize)?;
+    if smoke > 0 {
+        let iters: usize = args.get_parse("iters", 40usize)?;
+        let seed: u64 = args.get_parse("seed", 42u64)?;
+        let report = serve::run_smoke(smoke, threads, iters, seed)?;
+        println!(
+            "[serve-smoke] {} concurrent clients on {} shared threads x {} iters: every \
+             final frame bit-identical to a direct session (incl. a disconnect->resume leg)",
+            report.clients, report.n_threads, report.n_iter
+        );
+        let s = &report.stats;
+        println!(
+            "[serve-smoke] steps={} p50={:.3e}s p99={:.3e}s completed={} detached={} \
+             resumed={} cache hits/misses={}/{}",
+            s.steps,
+            s.step_p50_s,
+            s.step_p99_s,
+            s.sessions_completed,
+            s.sessions_detached,
+            s.sessions_resumed,
+            s.cache_hits,
+            s.cache_misses
+        );
+        return Ok(());
+    }
+    let cfg = ServeConfig {
+        addr: args.get("addr").unwrap_or("127.0.0.1:7878").to_string(),
+        n_threads: threads,
+        cache_capacity,
+        ..ServeConfig::default()
+    };
+    let server = serve::start(&cfg)?;
+    println!(
+        "[serve] listening on {} ({} threads shared across all sessions)",
+        server.addr(),
+        if threads == 0 { available_cores() } else { threads }
+    );
+    // The daemon runs until the process is killed; the accept and scheduler
+    // threads do all the work.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
 fn cmd_info() -> Result<(), CliError> {
     println!("acc-tsne — Barnes-Hut t-SNE (Chaudhary et al. 2022) reproduction");
     println!("cores available : {}", available_cores());
@@ -664,6 +752,8 @@ acc-tsne <subcommand> [flags]
   precision  Table S1 f32 vs f64
   viz        Figs S1-S6 embedding plots
   info       system + dataset registry
+  serve      embedding-as-a-service daemon (--addr HOST:PORT --threads N --cache-capacity N;
+             --smoke N runs the self-verifying CI smoke instead — see docs/serving.md)
 common flags: --scale F  --iters N  --threads N  --seed N";
 
 #[cfg(test)]
@@ -874,6 +964,40 @@ mod tests {
     // 5 plan, 6 divergence.
 
     #[test]
+    fn serve_flags_are_validated_before_any_socket_is_bound() {
+        // Experiment flags are typos under `serve` — its vocabulary is its own.
+        let e = real_main(&argv("serve --dataset digits")).unwrap_err();
+        assert_eq!(e.code, EXIT_USAGE, "{e}");
+        assert!(e.contains("unknown flag"), "{e}");
+        let e = real_main(&argv("serve --smoke banana")).unwrap_err();
+        assert_eq!(e.code, EXIT_USAGE, "{e}");
+        assert!(e.contains("smoke"), "{e}");
+        // A bare --smoke parses as a switch; it must name the missing count.
+        let e = real_main(&argv("serve --smoke")).unwrap_err();
+        assert_eq!(e.code, EXIT_USAGE, "{e}");
+        assert!(e.contains("client count"), "{e}");
+        let e = real_main(&argv("serve --cache-capacity 0")).unwrap_err();
+        assert_eq!(e.code, EXIT_USAGE, "{e}");
+        assert!(e.contains("cache-capacity"), "{e}");
+    }
+
+    #[test]
+    fn serve_smoke_two_clients_verifies_bit_identity_end_to_end() {
+        // The real serving path on a loopback socket: 2 concurrent clients +
+        // the disconnect->resume leg, each final frame checked bitwise
+        // against a direct in-process session. Small n/iters keep it fast.
+        let report = serve::run_smoke(2, 2, 30, 9).expect("serve smoke");
+        assert_eq!(report.clients, 2);
+        assert!(report.stats.steps as usize >= 2 * report.n_iter);
+        assert!(report.stats.sessions_completed >= 3, "2 clients + 1 resumed");
+        assert_eq!(report.stats.sessions_detached, 1);
+        assert_eq!(report.stats.sessions_resumed, 1);
+        // Same dataset across all fresh sessions: exactly one fit.
+        assert_eq!(report.stats.cache_misses, 1);
+        assert!(report.stats.cache_hits >= 1);
+    }
+
+    #[test]
     fn usage_and_plan_errors_carry_their_exit_codes() {
         let e = real_main(&argv("run --min-grad-nrm 0.1")).unwrap_err();
         assert_eq!(e.code, EXIT_USAGE, "{e}");
@@ -920,7 +1044,11 @@ mod tests {
         let e = CliError::from(FitError::NonFinite { row: 3, col: 1 });
         assert_eq!(e.code, EXIT_FIT);
         assert!(e.contains("non-finite"), "{e}");
-        let codes = [EXIT_USAGE, EXIT_FIT, EXIT_PERSIST, EXIT_PLAN, EXIT_STEP];
+        assert_eq!(CliError::serve("x").code, EXIT_SERVE);
+        let e = CliError::from(ServeError::Protocol("bad magic".into()));
+        assert_eq!(e.code, EXIT_SERVE);
+        assert!(e.contains("bad magic"), "{e}");
+        let codes = [EXIT_USAGE, EXIT_FIT, EXIT_PERSIST, EXIT_PLAN, EXIT_STEP, EXIT_SERVE];
         for (i, a) in codes.iter().enumerate() {
             assert!(*a != 0 && *a != 1, "family codes must not collide with the generic 0/1");
             for b in &codes[i + 1..] {

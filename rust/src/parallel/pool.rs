@@ -10,7 +10,7 @@
 //!   A parallel region is `broadcast(f)`: run `f(tid)` on every thread, then
 //!   barrier.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -39,6 +39,13 @@ pub struct ThreadPool {
     inner: Arc<Inner>,
     n_threads: usize,
     handles: Vec<JoinHandle<()>>,
+    /// Overlap guard: the single job-slot/epoch protocol supports ONE
+    /// in-flight `broadcast` at a time — two concurrent regions on the same
+    /// pool would race the slot and dangle the lifetime-erased closure
+    /// pointer. Callers sharing a pool across threads (`tsne::serve`'s turn
+    /// scheduler) must serialize their parallel regions; this flag turns a
+    /// violation into a debug assertion instead of silent UB.
+    busy: AtomicBool,
 }
 
 impl ThreadPool {
@@ -71,6 +78,7 @@ impl ThreadPool {
             inner,
             n_threads,
             handles,
+            busy: AtomicBool::new(false),
         }
     }
 
@@ -91,6 +99,12 @@ impl ThreadPool {
             f(0);
             return;
         }
+        let was_busy = self.busy.swap(true, Ordering::Acquire);
+        debug_assert!(
+            !was_busy,
+            "concurrent ThreadPool::broadcast on one pool — parallel regions \
+             sharing a pool must be externally serialized"
+        );
         let nworkers = self.n_threads - 1;
         // Erase the closure's lifetime: workers only dereference the pointer
         // between the epoch bump below and the `remaining == 0` barrier, and
@@ -118,6 +132,7 @@ impl ThreadPool {
                 guard = self.inner.done_cv.wait(guard).unwrap();
             }
         }
+        self.busy.store(false, Ordering::Release);
     }
 }
 

@@ -27,7 +27,11 @@
 //! session survive a restart — a resumed run is bit-identical to an
 //! uninterrupted one at a fixed thread count. One `Affinities` is `Sync`
 //! and is borrowed (`&Affinities`) by every session built over it, so N
-//! concurrent sessions share a single fit across threads.
+//! concurrent sessions share a single fit across threads. The [`serve`]
+//! module composes all of the above into an embedding-as-a-service TCP
+//! daemon (`acc-tsne serve`): fitted artifacts cached by data fingerprint,
+//! concurrent sessions multiplexed round-robin over one shared pool, and
+//! progressive snapshot frames streamed to clients.
 //!
 //! [`run_tsne`] remains the classic one-shot call — a thin, bit-identical
 //! wrapper over fit + session — executing the full step sequence with every
@@ -54,6 +58,7 @@
 pub mod persist;
 pub mod pipeline;
 pub mod plan;
+pub mod serve;
 pub mod session;
 pub mod workspace;
 

@@ -1,0 +1,1561 @@
+//! Embedding-as-a-service: a std-only TCP daemon multiplexing many
+//! [`TsneSession`]s over one shared [`ThreadPool`].
+//!
+//! The crate already has every serving primitive: [`Affinities`] is
+//! Cow-backed `Send + Sync` (fit once, share by reference), sessions are
+//! stepwise with an observer streaming un-permuted snapshots, and
+//! checkpoints resume bit-identically at a fixed thread count. This module
+//! is the daemon that composes them:
+//!
+//! - **Artifact cache.** Fitted affinities are cached keyed by the same
+//!   FNV-1a data fingerprint the persistence layer stamps into artifacts
+//!   ([`CacheKey`]), so a client re-submitting the same bytes at the same
+//!   perplexity skips KNN + BSP entirely and goes straight to the gradient
+//!   loop. Eviction is LRU over the cache's own `Arc`s only — an evicted
+//!   artifact stays alive for every session still stepping on it.
+//! - **Fair round-robin scheduling.** [`ThreadPool::broadcast`] runs ONE
+//!   parallel region at a time, so a scheduler thread hands out *turns*:
+//!   each connection thread owns its session and blocks until granted, runs
+//!   exactly one gradient step (or its initial fit) on the shared pool, and
+//!   goes to the back of the ring. No session starves another; frame writes
+//!   happen **outside** turns so a slow client stalls only its own stream.
+//! - **Progressive streaming.** As the session observer fires, the latest
+//!   un-permuted embedding ships as a length-prefixed, FNV-1a-checksummed
+//!   frame built from the `data::io` codecs (wire layout below). A client
+//!   disconnect (EOF or failed write) detaches the session gracefully: its
+//!   checkpoint parks in a bounded resume map and a later request carrying
+//!   the session id continues it — bit-identical to an uninterrupted run.
+//!
+//! # Wire protocol (version 1, all integers/floats little-endian)
+//!
+//! Request: `b"ACSRVRQ1"` magic, then `version: u32`, `resume_id: u64`
+//! (`0` = fresh run), `n: u64`, `d: u64`, `n_iter: u64`,
+//! `snapshot_every: u64` (`0` = final frame only), `seed: u64`,
+//! `perplexity: f64`, `theta: f64`, `n·d` point coordinates as `f64`, and an
+//! FNV-1a checksum (`u64`) over everything after the magic. Resume requests
+//! carry `n = d = 0` and no points.
+//!
+//! Frame: `b"ACSRVFR1"` magic, then `kind: u32`, three generic header
+//! fields (`a: u64`, `b: f64`, `c: f64`), `payload_len: u64`, the payload,
+//! and an FNV-1a checksum over header + payload. Kinds: `0` Hello
+//! (`a` = session id, payload = `[cache_hit: u8]`), `1` Snapshot and `2`
+//! Final (`a` = iteration, `b` = KL, `c` = gradient norm, payload = the
+//! embedding as interleaved x,y `f64`s in original point order), `3` Error
+//! (`a` = a code from the CLI exit-code families, payload = UTF-8 message).
+//!
+//! See `docs/serving.md` for the full protocol walk-through and the
+//! `serving.*` bench keys (`BENCH_serving.json`).
+
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::data::io::{
+    read_f64_le, read_f64_slice_le, read_u32_le, read_u64_le, write_f64_le, write_f64_slice_le,
+    write_u32_le, write_u64_le, Fnv1a64,
+};
+use crate::parallel::pool::{available_cores, ThreadPool};
+use crate::tsne::persist::SessionCheckpoint;
+use crate::tsne::session::data_fingerprint;
+use crate::tsne::{
+    Affinities, FitError, ObserverControl, PlanError, StagePlan, TsneConfig, TsneSession,
+};
+
+/// Request magic (8 bytes).
+pub const REQUEST_MAGIC: &[u8; 8] = b"ACSRVRQ1";
+/// Frame magic (8 bytes).
+pub const FRAME_MAGIC: &[u8; 8] = b"ACSRVFR1";
+/// Wire protocol version carried in every request.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Frame kinds (the `kind: u32` header field).
+pub const FRAME_HELLO: u32 = 0;
+pub const FRAME_SNAPSHOT: u32 = 1;
+pub const FRAME_FINAL: u32 = 2;
+pub const FRAME_ERROR: u32 = 3;
+
+/// Error-frame codes, aligned with the CLI's per-family exit codes so a
+/// scripted client can `exit $code` and mean the same thing as `acc-tsne`.
+pub const WIRE_FIT: u64 = 3;
+pub const WIRE_RESUME: u64 = 4;
+pub const WIRE_PLAN: u64 = 5;
+pub const WIRE_STEP: u64 = 6;
+pub const WIRE_PROTOCOL: u64 = 7;
+pub const WIRE_SHUTDOWN: u64 = 8;
+
+/// Request header length after the magic (version + 6×u64 + 2×f64).
+const REQUEST_HEAD_LEN: usize = 4 + 6 * 8 + 2 * 8;
+/// Frame header length after the magic (kind + a + b + c + payload_len).
+const FRAME_HEAD_LEN: usize = 4 + 8 + 8 + 8 + 8;
+/// Hard cap on `d` — hostile requests must not allocate unboundedly.
+const MAX_DIMS: u64 = 4096;
+/// Hard cap on total request coordinates (`n·d` f64s, = 1 GiB of points).
+const MAX_COORDS: u64 = 1 << 27;
+/// Hard cap on a frame payload (an embedding is 2n f64s ≪ this).
+const MAX_FRAME_PAYLOAD: u64 = (MAX_COORDS * 8) + 64;
+/// Hard cap on requested iterations.
+const MAX_ITERS: u64 = 1_000_000;
+/// Step-latency samples kept for the p50/p99 stats (first 2²⁰ steps).
+const STEP_SAMPLE_CAP: usize = 1 << 20;
+
+/// Typed serving errors — the `serve` CLI family (exit code 7), each mapping
+/// onto a wire code from the existing exit-code families.
+#[derive(Debug)]
+pub enum ServeError {
+    /// Binding or configuring the listening socket failed.
+    Bind(io::Error),
+    /// Socket I/O failed mid-stream.
+    Io(io::Error),
+    /// Malformed request or frame: bad magic, version, checksum, or a size
+    /// guard tripped.
+    Protocol(String),
+    /// The affinity fit failed (shape, non-finite data, perplexity bounds).
+    Fit(FitError),
+    /// The derived stage plan failed validation.
+    Plan(PlanError),
+    /// Resume requested for a session that is unknown, already resumed, or
+    /// evicted from the bounded resume map.
+    Resume(String),
+    /// The gradient loop diverged beyond recovery.
+    Step(String),
+    /// The server is shutting down.
+    Shutdown,
+    /// A client-side bit-identity or smoke-test verification failed.
+    Verify(String),
+    /// The server answered with an error frame (client side).
+    Remote { code: u64, message: String },
+}
+
+impl ServeError {
+    /// The code carried by an error frame for this error.
+    pub fn wire_code(&self) -> u64 {
+        match self {
+            ServeError::Fit(_) => WIRE_FIT,
+            ServeError::Resume(_) => WIRE_RESUME,
+            ServeError::Plan(_) => WIRE_PLAN,
+            ServeError::Step(_) | ServeError::Verify(_) => WIRE_STEP,
+            ServeError::Shutdown => WIRE_SHUTDOWN,
+            ServeError::Protocol(_)
+            | ServeError::Bind(_)
+            | ServeError::Io(_)
+            | ServeError::Remote { .. } => WIRE_PROTOCOL,
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Bind(e) => write!(f, "cannot bind serve address: {e}"),
+            ServeError::Io(e) => write!(f, "serve I/O error: {e}"),
+            ServeError::Protocol(m) => write!(f, "protocol error: {m}"),
+            ServeError::Fit(e) => write!(f, "fit failed: {e}"),
+            ServeError::Plan(e) => write!(f, "invalid plan: {e}"),
+            ServeError::Resume(m) => write!(f, "resume failed: {m}"),
+            ServeError::Step(m) => write!(f, "gradient loop failed: {m}"),
+            ServeError::Shutdown => write!(f, "server shutting down"),
+            ServeError::Verify(m) => write!(f, "verification failed: {m}"),
+            ServeError::Remote { code, message } => {
+                write!(f, "server error (code {code}): {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<io::Error> for ServeError {
+    fn from(e: io::Error) -> Self {
+        ServeError::Io(e)
+    }
+}
+
+impl From<FitError> for ServeError {
+    fn from(e: FitError) -> Self {
+        ServeError::Fit(e)
+    }
+}
+
+impl From<PlanError> for ServeError {
+    fn from(e: PlanError) -> Self {
+        ServeError::Plan(e)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire codec
+// ---------------------------------------------------------------------------
+
+/// A client request: a fresh run (points + hyperparameters) or, with
+/// `resume_id != 0`, the continuation of a detached session (`n = d = 0`,
+/// no points — the server kept the checkpoint and the fitted artifact).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub resume_id: u64,
+    pub n: u64,
+    pub d: u64,
+    pub n_iter: u64,
+    /// Stream a snapshot frame every this many iterations (`0` = only the
+    /// final frame).
+    pub snapshot_every: u64,
+    pub seed: u64,
+    pub perplexity: f64,
+    pub theta: f64,
+    /// `n × d` coordinates, row-major. Empty for resume requests.
+    pub points: Vec<f64>,
+}
+
+impl Request {
+    /// A resume request for `session_id` — no points, hyperparameters come
+    /// from the detached session.
+    pub fn resume(session_id: u64) -> Request {
+        Request {
+            resume_id: session_id,
+            n: 0,
+            d: 0,
+            n_iter: 0,
+            snapshot_every: 0,
+            seed: 0,
+            perplexity: 0.0,
+            theta: 0.0,
+            points: Vec::new(),
+        }
+    }
+}
+
+/// One server→client message. `Snapshot`/`Final` embeddings are interleaved
+/// x,y `f64`s in the caller's original point order.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    Hello { session_id: u64, cache_hit: bool },
+    Snapshot { iter: u64, kl: f64, grad_norm: f64, embedding: Vec<f64> },
+    Final { iter: u64, kl: f64, grad_norm: f64, embedding: Vec<f64> },
+    Error { code: u64, message: String },
+}
+
+/// Serialize a request (see the module docs for the layout).
+pub fn write_request<W: Write>(w: &mut W, req: &Request) -> io::Result<()> {
+    let mut body = Vec::with_capacity(REQUEST_HEAD_LEN + req.points.len() * 8);
+    write_u32_le(&mut body, PROTOCOL_VERSION)?;
+    write_u64_le(&mut body, req.resume_id)?;
+    write_u64_le(&mut body, req.n)?;
+    write_u64_le(&mut body, req.d)?;
+    write_u64_le(&mut body, req.n_iter)?;
+    write_u64_le(&mut body, req.snapshot_every)?;
+    write_u64_le(&mut body, req.seed)?;
+    write_f64_le(&mut body, req.perplexity)?;
+    write_f64_le(&mut body, req.theta)?;
+    write_f64_slice_le(&mut body, &req.points)?;
+    let mut h = Fnv1a64::new();
+    h.update(&body);
+    w.write_all(REQUEST_MAGIC)?;
+    w.write_all(&body)?;
+    write_u64_le(w, h.finish())?;
+    w.flush()
+}
+
+/// Parse and validate a request. Every hostile shape — wrong magic or
+/// version, a size guard tripping, a checksum mismatch — is a typed
+/// [`ServeError`], never a panic or an unbounded allocation.
+pub fn read_request<R: Read>(r: &mut R, max_points: usize) -> Result<Request, ServeError> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != REQUEST_MAGIC {
+        return Err(ServeError::Protocol("bad request magic".into()));
+    }
+    let mut head = [0u8; REQUEST_HEAD_LEN];
+    r.read_exact(&mut head)?;
+    let mut hasher = Fnv1a64::new();
+    hasher.update(&head);
+    let mut c: &[u8] = &head;
+    let ver = read_u32_le(&mut c)?;
+    let resume_id = read_u64_le(&mut c)?;
+    let n = read_u64_le(&mut c)?;
+    let d = read_u64_le(&mut c)?;
+    let n_iter = read_u64_le(&mut c)?;
+    let snapshot_every = read_u64_le(&mut c)?;
+    let seed = read_u64_le(&mut c)?;
+    let perplexity = read_f64_le(&mut c)?;
+    let theta = read_f64_le(&mut c)?;
+    if ver != PROTOCOL_VERSION {
+        return Err(ServeError::Protocol(format!(
+            "unsupported protocol version {ver} (this server speaks {PROTOCOL_VERSION})"
+        )));
+    }
+    if resume_id != 0 {
+        if n != 0 || d != 0 {
+            return Err(ServeError::Protocol(
+                "resume requests must not carry points (n = d = 0)".into(),
+            ));
+        }
+    } else {
+        if n == 0 || d == 0 {
+            return Err(ServeError::Protocol("empty dataset (n = 0 or d = 0)".into()));
+        }
+        if n > max_points as u64 {
+            return Err(ServeError::Protocol(format!(
+                "n = {n} exceeds this server's limit of {max_points} points"
+            )));
+        }
+        if d > MAX_DIMS {
+            return Err(ServeError::Protocol(format!("d = {d} exceeds the limit of {MAX_DIMS}")));
+        }
+        match n.checked_mul(d) {
+            Some(coords) if coords <= MAX_COORDS => {}
+            _ => {
+                return Err(ServeError::Protocol(format!(
+                    "n·d = {n}·{d} exceeds the coordinate limit of {MAX_COORDS}"
+                )))
+            }
+        }
+        if n_iter > MAX_ITERS {
+            return Err(ServeError::Protocol(format!(
+                "n_iter = {n_iter} exceeds the limit of {MAX_ITERS}"
+            )));
+        }
+    }
+    let coords = (n * d) as usize;
+    let mut pbytes = vec![0u8; coords * 8];
+    r.read_exact(&mut pbytes)?;
+    hasher.update(&pbytes);
+    let want = read_u64_le(r)?;
+    if want != hasher.finish() {
+        return Err(ServeError::Protocol("request checksum mismatch".into()));
+    }
+    let mut points = vec![0.0f64; coords];
+    read_f64_slice_le(&mut &pbytes[..], &mut points)?;
+    Ok(Request { resume_id, n, d, n_iter, snapshot_every, seed, perplexity, theta, points })
+}
+
+fn encode_frame_parts(frame: &Frame) -> (u32, u64, f64, f64, Vec<u8>) {
+    match frame {
+        Frame::Hello { session_id, cache_hit } => {
+            (FRAME_HELLO, *session_id, 0.0, 0.0, vec![u8::from(*cache_hit)])
+        }
+        Frame::Snapshot { iter, kl, grad_norm, embedding } => {
+            let mut p = Vec::with_capacity(embedding.len() * 8);
+            write_f64_slice_le(&mut p, embedding).expect("Vec<u8> write is infallible");
+            (FRAME_SNAPSHOT, *iter, *kl, *grad_norm, p)
+        }
+        Frame::Final { iter, kl, grad_norm, embedding } => {
+            let mut p = Vec::with_capacity(embedding.len() * 8);
+            write_f64_slice_le(&mut p, embedding).expect("Vec<u8> write is infallible");
+            (FRAME_FINAL, *iter, *kl, *grad_norm, p)
+        }
+        Frame::Error { code, message } => {
+            (FRAME_ERROR, *code, 0.0, 0.0, message.as_bytes().to_vec())
+        }
+    }
+}
+
+/// Serialize one frame (see the module docs for the layout).
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> io::Result<()> {
+    let (kind, a, b, c, payload) = encode_frame_parts(frame);
+    let mut head = Vec::with_capacity(FRAME_HEAD_LEN);
+    write_u32_le(&mut head, kind)?;
+    write_u64_le(&mut head, a)?;
+    write_f64_le(&mut head, b)?;
+    write_f64_le(&mut head, c)?;
+    write_u64_le(&mut head, payload.len() as u64)?;
+    let mut h = Fnv1a64::new();
+    h.update(&head);
+    h.update(&payload);
+    w.write_all(FRAME_MAGIC)?;
+    w.write_all(&head)?;
+    w.write_all(&payload)?;
+    write_u64_le(w, h.finish())?;
+    w.flush()
+}
+
+/// Parse one frame. Torn/short streams surface as [`ServeError::Io`], bit
+/// flips as [`ServeError::Protocol`] (checksum mismatch) — never a panic.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, ServeError> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != FRAME_MAGIC {
+        return Err(ServeError::Protocol("bad frame magic".into()));
+    }
+    let mut head = [0u8; FRAME_HEAD_LEN];
+    r.read_exact(&mut head)?;
+    let mut c: &[u8] = &head;
+    let kind = read_u32_le(&mut c)?;
+    let a = read_u64_le(&mut c)?;
+    let b = read_f64_le(&mut c)?;
+    let cc = read_f64_le(&mut c)?;
+    let payload_len = read_u64_le(&mut c)?;
+    if payload_len > MAX_FRAME_PAYLOAD {
+        return Err(ServeError::Protocol(format!(
+            "frame payload of {payload_len} bytes exceeds the limit of {MAX_FRAME_PAYLOAD}"
+        )));
+    }
+    let mut payload = vec![0u8; payload_len as usize];
+    r.read_exact(&mut payload)?;
+    let mut h = Fnv1a64::new();
+    h.update(&head);
+    h.update(&payload);
+    let want = read_u64_le(r)?;
+    if want != h.finish() {
+        return Err(ServeError::Protocol("frame checksum mismatch".into()));
+    }
+    match kind {
+        FRAME_HELLO => {
+            if payload.len() != 1 {
+                return Err(ServeError::Protocol(format!(
+                    "hello payload must be 1 byte, got {}",
+                    payload.len()
+                )));
+            }
+            Ok(Frame::Hello { session_id: a, cache_hit: payload[0] != 0 })
+        }
+        FRAME_SNAPSHOT | FRAME_FINAL => {
+            if payload.len() % 8 != 0 {
+                return Err(ServeError::Protocol(format!(
+                    "embedding payload of {} bytes is not a whole number of f64s",
+                    payload.len()
+                )));
+            }
+            let mut e = vec![0.0f64; payload.len() / 8];
+            read_f64_slice_le(&mut &payload[..], &mut e)?;
+            if kind == FRAME_SNAPSHOT {
+                Ok(Frame::Snapshot { iter: a, kl: b, grad_norm: cc, embedding: e })
+            } else {
+                Ok(Frame::Final { iter: a, kl: b, grad_norm: cc, embedding: e })
+            }
+        }
+        FRAME_ERROR => Ok(Frame::Error {
+            code: a,
+            message: String::from_utf8_lossy(&payload).into_owned(),
+        }),
+        other => Err(ServeError::Protocol(format!("unknown frame kind {other}"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Artifact cache
+// ---------------------------------------------------------------------------
+
+/// Cache key for a fitted artifact: the FNV-1a fingerprint of the raw point
+/// bytes (the same one the persistence formats stamp — a hit is exactly
+/// "same bytes, same fit"), the shape, and the perplexity's bit pattern.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub data_fp: u64,
+    pub n: usize,
+    pub d: usize,
+    pub perplexity_bits: u64,
+}
+
+impl CacheKey {
+    /// Key for `points` (n × d row-major) at `perplexity`.
+    pub fn for_points(points: &[f64], n: usize, d: usize, perplexity: f64) -> CacheKey {
+        CacheKey { data_fp: data_fingerprint(points), n, d, perplexity_bits: perplexity.to_bits() }
+    }
+}
+
+struct CacheEntry {
+    aff: Arc<Affinities<'static, f64>>,
+    last_used: u64,
+}
+
+struct CacheInner {
+    map: HashMap<CacheKey, CacheEntry>,
+    tick: u64,
+}
+
+/// Fingerprint-keyed LRU cache of fitted [`Affinities`]. Concurrent lookups
+/// of the same key return clones of the same `Arc`; eviction drops only the
+/// cache's reference, so artifacts under active sessions stay alive.
+pub struct ArtifactCache {
+    capacity: usize,
+    inner: Mutex<CacheInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ArtifactCache {
+    /// A cache holding at most `capacity` artifacts (clamped to ≥ 1).
+    pub fn new(capacity: usize) -> ArtifactCache {
+        ArtifactCache {
+            capacity: capacity.max(1),
+            inner: Mutex::new(CacheInner { map: HashMap::new(), tick: 0 }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up a fitted artifact. A hit bumps the entry's LRU stamp.
+    pub fn lookup(&self, key: &CacheKey) -> Option<Arc<Affinities<'static, f64>>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(key) {
+            Some(e) => {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(&e.aff))
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a fitted artifact, evicting least-recently-used entries beyond
+    /// capacity.
+    pub fn insert(&self, key: CacheKey, aff: Arc<Affinities<'static, f64>>) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.insert(key, CacheEntry { aff, last_used: tick });
+        while inner.map.len() > self.capacity {
+            let oldest = inner.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| *k);
+            match oldest {
+                Some(k) => {
+                    inner.map.remove(&k);
+                }
+                None => break,
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups that found an artifact.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that missed (each followed by a fit + insert on the serving
+    /// path).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler
+// ---------------------------------------------------------------------------
+
+enum Cmd {
+    /// A connection thread wants turns for session `id`.
+    Join { id: u64, grant_tx: SyncSender<()> },
+    /// The granted turn finished. `step_secs` is `Some` only for gradient
+    /// steps (fits and session builds don't pollute the step latency stats);
+    /// `more = false` retires the session from the ring.
+    Done { id: u64, more: bool, step_secs: Option<f64> },
+    /// The connection thread is gone (any exit path — sent from a drop
+    /// guard, so it always arrives after that thread's final `Done`).
+    Exited { id: u64 },
+}
+
+struct Slot {
+    id: u64,
+    grant_tx: SyncSender<()>,
+}
+
+#[derive(Default)]
+struct StatsInner {
+    steps: u64,
+    step_secs: Vec<f64>,
+    sessions_completed: u64,
+    sessions_detached: u64,
+    sessions_resumed: u64,
+    protocol_errors: u64,
+}
+
+struct Shared {
+    pool: Arc<ThreadPool>,
+    cache: ArtifactCache,
+    cmd_tx: Sender<Cmd>,
+    shutdown: AtomicBool,
+    next_id: AtomicU64,
+    resume: Mutex<VecDeque<Detached>>,
+    resume_capacity: usize,
+    stats: Mutex<StatsInner>,
+    max_points: usize,
+}
+
+/// A session parked by a client disconnect: everything needed to continue
+/// it bit-identically — the shared artifact, the checkpoint, and the run
+/// parameters the original request carried.
+struct Detached {
+    id: u64,
+    aff: Arc<Affinities<'static, f64>>,
+    ck: SessionCheckpoint<f64>,
+    plan: StagePlan,
+    cfg: TsneConfig,
+    n_iter: usize,
+    snapshot_every: usize,
+}
+
+/// The round-robin turn scheduler. One turn is outstanding at a time (the
+/// pool runs one parallel region at a time); `Done` rotates the session to
+/// the back of the ring, `Exited` retires it from wherever it is. Granting
+/// uses `try_send` on a 1-slot channel: a receiver that disconnected (its
+/// thread died) simply drops out of the ring.
+fn scheduler_loop(shared: Arc<Shared>, cmd_rx: Receiver<Cmd>) {
+    let mut ring: VecDeque<Slot> = VecDeque::new();
+    let mut outstanding: Option<Slot> = None;
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) && outstanding.is_none() {
+            // Dropping the ring disconnects every parked grant channel,
+            // unblocking its connection thread with a shutdown error.
+            break;
+        }
+        let cmd = if outstanding.is_some() || ring.is_empty() {
+            match cmd_rx.recv_timeout(Duration::from_millis(25)) {
+                Ok(c) => Some(c),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        } else {
+            cmd_rx.try_recv().ok()
+        };
+        match cmd {
+            Some(Cmd::Join { id, grant_tx }) => ring.push_back(Slot { id, grant_tx }),
+            Some(Cmd::Done { id, more, step_secs }) => {
+                if let Some(s) = step_secs {
+                    let mut st = shared.stats.lock().unwrap();
+                    st.steps += 1;
+                    if st.step_secs.len() < STEP_SAMPLE_CAP {
+                        st.step_secs.push(s);
+                    }
+                }
+                if outstanding.as_ref().map_or(false, |s| s.id == id) {
+                    let slot = outstanding.take().expect("just checked");
+                    if more {
+                        ring.push_back(slot);
+                    }
+                }
+            }
+            Some(Cmd::Exited { id }) => {
+                if outstanding.as_ref().map_or(false, |s| s.id == id) {
+                    outstanding = None;
+                }
+                ring.retain(|s| s.id != id);
+            }
+            None => {}
+        }
+        if outstanding.is_none() && !shared.shutdown.load(Ordering::Acquire) {
+            while let Some(slot) = ring.pop_front() {
+                if slot.grant_tx.try_send(()).is_ok() {
+                    outstanding = Some(slot);
+                    break;
+                }
+                // Disconnected receiver: the connection thread died; its
+                // `Exited` may still be in flight. Drop the slot now.
+            }
+        }
+    }
+}
+
+/// A connection thread's handle into the scheduler: join once, then block
+/// for turns. The `Drop` impl announces the exit on every path (including
+/// panics), so the scheduler can never deadlock on a dead session.
+struct TurnHandle {
+    id: u64,
+    cmd_tx: Sender<Cmd>,
+    grant_rx: Receiver<()>,
+}
+
+impl TurnHandle {
+    fn join(shared: &Shared, id: u64) -> Result<TurnHandle, ServeError> {
+        let (grant_tx, grant_rx) = mpsc::sync_channel(1);
+        let cmd_tx = shared.cmd_tx.clone();
+        cmd_tx.send(Cmd::Join { id, grant_tx }).map_err(|_| ServeError::Shutdown)?;
+        Ok(TurnHandle { id, cmd_tx, grant_rx })
+    }
+
+    /// Block until granted, run `f` (which returns its result plus whether
+    /// more turns are wanted), and report the turn back. `is_step` routes
+    /// the turn's wall time into the step-latency stats.
+    fn turn<R>(
+        &self,
+        is_step: bool,
+        f: impl FnOnce() -> (R, bool),
+    ) -> Result<R, ServeError> {
+        self.grant_rx.recv().map_err(|_| ServeError::Shutdown)?;
+        let t0 = Instant::now();
+        let (out, more) = f();
+        let step_secs = is_step.then(|| t0.elapsed().as_secs_f64());
+        let _ = self.cmd_tx.send(Cmd::Done { id: self.id, more, step_secs });
+        Ok(out)
+    }
+}
+
+impl Drop for TurnHandle {
+    fn drop(&mut self) {
+        let _ = self.cmd_tx.send(Cmd::Exited { id: self.id });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// Daemon configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Listen address, e.g. `"127.0.0.1:7878"` (`:0` picks a free port).
+    pub addr: String,
+    /// Shared-pool size; `0` ⇒ all available cores.
+    pub n_threads: usize,
+    /// Fitted-artifact cache capacity (LRU beyond this).
+    pub cache_capacity: usize,
+    /// How many detached sessions are kept resumable (FIFO beyond this).
+    pub resume_capacity: usize,
+    /// Per-request point-count limit.
+    pub max_points: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7878".into(),
+            n_threads: 0,
+            cache_capacity: 8,
+            resume_capacity: 64,
+            max_points: 1_000_000,
+        }
+    }
+}
+
+/// Aggregated serving statistics (see [`ServerHandle::stats`]).
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    /// Gradient steps scheduled across all sessions.
+    pub steps: u64,
+    /// Median per-step latency (seconds) over the recorded samples.
+    pub step_p50_s: f64,
+    /// 99th-percentile per-step latency (seconds).
+    pub step_p99_s: f64,
+    pub sessions_completed: u64,
+    pub sessions_detached: u64,
+    pub sessions_resumed: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub protocol_errors: u64,
+}
+
+/// A running daemon. Dropping the handle shuts the server down (stops
+/// accepting, finishes the outstanding turn, unparks waiting sessions with
+/// a shutdown error).
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    sched: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound listen address (useful with `:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Snapshot of the serving statistics.
+    pub fn stats(&self) -> ServeStats {
+        let inner = self.shared.stats.lock().unwrap();
+        let mut samples = inner.step_secs.clone();
+        samples.sort_by(f64::total_cmp);
+        ServeStats {
+            steps: inner.steps,
+            step_p50_s: percentile(&samples, 0.50),
+            step_p99_s: percentile(&samples, 0.99),
+            sessions_completed: inner.sessions_completed,
+            sessions_detached: inner.sessions_detached,
+            sessions_resumed: inner.sessions_resumed,
+            cache_hits: self.shared.cache.hits(),
+            cache_misses: self.shared.cache.misses(),
+            protocol_errors: inner.protocol_errors,
+        }
+    }
+
+    /// Stop accepting, let the outstanding turn finish, and join the accept
+    /// and scheduler threads. Idempotent. Connection threads are not joined:
+    /// any still waiting for a turn exit promptly with a shutdown error.
+    pub fn shutdown(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.sched.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Start the daemon: bind, spawn the scheduler and the accept loop, return
+/// immediately. One OS thread per connection owns that client's session;
+/// all of them share one [`ThreadPool`] through the turn scheduler.
+pub fn start(cfg: &ServeConfig) -> Result<ServerHandle, ServeError> {
+    let nt = if cfg.n_threads == 0 { available_cores() } else { cfg.n_threads };
+    let listener = TcpListener::bind(&cfg.addr).map_err(ServeError::Bind)?;
+    let addr = listener.local_addr().map_err(ServeError::Bind)?;
+    listener.set_nonblocking(true).map_err(ServeError::Bind)?;
+    let (cmd_tx, cmd_rx) = mpsc::channel();
+    let shared = Arc::new(Shared {
+        pool: Arc::new(ThreadPool::new(nt)),
+        cache: ArtifactCache::new(cfg.cache_capacity),
+        cmd_tx,
+        shutdown: AtomicBool::new(false),
+        next_id: AtomicU64::new(1),
+        resume: Mutex::new(VecDeque::new()),
+        resume_capacity: cfg.resume_capacity.max(1),
+        stats: Mutex::new(StatsInner::default()),
+        max_points: cfg.max_points,
+    });
+    let sched = {
+        let shared = Arc::clone(&shared);
+        std::thread::Builder::new()
+            .name("acc-tsne-serve-sched".into())
+            .spawn(move || scheduler_loop(shared, cmd_rx))
+            .map_err(ServeError::Io)?
+    };
+    let accept = {
+        let shared = Arc::clone(&shared);
+        std::thread::Builder::new()
+            .name("acc-tsne-serve-accept".into())
+            .spawn(move || accept_loop(listener, shared))
+            .map_err(ServeError::Io)?
+    };
+    Ok(ServerHandle { addr, shared, accept: Some(accept), sched: Some(sched) })
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    let mut conn_seq = 0u64;
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                conn_seq += 1;
+                let shared = Arc::clone(&shared);
+                let _ = std::thread::Builder::new()
+                    .name(format!("acc-tsne-serve-conn-{conn_seq}"))
+                    .spawn(move || handle_conn(stream, shared));
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, shared: Arc<Shared>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(60)));
+    if let Err(err) = serve_conn(&mut stream, &shared) {
+        if matches!(err, ServeError::Protocol(_)) {
+            shared.stats.lock().unwrap().protocol_errors += 1;
+        }
+        // A dead socket can't carry an error frame; everything else gets a
+        // typed code + message so clients fail with a reason.
+        if !matches!(err, ServeError::Io(_)) {
+            let _ = write_frame(
+                &mut stream,
+                &Frame::Error { code: err.wire_code(), message: err.to_string() },
+            );
+        }
+    }
+}
+
+fn serve_conn(stream: &mut TcpStream, shared: &Arc<Shared>) -> Result<(), ServeError> {
+    let req = read_request(stream, shared.max_points)?;
+    if shared.shutdown.load(Ordering::Acquire) {
+        return Err(ServeError::Shutdown);
+    }
+    if req.resume_id != 0 {
+        serve_resumed(stream, shared, req)
+    } else {
+        serve_fresh(stream, shared, req)
+    }
+}
+
+fn serve_fresh(
+    stream: &mut TcpStream,
+    shared: &Arc<Shared>,
+    req: Request,
+) -> Result<(), ServeError> {
+    let n = req.n as usize;
+    let d = req.d as usize;
+    let plan = StagePlan::auto_for(n);
+    let cfg = TsneConfig {
+        perplexity: req.perplexity,
+        theta: req.theta,
+        n_iter: req.n_iter as usize,
+        seed: req.seed,
+        n_threads: shared.pool.n_threads(),
+        ..TsneConfig::default()
+    };
+    let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+    let turns = TurnHandle::join(shared, id)?;
+
+    // First turn (serialized over the pool): cache lookup, fitting on a
+    // miss. Re-checking *inside* the turn makes N same-data arrivals
+    // deterministic — exactly one fits, the rest hit the cached Arc; no
+    // double-fit stampede.
+    let fitted = turns.turn(false, || {
+        let key = CacheKey::for_points(&req.points, n, d, req.perplexity);
+        let out = match shared.cache.lookup(&key) {
+            Some(aff) => Ok((aff, true)),
+            None => Affinities::fit(&shared.pool, &req.points, n, d, req.perplexity, &plan).map(
+                |aff| {
+                    let aff = Arc::new(aff);
+                    shared.cache.insert(key, Arc::clone(&aff));
+                    (aff, false)
+                },
+            ),
+        };
+        let more = out.is_ok();
+        (out, more)
+    })?;
+    let (aff, cache_hit) = fitted?;
+
+    // Second turn: session construction (Z-order adoption broadcasts).
+    let built = turns.turn(false, || {
+        let r = TsneSession::new_shared(&*aff, plan, cfg, Arc::clone(&shared.pool));
+        let more = r.is_ok();
+        (r, more)
+    })?;
+    let sess = built?;
+
+    // The Hello only ships once the expensive part is done: its arrival
+    // time *is* the cache-hit/miss latency a client observes.
+    write_frame(stream, &Frame::Hello { session_id: id, cache_hit })?;
+    drive(
+        stream,
+        shared,
+        &turns,
+        sess,
+        &aff,
+        plan,
+        cfg,
+        req.n_iter as usize,
+        req.snapshot_every as usize,
+        id,
+    )
+}
+
+fn serve_resumed(
+    stream: &mut TcpStream,
+    shared: &Arc<Shared>,
+    req: Request,
+) -> Result<(), ServeError> {
+    let det = {
+        let mut q = shared.resume.lock().unwrap();
+        match q.iter().position(|dtc| dtc.id == req.resume_id) {
+            Some(i) => q.remove(i).expect("position is in bounds"),
+            None => {
+                return Err(ServeError::Resume(format!(
+                    "no detached session {} (unknown, already resumed, or evicted)",
+                    req.resume_id
+                )))
+            }
+        }
+    };
+    let Detached { aff, ck, plan, cfg, n_iter, snapshot_every, .. } = det;
+    let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+    let turns = TurnHandle::join(shared, id)?;
+    let built = turns.turn(false, || {
+        let r = TsneSession::from_checkpoint_shared(&*aff, plan, cfg, ck, Arc::clone(&shared.pool));
+        let more = r.is_ok();
+        (r, more)
+    })?;
+    let sess = built.map_err(|e| ServeError::Resume(e.to_string()))?;
+    shared.stats.lock().unwrap().sessions_resumed += 1;
+    // A resume never re-fits: the artifact rode along with the checkpoint.
+    write_frame(stream, &Frame::Hello { session_id: id, cache_hit: true })?;
+    drive(stream, shared, &turns, sess, &aff, plan, cfg, n_iter, snapshot_every, id)
+}
+
+/// Detect an orderly client hang-up without consuming stream bytes: a
+/// zero-length peek is EOF, `WouldBlock` means a live-but-quiet client.
+fn client_gone(stream: &TcpStream) -> bool {
+    let mut buf = [0u8; 1];
+    if stream.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let gone = match stream.peek(&mut buf) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) if e.kind() == io::ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    let _ = stream.set_nonblocking(false);
+    gone
+}
+
+/// Park a session for later resume. Only this session's state moves; the
+/// cached artifact, the pool, and every other stream are untouched.
+fn detach(
+    shared: &Shared,
+    id: u64,
+    aff: &Arc<Affinities<'static, f64>>,
+    sess: &TsneSession<'_, f64>,
+    plan: StagePlan,
+    cfg: TsneConfig,
+    n_iter: usize,
+    snapshot_every: usize,
+) {
+    let ck = sess.to_checkpoint();
+    let mut q = shared.resume.lock().unwrap();
+    q.push_back(Detached { id, aff: Arc::clone(aff), ck, plan, cfg, n_iter, snapshot_every });
+    while q.len() > shared.resume_capacity {
+        q.pop_front();
+    }
+    drop(q);
+    shared.stats.lock().unwrap().sessions_detached += 1;
+}
+
+/// The per-connection gradient loop: one step per granted turn, snapshot
+/// frames written outside turns, disconnects detaching only this session.
+#[allow(clippy::too_many_arguments)]
+fn drive(
+    stream: &mut TcpStream,
+    shared: &Arc<Shared>,
+    turns: &TurnHandle,
+    mut sess: TsneSession<'_, f64>,
+    aff: &Arc<Affinities<'static, f64>>,
+    plan: StagePlan,
+    cfg: TsneConfig,
+    n_iter: usize,
+    snapshot_every: usize,
+    id: u64,
+) -> Result<(), ServeError> {
+    // The observer fires inside `step()` (inside the turn) and buffers the
+    // un-permuted snapshot here; the socket write happens after the turn is
+    // released, so a slow client never holds the pool.
+    let pending: Rc<RefCell<Option<Frame>>> = Rc::new(RefCell::new(None));
+    if snapshot_every > 0 {
+        let buf = Rc::clone(&pending);
+        sess.set_observer(snapshot_every, move |snap| {
+            *buf.borrow_mut() = Some(Frame::Snapshot {
+                iter: snap.iter as u64,
+                kl: snap.kl,
+                grad_norm: snap.grad_norm,
+                embedding: snap.embedding.to_vec(),
+            });
+            ObserverControl::Continue
+        });
+    }
+    while sess.iterations() < n_iter {
+        if client_gone(stream) {
+            detach(shared, id, aff, &sess, plan, cfg, n_iter, snapshot_every);
+            return Ok(());
+        }
+        let stepped = turns.turn(true, || {
+            let r = sess.step();
+            let more = r.is_ok() && sess.iterations() < n_iter;
+            (r, more)
+        })?;
+        if let Err(e) = stepped {
+            return Err(ServeError::Step(e.to_string()));
+        }
+        let frame = pending.borrow_mut().take();
+        if let Some(frame) = frame {
+            // The very last snapshot ships as the Final frame instead.
+            if sess.iterations() < n_iter && write_frame(stream, &frame).is_err() {
+                detach(shared, id, aff, &sess, plan, cfg, n_iter, snapshot_every);
+                return Ok(());
+            }
+        }
+    }
+    let last = Frame::Final {
+        iter: sess.iterations() as u64,
+        kl: sess.kl(),
+        grad_norm: sess.last_grad_norm(),
+        embedding: sess.embedding(),
+    };
+    if write_frame(stream, &last).is_err() {
+        // Even a torn Final leaves the run resumable.
+        detach(shared, id, aff, &sess, plan, cfg, n_iter, snapshot_every);
+        return Ok(());
+    }
+    shared.stats.lock().unwrap().sessions_completed += 1;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// What a completed client run saw.
+#[derive(Clone, Debug)]
+pub struct ClientRun {
+    pub session_id: u64,
+    /// Whether the server skipped KNN + BSP (artifact cache hit / resume).
+    pub cache_hit: bool,
+    /// Connect-to-Hello latency: the fit (cache miss) or lookup (hit) cost.
+    pub hello_secs: f64,
+    /// Progressive snapshot frames received before the final one.
+    pub snapshots: usize,
+    pub final_iter: u64,
+    pub final_kl: f64,
+    pub final_grad_norm: f64,
+    /// Final embedding, interleaved x,y, original point order.
+    pub embedding: Vec<f64>,
+}
+
+/// Run one request to completion against a serving daemon at `addr`.
+pub fn run_client(addr: &str, req: &Request) -> Result<ClientRun, ServeError> {
+    let t0 = Instant::now();
+    let mut stream = TcpStream::connect(addr)?;
+    let _ = stream.set_nodelay(true);
+    write_request(&mut stream, req)?;
+    let (session_id, cache_hit) = match read_frame(&mut stream)? {
+        Frame::Hello { session_id, cache_hit } => (session_id, cache_hit),
+        Frame::Error { code, message } => return Err(ServeError::Remote { code, message }),
+        other => {
+            return Err(ServeError::Protocol(format!("expected a Hello frame, got {other:?}")))
+        }
+    };
+    let hello_secs = t0.elapsed().as_secs_f64();
+    let mut snapshots = 0usize;
+    loop {
+        match read_frame(&mut stream)? {
+            Frame::Snapshot { .. } => snapshots += 1,
+            Frame::Final { iter, kl, grad_norm, embedding } => {
+                return Ok(ClientRun {
+                    session_id,
+                    cache_hit,
+                    hello_secs,
+                    snapshots,
+                    final_iter: iter,
+                    final_kl: kl,
+                    final_grad_norm: grad_norm,
+                    embedding,
+                });
+            }
+            Frame::Error { code, message } => return Err(ServeError::Remote { code, message }),
+            Frame::Hello { .. } => {
+                return Err(ServeError::Protocol("unexpected second Hello frame".into()))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Smoke test (CI's `acc-tsne serve --smoke N`)
+// ---------------------------------------------------------------------------
+
+/// Outcome of [`run_smoke`] — by construction every client already verified
+/// bit-identical against a direct in-process session before this returns.
+#[derive(Clone, Debug)]
+pub struct SmokeReport {
+    pub clients: usize,
+    pub n_threads: usize,
+    pub n_iter: usize,
+    pub stats: ServeStats,
+}
+
+fn assert_bits_equal(want: &[f64], got: &[f64], what: &str) -> Result<(), ServeError> {
+    if want.len() != got.len() {
+        return Err(ServeError::Verify(format!(
+            "{what}: embedding length {} vs direct {}",
+            got.len(),
+            want.len()
+        )));
+    }
+    for (i, (w, g)) in want.iter().zip(got).enumerate() {
+        if w.to_bits() != g.to_bits() {
+            return Err(ServeError::Verify(format!(
+                "{what}: bit mismatch at coordinate {i}: served {g:e} vs direct {w:e}"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Retry a resume request until the server has actually parked the detached
+/// session (the disconnect is noticed between turns, so there is a small
+/// window where the id is not yet resumable).
+pub fn poll_resume(
+    addr: &str,
+    resume_id: u64,
+    max_attempts: usize,
+) -> Result<ClientRun, ServeError> {
+    let mut last = String::new();
+    for _ in 0..max_attempts {
+        match run_client(addr, &Request::resume(resume_id)) {
+            Ok(run) => return Ok(run),
+            Err(ServeError::Remote { code, message }) if code == WIRE_RESUME => {
+                last = message;
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Err(ServeError::Resume(format!("session {resume_id} never became resumable: {last}")))
+}
+
+/// End-to-end smoke: an in-process daemon on a loopback port, `n_clients`
+/// concurrent streams over the same dataset (1 fit + N−1 cache hits, N
+/// distinct optimizer seeds), a disconnect → resume leg, and a bitwise
+/// comparison of every final frame against a direct [`TsneSession`] run at
+/// the same thread count. This is what `acc-tsne serve --smoke N` runs and
+/// what the CI serve job gates on.
+pub fn run_smoke(
+    n_clients: usize,
+    n_threads: usize,
+    n_iter: usize,
+    seed: u64,
+) -> Result<SmokeReport, ServeError> {
+    let n_clients = n_clients.max(1);
+    let nt = if n_threads == 0 { available_cores() } else { n_threads };
+    // Enough iterations that the disconnect leg reliably hangs up mid-run.
+    let n_iter = n_iter.max(30);
+    let ds = crate::data::synthetic::gaussian_mixture::<f64>(256, 16, 4, 4.0, seed);
+    let perplexity = 12.0;
+    let theta = 0.5;
+    let mut server = start(&ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        n_threads: nt,
+        ..ServeConfig::default()
+    })?;
+    let addr = server.addr().to_string();
+
+    // N concurrent clients: same points ⇒ one fit, N−1 artifact-cache hits;
+    // distinct seeds ⇒ N distinct trajectories multiplexed fairly.
+    let mut joins = Vec::new();
+    for i in 0..n_clients {
+        let addr = addr.clone();
+        let points = ds.points.clone();
+        let (n, d) = (ds.n, ds.d);
+        let client_seed = seed.wrapping_add(1 + i as u64);
+        joins.push(std::thread::spawn(move || {
+            run_client(
+                &addr,
+                &Request {
+                    resume_id: 0,
+                    n: n as u64,
+                    d: d as u64,
+                    n_iter: n_iter as u64,
+                    snapshot_every: (n_iter / 4).max(1) as u64,
+                    seed: client_seed,
+                    perplexity,
+                    theta,
+                    points,
+                },
+            )
+        }));
+    }
+    let mut runs = Vec::new();
+    for j in joins {
+        let run = j.join().map_err(|_| ServeError::Verify("client thread panicked".into()))??;
+        if run.snapshots == 0 {
+            return Err(ServeError::Verify("client saw no progressive frames".into()));
+        }
+        runs.push(run);
+    }
+
+    // Disconnect → resume leg: hang up right after the Hello; the server
+    // must detach only that session, then continue it on request.
+    let resume_seed = seed.wrapping_add(10_000);
+    let detached_id = {
+        let mut stream = TcpStream::connect(&addr)?;
+        write_request(
+            &mut stream,
+            &Request {
+                resume_id: 0,
+                n: ds.n as u64,
+                d: ds.d as u64,
+                n_iter: n_iter as u64,
+                snapshot_every: 0,
+                seed: resume_seed,
+                perplexity,
+                theta,
+                points: ds.points.clone(),
+            },
+        )?;
+        match read_frame(&mut stream)? {
+            Frame::Hello { session_id, .. } => session_id,
+            Frame::Error { code, message } => return Err(ServeError::Remote { code, message }),
+            other => {
+                return Err(ServeError::Protocol(format!("expected a Hello frame, got {other:?}")))
+            }
+        }
+        // `stream` drops here: the disconnect the server must survive.
+    };
+    let resumed = poll_resume(&addr, detached_id, 500)?;
+
+    // Ground truth: direct in-process sessions at the same thread count.
+    let pool = ThreadPool::new(nt);
+    let plan = StagePlan::auto_for(ds.n);
+    let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, perplexity, &plan)?;
+    let base_cfg = TsneConfig {
+        perplexity,
+        theta,
+        n_iter,
+        n_threads: nt,
+        ..TsneConfig::default()
+    };
+    for (i, run) in runs.iter().enumerate() {
+        let cfg = TsneConfig { seed: seed.wrapping_add(1 + i as u64), ..base_cfg };
+        let mut direct = TsneSession::new(&aff, plan, cfg)?;
+        direct.run(n_iter);
+        let want = direct.finish();
+        assert_bits_equal(&want.embedding, &run.embedding, &format!("client {i}"))?;
+    }
+    let cfg = TsneConfig { seed: resume_seed, ..base_cfg };
+    let mut direct = TsneSession::new(&aff, plan, cfg)?;
+    direct.run(n_iter);
+    let want = direct.finish();
+    assert_bits_equal(&want.embedding, &resumed.embedding, "resumed client")?;
+
+    let stats = server.stats();
+    server.shutdown();
+    Ok(SmokeReport { clients: n_clients, n_threads: nt, n_iter, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::gaussian_mixture;
+
+    fn sample_request() -> Request {
+        Request {
+            resume_id: 0,
+            n: 3,
+            d: 2,
+            n_iter: 100,
+            snapshot_every: 10,
+            seed: 7,
+            perplexity: 2.0,
+            theta: 0.5,
+            points: vec![0.0, 1.0, -2.5, std::f64::consts::PI, 4.0, 5.5],
+        }
+    }
+
+    #[test]
+    fn request_roundtrip_preserves_every_bit() {
+        let req = sample_request();
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req).unwrap();
+        let got = read_request(&mut &buf[..], 1_000_000).unwrap();
+        assert_eq!(got, req);
+    }
+
+    #[test]
+    fn request_checksum_flip_is_a_typed_error() {
+        let req = sample_request();
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req).unwrap();
+        // Flip one bit in a point coordinate (after magic + header).
+        let idx = 8 + REQUEST_HEAD_LEN + 3;
+        buf[idx] ^= 0x40;
+        match read_request(&mut &buf[..], 1_000_000) {
+            Err(ServeError::Protocol(m)) => assert!(m.contains("checksum"), "{m}"),
+            other => panic!("expected a checksum error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn request_truncated_at_every_boundary_never_panics() {
+        let req = sample_request();
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req).unwrap();
+        for cut in 0..buf.len() {
+            let r = read_request(&mut &buf[..cut], 1_000_000);
+            assert!(r.is_err(), "cut at {cut} must fail");
+        }
+    }
+
+    #[test]
+    fn request_size_guards_reject_hostile_headers() {
+        // n beyond the server limit.
+        let mut req = sample_request();
+        req.n = 10_000_000;
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req).unwrap();
+        assert!(matches!(read_request(&mut &buf[..], 1_000), Err(ServeError::Protocol(_))));
+        // absurd d.
+        let mut req = sample_request();
+        req.d = MAX_DIMS + 1;
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req).unwrap();
+        assert!(matches!(read_request(&mut &buf[..], 1_000_000), Err(ServeError::Protocol(_))));
+        // n·d overflow attempt.
+        let mut req = sample_request();
+        req.n = u64::MAX / 2;
+        req.d = 3;
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req).unwrap();
+        assert!(matches!(
+            read_request(&mut &buf[..], usize::MAX),
+            Err(ServeError::Protocol(_))
+        ));
+        // resume requests must not carry points.
+        let mut req = sample_request();
+        req.resume_id = 42;
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req).unwrap();
+        assert!(matches!(read_request(&mut &buf[..], 1_000_000), Err(ServeError::Protocol(_))));
+    }
+
+    #[test]
+    fn frame_roundtrip_every_kind() {
+        let frames = vec![
+            Frame::Hello { session_id: 99, cache_hit: true },
+            Frame::Hello { session_id: 1, cache_hit: false },
+            Frame::Snapshot {
+                iter: 50,
+                kl: 1.25,
+                grad_norm: 3.5e-3,
+                embedding: vec![1.0, -2.0, 0.5, std::f64::consts::PI],
+            },
+            Frame::Final { iter: 1000, kl: 0.75, grad_norm: 1e-7, embedding: vec![0.0; 8] },
+            Frame::Error { code: WIRE_FIT, message: "too few points".into() },
+        ];
+        for f in &frames {
+            let mut buf = Vec::new();
+            write_frame(&mut buf, f).unwrap();
+            let got = read_frame(&mut &buf[..]).unwrap();
+            assert_eq!(&got, f);
+        }
+        // All frames concatenated still parse in order (length-prefixed).
+        let mut buf = Vec::new();
+        for f in &frames {
+            write_frame(&mut buf, f).unwrap();
+        }
+        let mut c: &[u8] = &buf;
+        for f in &frames {
+            assert_eq!(&read_frame(&mut c).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn frame_corruption_and_truncation_are_typed_errors() {
+        let f = Frame::Snapshot {
+            iter: 7,
+            kl: 2.0,
+            grad_norm: 0.1,
+            embedding: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+        // Bit flip anywhere after the magic → checksum or guard error.
+        for idx in 8..buf.len() {
+            let mut bad = buf.clone();
+            bad[idx] ^= 0x01;
+            assert!(read_frame(&mut &bad[..]).is_err(), "flip at {idx} must fail");
+        }
+        // Truncation at every boundary → Io error, no panic.
+        for cut in 0..buf.len() {
+            assert!(read_frame(&mut &buf[..cut]).is_err(), "cut at {cut} must fail");
+        }
+    }
+
+    #[test]
+    fn frame_payload_guard_rejects_absurd_lengths() {
+        let f = Frame::Hello { session_id: 1, cache_hit: false };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+        // Patch payload_len (last 8 bytes of the header) to a huge value.
+        let len_off = 8 + FRAME_HEAD_LEN - 8;
+        buf[len_off..len_off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        match read_frame(&mut &buf[..]) {
+            Err(ServeError::Protocol(m)) => assert!(m.contains("payload"), "{m}"),
+            other => panic!("expected a payload guard error, got {other:?}"),
+        }
+    }
+
+    fn tiny_affinities() -> Arc<Affinities<'static, f64>> {
+        let ds = gaussian_mixture::<f64>(64, 4, 2, 4.0, 5);
+        let pool = ThreadPool::new(2);
+        let plan = StagePlan::acc_tsne();
+        Arc::new(Affinities::fit(&pool, &ds.points, ds.n, ds.d, 5.0, &plan).expect("fit"))
+    }
+
+    #[test]
+    fn cache_hit_returns_the_same_shared_artifact() {
+        let cache = ArtifactCache::new(4);
+        let ds = gaussian_mixture::<f64>(64, 4, 2, 4.0, 5);
+        let key = CacheKey::for_points(&ds.points, ds.n, ds.d, 5.0);
+        assert!(cache.lookup(&key).is_none());
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        let aff = tiny_affinities();
+        cache.insert(key, Arc::clone(&aff));
+        let got = cache.lookup(&key).expect("hit");
+        assert!(Arc::ptr_eq(&got, &aff), "hit must return the same shared Arc");
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        // A different perplexity is a different artifact.
+        let other = CacheKey::for_points(&ds.points, ds.n, ds.d, 7.0);
+        assert!(cache.lookup(&other).is_none());
+        assert_ne!(key, other);
+    }
+
+    #[test]
+    fn cache_key_tracks_data_bytes_exactly() {
+        let ds = gaussian_mixture::<f64>(64, 4, 2, 4.0, 5);
+        let k1 = CacheKey::for_points(&ds.points, ds.n, ds.d, 5.0);
+        let mut tweaked = ds.points.clone();
+        tweaked[17] = tweaked[17].next_up();
+        let k2 = CacheKey::for_points(&tweaked, ds.n, ds.d, 5.0);
+        assert_ne!(k1, k2, "a 1-ulp change must miss the cache");
+    }
+
+    #[test]
+    fn cache_eviction_is_lru_and_never_kills_live_artifacts() {
+        let cache = ArtifactCache::new(2);
+        let aff = tiny_affinities();
+        let keys: Vec<CacheKey> = (0..3)
+            .map(|i| CacheKey { data_fp: i, n: 64, d: 4, perplexity_bits: 0 })
+            .collect();
+        cache.insert(keys[0], Arc::clone(&aff));
+        cache.insert(keys[1], Arc::clone(&aff));
+        // Touch key 0 so key 1 is the LRU.
+        let held = cache.lookup(&keys[0]).expect("hit");
+        cache.insert(keys[2], Arc::clone(&aff));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.lookup(&keys[1]).is_none(), "LRU entry must be evicted");
+        assert!(cache.lookup(&keys[0]).is_some());
+        assert!(cache.lookup(&keys[2]).is_some());
+        // The evicted artifact itself is still alive through our Arc: an
+        // active session's borrow is never invalidated by eviction.
+        assert!(held.n() == 64);
+        assert!(Arc::strong_count(&aff) >= 2);
+    }
+
+    #[test]
+    fn percentile_picks_sane_indices() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[3.0], 0.99), 3.0);
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert!((percentile(&v, 0.5) - 50.0).abs() <= 1.0);
+        assert!(percentile(&v, 0.99) >= 98.0);
+    }
+}

@@ -54,6 +54,7 @@ use crate::quadtree::summarize::{summarize_parallel, summarize_sequential};
 use crate::sparse::{symmetrize, CsrMatrix};
 use std::borrow::Cow;
 use std::path::Path;
+use std::sync::Arc;
 
 /// Fewest points an affinity fit accepts (below this the ⌊3u⌋ neighbor
 /// support and the quadtree degenerate; the historical `assert!(n >= 8)`
@@ -175,8 +176,10 @@ fn check_perplexity(perplexity: f64) -> Result<(), FitError> {
 /// FNV-1a fingerprint of the raw input points (each coordinate's f64 bit
 /// pattern, little-endian). Lets a loaded [`KnnGraph`] be checked against
 /// the dataset it is about to serve ([`KnnGraph::verify_source`]) at O(n·d)
-/// cost — noise next to the KNN it replaces.
-fn data_fingerprint<T: Scalar>(points: &[T]) -> u64 {
+/// cost — noise next to the KNN it replaces. Crate-visible: the serving
+/// artifact cache ([`crate::tsne::serve`]) keys fitted affinities on the
+/// same fingerprint, so a cache hit is exactly "same bytes, same fit".
+pub(crate) fn data_fingerprint<T: Scalar>(points: &[T]) -> u64 {
     let mut h = Fnv1a64::new();
     for &v in points {
         h.update(&v.to_f64().to_le_bytes());
@@ -787,6 +790,29 @@ const PROGRESS_REL_TOL: f64 = 1e-3;
 /// the O(n log n) tree + force work of each iteration.
 const GUARD_EVERY_DEFAULT: usize = 50;
 
+/// How a session holds its parallel pool: exclusively owned (the default —
+/// one pool per session, sized from `cfg.n_threads`) or shared with other
+/// sessions (`Arc`, the serving path). [`ThreadPool::broadcast`] runs one
+/// parallel region at a time, so sessions sharing a pool must have their
+/// `step()` calls externally serialized — `tsne::serve`'s round-robin turn
+/// scheduler does exactly that. The trajectory depends only on the pool's
+/// thread *count*, so a shared pool of `k` threads is bit-identical to an
+/// owned pool of `k` threads.
+enum PoolRef {
+    Owned(ThreadPool),
+    Shared(Arc<ThreadPool>),
+}
+
+impl PoolRef {
+    #[inline]
+    fn get(&self) -> &ThreadPool {
+        match self {
+            PoolRef::Owned(p) => p,
+            PoolRef::Shared(p) => p,
+        }
+    }
+}
+
 /// A resumable t-SNE optimizer over fitted [`Affinities`].
 ///
 /// Owns the iteration workspace (embedding, force buffers, optimizer state,
@@ -798,7 +824,7 @@ pub struct TsneSession<'a, T: Scalar> {
     aff: &'a Affinities<'a, T>,
     plan: StagePlan,
     cfg: TsneConfig,
-    pool: ThreadPool,
+    pool: PoolRef,
     seq_pool: ThreadPool,
     ws: IterationWorkspace<T>,
     times: StepTimes,
@@ -835,9 +861,52 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
         cfg: TsneConfig,
         y0: Vec<T>,
     ) -> Result<TsneSession<'a, T>, PlanError> {
+        let nt = if cfg.n_threads == 0 { available_cores() } else { cfg.n_threads };
+        Self::build(aff, plan, cfg, y0, PoolRef::Owned(ThreadPool::new(nt)))
+    }
+
+    /// [`Self::new`] on a caller-provided **shared** pool: every parallel
+    /// region of this session broadcasts over `pool` instead of a pool of its
+    /// own — the serving path, where N concurrent sessions multiplex one pool
+    /// sized to the machine rather than spawning N × threads.
+    ///
+    /// Contract: [`ThreadPool::broadcast`] runs one parallel region at a
+    /// time, so `step()` calls of sessions sharing a pool must not run
+    /// concurrently (the `tsne::serve` scheduler serializes them into
+    /// round-robin turns). `cfg.n_threads` is ignored; the trajectory is
+    /// bit-identical to an owned-pool session with
+    /// `n_threads = pool.n_threads()`.
+    pub fn new_shared(
+        aff: &'a Affinities<'a, T>,
+        plan: StagePlan,
+        cfg: TsneConfig,
+        pool: Arc<ThreadPool>,
+    ) -> Result<TsneSession<'a, T>, PlanError> {
+        let y0 = random_init::<T>(aff.n(), cfg.seed);
+        Self::with_init_shared(aff, plan, cfg, y0, pool)
+    }
+
+    /// [`Self::with_init`] on a shared pool — see [`Self::new_shared`] for
+    /// the serialization contract.
+    pub fn with_init_shared(
+        aff: &'a Affinities<'a, T>,
+        plan: StagePlan,
+        cfg: TsneConfig,
+        y0: Vec<T>,
+        pool: Arc<ThreadPool>,
+    ) -> Result<TsneSession<'a, T>, PlanError> {
+        Self::build(aff, plan, cfg, y0, PoolRef::Shared(pool))
+    }
+
+    fn build(
+        aff: &'a Affinities<'a, T>,
+        plan: StagePlan,
+        cfg: TsneConfig,
+        y0: Vec<T>,
+        pool: PoolRef,
+    ) -> Result<TsneSession<'a, T>, PlanError> {
         plan.validate()?;
         assert_eq!(y0.len(), 2 * aff.n(), "initial embedding must be 2n interleaved x,y");
-        let nt = if cfg.n_threads == 0 { available_cores() } else { cfg.n_threads };
         // The FFT path never builds a tree, so a Zorder plan simply never
         // adopts a permutation there — layout alone decides the workspace
         // shape on every preset.
@@ -846,7 +915,7 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
             aff,
             plan,
             cfg,
-            pool: ThreadPool::new(nt),
+            pool,
             seq_pool: ThreadPool::new(1),
             ws: IterationWorkspace::new(y0, cfg.update, zorder, plan.adopt_drift_pct),
             times: StepTimes::new(),
@@ -991,6 +1060,7 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
             attractive_override,
             ..
         } = *self;
+        let pool: &ThreadPool = pool.get();
         let force_pool: &ThreadPool = if plan.forces_parallel { pool } else { seq_pool };
         let tree_pool: &ThreadPool = if plan.tree_parallel { pool } else { seq_pool };
         let attractive: &dyn AttractiveEngine<T> = match attractive_override {
@@ -1109,7 +1179,7 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
         if zorder {
             if let Some(perm) = layout_perm {
                 self.ws
-                    .adopt_permutation(&self.pool, &perm, self.aff.p())
+                    .adopt_permutation(self.pool.get(), &perm, self.aff.p())
                     .expect("guard checkpoint carries the permutation it was captured with");
             }
         }
@@ -1238,6 +1308,29 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
         cfg: TsneConfig,
         ck: SessionCheckpoint<T>,
     ) -> Result<TsneSession<'a, T>, PersistError> {
+        Self::from_checkpoint_impl(aff, plan, cfg, ck, None)
+    }
+
+    /// [`Self::from_checkpoint`] on a shared pool — the serving path's
+    /// resume-after-disconnect. Same validation and bit-identity contract;
+    /// same serialization contract as [`Self::new_shared`].
+    pub fn from_checkpoint_shared(
+        aff: &'a Affinities<'a, T>,
+        plan: StagePlan,
+        cfg: TsneConfig,
+        ck: SessionCheckpoint<T>,
+        pool: Arc<ThreadPool>,
+    ) -> Result<TsneSession<'a, T>, PersistError> {
+        Self::from_checkpoint_impl(aff, plan, cfg, ck, Some(pool))
+    }
+
+    fn from_checkpoint_impl(
+        aff: &'a Affinities<'a, T>,
+        plan: StagePlan,
+        cfg: TsneConfig,
+        ck: SessionCheckpoint<T>,
+        shared_pool: Option<Arc<ThreadPool>>,
+    ) -> Result<TsneSession<'a, T>, PersistError> {
         if ck.y.len() % 2 != 0
             || ck.velocity.len() != ck.y.len()
             || ck.gains.len() != ck.y.len()
@@ -1279,7 +1372,10 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
             layout_perm,
             ..
         } = ck;
-        let mut sess = Self::with_init(aff, plan, cfg, y)?;
+        let mut sess = match shared_pool {
+            Some(pool) => Self::with_init_shared(aff, plan, cfg, y, pool)?,
+            None => Self::with_init(aff, plan, cfg, y)?,
+        };
         sess.ws.opt.velocity.copy_from_slice(&velocity);
         sess.ws.opt.gains.copy_from_slice(&gains);
         sess.iter = iter;
@@ -1288,7 +1384,7 @@ impl<'a, T: Scalar> TsneSession<'a, T> {
         if sess.plan.layout == Layout::Zorder {
             if let Some(perm) = layout_perm {
                 let Self { ref pool, ref mut ws, aff, .. } = sess;
-                ws.adopt_permutation(pool, &perm, aff.p()).map_err(PersistError::Corrupt)?;
+                ws.adopt_permutation(pool.get(), &perm, aff.p()).map_err(PersistError::Corrupt)?;
             }
         }
         Ok(sess)
@@ -2044,5 +2140,35 @@ mod tests {
         let r = sess.finish();
         assert!(r.embedding.iter().all(|v| v.is_finite()));
         assert!(r.kl_divergence.is_finite());
+    }
+
+    #[test]
+    fn shared_pool_session_bit_identical_to_owned_pool() {
+        // The serving contract: a session broadcasting over a shared pool of
+        // k threads must reproduce an owned-pool session with n_threads = k
+        // exactly — the trajectory depends only on the thread count.
+        let ds = gaussian_mixture::<f64>(300, 8, 4, 4.0, 3);
+        let pool = ThreadPool::new(4);
+        let plan = StagePlan::acc_tsne();
+        let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, 10.0, &plan).expect("fit");
+        let cfg = quick_cfg(40);
+        let shared = Arc::new(ThreadPool::new(4));
+        let mut owned = TsneSession::new(&aff, plan, cfg).expect("owned session");
+        let mut shared_sess =
+            TsneSession::new_shared(&aff, plan, cfg, Arc::clone(&shared)).expect("shared session");
+        owned.run(40);
+        shared_sess.run(40);
+        // Mid-run checkpoints resume bit-identically on the shared pool too.
+        let ck = shared_sess.to_checkpoint();
+        let resumed = TsneSession::from_checkpoint_shared(&aff, plan, cfg, ck, shared)
+            .expect("resume on shared pool");
+        let ya = owned.finish().embedding;
+        let yb = shared_sess.finish().embedding;
+        let yc = resumed.finish().embedding;
+        assert_eq!(ya.len(), yb.len());
+        for i in 0..ya.len() {
+            assert_eq!(ya[i].to_bits(), yb[i].to_bits(), "shared vs owned at {i}");
+            assert_eq!(yb[i].to_bits(), yc[i].to_bits(), "resume parity at {i}");
+        }
     }
 }

@@ -16,6 +16,11 @@
 //!   boundary — the disk-full torn-file case;
 //! - a rename failure, and a crash between staging and rename (cleanup never
 //!   runs, the staging file is abandoned).
+//!
+//! The serving wire protocol gets the same treatment: a torn/short frame
+//! write to a client fails with a typed error, the partial bytes never parse
+//! back into a frame, and neither the live session the frame was drawn from
+//! nor the cached `Affinities` artifact is perturbed.
 
 use acc_tsne::data::io::Medium;
 use acc_tsne::data::synthetic::gaussian_mixture;
@@ -320,4 +325,111 @@ fn fault_injection_hnsw_graphs_survive_and_torn_files_never_load() {
         &|medium, path| b.save_on(medium, path),
         &|path| KnnGraph::<f64>::load(path).map(|_| ()),
     );
+}
+
+/// The serving analog of the torn-file proof: fail the frame codec at every
+/// write boundary of a snapshot frame (magic, head, payload, checksum), with
+/// and without a short write, and prove that (1) the writer surfaces a plain
+/// `io::Error`, (2) the torn byte prefix never parses back into a [`Frame`],
+/// and (3) the session the snapshot was drawn from and the cached artifact
+/// it descends are both untouched — the session finishes bit-identical to an
+/// uninterrupted run and the cache still serves the same live allocation.
+#[test]
+fn fault_injection_torn_serve_frames_never_corrupt_sessions_or_cached_artifacts() {
+    use acc_tsne::tsne::serve::{
+        read_frame, write_frame, ArtifactCache, CacheKey, Frame, ServeError,
+    };
+    use std::sync::Arc;
+
+    /// An in-memory stream that fails its `fail_at`-th write, keeping
+    /// `short_by` bytes of it — the socket-side twin of [`FaultFile`].
+    struct FailingSink {
+        buf: Vec<u8>,
+        writes: usize,
+        fail_at: usize,
+        short_by: usize,
+    }
+
+    impl Write for FailingSink {
+        fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+            let k = self.writes;
+            self.writes += 1;
+            if k == self.fail_at {
+                let keep = self.short_by.min(b.len());
+                self.buf.extend_from_slice(&b[..keep]);
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::BrokenPipe,
+                    "injected frame fault",
+                ));
+            }
+            self.buf.extend_from_slice(b);
+            Ok(b.len())
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    let ds = gaussian_mixture::<f64>(160, 8, 4, 8.0, 88);
+    let aff = Arc::new(
+        Affinities::fit(&pool(), &ds.points, ds.n, ds.d, 10.0, &StagePlan::acc_tsne()).unwrap(),
+    );
+    let cache = ArtifactCache::new(2);
+    let key = CacheKey::for_points(&ds.points, ds.n, ds.d, 10.0);
+    cache.insert(key, Arc::clone(&aff));
+    let held = cache.lookup(&key).expect("cache hit");
+
+    let cfg = TsneConfig { perplexity: 10.0, n_threads: 2, seed: 9, ..TsneConfig::default() };
+    let n_iter = 20;
+    let baseline = {
+        let mut s = TsneSession::new(&held, StagePlan::acc_tsne(), cfg).unwrap();
+        s.run(n_iter);
+        s.finish().embedding
+    };
+
+    let mut sess = TsneSession::new(&held, StagePlan::acc_tsne(), cfg).unwrap();
+    sess.run(n_iter / 2);
+    let frame = Frame::Snapshot {
+        iter: sess.iterations() as u64,
+        kl: sess.kl(),
+        grad_norm: sess.last_grad_norm(),
+        embedding: sess.embedding(),
+    };
+
+    // A fault-free pass counts the write boundaries the sweep must cover.
+    let mut clean = FailingSink { buf: Vec::new(), writes: 0, fail_at: usize::MAX, short_by: 0 };
+    write_frame(&mut clean, &frame).expect("fault-free frame write");
+    let boundaries = clean.writes;
+    let full = clean.buf;
+    assert!(boundaries >= 4, "magic + head + payload + checksum");
+
+    for k in 0..boundaries {
+        for short_by in [0usize, 3] {
+            let mut sink = FailingSink { buf: Vec::new(), writes: 0, fail_at: k, short_by };
+            let err = write_frame(&mut sink, &frame).expect_err("torn frame write must error");
+            assert_eq!(err.kind(), std::io::ErrorKind::BrokenPipe);
+            assert!(
+                sink.buf.len() < full.len(),
+                "boundary {k} short {short_by}: the torn stream must be a strict prefix"
+            );
+            match read_frame(&mut &sink.buf[..]) {
+                Err(ServeError::Io(_) | ServeError::Protocol(_)) => {}
+                Ok(f) => panic!("torn frame at boundary {k} short {short_by} parsed as {f:?}"),
+                Err(other) => panic!("boundary {k}: unexpected error family: {other:?}"),
+            }
+        }
+    }
+
+    // The session the frames were drawn from never noticed: it lands exactly
+    // where the uninterrupted baseline did.
+    sess.run(n_iter - n_iter / 2);
+    let finished = sess.finish().embedding;
+    assert_eq!(finished.len(), baseline.len());
+    for (i, (a, b)) in baseline.iter().zip(&finished).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "coordinate {i} diverged after torn frame writes");
+    }
+    // ... and the cache still serves the same live allocation.
+    let again = cache.lookup(&key).expect("artifact still cached");
+    assert!(Arc::ptr_eq(&again, &aff));
 }

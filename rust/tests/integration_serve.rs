@@ -1,0 +1,298 @@
+//! End-to-end tests for the embedding-as-a-service daemon (`tsne::serve`)
+//! over real loopback sockets.
+//!
+//! The serving contract under test:
+//! - N concurrent clients stream progressive frames and every final frame is
+//!   **bit-identical** to a direct in-process `TsneSession` at the same
+//!   thread count (the determinism matrix runs this file under
+//!   RAYON_NUM_THREADS ∈ {1, 4, 8});
+//! - identical request bytes hit the artifact cache (one fit, N−1 hits) and
+//!   concurrent lookups share one `Affinities` allocation;
+//! - a mid-stream client disconnect tears down only that session — every
+//!   other stream completes unperturbed, and the detached session resumes
+//!   bit-identically;
+//! - eviction never invalidates an artifact under an active session;
+//! - hostile bytes on the wire come back as typed error frames, never a
+//!   wedged server.
+
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use acc_tsne::data::synthetic::gaussian_mixture;
+use acc_tsne::data::Dataset;
+use acc_tsne::parallel::pool::available_cores;
+use acc_tsne::parallel::ThreadPool;
+use acc_tsne::tsne::serve::{
+    self, read_frame, run_client, write_request, ArtifactCache, CacheKey, Frame, Request,
+    ServeConfig, ServeError, WIRE_PROTOCOL,
+};
+use acc_tsne::tsne::{Affinities, StagePlan, TsneConfig, TsneSession};
+
+const PERPLEXITY: f64 = 12.0;
+const THETA: f64 = 0.5;
+
+fn dataset(seed: u64) -> Dataset<f64> {
+    gaussian_mixture::<f64>(256, 16, 4, 4.0, seed)
+}
+
+fn request(ds: &Dataset<f64>, n_iter: usize, every: usize, seed: u64) -> Request {
+    Request {
+        resume_id: 0,
+        n: ds.n as u64,
+        d: ds.d as u64,
+        n_iter: n_iter as u64,
+        snapshot_every: every as u64,
+        seed,
+        perplexity: PERPLEXITY,
+        theta: THETA,
+        points: ds.points.clone(),
+    }
+}
+
+/// Ground truth: a direct in-process session at `nt` threads.
+fn direct_embedding(
+    ds: &Dataset<f64>,
+    n_iter: usize,
+    seed: u64,
+    nt: usize,
+) -> Vec<f64> {
+    let pool = ThreadPool::new(nt);
+    let plan = StagePlan::auto_for(ds.n);
+    let aff = Affinities::fit(&pool, &ds.points, ds.n, ds.d, PERPLEXITY, &plan).expect("fit");
+    let cfg = TsneConfig {
+        perplexity: PERPLEXITY,
+        theta: THETA,
+        n_iter,
+        seed,
+        n_threads: nt,
+        ..TsneConfig::default()
+    };
+    let mut sess = TsneSession::new(&aff, plan, cfg).expect("session");
+    sess.run(n_iter);
+    sess.finish().embedding
+}
+
+fn assert_bits(want: &[f64], got: &[f64], what: &str) {
+    assert_eq!(want.len(), got.len(), "{what}: length mismatch");
+    for (i, (w, g)) in want.iter().zip(got).enumerate() {
+        assert_eq!(w.to_bits(), g.to_bits(), "{what}: coordinate {i}: {g:e} vs {w:e}");
+    }
+}
+
+/// The acceptance headline: ≥ 8 concurrent sessions over one shared pool,
+/// progressive frames on every stream, every final frame bit-identical to a
+/// direct session at the same thread count — including a disconnect→resume
+/// leg. `run_smoke` *is* the CI smoke (`acc-tsne serve --smoke 8`); driving
+/// it here keeps the contract under `cargo test` and the determinism matrix.
+#[test]
+fn serve_eight_concurrent_clients_bit_identical_to_direct_runs() {
+    let report = serve::run_smoke(8, 0, 30, 17).expect("smoke must verify");
+    assert_eq!(report.clients, 8);
+    assert_eq!(report.n_threads, available_cores());
+    assert_eq!(report.stats.cache_misses, 1, "same bytes ⇒ one fit");
+    assert!(report.stats.cache_hits >= 8, "7 fleet hits + the resume leg's fresh request");
+    assert_eq!(report.stats.sessions_detached, 1);
+    assert_eq!(report.stats.sessions_resumed, 1);
+    assert!(report.stats.sessions_completed >= 9, "8 clients + the resumed session");
+    assert_eq!(report.stats.protocol_errors, 0);
+    assert!(report.stats.steps >= 8 * 30);
+    assert!(report.stats.step_p99_s >= report.stats.step_p50_s);
+}
+
+/// The regression test for the mid-stream-disconnect fix: victim B hangs up
+/// while survivor A is mid-run; A must complete bit-identically (no pool
+/// poisoning, no partial frame leaking into A's stream — its codec would
+/// reject the bytes), and B resumes bit-identically later.
+#[test]
+fn serve_mid_stream_disconnect_tears_down_only_that_session() {
+    let nt = available_cores();
+    let n_iter = 60usize;
+    let ds = dataset(5);
+    let mut server = serve::start(&ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        n_threads: nt,
+        ..ServeConfig::default()
+    })
+    .expect("server");
+    let addr = server.addr().to_string();
+
+    // Survivor A: a full run with a snapshot every iteration — if B's
+    // teardown leaked a partial frame into A's stream, A's checksummed
+    // codec would fail loudly.
+    let a_addr = addr.clone();
+    let a_req = request(&ds, n_iter, 1, 1000);
+    let a = std::thread::spawn(move || run_client(&a_addr, &a_req).expect("survivor client"));
+
+    // Victim B: connect, read the Hello, hang up mid-run.
+    let b_id = {
+        let mut stream = TcpStream::connect(&addr).expect("connect");
+        write_request(&mut stream, &request(&ds, n_iter, 0, 2000)).expect("request");
+        match read_frame(&mut stream).expect("hello") {
+            Frame::Hello { session_id, .. } => session_id,
+            other => panic!("expected Hello, got {other:?}"),
+        }
+    };
+
+    let a_run = a.join().expect("survivor thread");
+    assert_eq!(a_run.snapshots, n_iter - 1, "one frame per iteration, last rides in Final");
+    let want_a = direct_embedding(&ds, n_iter, 1000, nt);
+    assert_bits(&want_a, &a_run.embedding, "survivor");
+
+    // B's session was parked, not poisoned: it resumes and lands exactly
+    // where an uninterrupted run would.
+    let resumed = serve::poll_resume(&addr, b_id, 500).expect("resume");
+    let want_b = direct_embedding(&ds, n_iter, 2000, nt);
+    assert_bits(&want_b, &resumed.embedding, "resumed victim");
+
+    let stats = server.stats();
+    assert_eq!(stats.sessions_detached, 1);
+    assert_eq!(stats.sessions_resumed, 1);
+    assert!(stats.sessions_completed >= 2, "survivor + resumed victim");
+    server.shutdown();
+}
+
+/// Identical request bytes must fit once: the second client's Hello carries
+/// `cache_hit` and, at the same seed, its trajectory is the same fit run
+/// twice — bit-identical output is the strongest possible "same artifact"
+/// check.
+#[test]
+fn serve_cache_hit_skips_the_fit_for_identical_bytes() {
+    let ds = dataset(7);
+    let mut server = serve::start(&ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        n_threads: 2,
+        ..ServeConfig::default()
+    })
+    .expect("server");
+    let addr = server.addr().to_string();
+    let req = request(&ds, 25, 5, 42);
+    let first = run_client(&addr, &req).expect("first client");
+    let second = run_client(&addr, &req).expect("second client");
+    assert!(!first.cache_hit, "a fresh server has nothing cached");
+    assert!(second.cache_hit, "identical bytes at the same perplexity must hit");
+    assert_bits(&first.embedding, &second.embedding, "same fit, same seed");
+    // A 1-ulp perturbation is a different fingerprint — it must miss.
+    let mut tweaked = req.clone();
+    tweaked.points[3] = tweaked.points[3].next_up();
+    let third = run_client(&addr, &tweaked).expect("third client");
+    assert!(!third.cache_hit, "different bytes must not reuse the artifact");
+    let stats = server.stats();
+    assert_eq!(stats.cache_misses, 2);
+    assert_eq!(stats.cache_hits, 1);
+    server.shutdown();
+}
+
+/// Concurrent lookups of one key return clones of one shared allocation —
+/// N sessions over one fit, the crate's fit-once/descend-many contract
+/// extended across threads.
+#[test]
+fn serve_concurrent_cache_lookups_share_one_artifact() {
+    let ds = dataset(9);
+    let pool = ThreadPool::new(2);
+    let plan = StagePlan::acc_tsne();
+    let aff = Arc::new(
+        Affinities::fit(&pool, &ds.points, ds.n, ds.d, PERPLEXITY, &plan).expect("fit"),
+    );
+    let cache = Arc::new(ArtifactCache::new(4));
+    let key = CacheKey::for_points(&ds.points, ds.n, ds.d, PERPLEXITY);
+    cache.insert(key, Arc::clone(&aff));
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            let cache = Arc::clone(&cache);
+            std::thread::spawn(move || cache.lookup(&key).expect("hit"))
+        })
+        .collect();
+    for h in handles {
+        let got = h.join().expect("lookup thread");
+        assert!(Arc::ptr_eq(&got, &aff), "every concurrent hit shares the same allocation");
+    }
+    assert_eq!(cache.hits(), 8);
+    assert_eq!(cache.misses(), 0);
+}
+
+/// LRU eviction drops only the cache's own reference: a session actively
+/// stepping on an evicted artifact keeps it alive and finishes bit-identical
+/// to a session whose artifact was never evicted.
+#[test]
+fn serve_cache_eviction_never_drops_an_artifact_under_an_active_session() {
+    let ds = dataset(13);
+    let pool = ThreadPool::new(2);
+    let plan = StagePlan::auto_for(ds.n);
+    let cfg = TsneConfig {
+        perplexity: PERPLEXITY,
+        theta: THETA,
+        n_iter: 20,
+        seed: 3,
+        n_threads: 2,
+        ..TsneConfig::default()
+    };
+    let aff = Arc::new(
+        Affinities::fit(&pool, &ds.points, ds.n, ds.d, PERPLEXITY, &plan).expect("fit"),
+    );
+    let baseline = {
+        let mut sess = TsneSession::new(&aff, plan, cfg).expect("session");
+        sess.run(20);
+        sess.finish().embedding
+    };
+
+    let cache = ArtifactCache::new(1);
+    let key = CacheKey::for_points(&ds.points, ds.n, ds.d, PERPLEXITY);
+    cache.insert(key, Arc::clone(&aff));
+    let held = cache.lookup(&key).expect("hit");
+    let mut sess = TsneSession::new(&held, plan, cfg).expect("session over cached artifact");
+    sess.run(10);
+    // Capacity 1: inserting a different fit evicts the artifact mid-descent.
+    let other = dataset(14);
+    let other_aff = Arc::new(
+        Affinities::fit(&pool, &other.points, other.n, other.d, PERPLEXITY, &plan).expect("fit"),
+    );
+    cache.insert(CacheKey::for_points(&other.points, other.n, other.d, PERPLEXITY), other_aff);
+    assert!(cache.lookup(&key).is_none(), "the original entry is gone from the cache");
+    // ... but the session never notices: its Arc keeps the artifact alive.
+    sess.run(10);
+    assert_bits(&baseline, &sess.finish().embedding, "evicted-under-session");
+}
+
+/// Hostile bytes come back as a typed error frame on the wire (the CLI
+/// exit-code families), and the server keeps serving afterwards.
+#[test]
+fn serve_hostile_requests_get_typed_error_frames_and_the_server_survives() {
+    let ds = dataset(21);
+    let mut server = serve::start(&ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        n_threads: 1,
+        ..ServeConfig::default()
+    })
+    .expect("server");
+    let addr = server.addr().to_string();
+
+    // Unsupported protocol version (version field patched after encode).
+    let mut buf = Vec::new();
+    {
+        let req = request(&ds, 5, 0, 1);
+        serve::write_request(&mut buf, &req).expect("encode");
+        buf[8] = 0xFF; // version LSB — also breaks the checksum; both are protocol errors
+    }
+    let mut stream = TcpStream::connect(&addr).expect("connect");
+    use std::io::Write as _;
+    stream.write_all(&buf).expect("send");
+    match read_frame(&mut stream) {
+        Ok(Frame::Error { code, .. }) => assert_eq!(code, WIRE_PROTOCOL),
+        other => panic!("expected a protocol error frame, got {other:?}"),
+    }
+    drop(stream);
+
+    // An empty-shape request is rejected by the size guards.
+    let hostile = Request { n: 0, d: 0, ..request(&ds, 5, 0, 1) };
+    match run_client(&addr, &hostile) {
+        Err(ServeError::Remote { code, .. }) => assert_eq!(code, WIRE_PROTOCOL),
+        other => panic!("expected a remote protocol error, got {other:?}"),
+    }
+
+    // The server is not wedged: a well-formed run still completes.
+    let ok = run_client(&addr, &request(&ds, 10, 0, 1)).expect("server still serves");
+    assert_eq!(ok.final_iter, 10);
+    let stats = server.stats();
+    assert!(stats.protocol_errors >= 2);
+    server.shutdown();
+}

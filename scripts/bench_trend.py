@@ -24,7 +24,18 @@ DEFAULT_SNAPSHOTS = [
     "rust/BENCH_gradient_loop.json",
     "rust/BENCH_fitsne.json",
     "rust/BENCH_knn.json",
+    "rust/BENCH_serving.json",
 ]
+
+
+def is_timing_key(key):
+    """A key the trend comparator treats as a duration (higher = worse).
+
+    Durations end in `_s` by convention. Rates end in `per_s` (e.g. the
+    serving group's `sessions_per_s`, where HIGHER is better) — they share
+    the suffix but must not be compared as timings, so they are exempt.
+    """
+    return key.endswith("_s") and not key.endswith("per_s")
 
 
 def flatten(d, prefix=""):
@@ -58,14 +69,14 @@ def main(paths):
         # Keys present in the current snapshot but not in the baseline are
         # tolerated, not flagged: new sweeps (e.g. the adopt_sweep.* keys of
         # BENCH_gradient_loop.json) appear before any baseline records them.
-        new_keys = [k for k in sorted(cur) if k.endswith("_s") and k not in base]
+        new_keys = [k for k in sorted(cur) if is_timing_key(k) and k not in base]
         if new_keys:
             print(
                 f"{path}: {len(new_keys)} key(s) without a baseline yet "
                 f"(refresh {base_path} to start their trend): " + ", ".join(new_keys)
             )
         for k in sorted(base):
-            if not k.endswith("_s") or k not in cur or base[k] <= 0:
+            if not is_timing_key(k) or k not in cur or base[k] <= 0:
                 continue
             ratio = cur[k] / base[k]
             if ratio > REGRESSION_THRESHOLD:

@@ -1,0 +1,142 @@
+#!/usr/bin/env python3
+"""Lint the GitHub Actions workflows in .github/workflows/.
+
+The workflows are load-bearing code (the serving smoke, the determinism
+matrix, the baseline-promotion bootstrap all live there) but nothing parsed
+them until a cross-workflow reference broke silently: `workflow_run`
+triggers name their upstream workflow by its display `name:`, and a rename
+on one side orphans the other without any error anywhere. This linter makes
+those contracts explicit:
+
+  1. every *.yml / *.yaml file parses as YAML;
+  2. every workflow has a `name:`, a trigger block, and `jobs:`;
+  3. every job has `runs-on:` and either `steps:` or a reusable-workflow
+     `uses:`;
+  4. every `workflow_run.workflows` entry matches the `name:` of a workflow
+     that actually exists in the same directory.
+
+A YAML 1.1 gotcha this must survive: `on:` is parsed by safe_load as the
+BOOLEAN True (the same rule that turns `branches: [yes]` into booleans), so
+the trigger block is found under the key True, not the string "on".
+
+Unlike bench_trend.py this is a HARD gate: exit 1 on any finding. It checks
+structure only — stale structure is exactly the class of bug it exists for —
+and runs on the system python (PyYAML ships on the CI runners).
+
+Usage: check_workflows.py [workflows_dir]   (default .github/workflows)
+"""
+import os
+import sys
+
+try:
+    import yaml
+except ImportError:  # pragma: no cover - CI runners ship PyYAML
+    print("::error::check_workflows.py needs PyYAML (python3-yaml)")
+    sys.exit(1)
+
+DEFAULT_DIR = os.path.join(".github", "workflows")
+
+# safe_load applies YAML 1.1 boolean rules to KEYS too: `on:` loads as the
+# key True. Accept both spellings so the linter never misreports a workflow
+# as trigger-less just because of the YAML spec.
+ON_KEYS = ("on", True)
+
+
+def trigger_block(doc):
+    for key in ON_KEYS:
+        if key in doc:
+            return doc[key]
+    return None
+
+
+def check_workflow(path, doc, errors):
+    """Structural checks for one parsed workflow document."""
+    if not isinstance(doc, dict):
+        errors.append(f"{path}: top level is {type(doc).__name__}, expected a mapping")
+        return
+    if not isinstance(doc.get("name"), str) or not doc.get("name").strip():
+        errors.append(f"{path}: missing workflow `name:` (workflow_run refers to it)")
+    if trigger_block(doc) is None:
+        errors.append(f"{path}: missing trigger block (`on:`)")
+    jobs = doc.get("jobs")
+    if not isinstance(jobs, dict) or not jobs:
+        errors.append(f"{path}: missing or empty `jobs:`")
+        return
+    for job_id, job in jobs.items():
+        if not isinstance(job, dict):
+            errors.append(f"{path}: job `{job_id}` is not a mapping")
+            continue
+        if "uses" in job:
+            continue  # reusable workflow call: no runs-on/steps of its own
+        if "runs-on" not in job:
+            errors.append(f"{path}: job `{job_id}` has no `runs-on:`")
+        steps = job.get("steps")
+        if not isinstance(steps, list) or not steps:
+            errors.append(f"{path}: job `{job_id}` has no `steps:`")
+
+
+def workflow_run_references(doc):
+    """Names listed under the workflow_run trigger, if any."""
+    trig = trigger_block(doc)
+    if not isinstance(trig, dict):
+        return []
+    wr = trig.get("workflow_run")
+    if not isinstance(wr, dict):
+        return []
+    names = wr.get("workflows")
+    if isinstance(names, str):
+        return [names]
+    if isinstance(names, list):
+        return [n for n in names if isinstance(n, str)]
+    return []
+
+
+def main(argv):
+    wdir = argv[0] if argv else DEFAULT_DIR
+    if not os.path.isdir(wdir):
+        print(f"::error::workflow directory {wdir} does not exist")
+        return 1
+    files = sorted(
+        f for f in os.listdir(wdir) if f.endswith((".yml", ".yaml"))
+    )
+    if not files:
+        print(f"::error::no workflow files found in {wdir}")
+        return 1
+
+    errors = []
+    docs = {}
+    for fname in files:
+        path = os.path.join(wdir, fname)
+        try:
+            with open(path) as f:
+                docs[path] = yaml.safe_load(f)
+        except yaml.YAMLError as e:
+            errors.append(f"{path}: YAML parse error: {e}")
+    for path, doc in docs.items():
+        check_workflow(path, doc, errors)
+
+    # Cross-workflow references: workflow_run.workflows entries must name a
+    # workflow that exists here, by its display name.
+    known_names = {
+        doc.get("name")
+        for doc in docs.values()
+        if isinstance(doc, dict) and isinstance(doc.get("name"), str)
+    }
+    for path, doc in docs.items():
+        if not isinstance(doc, dict):
+            continue
+        for ref in workflow_run_references(doc):
+            if ref not in known_names:
+                errors.append(
+                    f"{path}: workflow_run references `{ref}`, but no workflow in "
+                    f"{wdir} has that `name:` (known: {sorted(known_names)})"
+                )
+
+    for e in errors:
+        print(f"::error::{e}")
+    print(f"workflow lint: {len(files)} file(s), {len(errors)} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

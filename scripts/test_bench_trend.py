@@ -122,10 +122,67 @@ class BenchTrendCase(unittest.TestCase):
         self.assertIn("1 warning(s)", out, "counters and estimate_n do not warn")
         self.assertIn("ok BENCH_fitsne.json:crossover.n10000.bh_step_s", out)
 
-    def test_default_snapshot_set_includes_fitsne_and_knn(self):
+    def test_default_snapshot_set_includes_fitsne_knn_and_serving(self):
         self.assertIn("rust/BENCH_fitsne.json", bench_trend.DEFAULT_SNAPSHOTS)
         self.assertIn("rust/BENCH_knn.json", bench_trend.DEFAULT_SNAPSHOTS)
-        self.assertEqual(len(bench_trend.DEFAULT_SNAPSHOTS), 4)
+        self.assertIn("rust/BENCH_serving.json", bench_trend.DEFAULT_SNAPSHOTS)
+        self.assertEqual(len(bench_trend.DEFAULT_SNAPSHOTS), 5)
+
+    def test_serving_snapshot_shape(self):
+        # BENCH_serving.json mixes duration keys (step_p50_s, step_p99_s,
+        # cache_miss_s, cache_hit_s — higher is worse) with throughput rates
+        # (sessions_per_s — HIGHER is better). Rates share the `_s` suffix
+        # but must never be compared as timings: a throughput improvement
+        # would otherwise be flagged as a regression.
+        base = {
+            "serving": {
+                "cache_miss_s": 1.0,
+                "cache_hit_s": 0.01,
+                "n4": {"sessions_per_s": 2.0, "step_p50_s": 0.01, "step_p99_s": 0.05},
+            }
+        }
+        cur = {
+            "serving": {
+                "cache_miss_s": 1.0,
+                "cache_hit_s": 0.01,
+                # throughput DOUBLED (an improvement) — must stay silent
+                "n4": {"sessions_per_s": 4.0, "step_p50_s": 0.03, "step_p99_s": 0.05},
+            }
+        }
+        self.write(os.path.join(bench_trend.BASELINE_DIR, "BENCH_serving.json"), base)
+        self.write("BENCH_serving.json", cur)
+        rc, out = self.run_main(["BENCH_serving.json"])
+        self.assertEqual(rc, 0)
+        self.assertIn("::warning", out)
+        self.assertIn("serving.n4.step_p50_s", out, "the regressed p50 step timing is flagged")
+        self.assertIn("1 warning(s)", out, "the sessions_per_s rate never trips the trend")
+        self.assertNotIn("sessions_per_s", out.split("::warning")[1].splitlines()[0])
+        self.assertIn("ok BENCH_serving.json:serving.cache_hit_s", out)
+
+    def test_per_s_rates_are_exempt_from_the_timing_trend(self):
+        self.assertTrue(bench_trend.is_timing_key("step_p99_s"))
+        self.assertTrue(bench_trend.is_timing_key("serving.cache_hit_s"))
+        self.assertFalse(bench_trend.is_timing_key("sessions_per_s"))
+        self.assertFalse(bench_trend.is_timing_key("serving.n8.sessions_per_s"))
+        self.assertFalse(bench_trend.is_timing_key("speedup"))
+        # a halved rate (worse throughput) is also silent: rates are
+        # reported by the bench, trended by eye, never auto-flagged
+        self.write(
+            os.path.join(bench_trend.BASELINE_DIR, "BENCH_x.json"),
+            {"sessions_per_s": 4.0, "a_s": 1.0},
+        )
+        self.write("BENCH_x.json", {"sessions_per_s": 2.0, "a_s": 1.0})
+        rc, out = self.run_main(["BENCH_x.json"])
+        self.assertEqual(rc, 0)
+        self.assertNotIn("::warning", out)
+
+    def test_new_per_s_keys_are_not_listed_as_baselineless_timings(self):
+        self.write(os.path.join(bench_trend.BASELINE_DIR, "BENCH_x.json"), {"a_s": 1.0})
+        self.write("BENCH_x.json", {"a_s": 1.0, "serving": {"sessions_per_s": 3.0}})
+        rc, out = self.run_main(["BENCH_x.json"])
+        self.assertEqual(rc, 0)
+        self.assertNotIn("without a baseline", out)
+        self.assertNotIn("::warning", out)
 
     def test_knn_snapshot_shape(self):
         # BENCH_knn.json nests timings under knn_recall; recall values and

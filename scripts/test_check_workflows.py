@@ -1,0 +1,163 @@
+"""Unit tests for scripts/check_workflows.py (run by the same cheap early CI
+step as test_bench_trend.py).
+
+The linter is a hard gate, so every scenario asserts on the return code as
+well as the emitted ::error annotations.
+"""
+import contextlib
+import io
+import os
+import tempfile
+import unittest
+
+import check_workflows
+
+
+GOOD_CI = """\
+name: CI
+on:
+  push:
+    branches: [main]
+jobs:
+  build:
+    runs-on: ubuntu-latest
+    steps:
+      - uses: actions/checkout@v4
+"""
+
+GOOD_DOWNSTREAM = """\
+name: Promote
+on:
+  workflow_dispatch:
+  workflow_run:
+    workflows: [CI]
+    types: [completed]
+jobs:
+  promote:
+    runs-on: ubuntu-latest
+    steps:
+      - run: echo promote
+"""
+
+
+class CheckWorkflowsCase(unittest.TestCase):
+    def setUp(self):
+        self._tmp = tempfile.TemporaryDirectory()
+        self.dir = self._tmp.name
+
+    def tearDown(self):
+        self._tmp.cleanup()
+
+    def write(self, fname, text):
+        with open(os.path.join(self.dir, fname), "w") as f:
+            f.write(text)
+
+    def run_main(self):
+        out = io.StringIO()
+        with contextlib.redirect_stdout(out):
+            rc = check_workflows.main([self.dir])
+        return rc, out.getvalue()
+
+    def test_valid_workflows_pass(self):
+        self.write("ci.yml", GOOD_CI)
+        self.write("promote.yml", GOOD_DOWNSTREAM)
+        rc, out = self.run_main()
+        self.assertEqual(rc, 0, out)
+        self.assertNotIn("::error", out)
+        self.assertIn("2 file(s), 0 error(s)", out)
+
+    def test_yaml_11_on_key_parses_as_boolean_true(self):
+        # The linter's whole reason for the ON_KEYS tuple: safe_load turns
+        # the `on:` KEY into the boolean True, and a naive doc["on"] lookup
+        # would report every single workflow as trigger-less.
+        import yaml
+
+        doc = yaml.safe_load(GOOD_CI)
+        self.assertNotIn("on", doc)
+        self.assertIn(True, doc)
+        self.assertIsNotNone(check_workflows.trigger_block(doc))
+
+    def test_parse_error_is_fatal(self):
+        self.write("broken.yml", "name: X\non: [unclosed\n")
+        rc, out = self.run_main()
+        self.assertEqual(rc, 1)
+        self.assertIn("::error", out)
+        self.assertIn("YAML parse error", out)
+
+    def test_missing_name_is_fatal(self):
+        self.write("anon.yml", GOOD_CI.replace("name: CI\n", ""))
+        rc, out = self.run_main()
+        self.assertEqual(rc, 1)
+        self.assertIn("missing workflow `name:`", out)
+
+    def test_missing_trigger_is_fatal(self):
+        self.write("ci.yml", "name: CI\njobs:\n  b:\n    runs-on: x\n    steps:\n      - run: a\n")
+        rc, out = self.run_main()
+        self.assertEqual(rc, 1)
+        self.assertIn("missing trigger block", out)
+
+    def test_job_without_runs_on_or_steps_is_fatal(self):
+        self.write("ci.yml", "name: CI\non: push\njobs:\n  b:\n    timeout-minutes: 5\n")
+        rc, out = self.run_main()
+        self.assertEqual(rc, 1)
+        self.assertIn("no `runs-on:`", out)
+        self.assertIn("no `steps:`", out)
+
+    def test_reusable_workflow_job_needs_no_steps(self):
+        self.write("ci.yml", GOOD_CI)
+        self.write(
+            "reuse.yml",
+            "name: Reuse\non: push\njobs:\n  call:\n    uses: ./.github/workflows/ci.yml\n",
+        )
+        rc, out = self.run_main()
+        self.assertEqual(rc, 0, out)
+
+    def test_workflow_run_reference_to_missing_workflow_is_fatal(self):
+        # The regression this linter exists for: rename `name: CI` and the
+        # promote workflow's `workflow_run.workflows: [CI]` silently never
+        # fires again. The reference check turns that into a red X.
+        self.write("ci.yml", GOOD_CI.replace("name: CI", "name: Continuous Integration"))
+        self.write("promote.yml", GOOD_DOWNSTREAM)
+        rc, out = self.run_main()
+        self.assertEqual(rc, 1)
+        self.assertIn("workflow_run references `CI`", out)
+        self.assertIn("Continuous Integration", out, "known names are listed to aid the fix")
+
+    def test_workflow_run_reference_as_plain_string(self):
+        self.write("ci.yml", GOOD_CI)
+        self.write(
+            "promote.yml",
+            GOOD_DOWNSTREAM.replace("workflows: [CI]", "workflows: Nope"),
+        )
+        rc, out = self.run_main()
+        self.assertEqual(rc, 1)
+        self.assertIn("workflow_run references `Nope`", out)
+
+    def test_missing_directory_is_fatal(self):
+        out = io.StringIO()
+        with contextlib.redirect_stdout(out):
+            rc = check_workflows.main([os.path.join(self.dir, "nope")])
+        self.assertEqual(rc, 1)
+        self.assertIn("does not exist", out.getvalue())
+
+    def test_empty_directory_is_fatal(self):
+        rc, out = self.run_main()
+        self.assertEqual(rc, 1)
+        self.assertIn("no workflow files", out)
+
+    def test_repo_workflows_lint_clean(self):
+        # The real tree must satisfy its own linter (the CI step runs this
+        # same check from the repo root).
+        repo_dir = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            ".github",
+            "workflows",
+        )
+        out = io.StringIO()
+        with contextlib.redirect_stdout(out):
+            rc = check_workflows.main([repo_dir])
+        self.assertEqual(rc, 0, out.getvalue())
+
+
+if __name__ == "__main__":
+    unittest.main()
