@@ -206,9 +206,26 @@ pub fn write_matrix_bin_on<M: Medium>(
     w.flush()
 }
 
-/// Read a matrix written by [`write_matrix_bin`]. Errors on bad magic/shape.
+/// Length-before-allocation guard (acc-lint rule C1): a decoded shape must
+/// match the bytes actually present before it is allowed to size a buffer,
+/// so a torn or hostile header cannot trigger a huge allocation.
+fn check_payload_len(expected: u64, actual: u64) -> std::io::Result<()> {
+    if expected != actual {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("file length {actual} does not match header-implied {expected}"),
+        ));
+    }
+    Ok(())
+}
+
+/// Read a matrix written by [`write_matrix_bin`]. Errors on bad magic/shape,
+/// and on a header whose shape does not match the file's length (checked
+/// before any shape-sized allocation).
 pub fn read_matrix_bin(path: impl AsRef<Path>) -> std::io::Result<(Vec<f64>, usize, usize)> {
-    let mut r = BufReader::new(File::open(path)?);
+    let file = File::open(path)?;
+    let file_len = file.metadata()?.len();
+    let mut r = BufReader::new(file);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
     if &magic != MAGIC {
@@ -225,6 +242,11 @@ pub fn read_matrix_bin(path: impl AsRef<Path>) -> std::io::Result<(Vec<f64>, usi
     let total = rows
         .checked_mul(cols)
         .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "shape overflow"))?;
+    let expected = (total as u64)
+        .checked_mul(8)
+        .and_then(|b| b.checked_add(24))
+        .ok_or_else(|| std::io::Error::new(std::io::ErrorKind::InvalidData, "shape overflow"))?;
+    check_payload_len(expected, file_len)?;
     let mut data = vec![0.0f64; total];
     for v in data.iter_mut() {
         r.read_exact(&mut b8)?;

@@ -38,7 +38,7 @@ pub fn pca<T: Real>(
         let gs = SyncSlice::new(&mut g);
         parallel_for(pool, d, Schedule::Dynamic { grain: 8 }, |range| {
             for a in range {
-                // disjoint: row `a` of G is owned by this iteration
+                // SAFETY: disjoint — row `a` of G is owned by this iteration
                 let row = unsafe { gs.slice_mut(a * d, d) };
                 for i in 0..n {
                     let xa = data[i * d + a].to_f64() - mean[a];
@@ -74,7 +74,7 @@ pub fn pca<T: Real>(
                     for b in 0..d {
                         acc += g[row * d + b] * v_ref[c * d + b];
                     }
-                    // disjoint: one slot per idx
+                    // SAFETY: disjoint — one slot per idx
                     unsafe { *gvs.get_mut(idx) = acc };
                 }
             });
@@ -108,7 +108,7 @@ pub fn pca<T: Real>(
                     for j in 0..d {
                         acc += (data[i * d + j].to_f64() - mean[j]) * v_ref[c * d + j];
                     }
-                    // disjoint: row i owned by this iteration
+                    // SAFETY: disjoint — row i owned by this iteration
                     unsafe { *os.get_mut(i * k + c) = T::from_f64(acc) };
                 }
             }

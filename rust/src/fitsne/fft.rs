@@ -100,7 +100,7 @@ pub fn fft2_inplace(pool: &ThreadPool, data: &mut [Cpx], rows: usize, cols: usiz
         let ds = SyncSlice::new(data);
         parallel_for(pool, rows, Schedule::Dynamic { grain: 4 }, |range| {
             for r in range {
-                // disjoint: row r
+                // SAFETY: disjoint — row r
                 let row = unsafe { ds.slice_mut(r * cols, cols) };
                 fft_inplace(row, invert);
             }
@@ -113,12 +113,12 @@ pub fn fft2_inplace(pool: &ThreadPool, data: &mut [Cpx], rows: usize, cols: usiz
             let mut buf = vec![Cpx::default(); rows];
             for c in range {
                 for r in 0..rows {
-                    // read-only overlap is fine; writes below are disjoint per column
+                    // SAFETY: read-only overlap is fine; writes below are disjoint per column
                     buf[r] = unsafe { *ds.get_mut(r * cols + c) };
                 }
                 fft_inplace(&mut buf, invert);
                 for r in 0..rows {
-                    // disjoint: column c slots
+                    // SAFETY: disjoint — column c slots
                     unsafe { *ds.get_mut(r * cols + c) = buf[r] };
                 }
             }
@@ -159,7 +159,7 @@ pub fn fft2_batch_inplace(
         let ds = SyncSlice::new(data);
         parallel_for(pool, n_grids * rows, Schedule::Dynamic { grain: 4 }, |range| {
             for r in range {
-                // disjoint: row r of the concatenated grids
+                // SAFETY: disjoint — row r of the concatenated grids
                 let row = unsafe { ds.slice_mut(r * cols, cols) };
                 fft_inplace(row, invert);
             }
@@ -173,18 +173,18 @@ pub fn fft2_batch_inplace(
         let cs = SyncSlice::new(col_scratch);
         pool.broadcast(|tid| {
             let (s, e) = crate::parallel::par_for::static_chunk(n_grids * cols, nt, tid);
-            // disjoint: per-thread scratch block
+            // SAFETY: disjoint — per-thread scratch block
             let buf = unsafe { cs.slice_mut(tid * rows, rows) };
             for ci in s..e {
                 let (g, c) = (ci / cols, ci % cols);
                 let base = g * rows * cols;
                 for r in 0..rows {
-                    // read-only overlap is fine; writes below are disjoint per column
+                    // SAFETY: read-only overlap is fine; writes below are disjoint per column
                     buf[r] = unsafe { *ds.get_mut(base + r * cols + c) };
                 }
                 fft_inplace(buf, invert);
                 for r in 0..rows {
-                    // disjoint: column c of grid g
+                    // SAFETY: disjoint — column c of grid g
                     unsafe { *ds.get_mut(base + r * cols + c) = buf[r] };
                 }
             }

@@ -181,7 +181,7 @@ pub fn fitsne_repulsive_into<T: Real>(
         let ps = SyncSlice::new(&mut ws.partial);
         pool.broadcast(|tid| {
             let (s, e) = crate::parallel::par_for::static_chunk(n, nt, tid);
-            // disjoint: per-thread block
+            // SAFETY: disjoint — per-thread block
             let local = unsafe { ps.slice_mut(tid * gsz * N_TERMS, gsz * N_TERMS) };
             for i in s..e {
                 let px = y[2 * i].to_f64();
@@ -222,7 +222,7 @@ pub fn fitsne_repulsive_into<T: Real>(
                     }
                 }
                 let cell = (idx / n_grid) * m + idx % n_grid;
-                // disjoint: slot cell of pads 0 and 1
+                // SAFETY: disjoint — slot cell of pads 0 and 1
                 unsafe {
                     *ps.get_mut(cell) = Cpx::new(acc[0], 0.0);
                     *ps.get_mut(msz + cell) = Cpx::new(acc[1], acc[2]);
@@ -267,7 +267,7 @@ pub fn fitsne_repulsive_into<T: Real>(
         let (fk1, fk2) = (&kernels.fk1, &kernels.fk2);
         parallel_for(pool, msz, Schedule::Static, |range| {
             for i in range {
-                // disjoint: slot i of each pad
+                // SAFETY: disjoint — slot i of each pad
                 unsafe {
                     let a = *ps.get_mut(i);
                     *ps.get_mut(2 * msz + i) = a.mul(fk1[i]);
@@ -316,12 +316,13 @@ pub fn fitsne_repulsive_into<T: Real>(
                 // raw_i = y_i φ_{K2,1} − φ_{K2,(x,y)}; K2 self-term cancels.
                 let fx = px * phi[1] - phi[2];
                 let fy = py * phi[1] - phi[3];
-                // disjoint: slots 2i, 2i+1
+                // SAFETY: disjoint — slots 2i, 2i+1
                 unsafe {
                     *rs.get_mut(2 * i) = T::from_f64(fx);
                     *rs.get_mut(2 * i + 1) = T::from_f64(fy);
                 }
             }
+            // SAFETY: disjoint — one partial-sum slot per tid
             unsafe { *zs.get_mut(tid) = z_local };
         });
     }
@@ -362,7 +363,7 @@ fn build_kernel_grid(
         parallel_for(pool, m, Schedule::Static, |range| {
             for a in range {
                 let Some(da) = offset(a) else { continue };
-                // disjoint: row a
+                // SAFETY: disjoint — row a
                 let row = unsafe { gs.slice_mut(a * m, m) };
                 for (b, slot) in row.iter_mut().enumerate() {
                     let Some(db) = offset(b) else { continue };

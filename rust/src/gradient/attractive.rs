@@ -136,6 +136,8 @@ impl_attr_simd!(f32, f32x16, 16);
 #[inline(always)]
 fn prefetch_point<T>(y: &[T], j: usize) {
     #[cfg(target_arch = "x86_64")]
+    // SAFETY: prefetch is a hint with no memory effects; any address is
+    // sound, and 2*j stays within the point array the caller indexes next.
     unsafe {
         use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
         _mm_prefetch(y.as_ptr().add(2 * j) as *const i8, _MM_HINT_T0);
@@ -221,7 +223,7 @@ pub fn attractive_forces<T: AttractiveSimd>(
                     T::attr_row_simd(y, &p.col[s..e], &p.val[s..e], yix, yiy)
                 }
             };
-            // disjoint: slots 2i, 2i+1
+            // SAFETY: disjoint — slots 2i, 2i+1
             unsafe {
                 *os.get_mut(2 * i) = fx;
                 *os.get_mut(2 * i + 1) = fy;

@@ -39,12 +39,13 @@ pub fn exact_repulsive<T: Real>(pool: &ThreadPool, y: &[T]) -> (Vec<T>, T) {
                     fx += qq * dx;
                     fy += qq * dy;
                 }
-                // disjoint: slots 2i, 2i+1
+                // SAFETY: disjoint — slots 2i, 2i+1
                 unsafe {
                     *rs.get_mut(2 * i) = fx;
                     *rs.get_mut(2 * i + 1) = fy;
                 }
             }
+            // SAFETY: disjoint — one partial-sum slot per tid
             unsafe { *zs.get_mut(tid) = z_local };
         });
     }
@@ -97,7 +98,7 @@ pub fn exact_gradient<T: Real>(pool: &ThreadPool, p: &CsrMatrix<T>, y: &[T]) -> 
                     ry += u * u * dy;
                 }
                 let four = T::TWO * T::TWO;
-                // disjoint: slots 2i, 2i+1
+                // SAFETY: disjoint — slots 2i, 2i+1
                 unsafe {
                     *gs.get_mut(2 * i) = four * (gx - rx / z);
                     *gs.get_mut(2 * i + 1) = four * (gy - ry / z);

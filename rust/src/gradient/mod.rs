@@ -48,7 +48,7 @@ pub fn combine_gradient<T: Real>(
     parallel_for(pool, n2, Schedule::Static, |range| {
         for i in range {
             let g = four * (exaggeration * attr[i] - rep_raw[i] * inv_z);
-            // disjoint: slot i
+            // SAFETY: disjoint — slot i
             unsafe { *gs.get_mut(i) = g };
         }
     });

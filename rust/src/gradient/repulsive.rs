@@ -137,13 +137,13 @@ pub fn repulsive_forces_scalar_into<T: Real>(
                 let (fx, fy, z) = point_repulsion(tree, p, yix, yiy, theta_sq, &mut stack);
                 z_local += z;
                 let orig = tree.point_idx[p] as usize;
-                // disjoint: each layout slot has a unique original index
+                // SAFETY: disjoint — each layout slot has a unique original index
                 unsafe {
                     *rs.get_mut(2 * orig) = fx;
                     *rs.get_mut(2 * orig + 1) = fy;
                 }
             }
-            // disjoint: slot tid
+            // SAFETY: disjoint — slot tid
             unsafe { *zs.get_mut(tid) = z_local };
         });
     }
@@ -198,14 +198,14 @@ pub fn repulsive_forces_tiled_into<T: RepulsiveSimd>(
                 );
                 for l in 0..len {
                     let orig = tree.point_idx[start + l] as usize;
-                    // disjoint: each layout slot has a unique original index
+                    // SAFETY: disjoint — each layout slot has a unique original index
                     unsafe {
                         *rs.get_mut(2 * orig) = fx_buf[l];
                         *rs.get_mut(2 * orig + 1) = fy_buf[l];
                     }
                 }
             }
-            // disjoint: slot tid
+            // SAFETY: disjoint — slot tid
             unsafe { *zs.get_mut(tid) = z_local };
         });
     }
@@ -303,6 +303,8 @@ fn point_repulsion<T: Real>(
 #[inline(always)]
 fn prefetch_view_node<T: Real>(view: &TraversalView<T>, ni: usize) {
     #[cfg(target_arch = "x86_64")]
+    // SAFETY: prefetch is a hint with no memory effects; any address is
+    // sound, and `ni` is a node index the traversal visits right after.
     unsafe {
         use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
         _mm_prefetch(view.com_x.as_ptr().add(ni) as *const i8, _MM_HINT_T0);

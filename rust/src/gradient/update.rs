@@ -91,7 +91,7 @@ impl<T: Real> Optimizer<T> {
             let ys = SyncSlice::new(y);
             parallel_for(pool, n2, Schedule::Static, |range| {
                 for i in range {
-                    // disjoint: slot i
+                    // SAFETY: disjoint — slot i
                     unsafe {
                         descent_update(
                             grad[i],
@@ -159,7 +159,7 @@ impl<T: Real> Optimizer<T> {
                 for i in start..end {
                     let grad_i = four * (exaggeration * attr[i] - rep_raw[i] * inv_z);
                     acc += grad_i * grad_i;
-                    // disjoint: slot i
+                    // SAFETY: disjoint — slot i
                     unsafe {
                         descent_update(
                             grad_i,
@@ -172,7 +172,7 @@ impl<T: Real> Optimizer<T> {
                         );
                     }
                 }
-                // disjoint: slot tid
+                // SAFETY: disjoint — slot tid
                 unsafe { *ps.get_mut(tid) = acc };
             });
         }
@@ -226,7 +226,7 @@ pub fn recenter<T: Real>(pool: &ThreadPool, y: &mut [T]) {
     let ys = SyncSlice::new(y);
     parallel_for(pool, n, Schedule::Static, |range| {
         for i in range {
-            // disjoint: slots 2i, 2i+1
+            // SAFETY: disjoint — slots 2i, 2i+1
             unsafe {
                 *ys.get_mut(2 * i) -= mean[0];
                 *ys.get_mut(2 * i + 1) -= mean[1];

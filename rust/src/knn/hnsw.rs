@@ -259,7 +259,7 @@ impl<'a, T: Real> HnswIndex<'a, T> {
                         let scratch = &mut *cell.borrow_mut();
                         for t in range {
                             let cands = frozen.insert_candidates(base + t, efc, scratch);
-                            // disjoint: slot t
+                            // SAFETY: disjoint — slot t
                             unsafe { *fs.get_mut(t) = cands };
                         }
                     })
@@ -536,7 +536,7 @@ impl<'a, T: Real> HnswIndex<'a, T> {
                         let row = self.query_row(i, k, ef, scratch);
                         debug_assert_eq!(row.len(), k);
                         for (j, (dist, idx)) in row.into_iter().enumerate() {
-                            // disjoint: row i
+                            // SAFETY: disjoint — row i
                             unsafe {
                                 *is.get_mut(i * k + j) = idx;
                                 *ds.get_mut(i * k + j) = dist;

@@ -121,7 +121,7 @@ impl<T: Real> KnnEngine<T> for BruteForceKnn {
                     for &v in row {
                         acc += v * v;
                     }
-                    // disjoint: slot i
+                    // SAFETY: disjoint — slot i
                     unsafe { *ns.get_mut(i) = acc };
                 }
             });
@@ -197,7 +197,7 @@ impl<T: Real> KnnEngine<T> for BruteForceKnn {
                         let sorted = std::mem::replace(&mut heaps[qi], KBest::new(1)).into_sorted();
                         debug_assert_eq!(sorted.len(), k);
                         for (j, (dist, idx)) in sorted.into_iter().enumerate() {
-                            // disjoint: rows q of indices/dists owned by this block
+                            // SAFETY: disjoint — rows q of indices/dists owned by this block
                             unsafe {
                                 *is.get_mut(q * k + j) = idx;
                                 *ds.get_mut(q * k + j) = dist;

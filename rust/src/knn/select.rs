@@ -106,8 +106,8 @@ impl<T: Real> KBest<T> {
     /// equal distances (the same total order `push` selects under).
     pub fn into_sorted(mut self) -> Vec<(T, u32)> {
         self.heap.sort_by(|a, b| {
-            a.0.partial_cmp(&b.0)
-                .unwrap_or(std::cmp::Ordering::Equal)
+            a.0.to_f64()
+                .total_cmp(&b.0.to_f64())
                 .then_with(|| a.1.cmp(&b.1))
         });
         self.heap
@@ -189,7 +189,7 @@ mod tests {
             }
             let got: Vec<f64> = kb.into_sorted().iter().map(|p| p.0).collect();
             let mut want = dists.clone();
-            want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            want.sort_by(f64::total_cmp);
             want.truncate(k);
             assert_eq!(got, want);
         }

@@ -89,8 +89,8 @@ impl<'a, T: Real> VpTree<'a, T> {
         let mid = rest.len() / 2;
         rest.select_nth_unstable_by(mid, |&a, &b| {
             dist_sq(data, d, vp, a as usize)
-                .partial_cmp(&dist_sq(data, d, vp, b as usize))
-                .unwrap_or(std::cmp::Ordering::Equal)
+                .to_f64()
+                .total_cmp(&dist_sq(data, d, vp, b as usize).to_f64())
         });
         let threshold = dist_sq(data, d, vp, rest[mid] as usize);
         let id = nodes.len();
@@ -188,7 +188,7 @@ impl<T: Real> KnnEngine<T> for VpTreeKnn {
                     let found = tree.knn(i, k);
                     debug_assert_eq!(found.len(), k);
                     for (j, (dist, idx)) in found.into_iter().enumerate() {
-                        // disjoint: row i
+                        // SAFETY: disjoint — row i
                         unsafe {
                             *is.get_mut(i * k + j) = idx;
                             *ds.get_mut(i * k + j) = dist;

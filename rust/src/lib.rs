@@ -316,6 +316,14 @@
 //! persistence 4, plan 5, divergence 6, serving 7) with a one-line stderr
 //! message.
 //!
+//! The invariants behind these guarantees (IEEE `total_cmp` ordering, no
+//! nondeterminism sources in result-affecting modules, length-before-
+//! allocation in every codec, typed errors instead of panics on the
+//! persist/serve surfaces, `// SAFETY:` on every `unsafe`) are enforced
+//! mechanically by the first-party linter in `tools/acc-lint`, a hard CI
+//! gate — rules, allowlist policy, and the sanitizer tier (TSan + Miri)
+//! are documented in `docs/static-analysis.md`.
+//!
 //! The classic one-shot call is still there, as a thin wrapper that is
 //! bit-identical to fitting affinities and stepping a session manually:
 //!
@@ -330,6 +338,9 @@
 //! ```
 #![feature(portable_simd)]
 #![allow(clippy::needless_range_loop)]
+// Every unsafe operation inside an `unsafe fn` needs its own `unsafe {}`
+// block (each with a `// SAFETY:` comment — enforced by acc-lint rule U1).
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod cli;
 pub mod common;

@@ -31,7 +31,13 @@ pub struct SyncSlice<'a, T> {
     _marker: std::marker::PhantomData<&'a mut [T]>,
 }
 
+// SAFETY: a SyncSlice is a borrowed view of a `&mut [T]`; sending it moves
+// only a pointer + length, and T: Send means the elements may be written
+// from another thread. Disjointness of writes is each use site's obligation.
 unsafe impl<T: Send> Send for SyncSlice<'_, T> {}
+// SAFETY: sharing `&SyncSlice` across threads exposes only `get_mut`/
+// `slice_mut`, both themselves `unsafe fn` whose contracts (disjoint
+// indices, in-bounds) are what make the concurrent writes sound.
 unsafe impl<T: Send> Sync for SyncSlice<'_, T> {}
 
 impl<'a, T> SyncSlice<'a, T> {
@@ -59,7 +65,9 @@ impl<'a, T> SyncSlice<'a, T> {
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn get_mut(&self, i: usize) -> &mut T {
         debug_assert!(i < self.len);
-        &mut *self.ptr.add(i)
+        // SAFETY: caller contract (doc above): `i < len`, no concurrent
+        // access to the same index, so the produced `&mut T` is unique.
+        unsafe { &mut *self.ptr.add(i) }
     }
 
     /// Reborrow a disjoint subrange as a regular mutable slice.
@@ -68,7 +76,9 @@ impl<'a, T> SyncSlice<'a, T> {
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
         debug_assert!(start + len <= self.len);
-        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+        // SAFETY: caller contract (doc above): the range is in bounds and
+        // ranges handed to different threads never overlap.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(start), len) }
     }
 }
 
@@ -83,7 +93,7 @@ mod tests {
         let s = SyncSlice::new(&mut data);
         parallel_for(&pool, 1000, Schedule::Static, |range| {
             for i in range {
-                // disjoint: parallel_for ranges never overlap
+                // SAFETY: disjoint — parallel_for ranges never overlap
                 unsafe { *s.get_mut(i) = i * 2 };
             }
         });

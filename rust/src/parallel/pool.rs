@@ -18,6 +18,9 @@ use std::thread::JoinHandle;
 /// Valid only while `broadcast` is blocked, which is exactly when workers run it.
 #[derive(Clone, Copy)]
 struct JobPtr(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is `Sync` (shared calls from many threads are fine),
+// and the pointer is only dereferenced while `broadcast` keeps the closure
+// alive on the caller's stack (see the epoch protocol in `broadcast`).
 unsafe impl Send for JobPtr {}
 
 struct State {
@@ -106,7 +109,7 @@ impl ThreadPool {
              sharing a pool must be externally serialized"
         );
         let nworkers = self.n_threads - 1;
-        // Erase the closure's lifetime: workers only dereference the pointer
+        // SAFETY: erase the closure's lifetime: workers only dereference the pointer
         // between the epoch bump below and the `remaining == 0` barrier, and
         // this function does not return before that barrier.
         let job: JobPtr = unsafe {

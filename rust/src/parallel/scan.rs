@@ -35,7 +35,7 @@ pub fn exclusive_scan(pool: &ThreadPool, data: &mut [usize]) -> usize {
         let d = &*data;
         pool.broadcast(|tid| {
             let (s, e) = static_chunk(n, nt, tid);
-            // disjoint: one slot per tid
+            // SAFETY: disjoint — one slot per tid
             unsafe { *totals.get_mut(tid) = d[s..e].iter().sum() };
         });
     }
@@ -45,7 +45,7 @@ pub fn exclusive_scan(pool: &ThreadPool, data: &mut [usize]) -> usize {
         let offsets = &chunk_totals;
         pool.broadcast(|tid| {
             let (s, e) = static_chunk(n, nt, tid);
-            // disjoint: static chunks never overlap
+            // SAFETY: disjoint — static chunks never overlap
             let chunk = unsafe { d.slice_mut(s, e - s) };
             let mut acc = offsets[tid];
             for v in chunk.iter_mut() {

@@ -83,7 +83,7 @@ fn radix_pass(
         let h = SyncSlice::new(&mut hist);
         pool.broadcast(|tid| {
             let (s, e) = static_chunk(n, nt, tid);
-            // disjoint: each tid owns hist[tid*RADIX .. (tid+1)*RADIX]
+            // SAFETY: disjoint — each tid owns hist[tid*RADIX .. (tid+1)*RADIX]
             let local = unsafe { h.slice_mut(tid * RADIX, RADIX) };
             for &k in &src_k[s..e] {
                 local[((k >> shift) as usize) & (RADIX - 1)] += 1;
@@ -116,7 +116,7 @@ fn radix_pass(
         let off = SyncSlice::new(&mut offsets);
         pool.broadcast(|tid| {
             let (s, e) = static_chunk(n, nt, tid);
-            // disjoint: offsets[tid*RADIX..] owned by tid; dst positions are
+            // SAFETY: disjoint — offsets[tid*RADIX..] owned by tid; dst positions are
             // unique because each (digit, tid) offset range is disjoint.
             let local_off = unsafe { off.slice_mut(tid * RADIX, RADIX) };
             for i in s..e {
@@ -124,6 +124,8 @@ fn radix_pass(
                 let digit = ((k >> shift) as usize) & (RADIX - 1);
                 let pos = local_off[digit];
                 local_off[digit] += 1;
+                // SAFETY: disjoint — each (digit, tid) offset range is unique,
+                // so no two threads write the same dst position
                 unsafe {
                     *dk.get_mut(pos) = k;
                     *dp.get_mut(pos) = src_p[i];

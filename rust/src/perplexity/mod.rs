@@ -158,9 +158,10 @@ pub fn binary_search_perplexity<T: Real>(
             let bs = SyncSlice::new(&mut betas);
             parallel_for(pool, n, Schedule::Static, |range| {
                 for i in range {
-                    // disjoint: row i and slot i
+                    // SAFETY: disjoint — row i and slot i
                     let row = unsafe { ps.slice_mut(i * k, k) };
                     let beta = bsp_row(knn.dists(i), perplexity, row);
+                    // SAFETY: disjoint — slot i
                     unsafe { *bs.get_mut(i) = beta };
                 }
             });

@@ -80,7 +80,7 @@ pub fn build_morton<T: Real>(pool: &ThreadPool, pos: &[T]) -> QuadTree<T> {
         parallel_for(pool, n, Schedule::Static, |range| {
             for i in range {
                 let src = order[i] as usize;
-                // disjoint: slots 2i, 2i+1
+                // SAFETY: disjoint — slots 2i, 2i+1
                 unsafe {
                     *ps.get_mut(2 * i) = pos[2 * src];
                     *ps.get_mut(2 * i + 1) = pos[2 * src + 1];
@@ -152,7 +152,7 @@ pub fn build_morton<T: Real>(pool: &ThreadPool, pos: &[T]) -> QuadTree<T> {
                     &mut local,
                     &mut local_depth,
                 );
-                // disjoint: slot fi
+                // SAFETY: disjoint — slot fi
                 unsafe { *res.get_mut(fi) = Some((local, root, local_depth)) };
             }
         });
@@ -178,11 +178,13 @@ pub fn build_morton<T: Real>(pool: &ThreadPool, pos: &[T]) -> QuadTree<T> {
                 let base = offsets[fi] as i32;
                 let mut root = root.clone();
                 remap_children(&mut root, base);
-                // disjoint: frontier node slots are unique; block ranges disjoint
+                // SAFETY: disjoint — frontier node slots are unique; block ranges disjoint
                 unsafe { *ns.get_mut(frontier[fi].node_idx as usize) = root };
                 for (li, node) in local.iter().enumerate() {
                     let mut node = node.clone();
                     remap_children(&mut node, base);
+                    // SAFETY: disjoint — block offsets[fi]..offsets[fi]+local.len()
+                    // is owned by this frontier entry
                     unsafe { *ns.get_mut(offsets[fi] + li) = node };
                 }
             }

@@ -91,7 +91,7 @@ impl RootCell {
                         }
                     }
                 }
-                // disjoint: slot tid
+                // SAFETY: disjoint — slot tid
                 unsafe {
                     *ms.get_mut(tid) = lo;
                     *xs.get_mut(tid) = hi;
@@ -187,7 +187,7 @@ pub fn encode_points<T: Real>(pool: &ThreadPool, pos: &[T], root: &RootCell, out
     parallel_for(pool, n, Schedule::Static, |range| {
         for i in range {
             let code = root.encode(pos[2 * i].to_f64(), pos[2 * i + 1].to_f64());
-            // disjoint: slot i
+            // SAFETY: disjoint — slot i
             unsafe { *os.get_mut(i) = code };
         }
     });
@@ -223,7 +223,7 @@ pub fn encode_points_simd<T: Real>(pool: &ThreadPool, pos: &[T], root: &RootCell
                 .simd_min(gmax);
             let code = interleave_simd(gx) | (interleave_simd(gy) << u64x8::splat(1));
             for l in 0..8 {
-                // disjoint: slots base..base+8 owned by this block
+                // SAFETY: disjoint — slots base..base+8 owned by this block
                 unsafe { *os.get_mut(base + l) = code[l] };
             }
         }

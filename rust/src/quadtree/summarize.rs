@@ -51,7 +51,7 @@ pub fn summarize_parallel<T: Real>(pool: &ThreadPool, tree: &mut QuadTree<T>) {
         let roots = &roots;
         parallel_for(pool, roots.len(), Schedule::Dynamic { grain: 1 }, |range| {
             for si in range {
-                // disjoint: the frontier subtrees cover disjoint node sets;
+                // SAFETY: disjoint — the frontier subtrees cover disjoint node sets;
                 // the top region is only touched after this barrier.
                 let nodes_mut = unsafe { nodes.slice_mut(0, nodes.len()) };
                 post_order_summarize_with_stops(nodes_mut, point_pos, roots[si] as usize, None);

@@ -110,7 +110,7 @@ impl<T: Real> TraversalView<T> {
         parallel_for(pool, n_nodes, Schedule::Static, |range| {
             for ni in range {
                 let node = &tree.nodes[ni];
-                // disjoint: slot ni (and 4ni..4ni+4) per node
+                // SAFETY: disjoint — slot ni (and 4ni..4ni+4) per node
                 unsafe {
                     *cx.get_mut(ni) = node.com[0];
                     *cy.get_mut(ni) = node.com[1];

@@ -127,7 +127,7 @@ pub fn symmetrize<T: Real>(
         let fs = SyncSlice::new(&mut fwd);
         parallel_for(pool, n, Schedule::Static, |range| {
             for i in range {
-                // disjoint: row i
+                // SAFETY: disjoint — row i
                 let row = unsafe { fs.slice_mut(i * k, k) };
                 for t in 0..k {
                     row[t] = (knn.indices[i * k + t], cond_p[i * k + t]);
@@ -158,7 +158,7 @@ pub fn symmetrize<T: Real>(
                 for t in 0..k {
                     let j = knn.indices[i * k + t] as usize;
                     let pos = rev_cursor[j].fetch_add(1, Ordering::Relaxed);
-                    // disjoint: fetch_add hands out unique positions
+                    // SAFETY: disjoint — fetch_add hands out unique positions
                     unsafe { *rs.get_mut(pos) = (i as u32, cond_p[i * k + t]) };
                 }
             }
@@ -171,7 +171,7 @@ pub fn symmetrize<T: Real>(
         parallel_for(pool, n, Schedule::Dynamic { grain: 64 }, |range| {
             for j in range {
                 let (s, e) = (rev_ptr[j], rev_ptr[j + 1]);
-                // disjoint: reverse row j
+                // SAFETY: disjoint — reverse row j
                 let row = unsafe { rs.slice_mut(s, e - s) };
                 row.sort_unstable_by_key(|&(c, _)| c);
             }
@@ -189,7 +189,7 @@ pub fn symmetrize<T: Real>(
             for i in range {
                 let a = &fwd[i * k..(i + 1) * k];
                 let b = &rev[rev_ptr[i]..rev_ptr[i + 1]];
-                // disjoint: slot i+1
+                // SAFETY: disjoint — slot i+1
                 unsafe { *rl.get_mut(i + 1) = merge_count(a, b) };
             }
         });
@@ -216,7 +216,7 @@ pub fn symmetrize<T: Real>(
                 let a = &fwd[i * k..(i + 1) * k];
                 let b = &rev[rev_ptr[i]..rev_ptr[i + 1]];
                 let (s, e) = (row_ptr[i], row_ptr[i + 1]);
-                // disjoint: output row i
+                // SAFETY: disjoint — output row i
                 let (ocol, oval) = unsafe { (cs.slice_mut(s, e - s), vs.slice_mut(s, e - s)) };
                 merge_fill(a, b, inv_2n, ocol, oval);
             }
@@ -276,7 +276,7 @@ pub fn permute_symmetric_into<T: Real>(
                 let (s, e) = (src.row_ptr[o], src.row_ptr[o + 1]);
                 let d = row_ptr[t];
                 for (k, idx) in (s..e).enumerate() {
-                    // disjoint: output row t
+                    // SAFETY: disjoint — output row t
                     unsafe {
                         *cs.get_mut(d + k) = old_to_new[src.col[idx] as usize];
                         *vs.get_mut(d + k) = src.val[idx];

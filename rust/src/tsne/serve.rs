@@ -635,15 +635,16 @@ fn scheduler_loop(shared: Arc<Shared>, cmd_rx: Receiver<Cmd>) {
                         st.step_secs.push(s);
                     }
                 }
-                if outstanding.as_ref().map_or(false, |s| s.id == id) {
-                    let slot = outstanding.take().expect("just checked");
-                    if more {
-                        ring.push_back(slot);
+                if outstanding.as_ref().is_some_and(|s| s.id == id) {
+                    if let Some(slot) = outstanding.take() {
+                        if more {
+                            ring.push_back(slot);
+                        }
                     }
                 }
             }
             Some(Cmd::Exited { id }) => {
-                if outstanding.as_ref().map_or(false, |s| s.id == id) {
+                if outstanding.as_ref().is_some_and(|s| s.id == id) {
                     outstanding = None;
                 }
                 ring.retain(|s| s.id != id);
@@ -975,8 +976,12 @@ fn serve_resumed(
 ) -> Result<(), ServeError> {
     let det = {
         let mut q = shared.resume.lock().unwrap();
-        match q.iter().position(|dtc| dtc.id == req.resume_id) {
-            Some(i) => q.remove(i).expect("position is in bounds"),
+        let found = q
+            .iter()
+            .position(|dtc| dtc.id == req.resume_id)
+            .and_then(|i| q.remove(i));
+        match found {
+            Some(det) => det,
             None => {
                 return Err(ServeError::Resume(format!(
                     "no detached session {} (unknown, already resumed, or evicted)",

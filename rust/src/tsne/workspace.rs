@@ -164,7 +164,7 @@ impl<T: Real> IterationWorkspace<T> {
             let ps = SyncSlice::new(&mut self.perm_scratch);
             parallel_for(pool, n, Schedule::Static, |range| {
                 for t in range {
-                    // disjoint: slot t
+                    // SAFETY: disjoint — slot t
                     unsafe { *ps.get_mut(t) = perm[new_to_old[t] as usize] };
                 }
             });
@@ -175,7 +175,7 @@ impl<T: Real> IterationWorkspace<T> {
             let inv = SyncSlice::new(&mut self.inv_perm);
             parallel_for(pool, n, Schedule::Static, |range| {
                 for t in range {
-                    // disjoint: perm is a bijection
+                    // SAFETY: disjoint — perm is a bijection
                     unsafe { *inv.get_mut(perm[t] as usize) = t as u32 };
                 }
             });
@@ -204,7 +204,7 @@ impl<T: Real> IterationWorkspace<T> {
             let ids = SyncSlice::new(&mut tree.point_idx);
             parallel_for(pool, n, Schedule::Static, |range| {
                 for t in range {
-                    // disjoint: slot t
+                    // SAFETY: disjoint — slot t
                     unsafe { *ids.get_mut(t) = t as u32 };
                 }
             });
@@ -319,7 +319,7 @@ fn permute_pairs<T: Real>(pool: &ThreadPool, new_to_old: &[u32], src: &[T], dst:
     parallel_for(pool, new_to_old.len(), Schedule::Static, |range| {
         for t in range {
             let s = new_to_old[t] as usize;
-            // disjoint: slots 2t, 2t+1
+            // SAFETY: disjoint — slots 2t, 2t+1
             unsafe {
                 *ds.get_mut(2 * t) = src[2 * s];
                 *ds.get_mut(2 * t + 1) = src[2 * s + 1];

@@ -13,7 +13,10 @@ those contracts explicit:
   3. every job has `runs-on:` and either `steps:` or a reusable-workflow
      `uses:`;
   4. every `workflow_run.workflows` entry matches the `name:` of a workflow
-     that actually exists in the same directory.
+     that actually exists in the same directory;
+  5. the main CI workflow (ci.yml) still defines its required job skeleton —
+     branch protection and the baseline-promotion trigger assume those job
+     ids exist, and deleting one silently weakens the gate.
 
 A YAML 1.1 gotcha this must survive: `on:` is parsed by safe_load as the
 BOOLEAN True (the same rule that turns `branches: [yes]` into booleans), so
@@ -40,6 +43,24 @@ DEFAULT_DIR = os.path.join(".github", "workflows")
 # key True. Accept both spellings so the linter never misreports a workflow
 # as trigger-less just because of the YAML spec.
 ON_KEYS = ("on", True)
+
+# Required job skeletons, keyed by workflow file basename. These are the job
+# ids that outside contracts depend on existing (branch-protection checks,
+# the promote-baselines workflow_run trigger, the tiering described in
+# ROADMAP.md / docs/static-analysis.md). Removing or renaming one is a
+# deliberate act: update this table in the same commit, with the rationale.
+REQUIRED_JOBS = {
+    "ci.yml": {
+        "bench-trend-unit-tests",
+        "fmt",
+        "lint",
+        "build-and-test",
+        "serve-smoke",
+        "determinism",
+        "miri",
+        "tsan",
+    },
+}
 
 
 def trigger_block(doc):
@@ -73,6 +94,21 @@ def check_workflow(path, doc, errors):
         steps = job.get("steps")
         if not isinstance(steps, list) or not steps:
             errors.append(f"{path}: job `{job_id}` has no `steps:`")
+
+
+def check_required_jobs(path, doc, errors):
+    """If this file has a pinned skeleton, every required job id must exist."""
+    required = REQUIRED_JOBS.get(os.path.basename(path))
+    if not required or not isinstance(doc, dict):
+        return
+    jobs = doc.get("jobs")
+    have = set(jobs) if isinstance(jobs, dict) else set()
+    for job_id in sorted(required - have):
+        errors.append(
+            f"{path}: required job `{job_id}` is missing — the "
+            f"{os.path.basename(path)} skeleton is pinned in REQUIRED_JOBS "
+            f"(check_workflows.py); change both together or not at all"
+        )
 
 
 def workflow_run_references(doc):
@@ -114,6 +150,7 @@ def main(argv):
             errors.append(f"{path}: YAML parse error: {e}")
     for path, doc in docs.items():
         check_workflow(path, doc, errors)
+        check_required_jobs(path, doc, errors)
 
     # Cross-workflow references: workflow_run.workflows entries must name a
     # workflow that exists here, by its display name.

@@ -40,6 +40,21 @@ jobs:
 """
 
 
+def full_ci(**overrides):
+    """A ci.yml document containing every job the skeleton check requires."""
+    lines = ["name: CI", "on: push", "jobs:"]
+    for job_id in sorted(check_workflows.REQUIRED_JOBS["ci.yml"]):
+        if overrides.get(job_id) == "omit":
+            continue
+        lines += [
+            f"  {job_id}:",
+            "    runs-on: ubuntu-latest",
+            "    steps:",
+            "      - run: echo ok",
+        ]
+    return "\n".join(lines) + "\n"
+
+
 class CheckWorkflowsCase(unittest.TestCase):
     def setUp(self):
         self._tmp = tempfile.TemporaryDirectory()
@@ -59,7 +74,7 @@ class CheckWorkflowsCase(unittest.TestCase):
         return rc, out.getvalue()
 
     def test_valid_workflows_pass(self):
-        self.write("ci.yml", GOOD_CI)
+        self.write("build.yml", GOOD_CI)
         self.write("promote.yml", GOOD_DOWNSTREAM)
         rc, out = self.run_main()
         self.assertEqual(rc, 0, out)
@@ -91,20 +106,20 @@ class CheckWorkflowsCase(unittest.TestCase):
         self.assertIn("missing workflow `name:`", out)
 
     def test_missing_trigger_is_fatal(self):
-        self.write("ci.yml", "name: CI\njobs:\n  b:\n    runs-on: x\n    steps:\n      - run: a\n")
+        self.write("build.yml", "name: CI\njobs:\n  b:\n    runs-on: x\n    steps:\n      - run: a\n")
         rc, out = self.run_main()
         self.assertEqual(rc, 1)
         self.assertIn("missing trigger block", out)
 
     def test_job_without_runs_on_or_steps_is_fatal(self):
-        self.write("ci.yml", "name: CI\non: push\njobs:\n  b:\n    timeout-minutes: 5\n")
+        self.write("build.yml", "name: CI\non: push\njobs:\n  b:\n    timeout-minutes: 5\n")
         rc, out = self.run_main()
         self.assertEqual(rc, 1)
         self.assertIn("no `runs-on:`", out)
         self.assertIn("no `steps:`", out)
 
     def test_reusable_workflow_job_needs_no_steps(self):
-        self.write("ci.yml", GOOD_CI)
+        self.write("build.yml", GOOD_CI)
         self.write(
             "reuse.yml",
             "name: Reuse\non: push\njobs:\n  call:\n    uses: ./.github/workflows/ci.yml\n",
@@ -116,7 +131,7 @@ class CheckWorkflowsCase(unittest.TestCase):
         # The regression this linter exists for: rename `name: CI` and the
         # promote workflow's `workflow_run.workflows: [CI]` silently never
         # fires again. The reference check turns that into a red X.
-        self.write("ci.yml", GOOD_CI.replace("name: CI", "name: Continuous Integration"))
+        self.write("build.yml", GOOD_CI.replace("name: CI", "name: Continuous Integration"))
         self.write("promote.yml", GOOD_DOWNSTREAM)
         rc, out = self.run_main()
         self.assertEqual(rc, 1)
@@ -124,7 +139,7 @@ class CheckWorkflowsCase(unittest.TestCase):
         self.assertIn("Continuous Integration", out, "known names are listed to aid the fix")
 
     def test_workflow_run_reference_as_plain_string(self):
-        self.write("ci.yml", GOOD_CI)
+        self.write("build.yml", GOOD_CI)
         self.write(
             "promote.yml",
             GOOD_DOWNSTREAM.replace("workflows: [CI]", "workflows: Nope"),
@@ -144,6 +159,31 @@ class CheckWorkflowsCase(unittest.TestCase):
         rc, out = self.run_main()
         self.assertEqual(rc, 1)
         self.assertIn("no workflow files", out)
+
+    def test_ci_skeleton_complete_passes(self):
+        self.write("ci.yml", full_ci())
+        rc, out = self.run_main()
+        self.assertEqual(rc, 0, out)
+
+    def test_ci_skeleton_missing_job_is_fatal(self):
+        # Deleting a required job (here the tsan tier) must be a red X, not a
+        # silent weakening of the gate.
+        self.write("ci.yml", full_ci(tsan="omit"))
+        rc, out = self.run_main()
+        self.assertEqual(rc, 1)
+        self.assertIn("required job `tsan` is missing", out)
+
+    def test_ci_skeleton_does_not_constrain_other_files(self):
+        # The skeleton is keyed by basename: a workflow that happens to have
+        # `name: CI` but lives in another file is unconstrained.
+        self.write("build.yml", GOOD_CI)
+        rc, out = self.run_main()
+        self.assertEqual(rc, 0, out)
+
+    def test_ci_skeleton_allows_extra_jobs(self):
+        self.write("ci.yml", full_ci() + "  extra:\n    runs-on: x\n    steps:\n      - run: a\n")
+        rc, out = self.run_main()
+        self.assertEqual(rc, 0, out)
 
     def test_repo_workflows_lint_clean(self):
         # The real tree must satisfy its own linter (the CI step runs this

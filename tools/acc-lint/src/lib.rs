@@ -1,0 +1,1408 @@
+//! acc-lint: first-party invariant linter for the determinism and
+//! panic-freedom contracts.
+//!
+//! The crate promises bit-identical embeddings at any thread count and typed
+//! errors (never panics) on every persistence/serving surface. The invariants
+//! that make those promises true are mechanical — IEEE `total_cmp` ordering,
+//! no wall-clock/RNG/hash-iteration nondeterminism in result-affecting
+//! modules, length-before-allocation in every byte codec, a `// SAFETY:`
+//! justification on every `unsafe` — but until this tool they lived in
+//! reviewers' heads. `acc-lint` walks `rust/src` and `rust/tests` with a
+//! hand-rolled, comments/strings/attributes-aware lexer (std-only, no `syn`)
+//! and enforces them as named rules:
+//!
+//! * **D1** — NaN-unsafe float comparators (`partial_cmp`, path-form
+//!   `f32::max`/`f64::min`, …) in `rust/src`. The codebase standard is
+//!   `total_cmp` or the `(distance, index)` lexicographic order.
+//! * **D2** — nondeterminism sources (`Instant`/`SystemTime`, `thread_rng`,
+//!   `HashMap`/`HashSet` with the randomized default hasher) in
+//!   result-affecting modules.
+//! * **P1** — panic sites (`unwrap`/`expect`/`panic!`/`todo!`/`unreachable!`)
+//!   in the typed-error surfaces (`data::io`, `tsne::persist`, `tsne::serve`,
+//!   `tsne::session`, the `knn` loaders).
+//! * **C1** — allocation from a decoded length in the codec modules without a
+//!   preceding size guard (`check_file_len`/`check_payload_len`/`MAX_*` cap).
+//! * **U1** — every `unsafe` carries a `// SAFETY:` comment (same line, or on
+//!   the comment/attribute lines directly above, or in the doc comment of an
+//!   `unsafe fn`).
+//!
+//! Test code (`#[test]` fns, `#[cfg(test)]` items, everything under
+//! `rust/tests`) is exempt from D1/D2/P1/C1; U1 applies everywhere. Findings
+//! are suppressible only through the checked-in `lint_allow.toml` (rule +
+//! path + reason, see `parse_allowlist`), and entries that match no finding
+//! are themselves a hard error, so the allowlist cannot go stale.
+//!
+//! Known limits (by design — the lexer is type-blind): method-form `.max(`/
+//! `.min(` on floats and `sort_by` closures that compare with `<` are not
+//! detected; D1 catches the ident `partial_cmp` and the path forms only.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+// --------------------------------------------------------------------------
+// Lexer
+// --------------------------------------------------------------------------
+
+/// Token class. Punct tokens hold exactly one character.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Num,
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub line: usize,
+    pub kind: Kind,
+    pub text: String,
+}
+
+/// Per-line facts the U1 rule needs: whether a SAFETY/Safety comment touches
+/// the line, whether any code token lives on it, and whether its first code
+/// token opens an attribute (`#`), which the upward walk may skip.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LineInfo {
+    pub has_safety: bool,
+    pub has_code: bool,
+    pub attr_only: bool,
+}
+
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    /// 1-based; index 0 is unused.
+    pub lines: Vec<LineInfo>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+fn line_info(lines: &mut Vec<LineInfo>, line: usize) -> &mut LineInfo {
+    if lines.len() <= line {
+        lines.resize(line + 1, LineInfo::default());
+    }
+    &mut lines[line]
+}
+
+fn mark_safety_text(lines: &mut Vec<LineInfo>, line: usize, text: &str) {
+    if text.contains("SAFETY") || text.contains("Safety") {
+        line_info(lines, line).has_safety = true;
+    }
+}
+
+/// Skip a non-raw string body starting just past the opening quote.
+/// Returns (index past the closing quote, newlines crossed).
+fn scan_string(chars: &[char], mut j: usize) -> (usize, usize) {
+    let n = chars.len();
+    let mut newlines = 0;
+    while j < n {
+        match chars[j] {
+            '\\' => {
+                // an escaped newline (line-continuation) still ends a line
+                if j + 1 < n && chars[j + 1] == '\n' {
+                    newlines += 1;
+                }
+                j += 2;
+            }
+            '"' => return (j + 1, newlines),
+            '\n' => {
+                newlines += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    (n, newlines)
+}
+
+/// Skip a raw string. `j` points at the first `#` or the opening quote
+/// (just past `r` / `br`). Returns None if this is not a raw string after
+/// all (i.e. `r#ident`), otherwise (index past the close, newlines crossed).
+fn scan_raw_string(chars: &[char], j: usize) -> Option<(usize, usize)> {
+    let n = chars.len();
+    let mut k = j;
+    let mut hashes = 0usize;
+    while k < n && chars[k] == '#' {
+        hashes += 1;
+        k += 1;
+    }
+    if k >= n || chars[k] != '"' {
+        return None; // raw identifier r#ident, or stray `r#`
+    }
+    k += 1;
+    let mut newlines = 0usize;
+    while k < n {
+        if chars[k] == '\n' {
+            newlines += 1;
+            k += 1;
+            continue;
+        }
+        if chars[k] == '"' {
+            let mut h = 0usize;
+            while h < hashes && k + 1 + h < n && chars[k + 1 + h] == '#' {
+                h += 1;
+            }
+            if h == hashes {
+                return Some((k + 1 + hashes, newlines));
+            }
+        }
+        k += 1;
+    }
+    Some((n, newlines))
+}
+
+/// Skip a char-literal body starting just past the opening quote.
+/// Returns the index past the closing quote.
+fn scan_char_body(chars: &[char], mut j: usize) -> usize {
+    let n = chars.len();
+    if j < n && chars[j] == '\\' {
+        j += 1;
+        if j < n && chars[j] == 'u' {
+            j += 1;
+            if j < n && chars[j] == '{' {
+                while j < n && chars[j] != '}' {
+                    j += 1;
+                }
+            }
+        }
+        j += 1; // the escaped char ('}' for \u, or n/t/\\/' ...)
+    } else {
+        j += 1;
+    }
+    if j < n && chars[j] == '\'' {
+        j += 1;
+    }
+    j
+}
+
+/// Tokenize Rust source: comments, strings (incl. raw/byte), char literals,
+/// and lifetimes are consumed without emitting tokens; idents, numbers, and
+/// single-char puncts come out with line numbers.
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut lines: Vec<LineInfo> = vec![LineInfo::default(); 2];
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    macro_rules! push_tok {
+        ($kind:expr, $text:expr) => {{
+            let text: String = $text;
+            let li = line_info(&mut lines, line);
+            if !li.has_code {
+                li.has_code = true;
+                li.attr_only = text == "#";
+            }
+            toks.push(Tok { line, kind: $kind, text });
+        }};
+    }
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (also covers /// and //! doc comments).
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            let text: String = chars[start..i].iter().collect();
+            mark_safety_text(&mut lines, line, &text);
+            continue;
+        }
+        // Block comment, nested.
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            let mut text = String::new();
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    mark_safety_text(&mut lines, line, &text);
+                    text.clear();
+                    line += 1;
+                    i += 1;
+                } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    text.push(chars[i]);
+                    i += 1;
+                }
+            }
+            mark_safety_text(&mut lines, line, &text);
+            continue;
+        }
+        // Raw strings r"…" / r#"…"# and raw identifiers r#ident.
+        if c == 'r' && i + 1 < n && (chars[i + 1] == '"' || chars[i + 1] == '#') {
+            if let Some((ni, nl)) = scan_raw_string(&chars, i + 1) {
+                i = ni;
+                line += nl;
+                continue;
+            }
+            // r#ident: lex the ident without the r# prefix.
+            let start = i + 2;
+            let mut j = start;
+            while j < n && is_ident_cont(chars[j]) {
+                j += 1;
+            }
+            push_tok!(Kind::Ident, chars[start..j].iter().collect());
+            i = j;
+            continue;
+        }
+        // Byte strings / byte chars: b"…", br#"…"#, b'x'.
+        if c == 'b' && i + 1 < n {
+            if chars[i + 1] == '"' {
+                let (ni, nl) = scan_string(&chars, i + 2);
+                i = ni;
+                line += nl;
+                continue;
+            }
+            if chars[i + 1] == '\'' {
+                i = scan_char_body(&chars, i + 2);
+                continue;
+            }
+            if chars[i + 1] == 'r' && i + 2 < n && (chars[i + 2] == '"' || chars[i + 2] == '#') {
+                if let Some((ni, nl)) = scan_raw_string(&chars, i + 2) {
+                    i = ni;
+                    line += nl;
+                    continue;
+                }
+            }
+        }
+        if c == '"' {
+            let (ni, nl) = scan_string(&chars, i + 1);
+            i = ni;
+            line += nl;
+            continue;
+        }
+        // Char literal vs lifetime: 'a' is a char, 'a / 'static / '_ are
+        // lifetimes (an ident run NOT followed by a closing quote).
+        if c == '\'' {
+            let j = i + 1;
+            if j < n && is_ident_start(chars[j]) {
+                let mut k = j;
+                while k < n && is_ident_cont(chars[k]) {
+                    k += 1;
+                }
+                if k < n && chars[k] == '\'' {
+                    i = k + 1; // char literal like 'a' or '_'
+                } else {
+                    i = k; // lifetime: no token
+                }
+                continue;
+            }
+            i = scan_char_body(&chars, i + 1);
+            continue;
+        }
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_cont(chars[i]) {
+                i += 1;
+            }
+            push_tok!(Kind::Ident, chars[start..i].iter().collect());
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            while i < n {
+                let ch = chars[i];
+                if ch.is_ascii_alphanumeric() || ch == '_' {
+                    i += 1;
+                } else if ch == '.' && i + 1 < n && chars[i + 1].is_ascii_digit() {
+                    // consume the dot of 1.5 but not of 0..n
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            push_tok!(Kind::Num, chars[start..i].iter().collect());
+            continue;
+        }
+        push_tok!(Kind::Punct, c.to_string());
+        i += 1;
+    }
+
+    Lexed { toks, lines }
+}
+
+// --------------------------------------------------------------------------
+// Test-code detection
+// --------------------------------------------------------------------------
+
+/// Marks every token that belongs to a `#[test]` fn or a `#[cfg(test)]` item
+/// (fn, mod, impl, use — anything up to its matching close brace or `;`).
+/// `#[cfg(not(test))]` does NOT count as test code.
+pub fn test_token_mask(toks: &[Tok]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(toks[i].kind == Kind::Punct && toks[i].text == "#") {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        let mut inner = false;
+        if j < toks.len() && toks[j].text == "!" {
+            inner = true;
+            j += 1;
+        }
+        if !(j < toks.len() && toks[j].text == "[") {
+            i += 1;
+            continue;
+        }
+        // Collect the idents inside the attribute, to its matching `]`.
+        let mut depth = 1i32;
+        j += 1;
+        let mut idents: Vec<&str> = Vec::new();
+        while j < toks.len() && depth > 0 {
+            match toks[j].text.as_str() {
+                "[" if toks[j].kind == Kind::Punct => depth += 1,
+                "]" if toks[j].kind == Kind::Punct => depth -= 1,
+                t if toks[j].kind == Kind::Ident => idents.push(t),
+                _ => {}
+            }
+            j += 1;
+        }
+        let has = |s: &str| idents.iter().any(|&x| x == s);
+        let is_test_attr = !inner
+            && ((idents.len() == 1 && idents[0] == "test")
+                || (has("cfg") && has("test") && !has("not")));
+        if !is_test_attr {
+            i = j;
+            continue;
+        }
+        // Skip any further attributes stacked between this one and the item.
+        let mut k = j;
+        while k < toks.len() && toks[k].kind == Kind::Punct && toks[k].text == "#" {
+            let mut kk = k + 1;
+            if kk < toks.len() && toks[kk].text == "!" {
+                kk += 1;
+            }
+            if !(kk < toks.len() && toks[kk].text == "[") {
+                break;
+            }
+            let mut d = 1i32;
+            kk += 1;
+            while kk < toks.len() && d > 0 {
+                if toks[kk].kind == Kind::Punct {
+                    if toks[kk].text == "[" {
+                        d += 1;
+                    } else if toks[kk].text == "]" {
+                        d -= 1;
+                    }
+                }
+                kk += 1;
+            }
+            k = kk;
+        }
+        // The item ends at its matched `{…}` or at a top-level `;`.
+        let mut brace = 0i32;
+        let mut saw_open = false;
+        let mut end = toks.len();
+        let mut m = k;
+        while m < toks.len() {
+            if toks[m].kind == Kind::Punct {
+                match toks[m].text.as_str() {
+                    "{" => {
+                        brace += 1;
+                        saw_open = true;
+                    }
+                    "}" => {
+                        brace -= 1;
+                        if saw_open && brace == 0 {
+                            end = m + 1;
+                            break;
+                        }
+                    }
+                    ";" if !saw_open => {
+                        end = m + 1;
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            m += 1;
+        }
+        for x in mask.iter_mut().take(end.min(toks.len())).skip(i) {
+            *x = true;
+        }
+        i = end;
+    }
+    mask
+}
+
+// --------------------------------------------------------------------------
+// Rules
+// --------------------------------------------------------------------------
+
+pub const RULE_IDS: [&str; 5] = ["D1", "D2", "P1", "C1", "U1"];
+
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Repo-relative path with `/` separators.
+    pub path: String,
+    pub line: usize,
+    pub msg: String,
+    /// Trimmed source line, used by allowlist `pattern` matching.
+    pub line_text: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// Result-affecting modules: anything computed here can change the bytes of
+/// an embedding, a persisted artifact, or a served frame. `common` (timers,
+/// bench harness), `eval`/`metrics` (reporting), `viz`, `cli`/`main`
+/// (process glue) and the xla-gated `runtime` are deliberately out of scope.
+const D2_MODULES: &[&str] = &[
+    "rust/src/gradient/",
+    "rust/src/quadtree/",
+    "rust/src/perplexity/",
+    "rust/src/sparse/",
+    "rust/src/knn/",
+    "rust/src/fitsne/",
+    "rust/src/parallel/",
+    "rust/src/tsne/",
+    "rust/src/data/",
+];
+
+/// Typed-error surfaces: these files promise `DataError`/`PersistError`/
+/// `ServeError`/`StepError` instead of panics.
+const P1_FILES: &[&str] = &[
+    "rust/src/data/io.rs",
+    "rust/src/tsne/persist.rs",
+    "rust/src/tsne/serve.rs",
+    "rust/src/tsne/session.rs",
+    "rust/src/knn/mod.rs",
+    "rust/src/knn/hnsw.rs",
+];
+
+/// Byte-codec modules where every decoded length must be guarded before it
+/// reaches an allocator (the PR-4/PR-10 length-before-allocation rule).
+const C1_FILES: &[&str] = &[
+    "rust/src/data/io.rs",
+    "rust/src/tsne/persist.rs",
+    "rust/src/tsne/serve.rs",
+];
+
+const C1_DECODE: &[&str] = &[
+    "read_exact",
+    "read_to_end",
+    "read_u32_le",
+    "read_u64_le",
+    "read_f64_le",
+    "read_f64_slice_le",
+];
+
+const C1_GUARDS: &[&str] = &["check_file_len", "check_payload_len"];
+
+/// Lint one file's source. `rel` is the repo-relative path (e.g.
+/// `rust/src/tsne/serve.rs`); rule scoping keys off it.
+pub fn lint_file(rel: &str, src: &str) -> Vec<Finding> {
+    let lx = lex(src);
+    let mask = test_token_mask(&lx.toks);
+    let src_lines: Vec<&str> = src.lines().collect();
+    let mut out: Vec<Finding> = Vec::new();
+
+    let mut push = |rule: &'static str, line: usize, msg: String| {
+        let line_text = src_lines
+            .get(line.wrapping_sub(1))
+            .map(|s| s.trim().to_string())
+            .unwrap_or_default();
+        out.push(Finding { rule, path: rel.to_string(), line, msg, line_text });
+    };
+
+    let in_src = rel.starts_with("rust/src/");
+    let d2_scoped = D2_MODULES.iter().any(|p| rel.starts_with(p));
+    let p1_scoped = P1_FILES.contains(&rel);
+    let c1_scoped = C1_FILES.contains(&rel);
+    let toks = &lx.toks;
+
+    let next_is = |ti: usize, s: &str| {
+        toks.get(ti + 1)
+            .map(|t| t.kind == Kind::Punct && t.text == s)
+            .unwrap_or(false)
+    };
+
+    // ---- D1 / D2 / P1: per-ident scans over non-test code ----
+    for (ti, t) in toks.iter().enumerate() {
+        if t.kind != Kind::Ident {
+            continue;
+        }
+        // U1 applies to test code too; handled in its own pass below.
+        if mask[ti] {
+            continue;
+        }
+        let text = t.text.as_str();
+        if in_src {
+            match text {
+                "partial_cmp" => push(
+                    "D1",
+                    t.line,
+                    "NaN-unsafe `partial_cmp` — use IEEE `total_cmp` (or the \
+                     `(distance, index)` lexicographic order)"
+                        .to_string(),
+                ),
+                "max" | "min" => {
+                    let path_form = ti >= 3
+                        && toks[ti - 1].text == ":"
+                        && toks[ti - 2].text == ":"
+                        && (toks[ti - 3].text == "f32" || toks[ti - 3].text == "f64");
+                    if path_form {
+                        push(
+                            "D1",
+                            t.line,
+                            format!(
+                                "NaN-unsafe `{}::{}` — use `total_cmp`-based \
+                                 selection (`max_r`/`min_r`)",
+                                toks[ti - 3].text, text
+                            ),
+                        );
+                    }
+                }
+                _ => {}
+            }
+        }
+        if d2_scoped {
+            let msg = match text {
+                "Instant" | "SystemTime" => Some(
+                    "wall-clock time in a result-affecting module breaks \
+                     run-to-run determinism",
+                ),
+                "thread_rng" | "ThreadRng" | "OsRng" | "getrandom" => Some(
+                    "OS-seeded randomness in a result-affecting module; use \
+                     the seeded `common::rng` generators",
+                ),
+                "HashMap" | "HashSet" => Some(
+                    "randomized-hasher map in a result-affecting module: \
+                     iteration order varies per process; use \
+                     `BTreeMap`/sorted vecs or justify in lint_allow.toml",
+                ),
+                "DefaultHasher" | "RandomState" => {
+                    Some("randomly-seeded hasher in a result-affecting module")
+                }
+                _ => None,
+            };
+            if let Some(m) = msg {
+                push("D2", t.line, m.to_string());
+            }
+        }
+        if p1_scoped {
+            match text {
+                "unwrap" | "expect" if next_is(ti, "(") => push(
+                    "P1",
+                    t.line,
+                    format!(
+                        "`{}` on a typed-error surface — return the typed \
+                         error instead of panicking",
+                        text
+                    ),
+                ),
+                "panic" | "todo" | "unimplemented" | "unreachable" if next_is(ti, "!") => push(
+                    "P1",
+                    t.line,
+                    format!("`{}!` on a typed-error surface", text),
+                ),
+                _ => {}
+            }
+        }
+    }
+
+    // ---- C1: per-fn decoded-length-before-allocation tracking ----
+    if c1_scoped {
+        struct Frame {
+            depth: i32,
+            saw_decode: bool,
+            saw_guard: bool,
+        }
+        let mut frames: Vec<Frame> = Vec::new();
+        let mut depth = 0i32;
+        // paren/bracket depth: a `;` inside `[u8; 4]` in a signature must not
+        // clear `pending_fn`
+        let mut group = 0i32;
+        let mut pending_fn = false;
+
+        // Any ident with a lowercase letter is a runtime value; uppercase
+        // consts and literals are compile-time sizes.
+        let is_dynamic = |range: &[Tok]| {
+            range.iter().any(|t| {
+                t.kind == Kind::Ident && t.text.chars().any(|c| c.is_ascii_lowercase())
+            })
+        };
+        // First argument of a call whose `(` sits at `open`: tokens up to the
+        // first top-level `,` or the matching `)`.
+        let first_arg = |open: usize| -> Vec<Tok> {
+            let mut d = 1i32;
+            let mut m = open + 1;
+            let mut arg = Vec::new();
+            while m < toks.len() && d > 0 {
+                if toks[m].kind == Kind::Punct {
+                    match toks[m].text.as_str() {
+                        "(" | "[" | "{" => d += 1,
+                        ")" | "]" | "}" => d -= 1,
+                        "," if d == 1 => break,
+                        _ => {}
+                    }
+                }
+                if d > 0 {
+                    arg.push(toks[m].clone());
+                }
+                m += 1;
+            }
+            arg
+        };
+
+        let mut ti = 0usize;
+        while ti < toks.len() {
+            if mask[ti] {
+                ti += 1;
+                continue;
+            }
+            let t = &toks[ti];
+            match t.kind {
+                Kind::Punct => match t.text.as_str() {
+                    "{" => {
+                        depth += 1;
+                        if pending_fn {
+                            frames.push(Frame { depth, saw_decode: false, saw_guard: false });
+                            pending_fn = false;
+                        }
+                    }
+                    "}" => {
+                        if frames.last().map(|f| f.depth == depth).unwrap_or(false) {
+                            frames.pop();
+                        }
+                        depth -= 1;
+                    }
+                    "(" | "[" => group += 1,
+                    ")" | "]" => group -= 1,
+                    ";" => {
+                        // trait method signature without a body
+                        if group == 0 {
+                            pending_fn = false;
+                        }
+                    }
+                    _ => {}
+                },
+                Kind::Ident => {
+                    let text = t.text.as_str();
+                    if text == "fn" {
+                        pending_fn = true;
+                    } else if C1_DECODE.contains(&text) {
+                        if let Some(f) = frames.last_mut() {
+                            f.saw_decode = true;
+                        }
+                    } else if C1_GUARDS.contains(&text)
+                        || (text.starts_with("MAX_") && text.len() > 4)
+                    {
+                        if let Some(f) = frames.last_mut() {
+                            f.saw_guard = true;
+                        }
+                    } else if matches!(text, "with_capacity" | "resize" | "reserve" | "reserve_exact")
+                        && next_is(ti, "(")
+                    {
+                        let unguarded = frames
+                            .last()
+                            .map(|f| f.saw_decode && !f.saw_guard)
+                            .unwrap_or(false);
+                        if unguarded && is_dynamic(&first_arg(ti + 1)) {
+                            push(
+                                "C1",
+                                t.line,
+                                format!(
+                                    "`{}` from a decoded length with no preceding \
+                                     size guard (`check_file_len`/`check_payload_len`\
+                                     /`MAX_*` cap) in this fn",
+                                    text
+                                ),
+                            );
+                        }
+                    } else if text == "vec" && next_is(ti, "!") {
+                        // vec![elem; len] — only the repeat form allocates from
+                        // a runtime length.
+                        let open = ti + 2;
+                        let opens = toks
+                            .get(open)
+                            .map(|t| {
+                                t.kind == Kind::Punct
+                                    && matches!(t.text.as_str(), "[" | "(" | "{")
+                            })
+                            .unwrap_or(false);
+                        if opens {
+                            let mut d = 1i32;
+                            let mut m = open + 1;
+                            let mut semi_at: Option<usize> = None;
+                            let mut close = toks.len();
+                            while m < toks.len() && d > 0 {
+                                if toks[m].kind == Kind::Punct {
+                                    match toks[m].text.as_str() {
+                                        "(" | "[" | "{" => d += 1,
+                                        ")" | "]" | "}" => {
+                                            d -= 1;
+                                            if d == 0 {
+                                                close = m;
+                                            }
+                                        }
+                                        ";" if d == 1 => semi_at = Some(m),
+                                        _ => {}
+                                    }
+                                }
+                                m += 1;
+                            }
+                            let unguarded = frames
+                                .last()
+                                .map(|f| f.saw_decode && !f.saw_guard)
+                                .unwrap_or(false);
+                            if let Some(s) = semi_at {
+                                if unguarded && close > s && is_dynamic(&toks[s + 1..close]) {
+                                    push(
+                                        "C1",
+                                        t.line,
+                                        "`vec![_; len]` from a decoded length with no \
+                                         preceding size guard in this fn"
+                                            .to_string(),
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+                Kind::Num => {}
+            }
+            ti += 1;
+        }
+    }
+
+    // ---- U1: every `unsafe` has a SAFETY comment (test code included) ----
+    for t in toks.iter() {
+        if t.kind == Kind::Ident && t.text == "unsafe" && !has_safety_comment(&lx.lines, t.line) {
+            push(
+                "U1",
+                t.line,
+                "`unsafe` without a `// SAFETY:` justification on this line or \
+                 the comment lines directly above"
+                    .to_string(),
+            );
+        }
+    }
+
+    out
+}
+
+/// SAFETY comment on the `unsafe` line itself, or on the contiguous run of
+/// comment-only / attribute-only / blank lines directly above (doc comments
+/// of an `unsafe fn` count — they contain "Safety"). The walk stops at the
+/// first real code line.
+fn has_safety_comment(lines: &[LineInfo], ln: usize) -> bool {
+    let get = |l: usize| lines.get(l).copied().unwrap_or_default();
+    if get(ln).has_safety {
+        return true;
+    }
+    let mut l = ln;
+    for _ in 0..8 {
+        if l <= 1 {
+            return false;
+        }
+        l -= 1;
+        let li = get(l);
+        if li.has_safety {
+            return true;
+        }
+        if li.has_code && !li.attr_only {
+            return false;
+        }
+    }
+    false
+}
+
+// --------------------------------------------------------------------------
+// Allowlist
+// --------------------------------------------------------------------------
+
+/// One `[[allow]]` entry from `lint_allow.toml`. `path` matches exactly, or
+/// as a directory prefix when it ends with `/`. `pattern`, when present,
+/// must be a substring of the flagged (trimmed) source line — use it to pin
+/// an entry to one idiom instead of a whole file.
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub path: String,
+    pub pattern: Option<String>,
+    pub reason: String,
+    /// Line of the `[[allow]]` header, for stale-entry diagnostics.
+    pub line: usize,
+}
+
+impl AllowEntry {
+    pub fn matches(&self, f: &Finding) -> bool {
+        f.rule == self.rule
+            && (f.path == self.path
+                || (self.path.ends_with('/') && f.path.starts_with(self.path.as_str())))
+            && self
+                .pattern
+                .as_ref()
+                .is_none_or(|p| f.line_text.contains(p.as_str()))
+    }
+}
+
+/// Parse the hand-rolled TOML subset: `[[allow]]` headers, `key = "value"`
+/// (or `key = 'value'` literal strings, for patterns that contain quotes),
+/// full-line `#` comments, blank lines. Anything else is an error — the
+/// allowlist is itself linted. Every entry needs `rule` (a known rule id),
+/// `path`, and a `reason` of at least 10 characters.
+pub fn parse_allowlist(text: &str) -> Result<Vec<AllowEntry>, Vec<String>> {
+    struct Draft {
+        line: usize,
+        rule: Option<String>,
+        path: Option<String>,
+        pattern: Option<String>,
+        reason: Option<String>,
+    }
+    let mut errs: Vec<String> = Vec::new();
+    let mut entries: Vec<AllowEntry> = Vec::new();
+    let mut cur: Option<Draft> = None;
+
+    fn finish(d: Option<Draft>, errs: &mut Vec<String>, entries: &mut Vec<AllowEntry>) {
+        let Some(d) = d else { return };
+        let mut ok = true;
+        match d.rule.as_deref() {
+            None => {
+                errs.push(format!("line {}: [[allow]] entry has no `rule`", d.line));
+                ok = false;
+            }
+            Some(r) if !RULE_IDS.contains(&r) => {
+                errs.push(format!(
+                    "line {}: unknown rule `{}` (known: {})",
+                    d.line,
+                    r,
+                    RULE_IDS.join(", ")
+                ));
+                ok = false;
+            }
+            _ => {}
+        }
+        if d.path.as_deref().map(str::is_empty).unwrap_or(true) {
+            errs.push(format!("line {}: [[allow]] entry has no `path`", d.line));
+            ok = false;
+        }
+        if d.reason.as_deref().map(str::len).unwrap_or(0) < 10 {
+            errs.push(format!(
+                "line {}: [[allow]] entry needs a substantive `reason` (>= 10 chars)",
+                d.line
+            ));
+            ok = false;
+        }
+        if ok {
+            entries.push(AllowEntry {
+                rule: d.rule.unwrap_or_default(),
+                path: d.path.unwrap_or_default(),
+                pattern: d.pattern,
+                reason: d.reason.unwrap_or_default(),
+                line: d.line,
+            });
+        }
+    }
+
+    for (ln0, raw) in text.lines().enumerate() {
+        let ln = ln0 + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "[[allow]]" {
+            finish(cur.take(), &mut errs, &mut entries);
+            cur = Some(Draft { line: ln, rule: None, path: None, pattern: None, reason: None });
+            continue;
+        }
+        if line.starts_with('[') {
+            errs.push(format!("line {}: unknown section `{}`", ln, line));
+            continue;
+        }
+        let Some(d) = cur.as_mut() else {
+            errs.push(format!("line {}: key outside any [[allow]] entry", ln));
+            continue;
+        };
+        let Some((k, v)) = line.split_once('=') else {
+            errs.push(format!("line {}: expected `key = \"value\"`", ln));
+            continue;
+        };
+        let key = k.trim();
+        let val = v.trim();
+        let quoted = val.len() >= 2
+            && ((val.starts_with('"') && val.ends_with('"'))
+                || (val.starts_with('\'') && val.ends_with('\'')));
+        if !quoted {
+            errs.push(format!("line {}: value for `{}` must be a quoted string", ln, key));
+            continue;
+        }
+        let inner = val[1..val.len() - 1].to_string();
+        let slot = match key {
+            "rule" => &mut d.rule,
+            "path" => &mut d.path,
+            "pattern" => &mut d.pattern,
+            "reason" => &mut d.reason,
+            _ => {
+                errs.push(format!(
+                    "line {}: unknown key `{}` (known: rule, path, pattern, reason)",
+                    ln, key
+                ));
+                continue;
+            }
+        };
+        if slot.is_some() {
+            errs.push(format!("line {}: duplicate key `{}`", ln, key));
+        } else {
+            *slot = Some(inner);
+        }
+    }
+    finish(cur.take(), &mut errs, &mut entries);
+
+    if errs.is_empty() {
+        Ok(entries)
+    } else {
+        Err(errs)
+    }
+}
+
+/// Suppress findings matched by the allowlist. Returns the surviving
+/// findings plus the indices of entries that matched nothing — stale entries
+/// are a hard error at the call site, so the allowlist tracks the tree.
+pub fn apply_allowlist(
+    findings: Vec<Finding>,
+    allow: &[AllowEntry],
+) -> (Vec<Finding>, Vec<usize>) {
+    let mut used = vec![false; allow.len()];
+    let mut kept = Vec::new();
+    for f in findings {
+        let mut suppressed = false;
+        for (i, e) in allow.iter().enumerate() {
+            if e.matches(&f) {
+                used[i] = true;
+                suppressed = true;
+            }
+        }
+        if !suppressed {
+            kept.push(f);
+        }
+    }
+    let stale = used
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &u)| if u { None } else { Some(i) })
+        .collect();
+    (kept, stale)
+}
+
+// --------------------------------------------------------------------------
+// Tree walk
+// --------------------------------------------------------------------------
+
+pub struct TreeReport {
+    pub files: usize,
+    pub findings: Vec<Finding>,
+}
+
+/// Lint `<root>/rust/src` and `<root>/rust/tests`. Errors if neither exists
+/// (wrong `--root` beats a silently-green run on an empty directory).
+pub fn lint_tree(root: &Path) -> io::Result<TreeReport> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    let mut any_dir = false;
+    for sub in ["rust/src", "rust/tests"] {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            any_dir = true;
+            collect_rs(&dir, &mut files)?;
+        }
+    }
+    if !any_dir {
+        return Err(io::Error::new(
+            io::ErrorKind::NotFound,
+            format!("{}: no rust/src or rust/tests under this root", root.display()),
+        ));
+    }
+    files.sort();
+    let mut findings = Vec::new();
+    for f in &files {
+        let src = fs::read_to_string(f)?;
+        findings.extend(lint_file(&rel_path(root, f), &src));
+    }
+    findings.sort_by(|a, b| (a.path.as_str(), a.line).cmp(&(b.path.as_str(), b.line)));
+    Ok(TreeReport { files: files.len(), findings })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let p = entry?.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root)
+        .unwrap_or(p)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+// --------------------------------------------------------------------------
+// Fixture tests
+// --------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_at(rel: &str, src: &str) -> Vec<(&'static str, usize)> {
+        lint_file(rel, src).into_iter().map(|f| (f.rule, f.line)).collect()
+    }
+
+    // ---- lexer ----
+
+    #[test]
+    fn lexer_skips_comments_strings_and_lifetimes() {
+        let src = r##"
+// partial_cmp in a line comment
+/* partial_cmp in a /* nested */ block */
+fn f<'a>(s: &'a str) -> char {
+    let _msg = "partial_cmp in a string";
+    let _raw = r#"partial_cmp in a raw "string""#;
+    let _byte = b"partial_cmp";
+    let _c = 'p';
+    '\n'
+}
+"##;
+        let lx = lex(src);
+        assert!(!lx.toks.iter().any(|t| t.text == "partial_cmp"));
+        // the lifetime 'a must not eat the rest of the file as a char literal
+        assert!(lx.toks.iter().any(|t| t.text == "str"));
+    }
+
+    #[test]
+    fn lexer_number_scan_does_not_eat_range_dots() {
+        let lx = lex("for i in 0..n { let x = 1.5e3; }");
+        let texts: Vec<&str> = lx.toks.iter().map(|t| t.text.as_str()).collect();
+        assert!(texts.contains(&"n"));
+        assert!(texts.windows(2).any(|w| w[0] == "." && w[1] == "."));
+    }
+
+    #[test]
+    fn lexer_counts_lines_through_string_continuations() {
+        // a backslash-newline inside a string still ends a source line
+        let src = "let s = \"one \\\n two\";\nlet after = 1;\n";
+        let lx = lex(src);
+        let after = lx.toks.iter().find(|t| t.text == "after").expect("after tok");
+        assert_eq!(after.line, 3);
+    }
+
+    #[test]
+    fn lexer_marks_safety_lines() {
+        let src = "// SAFETY: disjoint rows\nunsafe { x() }\n";
+        let lx = lex(src);
+        assert!(lx.lines[1].has_safety);
+        assert!(!lx.lines[2].has_safety);
+    }
+
+    // ---- test-code mask ----
+
+    #[test]
+    fn mask_covers_test_fns_and_cfg_test_mods() {
+        let src = "
+fn live() { a.partial_cmp(&b); }
+#[test]
+fn t() { a.partial_cmp(&b); }
+#[cfg(test)]
+mod tests {
+    fn helper() { a.partial_cmp(&b); }
+}
+";
+        let hits = rules_at("rust/src/gradient/mod.rs", src);
+        assert_eq!(hits, vec![("D1", 2)]);
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_test_code() {
+        let src = "#[cfg(not(test))]\nfn live() { a.partial_cmp(&b); }\n";
+        assert_eq!(rules_at("rust/src/gradient/mod.rs", src), vec![("D1", 2)]);
+    }
+
+    // ---- D1 ----
+
+    #[test]
+    fn d1_flags_partial_cmp_and_path_form_minmax() {
+        let src = "fn f(a: f64, b: f64) {\n    let _ = a.partial_cmp(&b);\n    let _ = f64::max(a, b);\n}\n";
+        assert_eq!(
+            rules_at("rust/src/knn/select.rs", src),
+            vec![("D1", 2), ("D1", 3)]
+        );
+    }
+
+    #[test]
+    fn d1_allows_total_cmp_method_minmax_and_consts() {
+        let src = "fn f(a: f64, b: f64) {\n    let _ = a.total_cmp(&b);\n    let _ = a.max(b);\n    let _ = f64::MAX;\n    let _ = f64::max_r(a, b);\n}\n";
+        assert!(rules_at("rust/src/knn/select.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d1_skips_rust_tests_dir() {
+        let src = "fn f(a: f64, b: f64) { a.partial_cmp(&b); }\n";
+        assert!(rules_at("rust/tests/integration.rs", src).is_empty());
+    }
+
+    // ---- D2 ----
+
+    #[test]
+    fn d2_flags_nondeterminism_in_scoped_modules_only() {
+        let src = "use std::time::Instant;\nuse std::collections::HashMap;\n";
+        assert_eq!(
+            rules_at("rust/src/tsne/serve2.rs", src),
+            vec![("D2", 1), ("D2", 2)]
+        );
+        assert!(rules_at("rust/src/common/timer.rs", src).is_empty());
+        assert!(rules_at("rust/src/cli.rs", src).is_empty());
+    }
+
+    // ---- P1 ----
+
+    #[test]
+    fn p1_flags_panic_sites_in_typed_error_files() {
+        let src = "fn f() {\n    x.unwrap();\n    y.expect(\"boom\");\n    panic!(\"no\");\n    unreachable!();\n}\n";
+        assert_eq!(
+            rules_at("rust/src/tsne/persist.rs", src),
+            vec![("P1", 2), ("P1", 3), ("P1", 4), ("P1", 5)]
+        );
+        // same code outside the typed-error surfaces: no findings
+        assert!(rules_at("rust/src/gradient/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn p1_ignores_unwrap_or_variants_and_test_code() {
+        let src = "fn f() { x.unwrap_or(0); y.unwrap_or_else(|| 1); }\n#[test]\nfn t() { z.unwrap(); }\n";
+        assert!(rules_at("rust/src/tsne/persist.rs", src).is_empty());
+    }
+
+    // ---- C1 ----
+
+    const C1_BAD: &str = "
+fn load(r: &mut R) -> io::Result<Vec<f64>> {
+    let n = read_u64_le(r)? as usize;
+    let mut v = Vec::with_capacity(n);
+    Ok(v)
+}
+";
+
+    #[test]
+    fn c1_flags_unguarded_decoded_alloc() {
+        assert_eq!(rules_at("rust/src/data/io.rs", C1_BAD), vec![("C1", 4)]);
+        // same code outside the codec modules: no finding
+        assert!(rules_at("rust/src/gradient/mod.rs", C1_BAD).is_empty());
+    }
+
+    #[test]
+    fn c1_guard_before_alloc_passes() {
+        let src = "
+fn load(r: &mut R) -> io::Result<Vec<f64>> {
+    let n = read_u64_le(r)? as usize;
+    check_file_len(24 + 8 * n as u64, actual)?;
+    let mut v = Vec::with_capacity(n);
+    Ok(v)
+}
+";
+        assert!(rules_at("rust/src/data/io.rs", src).is_empty());
+    }
+
+    #[test]
+    fn c1_max_cap_counts_as_guard() {
+        let src = "
+fn load(r: &mut R) -> io::Result<Vec<u8>> {
+    let n = read_u32_le(r)? as usize;
+    if n > MAX_FRAME_PAYLOAD { return Err(too_big()); }
+    let mut v = vec![0u8; n];
+    Ok(v)
+}
+";
+        assert!(rules_at("rust/src/tsne/serve.rs", src).is_empty());
+    }
+
+    #[test]
+    fn c1_vec_macro_repeat_form_is_flagged() {
+        let src = "
+fn load(r: &mut R) -> io::Result<Vec<u8>> {
+    let n = read_u32_le(r)? as usize;
+    let v = vec![0u8; n];
+    Ok(v)
+}
+";
+        assert_eq!(rules_at("rust/src/tsne/serve.rs", src), vec![("C1", 4)]);
+    }
+
+    #[test]
+    fn c1_static_sizes_and_decode_free_fns_pass() {
+        let src = "
+fn fresh(n: usize) -> Vec<f64> {
+    let mut v = Vec::with_capacity(n);
+    v
+}
+fn fixed(r: &mut R) -> io::Result<Vec<u8>> {
+    let _x = read_u32_le(r)?;
+    let v = vec![0u8; 16];
+    let w = Vec::with_capacity(CAP);
+    Ok(v)
+}
+";
+        assert!(rules_at("rust/src/data/io.rs", src).is_empty());
+    }
+
+    #[test]
+    fn c1_fn_scoping_resets_between_fns() {
+        // decode in one fn must not taint an alloc in the next
+        let src = "
+fn a(r: &mut R) { let _ = read_u64_le(r); }
+fn b(n: usize) -> Vec<u8> { Vec::with_capacity(n) }
+";
+        assert!(rules_at("rust/src/data/io.rs", src).is_empty());
+    }
+
+    // ---- U1 ----
+
+    #[test]
+    fn u1_requires_safety_comment() {
+        let src = "fn f(p: *mut u8) {\n    unsafe { *p = 1; }\n}\n";
+        assert_eq!(rules_at("rust/src/sparse/mod.rs", src), vec![("U1", 2)]);
+    }
+
+    #[test]
+    fn u1_accepts_same_line_above_line_and_doc_comments() {
+        let src = "
+fn f(p: *mut u8) {
+    // SAFETY: caller guarantees exclusivity
+    unsafe { *p = 1; }
+    unsafe { *p = 2; } // SAFETY: same line
+}
+/// Docs.
+/// Safety: `i < len` and no aliasing.
+#[inline(always)]
+pub unsafe fn g(p: *mut u8) { }
+";
+        assert!(rules_at("rust/src/sparse/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn u1_walk_stops_at_code_lines() {
+        let src = "
+fn f(p: *mut u8) {
+    // SAFETY: only covers the next statement
+    let q = p;
+    unsafe { *q = 1; }
+}
+";
+        assert_eq!(rules_at("rust/src/sparse/mod.rs", src), vec![("U1", 5)]);
+    }
+
+    #[test]
+    fn u1_applies_inside_test_code_too() {
+        let src = "#[test]\nfn t() {\n    unsafe { x() };\n}\n";
+        assert_eq!(rules_at("rust/src/sparse/mod.rs", src), vec![("U1", 3)]);
+    }
+
+    #[test]
+    fn u1_ignores_unsafe_in_strings_and_comments() {
+        let src = "// unsafe is scary\nfn f() { let _s = \"unsafe\"; }\n";
+        assert!(rules_at("rust/src/sparse/mod.rs", src).is_empty());
+    }
+
+    // ---- allowlist ----
+
+    const ALLOW_OK: &str = r#"
+# serving metrics are timing-only
+[[allow]]
+rule = "D2"
+path = "rust/src/tsne/serve.rs"
+pattern = "Instant"
+reason = "timing metrics only; values never reach frames"
+"#;
+
+    #[test]
+    fn allowlist_parses_and_suppresses() {
+        let allow = parse_allowlist(ALLOW_OK).expect("parses");
+        assert_eq!(allow.len(), 1);
+        let src = "use std::time::Instant;\n";
+        let findings = lint_file("rust/src/tsne/serve.rs", src);
+        assert_eq!(findings.len(), 1);
+        let (kept, stale) = apply_allowlist(findings, &allow);
+        assert!(kept.is_empty());
+        assert!(stale.is_empty());
+    }
+
+    #[test]
+    fn allowlist_pattern_narrows_the_entry() {
+        let allow = parse_allowlist(ALLOW_OK).expect("parses");
+        // HashMap is D2 too, but the pattern pins the entry to Instant
+        let findings = lint_file("rust/src/tsne/serve.rs", "use std::collections::HashMap;\n");
+        let (kept, stale) = apply_allowlist(findings, &allow);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(stale, vec![0]);
+    }
+
+    #[test]
+    fn allowlist_single_quoted_patterns_carry_double_quotes() {
+        let toml = "[[allow]]\nrule = \"P1\"\npath = \"rust/src/tsne/serve.rs\"\npattern = 'expect(\"infallible\")'\nreason = \"documented infallible conversion\"\n";
+        let allow = parse_allowlist(toml).expect("parses");
+        assert_eq!(allow[0].pattern.as_deref(), Some("expect(\"infallible\")"));
+    }
+
+    #[test]
+    fn allowlist_rejects_bad_entries() {
+        for bad in [
+            "[[allow]]\nrule = \"Z9\"\npath = \"x\"\nreason = \"long enough reason\"\n",
+            "[[allow]]\npath = \"x\"\nreason = \"long enough reason\"\n",
+            "[[allow]]\nrule = \"D1\"\nreason = \"long enough reason\"\n",
+            "[[allow]]\nrule = \"D1\"\npath = \"x\"\nreason = \"short\"\n",
+            "[[allow]]\nrule = \"D1\"\npath = \"x\"\nreason = \"long enough reason\"\nbogus = \"k\"\n",
+            "rule = \"D1\"\n",
+            "[allow]\n",
+        ] {
+            assert!(parse_allowlist(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn allowlist_dir_prefix_matching() {
+        let toml = "[[allow]]\nrule = \"D2\"\npath = \"rust/src/tsne/\"\nreason = \"whole-module waiver for the example\"\n";
+        let allow = parse_allowlist(toml).expect("parses");
+        let findings = lint_file("rust/src/tsne/serve.rs", "use std::time::Instant;\n");
+        let (kept, stale) = apply_allowlist(findings, &allow);
+        assert!(kept.is_empty());
+        assert!(stale.is_empty());
+    }
+}

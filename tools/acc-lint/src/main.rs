@@ -1,0 +1,98 @@
+//! acc-lint CLI: lint `rust/src` + `rust/tests` under `--root` against the
+//! checked-in allowlist. Exit codes: 0 clean, 1 findings or stale allowlist
+//! entries or an invalid allowlist, 2 usage / I/O errors. This is a hard CI
+//! gate — see docs/static-analysis.md.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "usage: acc-lint [--root DIR] [--allow FILE]\n\
+  --root DIR    repo root containing rust/src and rust/tests (default .)\n\
+  --allow FILE  allowlist path (default <root>/lint_allow.toml; missing = empty)";
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut allow_path: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = PathBuf::from(v),
+                None => return usage_error("--root needs a value"),
+            },
+            "--allow" => match args.next() {
+                Some(v) => allow_path = Some(PathBuf::from(v)),
+                None => return usage_error("--allow needs a value"),
+            },
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other => return usage_error(&format!("unknown argument `{other}`")),
+        }
+    }
+
+    let allow_file = allow_path.unwrap_or_else(|| root.join("lint_allow.toml"));
+    let allow = if allow_file.is_file() {
+        let text = match std::fs::read_to_string(&allow_file) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("acc-lint: cannot read {}: {e}", allow_file.display());
+                return ExitCode::from(2);
+            }
+        };
+        match acc_lint::parse_allowlist(&text) {
+            Ok(entries) => entries,
+            Err(errs) => {
+                for e in &errs {
+                    println!("{}:{e}", allow_file.display());
+                }
+                println!("acc-lint: invalid allowlist ({} error(s))", errs.len());
+                return ExitCode::from(1);
+            }
+        }
+    } else {
+        Vec::new()
+    };
+
+    let report = match acc_lint::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("acc-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let total = report.findings.len();
+    let (kept, stale) = acc_lint::apply_allowlist(report.findings, &allow);
+    for f in &kept {
+        println!("{f}");
+    }
+    for i in &stale {
+        let e = &allow[*i];
+        println!(
+            "{}:{}: stale [[allow]] entry ({} {}) matches no finding — remove it",
+            allow_file.display(),
+            e.line,
+            e.rule,
+            e.path
+        );
+    }
+    println!(
+        "acc-lint: {} file(s), {} finding(s) ({} allowlisted), {} stale allowlist entr{}",
+        report.files,
+        kept.len(),
+        total - kept.len(),
+        stale.len(),
+        if stale.len() == 1 { "y" } else { "ies" }
+    );
+    if kept.is_empty() && stale.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
+
+fn usage_error(msg: &str) -> ExitCode {
+    eprintln!("acc-lint: {msg}\n{USAGE}");
+    ExitCode::from(2)
+}

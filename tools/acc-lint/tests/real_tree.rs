@@ -1,0 +1,59 @@
+//! The check_workflows.py pattern: the linter's own test suite runs it
+//! against the real tree, so `cargo test` (tier 1) and the CI lint job agree
+//! by construction. A finding added to rust/src without an allowlist entry —
+//! or an allowlist entry that stops matching anything — fails this test.
+
+use std::path::PathBuf;
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../..")
+}
+
+#[test]
+fn real_tree_is_clean_under_the_checked_in_allowlist() {
+    let root = repo_root();
+    let report = acc_lint::lint_tree(&root).expect("walk rust/src + rust/tests");
+    assert!(
+        report.files > 40,
+        "expected the real tree, found only {} .rs files — wrong root?",
+        report.files
+    );
+    let allow_text = std::fs::read_to_string(root.join("lint_allow.toml"))
+        .expect("checked-in lint_allow.toml");
+    let allow = acc_lint::parse_allowlist(&allow_text)
+        .unwrap_or_else(|errs| panic!("lint_allow.toml is invalid: {errs:#?}"));
+    let (kept, stale) = acc_lint::apply_allowlist(report.findings, &allow);
+    for f in &kept {
+        eprintln!("{f}");
+    }
+    assert!(
+        kept.is_empty(),
+        "{} unallowlisted finding(s) in the real tree (listed above): fix the \
+         code or add a justified lint_allow.toml entry",
+        kept.len()
+    );
+    let stale_desc: Vec<String> = stale
+        .iter()
+        .map(|&i| format!("line {}: {} {}", allow[i].line, allow[i].rule, allow[i].path))
+        .collect();
+    assert!(
+        stale.is_empty(),
+        "stale lint_allow.toml entries (match no finding): {stale_desc:?}"
+    );
+}
+
+#[test]
+fn every_allowlist_entry_suppresses_something() {
+    // Redundant with stale-checking above, but gives a direct count in test
+    // output: the allowlist documents exactly the waivers the tree needs.
+    let root = repo_root();
+    let report = acc_lint::lint_tree(&root).expect("walk tree");
+    let allow_text = std::fs::read_to_string(root.join("lint_allow.toml"))
+        .expect("checked-in lint_allow.toml");
+    let allow = acc_lint::parse_allowlist(&allow_text).expect("valid allowlist");
+    for e in &allow {
+        let n = report.findings.iter().filter(|f| e.matches(f)).count();
+        eprintln!("allow {} {} ({:?}): suppresses {n} finding(s)", e.rule, e.path, e.pattern);
+        assert!(n > 0, "entry at line {} ({} {}) suppresses nothing", e.line, e.rule, e.path);
+    }
+}
